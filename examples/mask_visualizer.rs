@@ -1,0 +1,89 @@
+//! Mask visualizer — ASCII renderings of the paper's illustration
+//! figures from REAL pruning runs (no artifacts needed; pure Rust):
+//!
+//! * Fig. 2/8 — Thanos global-residual mask selection, block by block
+//! * Fig. 4   — SparseGPT per-block local masks
+//! * Fig. 6a  — Wanda row-constrained mask
+//! * Fig. 3   — structured pruning with outlier rows (permuted view)
+//!
+//! `o` = pruned entry, `.` = kept.
+//!
+//! ```bash
+//! cargo run --release --example mask_visualizer
+//! ```
+
+use thanos::linalg::Mat;
+use thanos::pruning::{self, CalibStats, Method, Pattern, PruneOpts};
+use thanos::rng::Rng;
+
+fn render(title: &str, mask: &[bool], rows: usize, cols: usize) {
+    println!("-- {title} --");
+    for i in 0..rows {
+        let line: String = (0..cols)
+            .map(|j| if mask[i * cols + j] { 'o' } else { '.' })
+            .collect();
+        println!("  {line}");
+    }
+    let cnt = mask.iter().filter(|&&m| m).count();
+    println!("  ({cnt}/{} pruned = {:.0}%)\n", rows * cols, 100.0 * cnt as f64 / (rows * cols) as f64);
+}
+
+fn main() -> anyhow::Result<()> {
+    let (c, b) = (12, 32);
+    let mut r = Rng::new(7);
+    let w = Mat::from_fn(c, b, |_, _| r.normal_f32(0.0, 1.0));
+    let x = {
+        let mut x = Mat::from_fn(b, 64, |_, _| r.normal_f32(0.0, 1.0));
+        // a few dominant input channels → visible vertical structure
+        for j in 0..64 {
+            *x.at_mut(3, j) *= 4.0;
+            *x.at_mut(17, j) *= 0.1;
+        }
+        x
+    };
+    let stats = CalibStats::from_x(&x);
+    let opts = PruneOpts { block_size: 8, ..Default::default() };
+    let p = 0.5;
+
+    println!("weight matrix {c}x{b}, block size {}; 'o' pruned, '.' kept\n", opts.block_size);
+
+    let th = pruning::prune(Method::Thanos, &w, &stats, Pattern::Unstructured { p }, &opts)?;
+    render(
+        "Thanos (Fig. 2/8): global residual mask — free row/column budget",
+        &th.mask, c, b,
+    );
+
+    let sg = pruning::prune(Method::SparseGpt, &w, &stats, Pattern::Unstructured { p }, &opts)?;
+    render(
+        "SparseGPT (Fig. 4): per-block-uniform masks (each 8-col block p% dense)",
+        &sg.mask, c, b,
+    );
+
+    let wa = pruning::prune(Method::Wanda, &w, &stats, Pattern::Unstructured { p }, &opts)?;
+    render(
+        "Wanda (Fig. 6a): row-constrained mask (every row exactly p%)",
+        &wa.mask, c, b,
+    );
+
+    let st = pruning::prune(
+        Method::Thanos,
+        &w,
+        &stats,
+        Pattern::Structured { p: 0.25, alpha: 0.2 },
+        &opts,
+    )?;
+    render(
+        "Thanos structured (Fig. 3): whole columns; outlier rows (α=0.2) untouched",
+        &st.mask, c, b,
+    );
+
+    let nm = pruning::prune(
+        Method::Thanos,
+        &w,
+        &stats,
+        Pattern::SemiStructured { n: 2, m: 4, alpha: 0.0 },
+        &opts,
+    )?;
+    render("Thanos 2:4 (Alg. 8): two zeros per group of four", &nm.mask, c, b);
+    Ok(())
+}

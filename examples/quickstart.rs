@@ -1,0 +1,57 @@
+//! Quickstart: the smallest end-to-end use of the library.
+//!
+//! Trains (or loads a cached) `tiny` LM for a few steps, prunes it with
+//! Thanos to 50% unstructured sparsity through the AOT (Pallas/JAX →
+//! HLO) pipeline, and reports perplexity before/after next to the
+//! Wanda and Magnitude baselines.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use thanos::coordinator::Backend;
+use thanos::harness::{ensure_trained, env_usize, experiment_corpus, run_cell};
+use thanos::pruning::{Method, Pattern, PruneOpts};
+use thanos::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let steps = env_usize("THANOS_STEPS", 120);
+    let rt = Runtime::load("artifacts")?;
+    println!("== thanos quickstart (tiny model, {steps} train steps)");
+
+    let (state, log) = ensure_trained(&rt, "tiny", steps, 2e-3, 1234)?;
+    if let (Some(first), Some(last)) = (log.first(), log.last()) {
+        println!(
+            "trained: loss {:.3} -> {:.3} over {} steps",
+            first.loss,
+            last.loss,
+            log.len()
+        );
+    } else {
+        println!("loaded cached checkpoint");
+    }
+
+    let corpus = experiment_corpus(&state.config);
+    let dense_ppl = thanos::eval::perplexity(&rt, &state, &corpus.eval)?;
+    println!("dense perplexity: {dense_ppl:.3}\n");
+
+    let opts = PruneOpts::default();
+    let pattern = Pattern::Unstructured { p: 0.5 };
+    println!("pruning to 50% unstructured sparsity:");
+    for method in [Method::Magnitude, Method::Wanda, Method::SparseGpt, Method::Thanos] {
+        let (cell, _) = run_cell(
+            &rt, &state, &corpus, method, pattern, &opts, Backend::Aot, None,
+        )?;
+        println!(
+            "  {:<10} ppl {:>8.3}  (x{:.2} vs dense, sparsity {:.1}%, {:.2}s)",
+            method.name(),
+            cell.ppl,
+            cell.ppl / dense_ppl,
+            cell.sparsity * 100.0,
+            cell.prune_secs
+        );
+    }
+    println!("\nexpected shape: Thanos ≈ SparseGPT < Wanda << Magnitude");
+    Ok(())
+}

@@ -1,0 +1,7 @@
+"""Build-time Python for the Thanos stack (Layer 1 + Layer 2).
+
+Nothing in this package runs at request time: ``python -m compile.aot``
+lowers the JAX model, the Pallas kernels and the pruning graphs to HLO
+text under ``artifacts/``, after which the Rust binary is
+self-contained.
+"""

@@ -1,0 +1,221 @@
+"""AOT pipeline: lower every L2 graph (model + pruning) to HLO **text**
+under ``artifacts/`` and write the manifest the Rust runtime loads.
+
+HLO text — not ``lowered.compile().serialize()`` — is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids
+which the xla_extension 0.5.1 runtime rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.
+
+Usage (from the Makefile)::
+
+    cd python && python -m compile.aot --outdir ../artifacts --models tiny,small
+
+Python runs ONCE at build time; the Rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import math
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import prune as P
+
+jax.config.update("jax_platform_name", "cpu")
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class Emitter:
+    def __init__(self, outdir):
+        self.outdir = outdir
+        self.entries = {}
+
+    def emit(self, name, fn, arg_specs, meta=None):
+        """Lower fn(*arg_specs) and write `<name>.hlo.txt`."""
+        if name in self.entries:
+            return  # deduped across models sharing layer shapes
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.outdir, fname), "w") as f:
+            f.write(text)
+        args = [
+            {"shape": list(s.shape), "dtype": "i32" if s.dtype == jnp.int32 else "f32"}
+            for s in arg_specs
+        ]
+        self.entries[name] = {"file": fname, "args": args, **(meta or {})}
+        print(f"  [{time.time() - t0:6.1f}s] {name}  ({len(text) // 1024} KiB)")
+
+
+def emit_model(em: Emitter, name: str, cfg: dict, consts: dict):
+    nbc, nbe, bs = consts["nb_calib"], consts["nb_eval"], consts["train_bs"]
+    seq, d = cfg["seq_len"], cfg["d_model"]
+    flat_n = M.flat_size(cfg)
+    blk_n = M.block_flat_size(cfg)
+
+    em.emit(
+        f"embed_{name}",
+        lambda flat, toks: (M.embed(cfg, flat, toks),),
+        [spec((flat_n,)), spec((nbc, seq), I32)],
+    )
+    em.emit(
+        f"block_capture_{name}",
+        lambda fb, x: M.block_capture(cfg, fb, x),
+        [spec((blk_n,)), spec((nbc, seq, d))],
+    )
+    em.emit(
+        f"logprobs_{name}",
+        lambda flat, toks: (M.nll_positions(cfg, flat, toks),),
+        [spec((flat_n,)), spec((nbe, seq), I32)],
+    )
+    em.emit(
+        f"train_step_{name}",
+        lambda flat, m, v, toks, step, lr: M.train_step(
+            cfg, flat, m, v, toks, step, lr=lr
+        ),
+        [
+            spec((flat_n,)),
+            spec((flat_n,)),
+            spec((flat_n,)),
+            spec((bs, seq), I32),
+            spec((), I32),
+            spec((), F32),
+        ],
+    )
+
+
+def emit_pruning(em: Emitter, cfg: dict, consts: dict, block_size: int):
+    d, dff, seq = cfg["d_model"], cfg["d_ff"], cfg["seq_len"]
+    a = consts["nb_calib"] * seq
+    shapes = [(d, d), (dff, d), (d, dff)]
+    for b in sorted({d, dff}):
+        em.emit(
+            f"hessian_accum_{b}",
+            lambda h, xt: P.hessian_accum(h, xt),
+            [spec((b, b)), spec((a, b))],
+            meta={"b": b, "a": a},
+        )
+    for c, b in shapes:
+        sname = f"{c}x{b}"
+        meta = {"c": c, "b": b}
+        em.emit(
+            f"prune_magnitude_{sname}",
+            lambda w, r: P.magnitude_unstructured(w, r),
+            [spec((c, b)), spec((), I32)],
+            meta,
+        )
+        em.emit(
+            f"prune_wanda_{sname}",
+            lambda w, xn, k: P.wanda_unstructured(w, xn, k),
+            [spec((c, b)), spec((b,)), spec((), I32)],
+            meta,
+        )
+        for n, m in ((2, 4), (4, 8)):
+            em.emit(
+                f"prune_magnitude_nm_{sname}_{n}_{m}",
+                (lambda n_, m_: lambda w: P.magnitude_nm(w, n_, m_))(n, m),
+                [spec((c, b))],
+                {**meta, "n": n, "m": m},
+            )
+            em.emit(
+                f"prune_wanda_nm_{sname}_{n}_{m}",
+                (lambda n_, m_: lambda w, xn: P.wanda_nm(w, xn, n_, m_))(n, m),
+                [spec((c, b)), spec((b,))],
+                {**meta, "n": n, "m": m},
+            )
+            em.emit(
+                f"prune_thanos_nm_{sname}_{n}_{m}_B{block_size}",
+                (
+                    lambda n_, m_: lambda w, h, xn, alpha: P.thanos_nm(
+                        w, h, xn, alpha, n_, m_, block_size=block_size
+                    )
+                )(n, m),
+                [spec((c, b)), spec((b, b)), spec((b,)), spec((), F32)],
+                {**meta, "n": n, "m": m, "block_size": block_size},
+            )
+        em.emit(
+            f"prune_thanos_unstr_{sname}_B{block_size}",
+            lambda w, h, xn, p: P.thanos_unstructured(
+                w, h, xn, p, block_size=block_size
+            ),
+            [spec((c, b)), spec((b, b)), spec((b,)), spec((), F32)],
+            {**meta, "block_size": block_size},
+        )
+        em.emit(
+            f"prune_thanos_struct_{sname}",
+            lambda w, h, xn, p, alpha: P.thanos_structured(w, h, xn, p, alpha),
+            [spec((c, b)), spec((b, b)), spec((b,)), spec((), F32), spec((), F32)],
+            meta,
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--models", default="tiny,small")
+    ap.add_argument("--nb-calib", type=int, default=8)
+    ap.add_argument("--nb-eval", type=int, default=8)
+    ap.add_argument("--train-bs", type=int, default=8)
+    ap.add_argument("--block-size", type=int, default=128)
+    # legacy single-file interface kept for Makefile compatibility
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    outdir = args.outdir if args.out is None else os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+    em = Emitter(outdir)
+    consts = {
+        "nb_calib": args.nb_calib,
+        "nb_eval": args.nb_eval,
+        "train_bs": args.train_bs,
+    }
+
+    manifest = {"constants": consts, "models": {}, "executables": None}
+    for name in args.models.split(","):
+        name = name.strip()
+        cfg = M.PRESETS[name]
+        print(f"== model {name}: {cfg}")
+        emit_model(em, name, cfg, consts)
+        emit_pruning(em, cfg, consts, args.block_size)
+        rows, flat_n = M.param_layout(cfg)
+        manifest["models"][name] = {
+            "config": cfg,
+            "flat_size": flat_n,
+            "block_flat_size": M.block_flat_size(cfg),
+            "param_layout": [
+                {"name": n, "offset": o, "shape": list(s)} for n, o, s in rows
+            ],
+        }
+    manifest["executables"] = em.entries
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    # marker file for `make` freshness
+    with open(os.path.join(outdir, ".stamp"), "w") as f:
+        f.write(str(time.time()))
+    print(f"wrote {len(em.entries)} executables + manifest to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels — the compute hot spots of the Thanos stack.
+
+Every kernel is written for a TPU execution model (VMEM tiles shaped to
+the 128x128 MXU, K-innermost accumulator revisiting) but lowered with
+``interpret=True`` so the CPU PJRT runtime can execute the resulting
+HLO (real-TPU lowering emits Mosaic custom-calls the CPU client cannot
+run — see DESIGN.md section Hardware-Adaptation).
+
+Correctness oracles for every kernel live in :mod:`.ref` and are pinned
+by ``python/tests/test_kernels.py`` (hypothesis sweeps shapes/dtypes).
+"""
+
+from .matmul import matmul, matmul_sub
+from .hessian import hessian_accum
+from .metric import wanda_metric
+
+__all__ = ["matmul", "matmul_sub", "hessian_accum", "wanda_metric"]

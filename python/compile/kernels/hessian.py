@@ -1,0 +1,56 @@
+"""Hessian-accumulation Pallas kernel: ``H <- H + 2 * Xt^T Xt``.
+
+The layer-reconstruction Hessian ``H = 2 * X X^T`` (paper eq. 34) is
+accumulated chunk-by-chunk over calibration batches; the coordinator
+streams activation chunks ``Xt: [a, b]`` (tokens x features, the layout
+the forward capture produces) and keeps ``H: [b, b]`` resident.
+
+Kernel shape: grid ``(b/bn, b/bn, a/bk)`` with the token axis innermost
+(accumulator revisiting); each step contracts a ``[bk, bn] x [bk, bn]``
+pair of tiles of the same operand — a Gram-matrix specialisation of the
+matmul kernel that reads ``Xt`` tiles twice instead of materialising a
+transpose in HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick
+
+
+def _gram_kernel(h_ref, xt_ref, xs_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # contribution 2 * Xt[:, i-tile]^T @ Xt[:, j-tile]
+    o_ref[...] += 2.0 * jnp.dot(
+        xt_ref[...].T, xs_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[...] += h_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk"))
+def hessian_accum(h, xt, bn: int = 128, bk: int = 128):
+    """``h + 2 * xt.T @ xt`` with ``h: [b, b]``, ``xt: [a, b]``."""
+    a, b = xt.shape
+    assert h.shape == (b, b), f"H shape {h.shape} vs b={b}"
+    bn, bk = _pick(b, bn), _pick(a, bk)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(b // bn, b // bn, a // bk),
+        in_specs=[
+            pl.BlockSpec((bn, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, b), h.dtype),
+        interpret=True,
+    )(h, xt, xt)

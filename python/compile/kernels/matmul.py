@@ -1,0 +1,104 @@
+"""Tiled Pallas matmul kernels.
+
+Design notes (TPU mental model, run under interpret=True here):
+
+* Grid is ``(M/bm, N/bn, K/bk)`` with **K innermost** so each output
+  tile stays resident in VMEM across the whole K loop (accumulator
+  revisiting) — the Pallas analogue of a CUDA tile-and-accumulate loop.
+* Default tiles are 128x128: MXU-aligned, and every matmul operand in
+  this project (d_model / d_ff / vocab / token counts) is a multiple of
+  128 by construction (see ``config.ModelConfig`` presets).
+* VMEM footprint per step = bm*bk + bk*bn + bm*bn floats
+  (3 * 128 * 128 * 4 B = 192 KiB << 16 MiB VMEM), leaving headroom for
+  double buffering; MXU utilization estimate in EXPERIMENTS.md §Perf-L1.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pick(dim: int, pref: int) -> int:
+    """Largest tile <= pref that divides dim (dims here are powers of
+    two times small factors, so this terminates at 1 in the worst case).
+    """
+    t = min(pref, dim)
+    while dim % t:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, bm: int = 128, bn: int = 128, bk: int = 128):
+    """``x @ y`` via the tiled Pallas kernel. ``x: [M, K], y: [K, N]``."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dim mismatch {x.shape} @ {y.shape}"
+    bm, bn, bk = _pick(m, bm), _pick(n, bn), _pick(k, bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def _mm_sub_kernel(a_ref, lam_ref, u_ref, o_ref):
+    """o = a - lam @ u, fused: accumulate the product across the K grid
+    axis, subtract from `a` on the final step (single VMEM pass over the
+    output tile)."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        lam_ref[...], u_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[...] = a_ref[...] - o_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_sub(a, lam, u, bm: int = 128, bn: int = 128, bk: int = 128):
+    """``a - lam @ u`` — the Thanos row-update application
+    ``W <- W - Lambda . R`` (eq. 10) as one fused kernel.
+
+    ``a: [c, rest], lam: [c, width], u: [width, rest]``.
+    """
+    m, n = a.shape
+    m2, k = lam.shape
+    k2, n2 = u.shape
+    assert (m, n) == (m2, n2) or (m == m2 and n == n2), "shape mismatch"
+    assert k == k2 and n == n2 and m == m2
+    bm, bn, bk = _pick(m, bm), _pick(n, bn), _pick(k, bk)
+    return pl.pallas_call(
+        _mm_sub_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, lam, u)

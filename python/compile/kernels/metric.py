@@ -1,0 +1,38 @@
+"""Wanda/OBD saliency Pallas kernel: ``metric_ij = |W_ij| * sqrt(xnorm_sq_j)``.
+
+A VPU (elementwise) kernel: one VMEM pass over the weight tile fused
+with a broadcast of the per-column calibration norm. The norm vector is
+carried as a ``[1, b]`` operand (TPU-friendly: trailing-2D layout).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick
+
+
+def _metric_kernel(w_ref, n_ref, o_ref):
+    o_ref[...] = jnp.abs(w_ref[...]) * jnp.sqrt(n_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bb"))
+def wanda_metric(w, xnorm_sq, bc: int = 128, bb: int = 128):
+    """``|W| * ||X_j||_2`` with ``w: [c, b]``, ``xnorm_sq: [b]``."""
+    c, b = w.shape
+    assert xnorm_sq.shape == (b,)
+    bc, bb = _pick(c, bc), _pick(b, bb)
+    n2d = xnorm_sq.reshape(1, b)
+    return pl.pallas_call(
+        _metric_kernel,
+        grid=(c // bc, b // bb),
+        in_specs=[
+            pl.BlockSpec((bc, bb), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bb), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bc, bb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((c, b), w.dtype),
+        interpret=True,
+    )(w, n2d)

@@ -1,0 +1,28 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the CORE correctness signal of the L1 layer: pytest +
+hypothesis assert ``assert_allclose(kernel(...), ref(...))`` over a
+sweep of shapes and dtypes (``python/tests/test_kernels.py``).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """Oracle for :func:`kernels.matmul`."""
+    return jnp.dot(x, y)
+
+
+def matmul_sub(a, lam, u):
+    """Oracle for :func:`kernels.matmul_sub` (Thanos update, eq. 10)."""
+    return a - jnp.dot(lam, u)
+
+
+def hessian_accum(h, xt):
+    """Oracle for :func:`kernels.hessian_accum` (paper eq. 34)."""
+    return h + 2.0 * jnp.dot(xt.T, xt)
+
+
+def wanda_metric(w, xnorm_sq):
+    """Oracle for :func:`kernels.wanda_metric` (paper eq. 5 / 11)."""
+    return jnp.abs(w) * jnp.sqrt(xnorm_sq)[None, :]

@@ -1,0 +1,125 @@
+"""Scan-based dense linear algebra in pure jnp/lax primitives.
+
+``jnp.linalg.*`` is OFF-LIMITS inside AOT graphs: on CPU it lowers to
+LAPACK custom-calls whose symbol names (``lapack_spotrf_ffi`` etc.,
+jax >= 0.5 FFI registry) do not exist in the xla_extension 0.5.1
+runtime that executes the artifacts. Everything here is built from
+basic HLO ops (fori_loop, dynamic slicing, elementwise math) so the
+lowered module is plain HLO that any PJRT backend runs.
+
+Accuracy: pytest pins these against ``jnp.linalg`` / scipy at test time
+(where LAPACK is fine because tests run under jax's own jaxlib).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def cholesky(a):
+    """Lower-triangular L with ``a = L @ L.T`` (right-looking update).
+
+    ``a`` must be symmetric positive definite; callers damp Hessians
+    first (see :func:`damp`). O(n) sequential steps of O(n^2) vector
+    work — identical complexity to LAPACK potrf, scan-friendly.
+    """
+    n = a.shape[-1]
+    idx = jnp.arange(n)
+
+    def body(j, carry):
+        a_cur, l_acc = carry
+        pivot = jnp.sqrt(a_cur[j, j])
+        col = a_cur[:, j] / pivot
+        col = jnp.where(idx >= j, col, 0.0)
+        l_acc = l_acc.at[:, j].set(col)
+        a_cur = a_cur - jnp.outer(col, col)
+        return (a_cur, l_acc)
+
+    _, l = lax.fori_loop(0, n, body, (a, jnp.zeros_like(a)))
+    return l
+
+
+def solve_lower(l, b):
+    """Solve ``L y = b`` (forward substitution), ``b: [n]``."""
+    n = l.shape[-1]
+
+    def body(j, y):
+        s = jnp.dot(l[j, :], y)
+        return y.at[j].set((b[j] - s) / l[j, j])
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def solve_lower_t(l, y):
+    """Solve ``L.T x = y`` (backward substitution)."""
+    n = l.shape[-1]
+
+    def body(t, x):
+        j = n - 1 - t
+        s = jnp.dot(l[:, j], x)
+        return x.at[j].set((y[j] - s) / l[j, j])
+
+    return lax.fori_loop(0, n, body, jnp.zeros_like(y))
+
+
+def chol_solve(l, b):
+    """Solve ``A x = b`` given ``L = cholesky(A)``."""
+    return solve_lower_t(l, solve_lower(l, b))
+
+
+def chol_solve_many(l, bs):
+    """Solve ``A X = B`` for ``B: [n, k]`` (k right-hand sides)."""
+    return jax.vmap(lambda col: chol_solve(l, col), in_axes=1, out_axes=1)(bs)
+
+
+def spd_solve_batched(mats, rhs):
+    """Batched SPD solve: ``mats: [c, s, s]``, ``rhs: [c, s]`` —
+    the Thanos per-row padded systems (paper §H.1)."""
+    def one(m, r):
+        return chol_solve(cholesky(m), r)
+
+    return jax.vmap(one)(mats, rhs)
+
+
+def lower_tri_inverse(l):
+    """Inverse of a lower-triangular matrix: column ``j`` is the forward
+    solve of ``L x = e_j``; the n solves are vmapped so XLA executes
+    them as one batched scan (n steps of O(n^2) vectorized work)."""
+    n = l.shape[-1]
+    eye = jnp.eye(n, dtype=l.dtype)
+    return jax.vmap(lambda e: solve_lower(l, e), in_axes=1, out_axes=1)(eye)
+
+
+def inverse_cholesky_upper(a):
+    """Upper U with ``A^{-1} = U.T @ U`` — WITHOUT forming the inverse.
+
+    Reversal trick (§Perf-L2): with J the index-reversal and
+    ``M = J A J = Lm Lm^T``, one has ``U = J Lm^{-1} J`` (upper) and
+    ``U^T U = J M^{-1} J = A^{-1}``. One scan-cholesky + one batched
+    triangular solve, vs cholesky + n^2-solve inverse + second cholesky
+    for the naive chain. For any suffix ``j``,
+    ``(A[j:, j:])^{-1} = U[j:, j:].T @ U[j:, j:]`` — one factorization
+    serves every Thanos residual block (pinned in test_linalg.py).
+    """
+    m = a[::-1, ::-1]
+    lm = cholesky(m)
+    linv = lower_tri_inverse(lm)
+    return linv[::-1, ::-1]
+
+
+def chol_inverse(a):
+    """Full inverse of an SPD matrix via the U factor (one matmul on
+    top of ``inverse_cholesky_upper``; exactly symmetric by
+    construction)."""
+    u = inverse_cholesky_upper(a)
+    return u.T @ u
+
+
+def damp(h, percdamp=0.01):
+    """SparseGPT-style damping: ``H + percdamp * mean(diag(H)) * I``,
+    with zero diagonal entries (dead channels) replaced by 1."""
+    n = h.shape[-1]
+    d = jnp.diagonal(h)
+    lam = percdamp * jnp.mean(d)
+    d_new = jnp.where(d == 0.0, 1.0, d + lam)
+    return h + jnp.diag(d_new - d)

@@ -1,0 +1,277 @@
+"""Layer-2 JAX model: a decoder-only transformer LM over a flat
+parameter vector.
+
+All parameters live in ONE flat f32 vector so the Rust coordinator
+manages exactly three buffers (params, adam-m, adam-v) and can splice
+pruned weight matrices back in by manifest offsets — no pytree
+marshalling across the FFI boundary. The layout table (name, offset,
+shape) is emitted into ``artifacts/manifest.json`` by ``aot.py``.
+
+Architecture (pre-norm, tied embeddings):
+
+    x   = emb[tokens] + pos
+    for each block:  x += Wo . attn(RMSNorm_1(x));  x += W2 . gelu(W1 . RMSNorm_2(x))
+    logits = RMSNorm_f(x) @ emb.T
+
+The prunable layers are exactly the six per-block projection matrices
+(wq wk wv wo w1 w2) — the paper prunes linear layers only (§1.1).
+Matmuls route through the Pallas kernel when ``use_pallas=True``
+(numerics pinned against the jnp path in test_model.py); the default
+AOT model uses jnp.dot for the forward substrate and reserves Pallas
+for the pruning hot-spot graphs (DESIGN.md §Hardware-Adaptation).
+"""
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+# Mirrors rust/src/config/mod.rs — keep in sync (checked by the Rust
+# loader against the manifest at startup).
+PRESETS = {
+    "tiny": dict(vocab=512, d_model=128, n_layers=2, n_heads=4, d_ff=512, seq_len=128),
+    "small": dict(vocab=512, d_model=256, n_layers=4, n_heads=4, d_ff=1024, seq_len=128),
+    "med": dict(vocab=512, d_model=384, n_layers=6, n_heads=6, d_ff=1536, seq_len=128),
+}
+
+
+# ---------------------------------------------------------------------------
+# parameter layout
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg):
+    """Canonical (name, shape) list. Weight matrices are stored
+    (out, in) = (c, b), matching the Rust `Mat` convention."""
+    d, dff = cfg["d_model"], cfg["d_ff"]
+    specs = [
+        ("emb", (cfg["vocab"], d)),
+        ("pos", (cfg["seq_len"], d)),
+    ]
+    for l in range(cfg["n_layers"]):
+        specs += [
+            (f"blocks.{l}.ln1", (d,)),
+            (f"blocks.{l}.wq", (d, d)),
+            (f"blocks.{l}.wk", (d, d)),
+            (f"blocks.{l}.wv", (d, d)),
+            (f"blocks.{l}.wo", (d, d)),
+            (f"blocks.{l}.ln2", (d,)),
+            (f"blocks.{l}.w1", (dff, d)),
+            (f"blocks.{l}.w2", (d, dff)),
+        ]
+    specs.append(("ln_f", (d,)))
+    return specs
+
+
+def param_layout(cfg):
+    """(name, offset, shape) rows + total size."""
+    rows, off = [], 0
+    for name, shape in param_specs(cfg):
+        size = int(math.prod(shape))
+        rows.append((name, off, shape))
+        off += size
+    return rows, off
+
+
+def flat_size(cfg):
+    return param_layout(cfg)[1]
+
+
+def unflatten(cfg, flat):
+    """Flat vector -> dict of named arrays (views via reshape)."""
+    out = {}
+    for name, off, shape in param_layout(cfg)[0]:
+        size = int(math.prod(shape))
+        out[name] = flat[off : off + size].reshape(shape)
+    return out
+
+
+def init_params(cfg, seed=0):
+    """GPT-2-style init, returned as the flat vector."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            chunks.append(jnp.ones(shape, jnp.float32).ravel())
+        else:
+            std = 0.02
+            if name.endswith(("wo", "w2")):  # residual-path scaling
+                std = 0.02 / math.sqrt(2 * cfg["n_layers"])
+            chunks.append(
+                (jax.random.normal(sub, shape, jnp.float32) * std).ravel()
+            )
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# model pieces
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, gain, eps=1e-6):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def gelu(x):
+    # tanh approximation: basic HLO ops only (erf can lower to a
+    # custom-call on some backends)
+    c = math.sqrt(2.0 / math.pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def linear(x, w, use_pallas=False):
+    """``y = x @ w.T`` with ``w: (out, in)``; optionally via the Pallas
+    matmul kernel (flattening leading dims to a 2-D tile-friendly GEMM).
+    """
+    if not use_pallas:
+        return jnp.dot(x, w.T)
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y2 = kernels.matmul(x2, w.T)
+    return y2.reshape(lead + (w.shape[0],))
+
+
+def attention(q, k, v, n_heads):
+    """Multi-head causal self-attention over [nb, seq, d] projections."""
+    nb, seq, d = q.shape
+    hd = d // n_heads
+
+    def split(t):
+        return t.reshape(nb, seq, n_heads, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+    return out.transpose(0, 2, 1, 3).reshape(nb, seq, d)
+
+
+def block_forward(bp, x, n_heads, use_pallas=False, capture=False):
+    """One transformer block. ``bp`` is the dict of this block's params
+    (keys ln1, wq, wk, wv, wo, ln2, w1, w2).
+
+    With ``capture=True`` also returns the inputs of every prunable
+    linear layer — the `X` matrices of the paper's generic pruning loop
+    (Alg. 3 line 3).
+    """
+    xn = rmsnorm(x, bp["ln1"])
+    q = linear(xn, bp["wq"], use_pallas)
+    k = linear(xn, bp["wk"], use_pallas)
+    v = linear(xn, bp["wv"], use_pallas)
+    attn_out = attention(q, k, v, n_heads)
+    o = linear(attn_out, bp["wo"], use_pallas)
+    x = x + o
+    xn2 = rmsnorm(x, bp["ln2"])
+    h = gelu(linear(xn2, bp["w1"], use_pallas))
+    ff = linear(h, bp["w2"], use_pallas)
+    y = x + ff
+    if not capture:
+        return y
+    captures = {
+        "x_attn": xn,      # input of wq / wk / wv
+        "x_o": attn_out,   # input of wo
+        "x_ff1": xn2,      # input of w1
+        "x_ff2": h,        # input of w2
+    }
+    return y, captures
+
+
+def block_param_specs(cfg):
+    """(name, shape) of one block in flat order (block-local layout)."""
+    d, dff = cfg["d_model"], cfg["d_ff"]
+    return [
+        ("ln1", (d,)),
+        ("wq", (d, d)),
+        ("wk", (d, d)),
+        ("wv", (d, d)),
+        ("wo", (d, d)),
+        ("ln2", (d,)),
+        ("w1", (dff, d)),
+        ("w2", (d, dff)),
+    ]
+
+
+def unflatten_block(cfg, flat_block):
+    out, off = {}, 0
+    for name, shape in block_param_specs(cfg):
+        size = int(math.prod(shape))
+        out[name] = flat_block[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+def block_flat_size(cfg):
+    return sum(int(math.prod(s)) for _, s in block_param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# full-model functions (the AOT entry points)
+# ---------------------------------------------------------------------------
+
+def embed(cfg, flat, tokens):
+    """tokens [nb, seq] i32 -> x0 [nb, seq, d]."""
+    p = unflatten(cfg, flat)
+    return p["emb"][tokens] + p["pos"][None, : tokens.shape[1], :]
+
+
+def forward_hidden(cfg, flat, tokens, use_pallas=False):
+    p = unflatten(cfg, flat)
+    x = embed(cfg, flat, tokens)
+    for l in range(cfg["n_layers"]):
+        bp = {k.split(".")[-1]: v for k, v in p.items() if k.startswith(f"blocks.{l}.")}
+        x = block_forward(bp, x, cfg["n_heads"], use_pallas)
+    return rmsnorm(x, p["ln_f"])
+
+
+def forward_logits(cfg, flat, tokens, use_pallas=False):
+    p = unflatten(cfg, flat)
+    xf = forward_hidden(cfg, flat, tokens, use_pallas)
+    return jnp.dot(xf, p["emb"].T)
+
+
+def nll_positions(cfg, flat, tokens, use_pallas=False):
+    """Per-position negative log-likelihood of the next token:
+    output [nb, seq-1]; position t scores tokens[:, t+1]."""
+    logits = forward_logits(cfg, flat, tokens, use_pallas)[:, :-1, :]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    targets = tokens[:, 1:]
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -picked
+
+
+def mean_loss(cfg, flat, tokens, use_pallas=False):
+    return jnp.mean(nll_positions(cfg, flat, tokens, use_pallas))
+
+
+def block_capture(cfg, flat_block, x):
+    """AOT entry: one block forward returning the block output and the
+    flattened (tokens x features) inputs of every prunable layer."""
+    bp = unflatten_block(cfg, flat_block)
+    y, cap = block_forward(bp, x, cfg["n_heads"], capture=True)
+    nb, seq, d = x.shape
+    flat2 = lambda t: t.reshape(nb * seq, t.shape[-1])
+    return (
+        y,
+        flat2(cap["x_attn"]),
+        flat2(cap["x_o"]),
+        flat2(cap["x_ff1"]),
+        flat2(cap["x_ff2"]),
+    )
+
+
+def train_step(cfg, flat, m, v, tokens, step, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step. ``step`` is the 0-based step index (i32 scalar).
+    Returns (loss, flat', m', v')."""
+    loss, g = jax.value_and_grad(lambda f: mean_loss(cfg, f, tokens))(flat)
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    t = step.astype(jnp.float32) + 1.0
+    mhat = m / (1.0 - b1**t)
+    vhat = v / (1.0 - b2**t)
+    flat = flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return loss, flat, m, v

@@ -1,0 +1,269 @@
+"""Layer-2 pruning compute graphs — the AOT path of every Thanos
+variant plus the mask-only baselines.
+
+Everything here is a pure jittable function over static shapes with
+**runtime** sparsity controls (p, k, alpha arrive as traced scalars via
+the sort-threshold trick), so ONE artifact per layer shape serves every
+sparsity point of every experiment. Only the Thanos block size B and
+the n:m pattern are baked per artifact.
+
+Two implementation tricks make the graphs static-shape friendly:
+
+1. **Masked padded systems** (the paper's §H.1 padding, taken to its
+   logical conclusion): instead of gathering each row's removal indices
+   q into an s x s system, the system is embedded over the full block
+   width: ``Rhat' = (m x m) * Hinv_bb + diag(1 - m)`` with rhs
+   ``m * w``. Unmasked coordinates solve to exactly lambda = 0, masked
+   coordinates solve the exact principal subsystem — no gathers, fully
+   batched, PD by construction.
+
+2. **Suffix-inverse factor** (the SparseGPT identity): with
+   ``H^{-1} = U^T U`` (U upper), the residual-block inverse the paper
+   recomputes per block (Alg. 1 line 17 + inversion) is
+   ``(H[j:, j:])^{-1} = U[j:, j:]^T U[j:, j:]`` — one O(b^3)
+   factorization per layer and two tile matmuls per block instead of a
+   fresh O(rest^3) inversion per block (complexity drops from the
+   paper's O(b^4/B) to O(b^3 + b^2 B); numerics identical, pinned by
+   tests against the direct form).
+
+SparseGPT itself is served by the Rust implementation (it is a
+baseline, not the contribution; see DESIGN.md §System-inventory).
+"""
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import kernels
+from . import linalg_jax as la
+
+
+# ---------------------------------------------------------------------------
+# mask helpers (runtime counts via sort thresholds)
+# ---------------------------------------------------------------------------
+
+def _smallest_r_mask_flat(metric_flat, r):
+    """Boolean mask of the r smallest entries (r is a traced i32).
+    Ties at the threshold may slightly overshoot r — the documented
+    deviation of the AOT path from the bit-exact Rust path."""
+    n = metric_flat.shape[0]
+    r = jnp.clip(r, 0, n)
+    srt = jnp.sort(metric_flat)
+    idx = jnp.clip(r - 1, 0, n - 1)
+    thr = lax.dynamic_slice(srt, (idx,), (1,))[0]
+    return (metric_flat <= thr) & (r > 0)
+
+
+def _per_row_smallest(metric, k):
+    """Per-row mask of the k smallest entries (k traced)."""
+    c, b = metric.shape
+    k = jnp.clip(k, 0, b)
+    srt = jnp.sort(metric, axis=1)
+    idx = jnp.clip(k - 1, 0, b - 1)
+    thr = lax.dynamic_slice_in_dim(srt, idx, 1, axis=1)
+    return (metric <= thr) & (k > 0)
+
+
+def _nm_group_mask(metric, n, m):
+    """n smallest per group of m consecutive entries (n, m static)."""
+    c, b = metric.shape
+    g = metric.reshape(c, b // m, m)
+    order = jnp.argsort(g, axis=-1)
+    rank = jnp.argsort(order, axis=-1)
+    return (rank < n).reshape(c, b)
+
+
+def _apply_mask(w, mask):
+    return jnp.where(mask, 0.0, w)
+
+
+# ---------------------------------------------------------------------------
+# baselines
+# ---------------------------------------------------------------------------
+
+def magnitude_unstructured(w, r):
+    """Alg. 4: zero the r smallest |w| anywhere (r traced i32)."""
+    mask = _smallest_r_mask_flat(jnp.abs(w).ravel(), r).reshape(w.shape)
+    return _apply_mask(w, mask), mask.astype(jnp.float32)
+
+
+def wanda_unstructured(w, xnorm_sq, k):
+    """Alg. 6: per-row k smallest of |W|*||X_j|| (k traced i32)."""
+    metric = kernels.wanda_metric(w, xnorm_sq)
+    mask = _per_row_smallest(metric, k)
+    return _apply_mask(w, mask), mask.astype(jnp.float32)
+
+
+def wanda_nm(w, xnorm_sq, n, m):
+    """n:m Wanda (n, m static)."""
+    metric = kernels.wanda_metric(w, xnorm_sq)
+    mask = _nm_group_mask(metric, n, m)
+    return _apply_mask(w, mask), mask.astype(jnp.float32)
+
+
+def magnitude_nm(w, n, m):
+    """n:m magnitude: n smallest |w| per group of m."""
+    mask = _nm_group_mask(jnp.abs(w), n, m)
+    return _apply_mask(w, mask), mask.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Thanos
+# ---------------------------------------------------------------------------
+
+def _masked_padded_solve(hinv_bb, local_mask, w_block):
+    """Per-row joint systems via the masked embedding (§H.1 trick).
+
+    hinv_bb: [width, width] block of the residual inverse Hessian,
+    local_mask: [c, width] bool, w_block: [c, width].
+    Returns lambda: [c, width] with zeros at unmasked coordinates.
+    """
+    mf = local_mask.astype(w_block.dtype)
+    width = hinv_bb.shape[0]
+    eye = jnp.eye(width, dtype=w_block.dtype)
+    # Rhat' = (m x m) . Hinv_bb  +  diag(1 - m)
+    rhat = mf[:, :, None] * mf[:, None, :] * hinv_bb[None] + (1.0 - mf)[:, None, :] * eye[None]
+    rhs = mf * w_block
+    lam = la.spd_solve_batched(rhat, rhs)
+    return lam * mf
+
+
+def _suffix_factors(u, j1, width, b):
+    """Residual-inverse pieces from the global factor U (static slices):
+    returns (hinv_bb [width, width], hinv_rows [width, rest])."""
+    usq = u[j1 : j1 + width, j1 : j1 + width]
+    ublk = u[j1 : j1 + width, j1:]
+    hinv_bb = jnp.dot(usq.T, usq)
+    hinv_rows = kernels.matmul(usq.T, ublk) if width >= 8 else jnp.dot(usq.T, ublk)
+    return hinv_bb, hinv_rows
+
+
+def thanos_unstructured(w, h, xnorm_sq, p, block_size=128, percdamp=0.01):
+    """Alg. 1: block-wise walk, global residual mask (eq. 11), joint
+    per-row updates (eq. 10). p is a traced f32 scalar."""
+    c, b = w.shape
+    bsize = min(block_size, b)
+    hd = la.damp(h, percdamp)
+    hinv = la.chol_inverse(hd)
+    u = la.cholesky(hinv).T  # H^{-1} = U^T U
+
+    r_left = jnp.floor(p * (c * b)).astype(jnp.int32)
+    mask_full = jnp.zeros((c, b), bool)
+
+    for j1 in range(0, b, bsize):
+        width = min(bsize, b - j1)
+        rest = b - j1
+        hinv_bb, hinv_rows = _suffix_factors(u, j1, width, b)
+
+        wres = lax.slice_in_dim(w, j1, b, axis=1)
+        metric = kernels.wanda_metric(wres, lax.slice_in_dim(xnorm_sq, j1, b))
+        res_mask = _smallest_r_mask_flat(metric.ravel(), r_left).reshape(c, rest)
+        local = res_mask[:, :width]
+        r_left = r_left - jnp.sum(local).astype(jnp.int32)
+
+        lam = _masked_padded_solve(hinv_bb, local, wres[:, :width])
+        wres_new = kernels.matmul_sub(wres, lam, hinv_rows)
+        # masked coordinates are zero in exact arithmetic; clamp exactly
+        pad = jnp.zeros((c, rest - width), bool)
+        local_wide = jnp.concatenate([local, pad], axis=1)
+        wres_new = jnp.where(local_wide, 0.0, wres_new)
+        w = lax.dynamic_update_slice(w, wres_new, (0, j1))
+        mask_full = mask_full.at[:, j1 : j1 + width].set(local)
+
+    return w, mask_full.astype(jnp.float32)
+
+
+def _prune_row_mask(w, h, alpha):
+    """Rows NOT in the top ceil(alpha*c) by loss h_i = W_i H W_i^T
+    (eq. 14) — the rows structured/semi-structured pruning touches."""
+    c = w.shape[0]
+    hrow = jnp.einsum("ij,jk,ik->i", w, h, w)
+    c_prune = c - jnp.ceil(alpha * c).astype(jnp.int32)
+    srt = jnp.sort(hrow)
+    idx = jnp.clip(c_prune - 1, 0, c - 1)
+    thr = lax.dynamic_slice(srt, (idx,), (1,))[0]
+    return (hrow <= thr) & (c_prune > 0)
+
+
+def thanos_nm(w, h, xnorm_sq, alpha, n, m, block_size=128, percdamp=0.01):
+    """Alg. 8: n:m masks per group, joint updates per block, outlier
+    rows (fraction alpha, traced) skipped."""
+    c, b = w.shape
+    assert b % m == 0
+    bsize = max(m, min(block_size, b))
+    bsize -= bsize % m
+    hd = la.damp(h, percdamp)
+    hinv = la.chol_inverse(hd)
+    u = la.cholesky(hinv).T
+
+    prune_rows = _prune_row_mask(w, hd, alpha)
+    mask_full = jnp.zeros((c, b), bool)
+
+    for j1 in range(0, b, bsize):
+        width = min(bsize, b - j1)
+        rest = b - j1
+        hinv_bb, hinv_rows = _suffix_factors(u, j1, width, b)
+        wres = lax.slice_in_dim(w, j1, b, axis=1)
+        metric = kernels.wanda_metric(
+            wres[:, :width], lax.slice_in_dim(xnorm_sq, j1, j1 + width)
+        )
+        local = _nm_group_mask(metric, n, m) & prune_rows[:, None]
+
+        lam = _masked_padded_solve(hinv_bb, local, wres[:, :width])
+        wres_new = kernels.matmul_sub(wres, lam, hinv_rows)
+        pad = jnp.zeros((c, rest - width), bool)
+        local_wide = jnp.concatenate([local, pad], axis=1)
+        wres_new = jnp.where(local_wide, 0.0, wres_new)
+        w = lax.dynamic_update_slice(w, wres_new, (0, j1))
+        mask_full = mask_full.at[:, j1 : j1 + width].set(local)
+
+    return w, mask_full.astype(jnp.float32)
+
+
+def thanos_structured(w, h, xnorm_sq, p, alpha, percdamp=0.01):
+    """Alg. 2: structured column removal with outlier rows. No explicit
+    permutations — the masked-system embedding makes them unnecessary
+    (the permutation of §G.4.4 is an implementation device for gathers;
+    the solved system is identical)."""
+    c, b = w.shape
+    hd = la.damp(h, percdamp)
+    hinv = la.chol_inverse(hd)
+
+    prune_rows = _prune_row_mask(w, hd, alpha)
+
+    # column losses over pruned rows only (eq. 15)
+    v = jnp.sum(jnp.square(w) * prune_rows[:, None].astype(w.dtype), axis=0) * xnorm_sq
+    s = jnp.ceil(p * b / (1.0 - alpha)).astype(jnp.int32)
+    s = jnp.clip(s, 0, b)
+    srt = jnp.sort(v)
+    idx = jnp.clip(s - 1, 0, b - 1)
+    thr = lax.dynamic_slice(srt, (idx,), (1,))[0]
+    col_mask = (v <= thr) & (s > 0)
+
+    # joint closed-form update (eq. 13) via the masked embedding:
+    # Rhat' = (m x m) * Hinv + diag(1-m); lambda_k = Rhat'^{-1} (m * w_k)
+    mf = col_mask.astype(w.dtype)
+    eye = jnp.eye(b, dtype=w.dtype)
+    rhat = mf[:, None] * mf[None, :] * hinv + (1.0 - mf)[None, :] * eye
+    l = la.cholesky(rhat)
+    rhs = w * mf[None, :]
+    lam = jax.vmap(lambda r: la.chol_solve(l, r))(rhs)  # [c, b]
+    delta = kernels.matmul(lam, hinv)
+    pr = prune_rows[:, None].astype(w.dtype)
+    w_new = w - delta * pr
+    full_mask = col_mask[None, :] & prune_rows[:, None]
+    w_new = jnp.where(full_mask, 0.0, w_new)
+    return w_new, full_mask.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# calibration statistics (AOT entry)
+# ---------------------------------------------------------------------------
+
+def hessian_accum(h, xt):
+    """H += 2 Xt^T Xt (Pallas kernel); also returns the running
+    row-norm-squared update for the Wanda metric."""
+    return kernels.hessian_accum(h, xt), jnp.sum(jnp.square(xt), axis=0)

@@ -1,0 +1,97 @@
+"""Scan-based linear algebra vs LAPACK-backed jnp.linalg (the latter is
+fine at test time; it is only banned inside AOT graphs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import linalg_jax as la
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def spd(n, seed, damp=0.05):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, n + 4))
+    return x @ x.T + damp * jnp.eye(n)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 48), seed=st.integers(0, 1000))
+def test_cholesky_matches_lapack(n, seed):
+    a = spd(n, seed)
+    l = la.cholesky(a)
+    l_ref = jnp.linalg.cholesky(a)
+    np.testing.assert_allclose(l, l_ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 48), seed=st.integers(0, 1000))
+def test_chol_solve_solves(n, seed):
+    a = spd(n, seed)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (n,))
+    x = la.chol_solve(la.cholesky(a), b)
+    np.testing.assert_allclose(a @ x, b, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 32), k=st.integers(1, 8), seed=st.integers(0, 1000))
+def test_chol_solve_many(n, k, seed):
+    a = spd(n, seed)
+    bs = jax.random.normal(jax.random.PRNGKey(seed + 2), (n, k))
+    xs = la.chol_solve_many(la.cholesky(a), bs)
+    np.testing.assert_allclose(a @ xs, bs, rtol=2e-3, atol=2e-3)
+
+
+def test_chol_inverse():
+    a = spd(24, 7)
+    inv = la.chol_inverse(a)
+    np.testing.assert_allclose(a @ inv, jnp.eye(24), rtol=0, atol=5e-4)
+    np.testing.assert_allclose(inv, inv.T, rtol=0, atol=0)  # exact symmetry
+
+
+def test_suffix_inverse_identity():
+    """(H[j:, j:])^{-1} == U[j:, j:].T @ U[j:, j:] — the factorization
+    identity every Thanos block step relies on."""
+    h = spd(20, 9)
+    u = la.inverse_cholesky_upper(h)
+    for j in (0, 3, 8, 15):
+        direct = jnp.linalg.inv(h[j:, j:])
+        via_u = u[j:, j:].T @ u[j:, j:]
+        np.testing.assert_allclose(via_u, direct, rtol=2e-3, atol=2e-3)
+
+
+def test_spd_solve_batched():
+    mats = jnp.stack([spd(12, s) for s in range(5)])
+    rhs = jax.random.normal(jax.random.PRNGKey(3), (5, 12))
+    xs = la.spd_solve_batched(mats, rhs)
+    for i in range(5):
+        np.testing.assert_allclose(mats[i] @ xs[i], rhs[i], rtol=2e-3, atol=2e-3)
+
+
+def test_damp_fixes_dead_channels():
+    h = jnp.diag(jnp.array([4.0, 0.0, 1.0]))
+    hd = la.damp(h, 0.01)
+    assert hd[1, 1] == 1.0
+    assert hd[0, 0] > 4.0
+    # still symmetric, now PD
+    l = la.cholesky(hd)
+    assert bool(jnp.all(jnp.isfinite(l)))
+
+
+def test_masked_system_principle():
+    """The masked embedding solves the exact principal subsystem:
+    compare against a gathered dense solve."""
+    h = spd(10, 11)
+    hinv = la.chol_inverse(h)
+    mask = jnp.array([1, 0, 1, 1, 0, 0, 1, 0, 0, 1], dtype=jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(4), (10,))
+    eye = jnp.eye(10)
+    rhat = mask[:, None] * mask[None, :] * hinv + (1.0 - mask)[None, :] * eye
+    lam = la.chol_solve(la.cholesky(rhat), mask * w)
+    # gathered reference
+    idx = np.where(np.asarray(mask) > 0)[0]
+    sub = np.asarray(hinv)[np.ix_(idx, idx)]
+    lam_ref = np.linalg.solve(sub, np.asarray(w)[idx])
+    np.testing.assert_allclose(np.asarray(lam)[idx], lam_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(lam)[np.asarray(mask) == 0], 0.0, atol=1e-5)

@@ -1,0 +1,146 @@
+"""Pruning-graph invariants + quality ordering on the AOT (JAX) path.
+
+These mirror the Rust test-suite invariants so the two implementations
+are held to the same contract; exact cross-validation against Rust
+happens in the Rust integration tests through the runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import prune
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def setup(c, b, a, seed):
+    """Correlated calibration data -> (w, h, xnorm_sq, x)."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    w = jax.random.normal(k1, (c, b))
+    factors = jax.random.normal(k2, (max(b // 4, 2), a))
+    loading = jax.random.normal(k3, (b, max(b // 4, 2)))
+    x = loading @ factors + 0.3 * jax.random.normal(k4, (b, a))
+    h = 2.0 * (x @ x.T) / a
+    xnorm_sq = jnp.sum(jnp.square(x), axis=1)
+    return w, h, xnorm_sq, x
+
+
+def recon_loss(w_new, w, x):
+    d = (w_new - w) @ x
+    return float(jnp.sum(jnp.square(d)))
+
+
+def sparsity(w):
+    return float(jnp.mean((w == 0.0).astype(jnp.float32)))
+
+
+def test_magnitude_exact_count():
+    w, _, _, _ = setup(16, 32, 64, 0)
+    w_new, mask = prune.magnitude_unstructured(w, jnp.int32(16 * 16))
+    assert int(mask.sum()) == 16 * 16
+    assert sparsity(w_new) == 0.5
+
+
+def test_wanda_per_row_count():
+    w, _, xn, _ = setup(12, 32, 64, 1)
+    w_new, mask = prune.wanda_unstructured(w, xn, jnp.int32(16))
+    per_row = np.asarray(mask.sum(axis=1))
+    np.testing.assert_array_equal(per_row, 16)
+    # kept weights unchanged
+    kept = np.asarray(mask) == 0
+    np.testing.assert_array_equal(np.asarray(w_new)[kept], np.asarray(w)[kept])
+
+
+def test_wanda_nm_format():
+    w, _, xn, _ = setup(8, 32, 64, 2)
+    w_new, _ = prune.wanda_nm(w, xn, 2, 4)
+    grp = np.asarray(w_new).reshape(8, 8, 4)
+    zeros = (grp == 0).sum(axis=-1)
+    assert (zeros == 2).all()
+
+
+@pytest.mark.parametrize("block_size", [8, 16, 32])
+def test_thanos_unstructured_sparsity_and_quality(block_size):
+    w, h, xn, x = setup(16, 32, 96, 3)
+    p = jnp.float32(0.5)
+    w_new, mask = prune.thanos_unstructured(w, h, xn, p, block_size=block_size)
+    got = sparsity(w_new)
+    # sort-threshold ties can overshoot a hair; must be within 2%
+    assert abs(got - 0.5) < 0.02, got
+    # masked entries exactly zero
+    assert np.all(np.asarray(w_new)[np.asarray(mask) > 0] == 0.0)
+    # joint update beats mask-only at the same mask
+    w_maskonly = jnp.where(mask > 0, 0.0, w)
+    assert recon_loss(w_new, w, x) < recon_loss(w_maskonly, w, x)
+
+
+def test_thanos_beats_wanda_jax():
+    wins = 0
+    for seed in range(4):
+        w, h, xn, x = setup(16, 32, 96, 10 + seed)
+        t, _ = prune.thanos_unstructured(w, h, xn, jnp.float32(0.5), block_size=16)
+        k = jnp.int32(16)
+        wa, _ = prune.wanda_unstructured(w, xn, k)
+        if recon_loss(t, w, x) < recon_loss(wa, w, x):
+            wins += 1
+    assert wins >= 3, wins
+
+
+def test_thanos_nm_format_and_outliers():
+    w, h, xn, x = setup(10, 32, 96, 4)
+    w_new, mask = prune.thanos_nm(w, h, xn, jnp.float32(0.2), 2, 4, block_size=16)
+    wn = np.asarray(w_new)
+    m = np.asarray(mask)
+    # ceil(0.2*10)=2 outlier rows untouched
+    untouched = [i for i in range(10) if np.array_equal(wn[i], np.asarray(w)[i])]
+    assert len(untouched) == 2, untouched
+    # pruned rows satisfy 2:4
+    for i in range(10):
+        if i in untouched:
+            continue
+        zeros = (wn[i].reshape(8, 4) == 0).sum(axis=-1)
+        assert (zeros >= 2).all(), f"row {i}: {zeros}"
+    assert np.all(wn[m > 0] == 0.0)
+
+
+def test_thanos_structured_columns():
+    w, h, xn, x = setup(12, 24, 72, 5)
+    p, alpha = jnp.float32(0.25), jnp.float32(0.0)
+    w_new, mask = prune.thanos_structured(w, h, xn, p, alpha)
+    wn = np.asarray(w_new)
+    # whole columns zero
+    removed = [j for j in range(24) if (wn[:, j] == 0).all()]
+    s = int(np.ceil(0.25 * 24))
+    assert len(removed) == s, (removed, s)
+    assert abs(sparsity(w_new) - s / 24) < 1e-6
+
+
+def test_thanos_structured_alpha_outliers():
+    w, h, xn, x = setup(12, 24, 72, 6)
+    w_new, mask = prune.thanos_structured(w, h, xn, jnp.float32(0.25), jnp.float32(0.25))
+    wn = np.asarray(w_new)
+    untouched = [i for i in range(12) if np.array_equal(wn[i], np.asarray(w)[i])]
+    assert len(untouched) == 3  # ceil(0.25*12)
+    # pruned rows share a common removed-column set of size s
+    s = int(np.ceil(0.25 * 24 / 0.75))
+    pruned_rows = [i for i in range(12) if i not in untouched]
+    removed = [j for j in range(24) if all(wn[i, j] == 0 for i in pruned_rows)]
+    assert len(removed) == s
+
+
+def test_thanos_structured_beats_column_masking():
+    w, h, xn, x = setup(16, 24, 96, 7)
+    w_new, mask = prune.thanos_structured(w, h, xn, jnp.float32(0.3), jnp.float32(0.0))
+    w_maskonly = jnp.where(mask > 0, 0.0, w)
+    assert recon_loss(w_new, w, x) < recon_loss(w_maskonly, w, x)
+
+
+def test_hessian_accum_entry():
+    w, h, xn, x = setup(4, 16, 32, 8)
+    h0 = jnp.zeros((16, 16))
+    xt = x.T  # [a, b]
+    h1, xn1 = prune.hessian_accum(h0, xt)
+    np.testing.assert_allclose(h1, 2.0 * x @ x.T, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(xn1, jnp.sum(x * x, axis=1), rtol=1e-5, atol=1e-4)

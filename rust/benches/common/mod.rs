@@ -1,0 +1,70 @@
+//! Shared helpers for the paper-table benches (`harness = false`
+//! binaries — no criterion in the offline vendor set; plain
+//! `std::time::Instant` with warm-up + CSV emission).
+
+#![allow(dead_code)]
+
+use std::io::Write;
+use thanos::linalg::Mat;
+use thanos::pruning::CalibStats;
+use thanos::rng::Rng;
+
+/// Correlated calibration layer setup at arbitrary shape — the same
+/// generator the test-suite uses, sized for bench workloads.
+pub fn bench_layer(c: usize, b: usize, a: usize, seed: u64) -> (Mat, CalibStats, Mat) {
+    let mut r = Rng::new(seed);
+    let w = Mat::from_fn(c, b, |_, _| r.normal_f32(0.0, 1.0));
+    let k = (b / 8).max(2);
+    let factors = Mat::from_fn(k, a, |_, _| r.normal_f32(0.0, 1.0));
+    let loading = Mat::from_fn(b, k, |_, _| r.normal_f32(0.0, 0.5));
+    let mut x = thanos::linalg::gemm::matmul(&loading, &factors);
+    for v in x.data.iter_mut() {
+        *v += r.normal_f32(0.0, 0.5);
+    }
+    let stats = CalibStats::from_x(&x);
+    (w, stats, x)
+}
+
+/// Time a closure (single shot — pruning runs are seconds-scale, so no
+/// repetition harness is needed; determinism comes from fixed seeds).
+pub fn time_s<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Append rows to `bench_results/<name>.csv` (header written once).
+pub struct Csv {
+    path: String,
+    wrote_header: bool,
+}
+
+impl Csv {
+    pub fn new(name: &str) -> Csv {
+        std::fs::create_dir_all("bench_results").ok();
+        let path = format!("bench_results/{name}.csv");
+        std::fs::remove_file(&path).ok();
+        Csv { path, wrote_header: false }
+    }
+
+    pub fn row(&mut self, header: &str, values: &str) {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .expect("open csv");
+        if !self.wrote_header {
+            writeln!(f, "{header}").unwrap();
+            self.wrote_header = true;
+        }
+        writeln!(f, "{values}").unwrap();
+    }
+}
+
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_str(name: &str, default: &str) -> String {
+    std::env::var(name).unwrap_or_else(|_| default.to_string())
+}

@@ -1,0 +1,102 @@
+//! Fig. 1 — perplexity vs sparsity ratio.
+//!
+//! (a) unstructured pruning (the paper uses OPT-125M): Wanda /
+//!     SparseGPT / Thanos over p ∈ {0.1 … 0.7};
+//! (b) structured pruning (paper: LLaMA-3 8B): the same methods plus
+//!     Thanos α = 0.1 over p ∈ {0.1 … 0.4}.
+//!
+//! Here both run on the trained `tiny` checkpoint (DESIGN.md
+//! §Substitutions). Expected shape: (a) methods cluster, magnitude
+//! diverges at high p; (b) Thanos clearly below SparseGPT below Wanda,
+//! α=0.1 best — the paper's headline figure.
+
+mod common;
+use common::*;
+use thanos::coordinator::Backend;
+use thanos::harness::{ensure_trained, experiment_corpus, run_cell};
+use thanos::pruning::{Method, Pattern, PruneOpts};
+use thanos::runtime::Runtime;
+
+fn main() {
+    let model = env_str("THANOS_MODEL", "tiny");
+    let steps = env_usize("THANOS_STEPS", 300);
+    let rt = match Runtime::load("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP fig1 bench: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let (state, _) = ensure_trained(&rt, &model, steps, 2e-3, 1234).expect("checkpoint");
+    let corpus = experiment_corpus(&state.config);
+    let dense = thanos::eval::perplexity(&rt, &state, &corpus.eval).unwrap();
+    let opts = PruneOpts::default();
+    let mut csv = Csv::new("fig1_ppl_vs_sparsity");
+    let header = "panel,method,p,ppl";
+    println!("== Fig. 1a: unstructured PPL vs sparsity ({model}, dense {dense:.3}) ==");
+    println!(
+        "  {:<12}{}",
+        "p",
+        [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7]
+            .iter()
+            .map(|p| format!("{p:>9}"))
+            .collect::<String>()
+    );
+    for method in [Method::Magnitude, Method::Wanda, Method::SparseGpt, Method::Thanos] {
+        let mut line = format!("  {:<12}", method.name());
+        for &p in &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7] {
+            let (cell, _) = run_cell(
+                &rt,
+                &state,
+                &corpus,
+                method,
+                Pattern::Unstructured { p },
+                &opts,
+                Backend::Rust,
+                None,
+            )
+            .unwrap();
+            line.push_str(&format!("{:>9.2}", cell.ppl));
+            csv.row(header, &format!("a,{},{p},{:.4}", method.name(), cell.ppl));
+        }
+        println!("{line}");
+    }
+
+    println!("\n== Fig. 1b: structured PPL vs sparsity ==");
+    println!(
+        "  {:<16}{}",
+        "p",
+        [0.1, 0.2, 0.3, 0.4]
+            .iter()
+            .map(|p| format!("{p:>10}"))
+            .collect::<String>()
+    );
+    let series: Vec<(String, Method, f64)> = vec![
+        ("Wanda".into(), Method::Wanda, 0.0),
+        ("SparseGPT".into(), Method::SparseGpt, 0.0),
+        ("Thanos a=0".into(), Method::Thanos, 0.0),
+        ("Thanos a=0.1".into(), Method::Thanos, 0.1),
+    ];
+    for (label, method, alpha) in &series {
+        let mut line = format!("  {label:<16}");
+        for &p in &[0.1, 0.2, 0.3, 0.4] {
+            let (cell, _) = run_cell(
+                &rt,
+                &state,
+                &corpus,
+                *method,
+                Pattern::Structured { p, alpha: *alpha },
+                &opts,
+                Backend::Rust,
+                None,
+            )
+            .unwrap();
+            line.push_str(&format!("{:>10.2}", cell.ppl));
+            csv.row(header, &format!("b,{label},{p},{:.4}", cell.ppl));
+        }
+        println!("{line}");
+    }
+    println!("\nexpected shape: (a) update methods track each other, Magnitude");
+    println!("diverges at high p; (b) Thanos < SparseGPT < Wanda, α=0.1 best.");
+    println!("wrote bench_results/fig1_ppl_vs_sparsity.csv");
+}

@@ -1,0 +1,101 @@
+//! Table 1 — complexity comparison of the pruning methods.
+//!
+//! The paper's Table 1 states asymptotic complexities (Magnitude
+//! O(c²log c), Wanda O(c²log c), SparseGPT O(c³), Thanos
+//! O(c⁴/B + c²B²) unstructured / O(c³) structured). This bench
+//! regenerates the table empirically: wall-clock at square shapes
+//! c = b ∈ {128..1024} plus the fitted growth exponent between
+//! consecutive doublings, and prints the feature matrix (optimal block
+//! updates / weight update / calibration data) alongside.
+//!
+//! Thanos unstructured is measured in BOTH inverse modes: the
+//! paper-faithful per-block inversion (the Table-1 O(c⁴/B) row) and the
+//! suffix-factor fast path this library defaults to (O(c³)).
+
+mod common;
+use common::*;
+use thanos::linalg::Mat;
+use thanos::pruning::{self, CalibStats, PruneOpts};
+
+type Variant = (&'static str, Box<dyn Fn(&Mat, &CalibStats)>);
+
+fn main() {
+    let max_n = env_usize("THANOS_T1_MAX", 1024);
+    let sizes: Vec<usize> = [128usize, 256, 512, 1024]
+        .into_iter()
+        .filter(|&n| n <= max_n)
+        .collect();
+    let mut csv = Csv::new("table1_complexity");
+    println!("== Table 1: empirical method complexity (c = b, unstructured 50%) ==\n");
+    println!("feature matrix (paper Table 1):");
+    println!("  method      optimal-block-updates  weight-update  calibration-data");
+    println!("  Magnitude   no                     no             no");
+    println!("  Wanda       no                     no             yes");
+    println!("  SparseGPT   no                     yes            yes");
+    println!("  Thanos      yes                    yes            yes\n");
+
+    let header = "method,n,secs";
+    println!(
+        "  {:<26}{}",
+        "method \\ c=b",
+        sizes.iter().map(|n| format!("{n:>16}")).collect::<String>()
+    );
+
+    let variants: Vec<Variant> = vec![
+        ("Magnitude", Box::new(|w, _s| {
+            pruning::magnitude::unstructured(w, 0.5);
+        })),
+        ("Wanda", Box::new(|w, s| {
+            pruning::wanda::unstructured(w, s, 0.5);
+        })),
+        ("SparseGPT", Box::new(|w, s| {
+            let o = PruneOpts { block_size: 128, ..Default::default() };
+            pruning::sparsegpt::unstructured(w, s, 0.5, &o).unwrap();
+        })),
+        ("Thanos (paper O(c4/B))", Box::new(|w, s| {
+            let o = PruneOpts {
+                block_size: 128,
+                paper_faithful_inverse: true,
+                ..Default::default()
+            };
+            pruning::thanos::unstructured(w, s, 0.5, &o).unwrap();
+        })),
+        ("Thanos (fast, O(c3))", Box::new(|w, s| {
+            let o = PruneOpts { block_size: 128, ..Default::default() };
+            pruning::thanos::unstructured(w, s, 0.5, &o).unwrap();
+        })),
+        ("Thanos structured", Box::new(|w, s| {
+            let o = PruneOpts::default();
+            pruning::thanos::structured(w, s, 0.3, 0.1, &o).unwrap();
+        })),
+        ("SparseGPT structured", Box::new(|w, s| {
+            let o = PruneOpts::default();
+            pruning::sparsegpt::structured(w, s, 0.3, &o).unwrap();
+        })),
+    ];
+
+    for (name, f) in &variants {
+        // paper-faithful O(c^4/B) explodes past 512 — cap it
+        let cap = if name.contains("paper") { 512 } else { usize::MAX };
+        let mut line = format!("  {name:<26}");
+        let mut prev: Option<f64> = None;
+        for &n in &sizes {
+            if n > cap {
+                line.push_str(&format!("{:>16}", "-"));
+                continue;
+            }
+            let (w, stats, _) = bench_layer(n, n, n + 64, 42);
+            let (_, secs) = time_s(|| f(&w, &stats));
+            csv.row(header, &format!("{name},{n},{secs:.4}"));
+            let exp = prev
+                .map(|p| format!(" (^{:.1})", (secs / p).log2()))
+                .unwrap_or_default();
+            line.push_str(&format!("{:>9.3}s{exp:<6}", secs));
+            prev = Some(secs);
+        }
+        println!("{line}");
+    }
+    println!("\n(^k) = growth exponent vs previous size; expect ~2 for the metric");
+    println!("methods, ~3 for SparseGPT/fast-Thanos, ~4 for paper-faithful Thanos.");
+    println!("wrote bench_results/table1_complexity.csv");
+}

@@ -1,0 +1,258 @@
+//! Configuration system: model presets, run configuration, CLI
+//! overrides, JSON (de)serialization.
+//!
+//! The launcher (`thanos` binary) resolves configuration in layers:
+//! built-in preset → optional JSON config file → `--key=value` CLI
+//! overrides, in that order — the usual framework pattern (MaxText-
+//! style) without external crates.
+
+use crate::jsonutil::{obj, Json};
+use anyhow::{bail, Context, Result};
+
+/// Transformer architecture configuration (decoder-only LM).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+impl ModelConfig {
+    /// Built-in presets. Sizes are chosen so pruning-quality deltas are
+    /// measurable on CPU in minutes (DESIGN.md §Substitutions).
+    pub fn preset(name: &str) -> Result<ModelConfig> {
+        Ok(match name {
+            // ~1.1M params — TinyLlama-analogue for Table 5 sweeps
+            "tiny" => ModelConfig {
+                name: "tiny".into(),
+                vocab: 512,
+                d_model: 128,
+                n_layers: 2,
+                n_heads: 4,
+                d_ff: 512,
+                seq_len: 128,
+            },
+            // ~4.9M params — the Table 2/3 workhorse
+            "small" => ModelConfig {
+                name: "small".into(),
+                vocab: 512,
+                d_model: 256,
+                n_layers: 4,
+                n_heads: 4,
+                d_ff: 1024,
+                seq_len: 128,
+            },
+            // ~13M params — the "larger model" column
+            "med" => ModelConfig {
+                name: "med".into(),
+                vocab: 512,
+                d_model: 384,
+                n_layers: 6,
+                n_heads: 6,
+                d_ff: 1536,
+                seq_len: 128,
+            },
+            other => bail!("unknown model preset '{other}' (tiny|small|med)"),
+        })
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count (embeddings + blocks + final norm; the
+    /// unembedding is tied to the embedding).
+    pub fn n_params(&self) -> usize {
+        let emb = self.vocab * self.d_model;
+        let per_block = 4 * self.d_model * self.d_model          // q,k,v,o
+            + 2 * self.d_model * self.d_ff                        // ff1, ff2
+            + 2 * self.d_model;                                   // 2 norms
+        emb + self.n_layers * per_block + self.d_model
+    }
+
+    /// The distinct prunable layer shapes (c×b) of one block, in
+    /// pipeline order: q/k/v/o projections and the two FF matrices.
+    /// Layout is `y = W·x` with `W ∈ ℝ^{out×in}` (c=out, b=in).
+    pub fn layer_shapes(&self) -> Vec<(String, usize, usize)> {
+        vec![
+            ("wq".into(), self.d_model, self.d_model),
+            ("wk".into(), self.d_model, self.d_model),
+            ("wv".into(), self.d_model, self.d_model),
+            ("wo".into(), self.d_model, self.d_model),
+            ("w1".into(), self.d_ff, self.d_model),
+            ("w2".into(), self.d_model, self.d_ff),
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("vocab", Json::Num(self.vocab as f64)),
+            ("d_model", Json::Num(self.d_model as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("d_ff", Json::Num(self.d_ff as f64)),
+            ("seq_len", Json::Num(self.seq_len as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            vocab: j.get("vocab")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+        })
+    }
+}
+
+/// Full run configuration for the launcher.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: ModelConfig,
+    pub seed: u64,
+    /// artifacts directory (HLO + manifest)
+    pub artifacts_dir: String,
+    /// checkpoint directory
+    pub ckpt_dir: String,
+    // training
+    pub train_steps: usize,
+    pub batch_size: usize,
+    pub lr: f64,
+    // data
+    pub train_seqs: usize,
+    pub calib_seqs: usize,
+    pub eval_seqs: usize,
+    // pruning
+    pub block_size: usize,
+    pub alpha: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: ModelConfig::preset("small").unwrap(),
+            seed: 1234,
+            artifacts_dir: "artifacts".into(),
+            ckpt_dir: "checkpoints".into(),
+            train_steps: 400,
+            batch_size: 8,
+            lr: 1e-3,
+            train_seqs: 2048,
+            calib_seqs: 128,
+            eval_seqs: 64,
+            block_size: 128,
+            alpha: 0.1,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply `--key=value` style overrides.
+    pub fn apply_override(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "model" => self.model = ModelConfig::preset(value)?,
+            "seed" => self.seed = value.parse().context("seed")?,
+            "artifacts_dir" => self.artifacts_dir = value.into(),
+            "ckpt_dir" => self.ckpt_dir = value.into(),
+            "train_steps" => self.train_steps = value.parse().context("train_steps")?,
+            "batch_size" => self.batch_size = value.parse().context("batch_size")?,
+            "lr" => self.lr = value.parse().context("lr")?,
+            "train_seqs" => self.train_seqs = value.parse().context("train_seqs")?,
+            "calib_seqs" => self.calib_seqs = value.parse().context("calib_seqs")?,
+            "eval_seqs" => self.eval_seqs = value.parse().context("eval_seqs")?,
+            "block_size" => self.block_size = value.parse().context("block_size")?,
+            "alpha" => self.alpha = value.parse().context("alpha")?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse `args` of the form `--key=value` / `--key value`, applying
+    /// overrides in order. Returns positional (non-flag) arguments.
+    pub fn parse_args<I: Iterator<Item = String>>(&mut self, args: I) -> Result<Vec<String>> {
+        let mut positional = Vec::new();
+        let mut it = args.peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    self.apply_override(k, v)?;
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("flag --{stripped} needs a value"))?;
+                    self.apply_override(stripped, &v)?;
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(positional)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["tiny", "small", "med"] {
+            let m = ModelConfig::preset(name).unwrap();
+            assert_eq!(m.name, name);
+            assert_eq!(m.d_model % m.n_heads, 0);
+        }
+        assert!(ModelConfig::preset("huge").is_err());
+    }
+
+    #[test]
+    fn param_counts_in_expected_band() {
+        assert!(ModelConfig::preset("tiny").unwrap().n_params() < 2_000_000);
+        let small = ModelConfig::preset("small").unwrap().n_params();
+        assert!((3_000_000..8_000_000).contains(&small), "{small}");
+        assert!(ModelConfig::preset("med").unwrap().n_params() > 10_000_000);
+    }
+
+    #[test]
+    fn model_json_roundtrip() {
+        let m = ModelConfig::preset("small").unwrap();
+        let j = m.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn overrides_and_positional() {
+        let mut rc = RunConfig::default();
+        let rest = rc
+            .parse_args(
+                ["prune", "--model=tiny", "--train_steps", "7", "--alpha=0.2"]
+                    .iter()
+                    .map(|s| s.to_string()),
+            )
+            .unwrap();
+        assert_eq!(rest, vec!["prune"]);
+        assert_eq!(rc.model.name, "tiny");
+        assert_eq!(rc.train_steps, 7);
+        assert_eq!(rc.alpha, 0.2);
+        assert!(rc
+            .parse_args(["--bogus=1".to_string()].into_iter())
+            .is_err());
+    }
+
+    #[test]
+    fn layer_shapes_cover_block() {
+        let m = ModelConfig::preset("small").unwrap();
+        let shapes = m.layer_shapes();
+        assert_eq!(shapes.len(), 6);
+        assert_eq!(shapes[4], ("w1".into(), 1024, 256));
+        assert_eq!(shapes[5], ("w2".into(), 256, 1024));
+    }
+}

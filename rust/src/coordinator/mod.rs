@@ -1,0 +1,432 @@
+//! The compression-pipeline coordinator — the paper's generic
+//! block-by-block pruning loop (Alg. 3) as the L3 system.
+//!
+//! For every transformer block:
+//!
+//! 1. **capture pass** — run the `block_capture` executable on every
+//!    calibration chunk; accumulate per-layer-input calibration
+//!    statistics (Hessian `2·XXᵀ` + row norms), either through the AOT
+//!    `hessian_accum` kernel (Pallas L1) or through the threaded Rust
+//!    path (exact f64), per the selected [`Backend`].
+//! 2. **prune** — each of the six linear layers is pruned to the
+//!    requested pattern by the selected method, via AOT executables or
+//!    the pure-Rust library.
+//! 3. **re-forward** — the (now pruned) block is run again to produce
+//!    the inputs of the next block, exactly as Alg. 3 lines 3–7.
+//!
+//! The coordinator owns no Python: every compute step is a compiled
+//! HLO executable or native Rust.
+
+use crate::data::Sequences;
+use crate::linalg::Mat;
+use crate::model::ModelState;
+use crate::pruning::{self, CalibStats, Method, Pattern, PruneOpts};
+use crate::runtime::{
+    lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, mat_lit, to_mat, to_vec_f32, Runtime,
+};
+use anyhow::{ensure, Context, Result};
+use std::time::Instant;
+
+/// Which engine performs calibration statistics + pruning math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT path: Pallas/JAX HLO executables (falls back to Rust for
+    /// method/pattern combos with no artifact, e.g. SparseGPT).
+    Aot,
+    /// Pure-Rust reference path (f64 Hessians).
+    Rust,
+}
+
+/// A pruning request for the whole model.
+#[derive(Clone, Debug)]
+pub struct PruneSpec {
+    pub method: Method,
+    pub pattern: Pattern,
+    pub opts: PruneOpts,
+    pub backend: Backend,
+}
+
+/// Per-layer outcome.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    pub c: usize,
+    pub b: usize,
+    pub sparsity: f64,
+    pub secs: f64,
+    /// true if this layer ran on the AOT executables
+    pub aot: bool,
+}
+
+/// Whole-model outcome.
+#[derive(Clone, Debug, Default)]
+pub struct PruneReport {
+    pub layers: Vec<LayerReport>,
+    pub capture_secs: f64,
+    pub hessian_secs: f64,
+    pub prune_secs: f64,
+    pub total_secs: f64,
+}
+
+impl PruneReport {
+    pub fn overall_sparsity(&self) -> f64 {
+        let total: f64 = self.layers.iter().map(|l| (l.c * l.b) as f64).sum();
+        let zeros: f64 = self
+            .layers
+            .iter()
+            .map(|l| l.sparsity * (l.c * l.b) as f64)
+            .sum();
+        zeros / total
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "pruned {} layers to {:.1}% sparsity in {:.1}s (capture {:.1}s, hessian {:.1}s, prune {:.1}s)",
+            self.layers.len(),
+            self.overall_sparsity() * 100.0,
+            self.total_secs,
+            self.capture_secs,
+            self.hessian_secs,
+            self.prune_secs
+        )
+    }
+}
+
+/// Calibration statistics accumulator for one layer-input site.
+enum Accum {
+    Rust(CalibStats),
+    Aot {
+        /// running Hessian sum, row-major b×b (f32 on the AOT path)
+        h: Vec<f32>,
+        xnorm_sq: Vec<f32>,
+        b: usize,
+    },
+}
+
+impl Accum {
+    fn new(backend: Backend, b: usize) -> Accum {
+        match backend {
+            Backend::Rust => Accum::Rust(CalibStats::new(b)),
+            Backend::Aot => Accum::Aot { h: vec![0.0; b * b], xnorm_sq: vec![0.0; b], b },
+        }
+    }
+
+    /// Feed one captured chunk `xt`: row-major `[a, b]` (tokens × features).
+    fn add_chunk(&mut self, rt: &Runtime, xt: &[f32], a: usize) -> Result<()> {
+        match self {
+            Accum::Rust(stats) => {
+                let b = stats.b();
+                ensure!(xt.len() == a * b);
+                // CalibStats expects X as [b, a] (features × tokens)
+                let xmat = Mat::from_vec(a, b, xt.to_vec()).transpose();
+                stats.accumulate(&xmat);
+                Ok(())
+            }
+            Accum::Aot { h, xnorm_sq, b } => {
+                let name = format!("hessian_accum_{b}");
+                let out = rt.exec(
+                    &name,
+                    &[lit_f32(h, &[*b, *b])?, lit_f32(xt, &[a, *b])?],
+                )?;
+                *h = to_vec_f32(&out[0])?;
+                let chunk = to_vec_f32(&out[1])?;
+                for (acc, v) in xnorm_sq.iter_mut().zip(chunk) {
+                    *acc += v;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// The coordinator itself.
+pub struct Coordinator<'a> {
+    pub rt: &'a Runtime,
+}
+
+impl<'a> Coordinator<'a> {
+    pub fn new(rt: &'a Runtime) -> Coordinator<'a> {
+        Coordinator { rt }
+    }
+
+    /// Prune every linear layer of `state` per `spec`, using `calib`
+    /// sequences as the calibration set (paper: 128 C4 sequences).
+    pub fn prune_model(
+        &self,
+        state: &mut ModelState,
+        calib: &Sequences,
+        spec: &PruneSpec,
+    ) -> Result<PruneReport> {
+        let t_total = Instant::now();
+        let cfg = state.config.clone();
+        let rt = self.rt;
+        let nbc = rt.manifest.nb_calib;
+        let seq = cfg.seq_len;
+        ensure!(calib.seq_len == seq, "calibration seq_len mismatch");
+        let n_chunks = (calib.n_seqs() / nbc).max(1);
+        ensure!(calib.n_seqs() >= nbc, "need at least {nbc} calibration sequences");
+        let a = nbc * seq; // tokens per chunk
+        let d = cfg.d_model;
+
+        let mut report = PruneReport::default();
+
+        // embed calibration chunks → x literals
+        let t_cap = Instant::now();
+        let flat_lit = lit_f32(&state.flat, &[state.flat.len()])?;
+        let mut xs: Vec<xla::Literal> = Vec::with_capacity(n_chunks);
+        for ch in 0..n_chunks {
+            let mut toks: Vec<i32> = Vec::with_capacity(a);
+            for s in 0..nbc {
+                toks.extend(calib.seq(ch * nbc + s).iter().map(|&t| t as i32));
+            }
+            let out = rt.exec(
+                &format!("embed_{}", cfg.name),
+                &[flat_lit.clone(), lit_i32(&toks, &[nbc, seq])?],
+            )?;
+            xs.push(out.into_iter().next().unwrap());
+        }
+        report.capture_secs += t_cap.elapsed().as_secs_f64();
+
+        // layer name → capture-output index (1-based in the exe outputs)
+        // outputs: (y, x_attn, x_o, x_ff1, x_ff2)
+        let site_of = |layer: &str| match layer {
+            "wq" | "wk" | "wv" => 0usize,
+            "wo" => 1,
+            "w1" => 2,
+            "w2" => 3,
+            _ => unreachable!(),
+        };
+        let site_b = |site: usize| if site == 3 { cfg.d_ff } else { d };
+
+        for l in 0..cfg.n_layers {
+            // -- capture pass ---------------------------------------------
+            let t_cap = Instant::now();
+            let block_lit = lit_f32(state.block_slice(l)?, &[state.block_flat_size])?;
+            let mut captures: Vec<Vec<xla::Literal>> = Vec::with_capacity(n_chunks);
+            for x in &xs {
+                let out = rt.exec(
+                    &format!("block_capture_{}", cfg.name),
+                    &[block_lit.clone(), x.clone()],
+                )?;
+                captures.push(out);
+            }
+            report.capture_secs += t_cap.elapsed().as_secs_f64();
+
+            // -- calibration statistics per site --------------------------
+            let t_h = Instant::now();
+            let mut accums: Vec<Accum> = (0..4)
+                .map(|s| Accum::new(spec.backend, site_b(s)))
+                .collect();
+            for cap in &captures {
+                for (site, accum) in accums.iter_mut().enumerate() {
+                    let xt = to_vec_f32(&cap[1 + site])?;
+                    accum.add_chunk(rt, &xt, a)?;
+                }
+            }
+            report.hessian_secs += t_h.elapsed().as_secs_f64();
+
+            // -- prune the six layers --------------------------------------
+            for lname in ["wq", "wk", "wv", "wo", "w1", "w2"] {
+                let full = format!("blocks.{l}.{lname}");
+                let w = state.get_mat(&full)?;
+                let site = site_of(lname);
+                let t_p = Instant::now();
+                let (w_new, used_aot) =
+                    self.prune_layer(&w, &accums[site], spec).with_context(|| full.clone())?;
+                let secs = t_p.elapsed().as_secs_f64();
+                report.prune_secs += secs;
+                report.layers.push(LayerReport {
+                    name: full.clone(),
+                    c: w.rows,
+                    b: w.cols,
+                    sparsity: w_new.sparsity(),
+                    secs,
+                    aot: used_aot,
+                });
+                state.set_mat(&full, &w_new)?;
+            }
+
+            // -- re-forward through the pruned block -----------------------
+            let t_rf = Instant::now();
+            let block_lit = lit_f32(state.block_slice(l)?, &[state.block_flat_size])?;
+            for x in xs.iter_mut() {
+                let out = rt.exec(
+                    &format!("block_capture_{}", cfg.name),
+                    &[block_lit.clone(), x.clone()],
+                )?;
+                *x = out.into_iter().next().unwrap();
+            }
+            report.capture_secs += t_rf.elapsed().as_secs_f64();
+        }
+
+        report.total_secs = t_total.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// Prune a single layer with the requested backend; returns the new
+    /// weights and whether the AOT path was used.
+    fn prune_layer(&self, w: &Mat, accum: &Accum, spec: &PruneSpec) -> Result<(Mat, bool)> {
+        match accum {
+            Accum::Rust(stats) => {
+                let pruned = pruning::prune(spec.method, w, stats, spec.pattern, &spec.opts)?;
+                Ok((pruned.w, false))
+            }
+            Accum::Aot { h, xnorm_sq, b } => {
+                match self.prune_layer_aot(w, h, xnorm_sq, *b, spec) {
+                    Ok(Some(m)) => Ok((m, true)),
+                    Ok(None) => {
+                        // no artifact for this combo (e.g. SparseGPT):
+                        // rebuild Rust stats from the f32 accumulators
+                        let stats = stats_from_f32(h, xnorm_sq, *b);
+                        let pruned =
+                            pruning::prune(spec.method, w, &stats, spec.pattern, &spec.opts)?;
+                        Ok((pruned.w, false))
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+        }
+    }
+
+    /// AOT dispatch; Ok(None) = no executable for this combination.
+    fn prune_layer_aot(
+        &self,
+        w: &Mat,
+        h: &[f32],
+        xnorm_sq: &[f32],
+        b: usize,
+        spec: &PruneSpec,
+    ) -> Result<Option<Mat>> {
+        let rt = self.rt;
+        let (c, bb) = (w.rows, w.cols);
+        ensure!(bb == b, "stats/layer dim mismatch");
+        let sname = format!("{c}x{b}");
+        let w_lit = mat_lit(w)?;
+        let out = match (spec.method, spec.pattern) {
+            (Method::Magnitude, Pattern::Unstructured { p }) => {
+                let r = (p * (c * b) as f64).floor() as i32;
+                rt.exec(&format!("prune_magnitude_{sname}"), &[w_lit, lit_scalar_i32(r)])?
+            }
+            (Method::Magnitude, Pattern::SemiStructured { n, m, .. }) => {
+                let name = format!("prune_magnitude_nm_{sname}_{n}_{m}");
+                if !rt.has_exe(&name) {
+                    return Ok(None);
+                }
+                rt.exec(&name, &[w_lit])?
+            }
+            (Method::Wanda, Pattern::Unstructured { p }) => {
+                let k = (p * b as f64).floor() as i32;
+                rt.exec(
+                    &format!("prune_wanda_{sname}"),
+                    &[w_lit, lit_f32(xnorm_sq, &[b])?, lit_scalar_i32(k)],
+                )?
+            }
+            (Method::Wanda, Pattern::SemiStructured { n, m, .. }) => {
+                let name = format!("prune_wanda_nm_{sname}_{n}_{m}");
+                if !rt.has_exe(&name) {
+                    return Ok(None);
+                }
+                rt.exec(&name, &[w_lit, lit_f32(xnorm_sq, &[b])?])?
+            }
+            (Method::Thanos, Pattern::Unstructured { p }) => {
+                let name = self.find_exe(&format!("prune_thanos_unstr_{sname}_B"))?;
+                rt.exec(
+                    &name,
+                    &[
+                        w_lit,
+                        lit_f32(h, &[b, b])?,
+                        lit_f32(xnorm_sq, &[b])?,
+                        lit_scalar_f32(p as f32),
+                    ],
+                )?
+            }
+            (Method::Thanos, Pattern::SemiStructured { n, m, alpha }) => {
+                let name = self.find_exe(&format!("prune_thanos_nm_{sname}_{n}_{m}_B"))?;
+                rt.exec(
+                    &name,
+                    &[
+                        w_lit,
+                        lit_f32(h, &[b, b])?,
+                        lit_f32(xnorm_sq, &[b])?,
+                        lit_scalar_f32(alpha as f32),
+                    ],
+                )?
+            }
+            (Method::Thanos, Pattern::Structured { p, alpha }) => rt.exec(
+                &format!("prune_thanos_struct_{sname}"),
+                &[
+                    w_lit,
+                    lit_f32(h, &[b, b])?,
+                    lit_f32(xnorm_sq, &[b])?,
+                    lit_scalar_f32(p as f32),
+                    lit_scalar_f32(alpha as f32),
+                ],
+            )?,
+            // SparseGPT and the structured baselines run on the Rust path
+            _ => return Ok(None),
+        };
+        Ok(Some(to_mat(&out[0], c, b)?))
+    }
+
+    fn find_exe(&self, prefix: &str) -> Result<String> {
+        self.rt
+            .manifest
+            .executables
+            .keys()
+            .find(|k| k.starts_with(prefix))
+            .cloned()
+            .with_context(|| format!("no executable matching '{prefix}*' in manifest"))
+    }
+}
+
+/// Convert the AOT f32 accumulators into Rust [`CalibStats`] (used when
+/// an AOT-backend run needs a Rust-only method like SparseGPT).
+fn stats_from_f32(h: &[f32], xnorm_sq: &[f32], b: usize) -> CalibStats {
+    let mut stats = CalibStats::new(b);
+    for (dst, &v) in stats.h_sum.data.iter_mut().zip(h) {
+        *dst = v as f64;
+    }
+    for (dst, &v) in stats.xnorm_sq.iter_mut().zip(xnorm_sq) {
+        *dst = v as f64;
+    }
+    // n_cols only matters for averaging; the methods are scale-invariant
+    stats.n_cols = 1;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_conversion_preserves_values() {
+        let h = vec![1.0f32, 2.0, 2.0, 5.0];
+        let xn = vec![3.0f32, 4.0];
+        let s = stats_from_f32(&h, &xn, 2);
+        assert_eq!(s.h_sum.at(1, 1), 5.0);
+        assert_eq!(s.xnorm_sq, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn report_aggregation() {
+        let mut r = PruneReport::default();
+        r.layers.push(LayerReport {
+            name: "a".into(),
+            c: 2,
+            b: 2,
+            sparsity: 0.5,
+            secs: 0.1,
+            aot: true,
+        });
+        r.layers.push(LayerReport {
+            name: "b".into(),
+            c: 2,
+            b: 2,
+            sparsity: 1.0,
+            secs: 0.1,
+            aot: false,
+        });
+        assert!((r.overall_sparsity() - 0.75).abs() < 1e-12);
+        assert!(r.summary().contains("2 layers"));
+    }
+}

@@ -1,0 +1,402 @@
+//! Synthetic corpus + task generation — the stand-in for C4 (training /
+//! calibration) and WikiText-2 (perplexity), and for the seven
+//! EleutherAI zero-shot tasks (option-scored multiple choice).
+//!
+//! ## Why this design
+//!
+//! The pruning methods only ever see the data through (a) the model's
+//! training distribution and (b) per-layer calibration activations.
+//! What the paper's experiments need from the corpus is *structure*:
+//! text whose next-token distribution a small transformer can learn
+//! well enough that damaging its weights measurably damages perplexity,
+//! with correlated features (so Hessians are anisotropic and
+//! update-based methods beat metric-only ones — the effect Tables 2–3
+//! measure). A hidden-state Markov grammar over a Zipfian vocabulary
+//! provides exactly that: learnable long-range regime structure +
+//! heavy-tailed token frequencies, all seeded and offline.
+
+use crate::rng::{zipf_cdf, Rng};
+
+/// Token id type (vocab is small; u16 keeps corpora compact).
+pub type Token = u16;
+
+/// Parameters of the hierarchical Markov grammar.
+#[derive(Clone, Debug)]
+pub struct GrammarConfig {
+    pub vocab: usize,
+    /// number of hidden regimes
+    pub states: usize,
+    /// probability of staying in the current regime each step
+    pub stickiness: f64,
+    /// Zipf exponent of per-regime emission distributions
+    pub zipf_s: f64,
+    /// per-regime vocabulary slice size
+    pub regime_vocab: usize,
+    pub seed: u64,
+}
+
+impl Default for GrammarConfig {
+    fn default() -> Self {
+        GrammarConfig {
+            vocab: 512,
+            states: 8,
+            stickiness: 0.92,
+            zipf_s: 1.05,
+            regime_vocab: 96,
+            seed: 1234,
+        }
+    }
+}
+
+/// The generator: hidden regime chain; each regime emits from a
+/// Zipf-weighted window of the vocabulary plus a bigram bias (each
+/// token deterministically boosts a successor token, giving the model
+/// an easily-learnable local signal on top of the regime signal).
+pub struct Grammar {
+    cfg: GrammarConfig,
+    /// per-regime emission CDF over its vocab window
+    cdfs: Vec<Vec<f64>>,
+    /// per-regime vocab window start
+    window: Vec<usize>,
+    /// bigram successor map: token t is followed by succ[t] w.p. bigram_p
+    succ: Vec<Token>,
+    bigram_p: f64,
+}
+
+impl Grammar {
+    pub fn new(cfg: GrammarConfig) -> Self {
+        let mut r = Rng::new(cfg.seed);
+        let mut cdfs = Vec::with_capacity(cfg.states);
+        let mut window = Vec::with_capacity(cfg.states);
+        for _ in 0..cfg.states {
+            window.push(r.below(cfg.vocab.saturating_sub(cfg.regime_vocab).max(1)));
+            cdfs.push(zipf_cdf(cfg.regime_vocab.min(cfg.vocab), cfg.zipf_s));
+        }
+        let succ: Vec<Token> = (0..cfg.vocab).map(|_| r.below(cfg.vocab) as Token).collect();
+        Grammar { cfg, cdfs, window, succ, bigram_p: 0.35 }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    /// Generate `n` tokens into a fresh Vec, starting from a random
+    /// regime, using the supplied RNG (callers fork per split).
+    pub fn generate(&self, n: usize, r: &mut Rng) -> Vec<Token> {
+        let mut out = Vec::with_capacity(n);
+        let mut state = r.below(self.cfg.states);
+        let mut prev: Option<Token> = None;
+        for _ in 0..n {
+            // regime transition
+            if r.uniform() >= self.cfg.stickiness {
+                state = r.below(self.cfg.states);
+            }
+            // emission: bigram bias or regime Zipf draw
+            let tok = match prev {
+                Some(p) if r.uniform() < self.bigram_p => self.succ[p as usize],
+                _ => {
+                    let k = r.zipf(&self.cdfs[state]);
+                    ((self.window[state] + k) % self.cfg.vocab) as Token
+                }
+            };
+            out.push(tok);
+            prev = Some(tok);
+        }
+        out
+    }
+
+    /// Probability-weighted "plausible continuation" of a context's last
+    /// token under the bigram channel (used to build zero-shot answers).
+    pub fn likely_next(&self, t: Token) -> Token {
+        self.succ[t as usize]
+    }
+}
+
+/// A dataset split packaged as fixed-length sequences.
+#[derive(Clone, Debug)]
+pub struct Sequences {
+    pub seq_len: usize,
+    /// row-major `[n_seqs × seq_len]`
+    pub tokens: Vec<Token>,
+}
+
+impl Sequences {
+    pub fn n_seqs(&self) -> usize {
+        self.tokens.len() / self.seq_len
+    }
+
+    pub fn seq(&self, i: usize) -> &[Token] {
+        &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+}
+
+/// The three splits every experiment consumes.
+pub struct Corpus {
+    pub grammar: Grammar,
+    pub train: Sequences,
+    pub calib: Sequences,
+    pub eval: Sequences,
+}
+
+/// Corpus sizing.
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub grammar: GrammarConfig,
+    pub seq_len: usize,
+    pub train_seqs: usize,
+    /// the paper uses 128 calibration sequences from C4
+    pub calib_seqs: usize,
+    pub eval_seqs: usize,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            grammar: GrammarConfig::default(),
+            seq_len: 128,
+            train_seqs: 2048,
+            calib_seqs: 128,
+            eval_seqs: 64,
+        }
+    }
+}
+
+impl Corpus {
+    pub fn build(cfg: &CorpusConfig) -> Corpus {
+        let grammar = Grammar::new(cfg.grammar.clone());
+        // independent RNG streams per split so resizing one split never
+        // perturbs the others (important for paper-style ablations)
+        let mut train_rng = Rng::new(cfg.grammar.seed ^ 0xA11CE);
+        let mut calib_rng = Rng::new(cfg.grammar.seed ^ 0xB0B);
+        let mut eval_rng = Rng::new(cfg.grammar.seed ^ 0xCAFE);
+        let gen = |g: &Grammar, n_seqs: usize, sl: usize, r: &mut Rng| Sequences {
+            seq_len: sl,
+            tokens: g.generate(n_seqs * sl, r),
+        };
+        Corpus {
+            train: gen(&grammar, cfg.train_seqs, cfg.seq_len, &mut train_rng),
+            calib: gen(&grammar, cfg.calib_seqs, cfg.seq_len, &mut calib_rng),
+            eval: gen(&grammar, cfg.eval_seqs, cfg.seq_len, &mut eval_rng),
+            grammar,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zero-shot tasks
+// ---------------------------------------------------------------------------
+
+/// A multiple-choice instance: a context and `options`, one of which
+/// (`answer`) is the grammar-consistent continuation. Evaluation scores
+/// each option by pruned-model log-likelihood — the same readout as
+/// ARC / HellaSwag / PiQA in the EleutherAI harness.
+#[derive(Clone, Debug)]
+pub struct TaskInstance {
+    pub context: Vec<Token>,
+    pub options: Vec<Vec<Token>>,
+    pub answer: usize,
+}
+
+/// One of the seven synthetic zero-shot tasks. Tasks differ in context
+/// length, number of options, continuation length and distractor
+/// construction — mirroring how the real benchmarks differ in difficulty.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// short context, 2 options, 1-token continuation (BoolQ-like binary)
+    BinaryNext,
+    /// medium context, 4 options, 1-token continuation (ARC-easy-like)
+    Choice4Next,
+    /// medium context, 4 options, hard distractors from same regime (ARC-challenge-like)
+    Choice4Hard,
+    /// long context, 4 options, 8-token continuations (HellaSwag-like)
+    Continuation8,
+    /// 2 options, continuation must match context regime (PiQA-like)
+    RegimeMatch,
+    /// 4 options, bigram-successor identification (OBQA-like)
+    BigramProbe,
+    /// 2 options, longer continuation pair (WinoGrande-like)
+    PairCoherence,
+}
+
+pub const ALL_TASKS: [Task; 7] = [
+    Task::BinaryNext,
+    Task::Choice4Next,
+    Task::Choice4Hard,
+    Task::Continuation8,
+    Task::RegimeMatch,
+    Task::BigramProbe,
+    Task::PairCoherence,
+];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::BinaryNext => "BinaryNext",
+            Task::Choice4Next => "Choice4Next",
+            Task::Choice4Hard => "Choice4Hard",
+            Task::Continuation8 => "Continuation8",
+            Task::RegimeMatch => "RegimeMatch",
+            Task::BigramProbe => "BigramProbe",
+            Task::PairCoherence => "PairCoherence",
+        }
+    }
+
+    fn params(&self) -> (usize, usize, usize) {
+        // (context_len, n_options, cont_len)
+        match self {
+            Task::BinaryNext => (24, 2, 1),
+            Task::Choice4Next => (32, 4, 1),
+            Task::Choice4Hard => (32, 4, 1),
+            Task::Continuation8 => (48, 4, 8),
+            Task::RegimeMatch => (32, 2, 4),
+            Task::BigramProbe => (16, 4, 1),
+            Task::PairCoherence => (40, 2, 6),
+        }
+    }
+
+    /// Build `n` instances of this task from the grammar.
+    pub fn build(&self, grammar: &Grammar, n: usize, seed: u64) -> Vec<TaskInstance> {
+        let (ctx_len, n_opts, cont_len) = self.params();
+        let mut r = Rng::new(seed ^ (*self as u64) << 32 ^ 0x7A5C);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            // context + true continuation generated as one stream so the
+            // continuation is genuinely grammar-consistent
+            let stream = grammar.generate(ctx_len + cont_len, &mut r);
+            let context = stream[..ctx_len].to_vec();
+            let truth = stream[ctx_len..].to_vec();
+            let mut options = Vec::with_capacity(n_opts);
+            let answer = r.below(n_opts);
+            for k in 0..n_opts {
+                if k == answer {
+                    options.push(truth.clone());
+                } else {
+                    options.push(self.distractor(grammar, &context, cont_len, &mut r));
+                }
+            }
+            out.push(TaskInstance { context, options, answer });
+        }
+        out
+    }
+
+    fn distractor(
+        &self,
+        grammar: &Grammar,
+        context: &[Token],
+        cont_len: usize,
+        r: &mut Rng,
+    ) -> Vec<Token> {
+        match self {
+            // hard distractors: plausible-looking tokens from the grammar
+            // but generated from an unrelated stream (regime mismatch)
+            Task::Choice4Hard | Task::RegimeMatch | Task::PairCoherence => {
+                grammar.generate(cont_len, r)
+            }
+            // bigram probe: distractors are near-miss successor tokens
+            Task::BigramProbe => {
+                let last = *context.last().unwrap();
+                let shift = 1 + r.below(grammar.vocab() - 1);
+                vec![((grammar.likely_next(last) as usize + shift) % grammar.vocab()) as Token]
+            }
+            // easy distractors: uniform random tokens
+            _ => (0..cont_len)
+                .map(|_| r.below(grammar.vocab()) as Token)
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_deterministic() {
+        let cfg = CorpusConfig { train_seqs: 4, calib_seqs: 2, eval_seqs: 2, ..Default::default() };
+        let a = Corpus::build(&cfg);
+        let b = Corpus::build(&cfg);
+        assert_eq!(a.train.tokens, b.train.tokens);
+        assert_eq!(a.calib.tokens, b.calib.tokens);
+        assert_eq!(a.eval.tokens, b.eval.tokens);
+    }
+
+    #[test]
+    fn splits_are_distinct() {
+        let cfg = CorpusConfig { train_seqs: 2, calib_seqs: 2, eval_seqs: 2, ..Default::default() };
+        let c = Corpus::build(&cfg);
+        assert_ne!(c.train.tokens[..64], c.calib.tokens[..64]);
+        assert_ne!(c.calib.tokens[..64], c.eval.tokens[..64]);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let cfg = CorpusConfig { train_seqs: 8, ..Default::default() };
+        let c = Corpus::build(&cfg);
+        let v = c.grammar.vocab() as Token;
+        assert!(c.train.tokens.iter().all(|&t| t < v));
+    }
+
+    #[test]
+    fn corpus_has_low_entropy_structure() {
+        // the bigram channel must make P(succ[t] | t) clearly above the
+        // uniform baseline — that's what the LM learns
+        let cfg = CorpusConfig { train_seqs: 64, ..Default::default() };
+        let c = Corpus::build(&cfg);
+        let toks = &c.train.tokens;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for w in toks.windows(2) {
+            if c.grammar.likely_next(w[0]) == w[1] {
+                hits += 1;
+            }
+            total += 1;
+        }
+        let rate = hits as f64 / total as f64;
+        assert!(rate > 0.2, "bigram rate {rate}");
+    }
+
+    #[test]
+    fn sequences_indexing() {
+        let s = Sequences { seq_len: 4, tokens: (0..12).map(|t| t as Token).collect() };
+        assert_eq!(s.n_seqs(), 3);
+        assert_eq!(s.seq(1), &[4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn tasks_have_correct_shapes_and_valid_answers() {
+        let g = Grammar::new(GrammarConfig::default());
+        for task in ALL_TASKS {
+            let instances = task.build(&g, 10, 42);
+            assert_eq!(instances.len(), 10);
+            let (ctx_len, n_opts, cont_len) = task.params();
+            for inst in &instances {
+                assert_eq!(inst.context.len(), ctx_len);
+                assert_eq!(inst.options.len(), n_opts);
+                assert!(inst.answer < n_opts);
+                for o in &inst.options {
+                    assert_eq!(o.len(), cont_len);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn task_answers_not_always_same_position() {
+        let g = Grammar::new(GrammarConfig::default());
+        let instances = Task::Choice4Next.build(&g, 40, 7);
+        let firsts = instances.iter().filter(|i| i.answer == 0).count();
+        assert!(firsts < 30, "answer position not randomized: {firsts}/40");
+    }
+
+    #[test]
+    fn tasks_are_deterministic_per_seed() {
+        let g = Grammar::new(GrammarConfig::default());
+        let a = Task::Continuation8.build(&g, 5, 9);
+        let b = Task::Continuation8.build(&g, 5, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.options, y.options);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Evaluation harness: held-out perplexity (the WikiText-2 analogue)
+//! and the seven synthetic zero-shot tasks (LM option scoring, the
+//! EleutherAI-harness readout), plus the n:m speedup/compression report.
+
+use crate::data::{Grammar, Sequences, Task, TaskInstance, Token, ALL_TASKS};
+use crate::model::ModelState;
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
+use anyhow::{ensure, Result};
+
+/// Run the `logprobs_<model>` executable on one batch of `nb_eval`
+/// sequences; returns per-position NLL `[nb, seq-1]` row-major.
+fn nll_batch(rt: &Runtime, state: &ModelState, tokens: &[i32]) -> Result<Vec<f32>> {
+    let nb = rt.manifest.nb_eval;
+    let seq = state.config.seq_len;
+    ensure!(tokens.len() == nb * seq, "eval batch shape");
+    let out = rt.exec(
+        &format!("logprobs_{}", state.config.name),
+        &[
+            lit_f32(&state.flat, &[state.flat.len()])?,
+            lit_i32(tokens, &[nb, seq])?,
+        ],
+    )?;
+    to_vec_f32(&out[0])
+}
+
+/// Perplexity over an eval split: `exp(mean NLL)` across all positions
+/// of all sequences (sequences are chunked into `nb_eval` batches; a
+/// final partial batch is padded with repeats and the padding rows are
+/// excluded from the mean).
+pub fn perplexity(rt: &Runtime, state: &ModelState, seqs: &Sequences) -> Result<f64> {
+    let nb = rt.manifest.nb_eval;
+    let seq = state.config.seq_len;
+    ensure!(seqs.seq_len == seq, "eval seq_len mismatch");
+    let n = seqs.n_seqs();
+    ensure!(n > 0, "empty eval split");
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    let mut batch: Vec<i32> = Vec::with_capacity(nb * seq);
+    let mut start = 0;
+    while start < n {
+        batch.clear();
+        let real = nb.min(n - start);
+        for i in 0..nb {
+            let idx = if i < real { start + i } else { start + real - 1 };
+            batch.extend(seqs.seq(idx).iter().map(|&t| t as i32));
+        }
+        let nll = nll_batch(rt, state, &batch)?;
+        for row in 0..real {
+            for p in 0..seq - 1 {
+                total += nll[row * (seq - 1) + p] as f64;
+            }
+            count += seq - 1;
+        }
+        start += real;
+    }
+    Ok((total / count as f64).exp())
+}
+
+/// Accuracy of one zero-shot task: each option is scored by the summed
+/// log-likelihood of its tokens given the context; the argmax option is
+/// the model's answer.
+pub fn task_accuracy(
+    rt: &Runtime,
+    state: &ModelState,
+    instances: &[TaskInstance],
+) -> Result<f64> {
+    let nb = rt.manifest.nb_eval;
+    let seq = state.config.seq_len;
+    // build one scored row per (instance, option)
+    struct Row {
+        inst: usize,
+        opt: usize,
+        /// nll positions [lo, hi) to sum (position p predicts token p+1)
+        lo: usize,
+        hi: usize,
+    }
+    let mut rows = Vec::new();
+    let mut toks: Vec<i32> = Vec::new();
+    for (ii, inst) in instances.iter().enumerate() {
+        let cl = inst.context.len();
+        for (oi, opt) in inst.options.iter().enumerate() {
+            let ol = opt.len();
+            ensure!(cl + ol <= seq, "task sequence too long for model");
+            let mut row: Vec<i32> = Vec::with_capacity(seq);
+            row.extend(inst.context.iter().map(|&t| t as i32));
+            row.extend(opt.iter().map(|&t| t as i32));
+            row.resize(seq, 0);
+            toks.extend(row);
+            rows.push(Row { inst: ii, opt: oi, lo: cl - 1, hi: cl + ol - 1 });
+        }
+    }
+    // pad the row count to a multiple of nb by repeating the last row
+    let real_rows = rows.len();
+    while (toks.len() / seq) % nb != 0 {
+        let last = toks[toks.len() - seq..].to_vec();
+        toks.extend(last);
+    }
+    // score rows in batches
+    let mut scores = vec![0.0f64; real_rows];
+    let nrows = toks.len() / seq;
+    for b0 in (0..nrows).step_by(nb) {
+        let batch = &toks[b0 * seq..(b0 + nb) * seq];
+        let nll = nll_batch(rt, state, batch)?;
+        for r in 0..nb {
+            let global = b0 + r;
+            if global >= real_rows {
+                break;
+            }
+            let row = &rows[global];
+            let mut s = 0.0f64;
+            for p in row.lo..row.hi {
+                s -= nll[r * (seq - 1) + p] as f64;
+            }
+            scores[global] = s;
+        }
+    }
+    // pick argmax per instance
+    let mut best: Vec<(f64, usize)> = vec![(f64::NEG_INFINITY, 0); instances.len()];
+    for (ridx, row) in rows.iter().enumerate() {
+        if scores[ridx] > best[row.inst].0 {
+            best[row.inst] = (scores[ridx], row.opt);
+        }
+    }
+    let correct = instances
+        .iter()
+        .zip(&best)
+        .filter(|(inst, (_, opt))| *opt == inst.answer)
+        .count();
+    Ok(correct as f64 / instances.len() as f64)
+}
+
+/// Per-task + average accuracy over all seven tasks (the Table 3 /
+/// Appendix D readout).
+pub fn zero_shot_suite(
+    rt: &Runtime,
+    state: &ModelState,
+    grammar: &Grammar,
+    n_instances: usize,
+    seed: u64,
+) -> Result<Vec<(Task, f64)>> {
+    let mut out = Vec::new();
+    for task in ALL_TASKS {
+        let instances = task.build(grammar, n_instances, seed);
+        let acc = task_accuracy(rt, state, &instances)?;
+        out.push((task, acc));
+    }
+    Ok(out)
+}
+
+pub fn zero_shot_average(results: &[(Task, f64)]) -> f64 {
+    results.iter().map(|(_, a)| a).sum::<f64>() / results.len() as f64
+}
+
+/// Format a Table-3-style row.
+pub fn format_zero_shot(results: &[(Task, f64)]) -> String {
+    let mut s = String::new();
+    for (t, a) in results {
+        s.push_str(&format!("  {:<16} {:6.2}%\n", t.name(), a * 100.0));
+    }
+    s.push_str(&format!(
+        "  {:<16} {:6.2}%\n",
+        "Average",
+        zero_shot_average(results) * 100.0
+    ));
+    s
+}
+
+/// n:m compression/speedup report (DESIGN.md §Substitutions: modeled,
+/// not measured — no sparse tensor cores on this testbed).
+pub fn nm_report(state: &ModelState, n: usize, m: usize) -> String {
+    use crate::pruning::nm;
+    let mut dense = 0usize;
+    let mut comp = 0usize;
+    for l in 0..state.config.n_layers {
+        for name in state.prunable_layers(l) {
+            let e = state.entry(&name).unwrap();
+            let (c, b) = (e.shape[0], e.shape[1]);
+            dense += nm::dense_bytes(c, b, 2);
+            comp += nm::compressed_bytes(c, b, n, m, 2);
+        }
+    }
+    format!(
+        "  {n}:{m} weights: {:.1} MiB -> {:.1} MiB ({:.1}% of dense, f16)\n  modeled sparse-MMA speedup: {:.2}x\n",
+        dense as f64 / (1 << 20) as f64,
+        comp as f64 / (1 << 20) as f64,
+        100.0 * comp as f64 / dense as f64,
+        nm::modeled_speedup(n, m),
+    )
+}
+
+/// Token type re-export convenience for binaries.
+pub fn tokens_to_i32(ts: &[Token]) -> Vec<i32> {
+    ts.iter().map(|&t| t as i32).collect()
+}
+
+/// Measured CPU matmul speedup of a pruned layer vs its dense original
+/// (the zero-skipping GEMM in `linalg::gemm` exploits unstructured
+/// sparsity on CPU — a software analogue of the n:m hardware path; the
+/// hardware number itself is modeled in [`crate::pruning::nm`]).
+pub fn measured_sparse_speedup(
+    w_dense: &crate::linalg::Mat,
+    w_sparse: &crate::linalg::Mat,
+    batch: usize,
+) -> (f64, f64) {
+    use crate::linalg::gemm::matmul_into;
+    use crate::linalg::Mat;
+    let mut r = crate::rng::Rng::new(0x5EED);
+    let x = Mat::from_fn(w_dense.cols, batch, |_, _| r.normal_f32(0.0, 1.0));
+    let mut out = Mat::zeros(w_dense.rows, batch);
+    let time = |w: &Mat, out: &mut Mat| {
+        // warm-up + best-of-3 (noise robustness)
+        matmul_into(w, &x, out);
+        (0..3)
+            .map(|_| {
+                let t = std::time::Instant::now();
+                matmul_into(w, &x, out);
+                t.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let dense_s = time(w_dense, &mut out);
+    let sparse_s = time(w_sparse, &mut out);
+    (dense_s, sparse_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn sparse_matmul_not_slower() {
+        let mut r = crate::rng::Rng::new(1);
+        let dense = Mat::from_fn(256, 256, |_, _| r.normal_f32(0.0, 1.0));
+        let mut sparse = dense.clone();
+        for (k, v) in sparse.data.iter_mut().enumerate() {
+            if k % 2 == 0 {
+                *v = 0.0;
+            }
+        }
+        let (d, s) = measured_sparse_speedup(&dense, &sparse, 256);
+        assert!(s <= d * 1.3, "sparse {s} vs dense {d}");
+    }
+
+    #[test]
+    fn tokens_to_i32_roundtrip() {
+        assert_eq!(tokens_to_i32(&[1u16, 500]), vec![1, 500]);
+    }
+}

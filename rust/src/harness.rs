@@ -1,0 +1,139 @@
+//! Shared experiment harness for the examples and the paper-table
+//! benches: checkpoint caching (train once, reuse everywhere),
+//! method×pattern sweeps, and table formatting.
+
+use crate::config::ModelConfig;
+use crate::coordinator::{Backend, Coordinator, PruneReport, PruneSpec};
+use crate::data::{Corpus, CorpusConfig};
+use crate::eval;
+use crate::model::ModelState;
+use crate::pruning::{Method, Pattern, PruneOpts};
+use crate::runtime::Runtime;
+use crate::train::{LossPoint, Trainer};
+use anyhow::{Context, Result};
+
+/// Default corpus sized for the experiments (paper: 128 calibration
+/// sequences).
+pub fn experiment_corpus(cfg: &ModelConfig) -> Corpus {
+    Corpus::build(&CorpusConfig {
+        seq_len: cfg.seq_len,
+        train_seqs: 2048,
+        calib_seqs: 128,
+        eval_seqs: 64,
+        ..Default::default()
+    })
+}
+
+/// Train (or load a cached) checkpoint: `checkpoints/<model>-s<steps>.thnck`.
+/// Returns the state and the loss log (empty when loaded from cache).
+pub fn ensure_trained(
+    rt: &Runtime,
+    model: &str,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<(ModelState, Vec<LossPoint>)> {
+    let path = format!("checkpoints/{model}-s{steps}.thnck");
+    if std::path::Path::new(&path).exists() {
+        let st = ModelState::load(&path)?;
+        return Ok((st, Vec::new()));
+    }
+    let mm = rt.model(model)?;
+    let corpus = experiment_corpus(&mm.config);
+    let state = ModelState::init(mm, seed);
+    let mut trainer = Trainer::new(rt, state, lr)?;
+    let log = trainer
+        .train(&corpus, steps, seed ^ 0x7EA1)
+        .context("training checkpoint")?;
+    trainer.state.save(&path)?;
+    Ok((trainer.state, log))
+}
+
+/// Outcome of one (method, pattern) cell of a paper table.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub method: Method,
+    pub pattern: Pattern,
+    pub ppl: f64,
+    pub zero_shot_avg: Option<f64>,
+    pub sparsity: f64,
+    pub prune_secs: f64,
+}
+
+/// Prune a fresh copy of `base` and evaluate perplexity (and optionally
+/// the zero-shot suite).
+#[allow(clippy::too_many_arguments)]
+pub fn run_cell(
+    rt: &Runtime,
+    base: &ModelState,
+    corpus: &Corpus,
+    method: Method,
+    pattern: Pattern,
+    opts: &PruneOpts,
+    backend: Backend,
+    with_zero_shot: Option<usize>,
+) -> Result<(Cell, PruneReport)> {
+    let mut state = base.clone();
+    let spec = PruneSpec { method, pattern, opts: *opts, backend };
+    let report = Coordinator::new(rt).prune_model(&mut state, &corpus.calib, &spec)?;
+    let ppl = eval::perplexity(rt, &state, &corpus.eval)?;
+    let zero_shot_avg = match with_zero_shot {
+        Some(n) => {
+            let zs = eval::zero_shot_suite(rt, &state, &corpus.grammar, n, 1234)?;
+            Some(eval::zero_shot_average(&zs))
+        }
+        None => None,
+    };
+    Ok((
+        Cell {
+            method,
+            pattern,
+            ppl,
+            zero_shot_avg,
+            sparsity: report.overall_sparsity(),
+            prune_secs: report.prune_secs,
+        },
+        report,
+    ))
+}
+
+/// Markdown-ish table of cells grouped by pattern (the Table 2 layout).
+pub fn format_table(dense_ppl: f64, cells: &[Cell]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "  {:<12} {:<22} {:>10} {:>9} {:>8}\n",
+        "Method", "Sparsity", "PPL", "ZeroShot", "secs"
+    ));
+    out.push_str(&format!(
+        "  {:<12} {:<22} {:>10.3} {:>9} {:>8}\n",
+        "Dense", "0%", dense_ppl, "-", "-"
+    ));
+    for c in cells {
+        let zs = c
+            .zero_shot_avg
+            .map(|z| format!("{:.1}%", z * 100.0))
+            .unwrap_or_else(|| "-".into());
+        out.push_str(&format!(
+            "  {:<12} {:<22} {:>10.3} {:>9} {:>8.2}\n",
+            c.method.name(),
+            c.pattern.label(),
+            c.ppl,
+            zs,
+            c.prune_secs
+        ));
+    }
+    out
+}
+
+/// Quick env-var override helper for example knobs
+/// (`THANOS_STEPS=50 cargo run --example e2e_compress`).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn env_str(name: &str, default: &str) -> String {
+    std::env::var(name).unwrap_or_else(|_| default.to_string())
+}

@@ -1,0 +1,55 @@
+//! # Thanos: block-wise pruning for LLM compression
+//!
+//! Reproduction of *"Thanos: A Block-wise Pruning Algorithm for Efficient
+//! Large Language Model Compression"* (Ilin & Richtárik, 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the compression-pipeline coordinator: the
+//!   paper's generic block-by-block pruning loop (Algorithm 3), model
+//!   state, checkpointing, the calibration-data pipeline, training and
+//!   evaluation drivers, and a pure-Rust implementation of every pruning
+//!   method (Magnitude, Wanda, SparseGPT, Thanos unstructured /
+//!   structured / n:m).
+//! * **L2/L1 (`python/compile/`)** — the JAX transformer + Pallas hot-spot
+//!   kernels, AOT-lowered to HLO text at build time (`make artifacts`)
+//!   and executed from Rust through the PJRT C API ([`runtime`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `thanos` binary, the examples and the benches are self-contained.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`rng`] | deterministic xoshiro256** RNG, Gaussian/Zipf samplers |
+//! | [`linalg`] | from-scratch dense LA: GEMM, Cholesky, solves, permutations, padded batched systems |
+//! | [`jsonutil`] | hand-rolled JSON (artifact manifests, configs, reports) |
+//! | [`config`] | model/run configuration + CLI override layer |
+//! | [`data`] | synthetic hierarchical-Markov corpus (train/calib/eval splits) |
+//! | [`pruning`] | the paper's algorithms 1, 2, 8 + all baselines, pure Rust |
+//! | [`runtime`] | PJRT client, HLO artifact loading, executable cache |
+//! | [`model`] | transformer parameter state + checkpoint IO |
+//! | [`train`] | training driver over the AOT train-step executable |
+//! | [`coordinator`] | Algorithm 3 pipeline: capture → Hessian → prune → re-forward |
+//! | [`eval`] | perplexity + synthetic zero-shot harness + n:m speedup model |
+//! | [`proptest`] | mini property-testing framework used by the test suite |
+//! | [`metrics`] | lightweight counters/timers used across the pipeline |
+//! | [`harness`] | experiment harness shared by examples and paper-table benches |
+
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod data;
+pub mod eval;
+pub mod jsonutil;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod proptest;
+pub mod pruning;
+pub mod rng;
+pub mod runtime;
+pub mod train;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,242 @@
+//! Padded batched row-systems — the paper's §H.1 implementation detail.
+//!
+//! In a Thanos block step every row `i` needs the solution of
+//! `λ·R̂ = u` where `R̂ = Hinv[q][:, q]` for that row's removal indices
+//! `q` (eq. 7–10). Rows remove *different numbers* of weights, so the
+//! systems have different sizes. The paper pads every system to
+//! `r_max = max_i s_i` with an identity block (eq. 77–79) so a single
+//! uniform batched solver can run them all; padded components of the
+//! solution are exactly zero by construction.
+//!
+//! Both paths are provided — `solve_rows_direct` (exact-size per-row
+//! Cholesky) and `solve_rows_padded` (the §H.1 scheme) — and the test
+//! suite pins them to produce identical results. The JAX/Pallas L2
+//! graph uses the padded formulation (static shapes), so this module is
+//! also the cross-check oracle for the AOT path.
+
+use super::chol::{chol_solve, cholesky};
+use super::MatF64;
+use anyhow::Result;
+
+/// Solve `λ_i · R̂_i = u_i` for every row, where
+/// `R̂_i = hinv[q_i][:, q_i]` — exact-size Cholesky per row.
+/// `R̂` is a principal submatrix of the symmetric-PD `hinv`, hence
+/// symmetric-PD itself; `λ·R̂ = u  ⇔  R̂·λᵀ = uᵀ`.
+pub fn solve_rows_direct(
+    hinv: &MatF64,
+    qs: &[Vec<usize>],
+    us: &[Vec<f64>],
+) -> Result<Vec<Vec<f64>>> {
+    assert_eq!(qs.len(), us.len());
+    let mut out = Vec::with_capacity(qs.len());
+    for (q, u) in qs.iter().zip(us) {
+        assert_eq!(q.len(), u.len());
+        if q.is_empty() {
+            out.push(Vec::new());
+            continue;
+        }
+        let rhat = hinv.principal_submatrix(q);
+        let l = cholesky(&rhat)?;
+        out.push(chol_solve(&l, u));
+    }
+    Ok(out)
+}
+
+/// §H.1 padded formulation: every system is embedded into an
+/// `r_max × r_max` block-diagonal matrix `R̂′ = diag(R̂, I)` with
+/// rhs `u′ = (u, 0)`; the trailing components of the solution are zero
+/// and are stripped before returning. Produces bit-comparable results
+/// to [`solve_rows_direct`] up to factorization round-off.
+pub fn solve_rows_padded(
+    hinv: &MatF64,
+    qs: &[Vec<usize>],
+    us: &[Vec<f64>],
+) -> Result<Vec<Vec<f64>>> {
+    assert_eq!(qs.len(), us.len());
+    let r_max = qs.iter().map(|q| q.len()).max().unwrap_or(0);
+    if r_max == 0 {
+        return Ok(vec![Vec::new(); qs.len()]);
+    }
+    let mut out = Vec::with_capacity(qs.len());
+    let mut rhat_p = MatF64::zeros(r_max, r_max);
+    let mut u_p = vec![0.0f64; r_max];
+    for (q, u) in qs.iter().zip(us) {
+        let s = q.len();
+        if s == 0 {
+            out.push(Vec::new());
+            continue;
+        }
+        // build R̂′ = diag(R̂, I) in the reused buffer
+        for v in rhat_p.data.iter_mut() {
+            *v = 0.0;
+        }
+        for (a, &qa) in q.iter().enumerate() {
+            for (b, &qb) in q.iter().enumerate() {
+                *rhat_p.at_mut(a, b) = hinv.at(qa, qb);
+            }
+        }
+        for d in s..r_max {
+            *rhat_p.at_mut(d, d) = 1.0;
+        }
+        u_p.iter_mut().for_each(|v| *v = 0.0);
+        u_p[..s].copy_from_slice(u);
+        let l = cholesky(&rhat_p)?;
+        let mut lam = chol_solve(&l, &u_p);
+        // padded components must vanish by construction
+        for &v in &lam[s..] {
+            debug_assert!(v.abs() < 1e-9, "padded solution component {v} != 0");
+        }
+        lam.truncate(s);
+        out.push(lam);
+    }
+    Ok(out)
+}
+
+/// Apply the Thanos row update `w ← w − λ·R` (eq. 10) where
+/// `R = hinv[q]` are the selected rows of the inverse Hessian. The
+/// entries at the removal indices land at (numerically) zero; they are
+/// clamped to exact zero so downstream sparsity accounting is crisp.
+pub fn apply_row_update(w: &mut [f32], hinv: &MatF64, q: &[usize], lam: &[f64]) {
+    assert_eq!(q.len(), lam.len());
+    assert_eq!(w.len(), hinv.cols);
+    for (t, &qt) in q.iter().enumerate() {
+        let l = lam[t];
+        if l == 0.0 {
+            continue;
+        }
+        let hrow = hinv.row(qt);
+        for (j, wj) in w.iter_mut().enumerate() {
+            *wj -= (l * hrow[j]) as f32;
+        }
+    }
+    for &qt in q {
+        w[qt] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::{chol_inverse, damp_hessian};
+    use crate::linalg::gemm::xxt_f64;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    fn setup(b: usize, seed: u64) -> MatF64 {
+        let mut r = Rng::new(seed);
+        let x = Mat::from_fn(b, b + 5, |_, _| r.normal_f32(0.0, 1.0));
+        let mut h = xxt_f64(&x);
+        for v in h.data.iter_mut() {
+            *v *= 2.0;
+        }
+        damp_hessian(&mut h, 0.01);
+        chol_inverse(&h).unwrap()
+    }
+
+    #[test]
+    fn padded_matches_direct() {
+        let hinv = setup(16, 11);
+        let mut r = Rng::new(12);
+        let qs: Vec<Vec<usize>> = vec![
+            vec![1, 4, 7],
+            vec![0],
+            vec![2, 3, 5, 8, 13],
+            vec![],
+            vec![15],
+        ];
+        let us: Vec<Vec<f64>> = qs
+            .iter()
+            .map(|q| q.iter().map(|_| r.normal()).collect())
+            .collect();
+        let direct = solve_rows_direct(&hinv, &qs, &us).unwrap();
+        let padded = solve_rows_padded(&hinv, &qs, &us).unwrap();
+        assert_eq!(direct.len(), padded.len());
+        for (d, p) in direct.iter().zip(&padded) {
+            assert_eq!(d.len(), p.len());
+            for (a, b) in d.iter().zip(p) {
+                assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn solution_satisfies_constraints() {
+        // After the update, w[q] == 0 exactly.
+        let hinv = setup(12, 13);
+        let mut r = Rng::new(14);
+        let mut w: Vec<f32> = (0..12).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let q = vec![2usize, 5, 9];
+        let u: Vec<f64> = q.iter().map(|&i| w[i] as f64).collect();
+        let lam = solve_rows_direct(&hinv, &[q.clone()], &[u]).unwrap();
+        apply_row_update(&mut w, &hinv, &q, &lam[0]);
+        for &qi in &q {
+            assert_eq!(w[qi], 0.0);
+        }
+    }
+
+    #[test]
+    fn update_is_obs_for_single_index() {
+        // s=1 must reduce to the OBS rule δ* = -(w_q / Hinv_qq)·Hinv_q: (eq. 4)
+        let hinv = setup(10, 15);
+        let mut r = Rng::new(16);
+        let w0: Vec<f32> = (0..10).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let q = 4usize;
+        let lam = solve_rows_direct(&hinv, &[vec![q]], &[vec![w0[q] as f64]]).unwrap();
+        let mut w = w0.clone();
+        apply_row_update(&mut w, &hinv, &[q], &lam[0]);
+        let coef = w0[q] as f64 / hinv.at(q, q);
+        for j in 0..10 {
+            let expected = if j == q {
+                0.0
+            } else {
+                w0[j] as f64 - coef * hinv.at(q, j)
+            };
+            assert!((w[j] as f64 - expected).abs() < 1e-5, "j={j}");
+        }
+    }
+
+    #[test]
+    fn joint_update_beats_sequential_single_updates() {
+        // The core claim of the paper (§4 / §A.1): solving for several
+        // removals jointly gives lower reconstruction loss than applying
+        // the single-weight OBS rule one at a time with a stale Hessian.
+        let b = 14;
+        let mut r = Rng::new(17);
+        let x = Mat::from_fn(b, 40, |_, _| r.normal_f32(0.0, 1.0));
+        let mut h = xxt_f64(&x);
+        for v in h.data.iter_mut() {
+            *v *= 2.0;
+        }
+        damp_hessian(&mut h, 0.001);
+        let hinv = chol_inverse(&h).unwrap();
+        let w0 = Mat::from_fn(1, b, |_, _| r.normal_f32(0.0, 1.0));
+        let q = vec![1usize, 3, 6, 10];
+
+        // joint (Thanos)
+        let u: Vec<f64> = q.iter().map(|&i| w0.at(0, i) as f64).collect();
+        let lam = solve_rows_direct(&hinv, &[q.clone()], &[u]).unwrap();
+        let mut w_joint = w0.clone();
+        apply_row_update(w_joint.row_mut(0), &hinv, &q, &lam[0]);
+
+        // sequential independent OBS deltas summed (what SparseGPT's
+        // one-at-a-time rule would do without refreshing H between the
+        // removals of the same block)
+        let mut w_seq = w0.clone();
+        for &qi in &q {
+            let coef = w0.at(0, qi) as f64 / hinv.at(qi, qi);
+            for j in 0..b {
+                *w_seq.at_mut(0, j) -= (coef * hinv.at(qi, j)) as f32;
+            }
+        }
+        for &qi in &q {
+            *w_seq.at_mut(0, qi) = 0.0;
+        }
+
+        let loss_joint = crate::linalg::gemm::recon_loss(&w_joint, &w0, &x);
+        let loss_seq = crate::linalg::gemm::recon_loss(&w_seq, &w0, &x);
+        assert!(
+            loss_joint <= loss_seq + 1e-9,
+            "joint {loss_joint} vs sequential {loss_seq}"
+        );
+    }
+}

@@ -1,0 +1,504 @@
+//! Cholesky factorization, triangular solves, PSD inverse, LU solve.
+//!
+//! All in f64: the quality gap between pruning methods is driven by the
+//! conditioning of `H = 2XXᵀ`, and f32 factorization visibly degrades
+//! SparseGPT/Thanos updates at b ≥ 1024.
+
+use super::MatF64;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L·Lᵀ`.
+/// Fails if `A` is not (numerically) positive definite — callers damp
+/// the Hessian first (see [`damp_hessian`]).
+///
+/// Right-looking in-place variant: per column, the trailing-submatrix
+/// rank-1 downdate (the O(n²) part of every step) is row-parallel
+/// across `std::thread::scope` workers once the trailing size is large
+/// enough to amortize spawning (§Perf-L3 in EXPERIMENTS.md).
+pub fn cholesky(a: &MatF64) -> Result<MatF64> {
+    assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let nt = crate::linalg::gemm::num_threads();
+    // threshold below which the serial update is faster than spawning
+    const PAR_MIN: usize = 192;
+    let mut colj = vec![0.0f64; n];
+    for j in 0..n {
+        let pivot = m.at(j, j);
+        if pivot <= 0.0 || !pivot.is_finite() {
+            bail!("matrix not positive definite at pivot {j} (value {pivot:.3e})");
+        }
+        let pivot = pivot.sqrt();
+        *m.at_mut(j, j) = pivot;
+        for i in j + 1..n {
+            let v = m.at(i, j) / pivot;
+            *m.at_mut(i, j) = v;
+            colj[i] = v;
+        }
+        let trailing = n - (j + 1);
+        if trailing == 0 {
+            continue;
+        }
+        if trailing < PAR_MIN || nt == 1 {
+            for i in j + 1..n {
+                let ci = colj[i];
+                if ci == 0.0 {
+                    continue;
+                }
+                let row = m.row_mut(i);
+                for k in j + 1..=i {
+                    row[k] -= ci * colj[k];
+                }
+            }
+        } else {
+            let colj_ref = &colj;
+            let chunk = trailing.div_ceil(nt).max(1);
+            std::thread::scope(|s| {
+                let (_, rest) = m.data.split_at_mut((j + 1) * n);
+                let mut rest = rest;
+                let mut i0 = j + 1;
+                while i0 < n {
+                    let rows_here = chunk.min(n - i0);
+                    let (head, tail) = rest.split_at_mut(rows_here * n);
+                    rest = tail;
+                    let start = i0;
+                    s.spawn(move || {
+                        for ri in 0..rows_here {
+                            let i = start + ri;
+                            let ci = colj_ref[i];
+                            if ci == 0.0 {
+                                continue;
+                            }
+                            let row = &mut head[ri * n..(ri + 1) * n];
+                            for k in j + 1..=i {
+                                row[k] -= ci * colj_ref[k];
+                            }
+                        }
+                    });
+                    i0 += rows_here;
+                }
+            });
+        }
+    }
+    // zero the (stale) upper triangle
+    for i in 0..n {
+        for j in i + 1..n {
+            *m.at_mut(i, j) = 0.0;
+        }
+    }
+    Ok(m)
+}
+
+/// Inverse of a lower-triangular matrix, column-parallel: column `j`
+/// of `L⁻¹` is the forward-substitution solve of `L·x = e_j`, which
+/// only touches indices `≥ j` (total n³/6 flops, embarrassingly
+/// parallel across columns).
+pub fn lower_tri_inverse(l: &MatF64) -> MatF64 {
+    let n = l.rows;
+    let mut inv = MatF64::zeros(n, n);
+    let nt = crate::linalg::gemm::num_threads().min(n.max(1));
+    let cols_per = n.div_ceil(nt).max(1);
+    let bands: Vec<(usize, Vec<Vec<f64>>)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut j0 = 0usize;
+        while j0 < n {
+            let jend = (j0 + cols_per).min(n);
+            handles.push(s.spawn(move || {
+                let mut cols = Vec::with_capacity(jend - j0);
+                for j in j0..jend {
+                    let mut x = vec![0.0f64; n];
+                    x[j] = 1.0 / l.at(j, j);
+                    for i in j + 1..n {
+                        let li = l.row(i);
+                        let mut sum = 0.0;
+                        for (k, &xk) in x.iter().enumerate().take(i).skip(j) {
+                            sum += li[k] * xk;
+                        }
+                        x[i] = -sum / li[i];
+                    }
+                    cols.push(x);
+                }
+                (j0, cols)
+            }));
+            j0 = jend;
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (j0, cols) in bands {
+        for (dj, col) in cols.into_iter().enumerate() {
+            let j = j0 + dj;
+            for i in j..n {
+                *inv.at_mut(i, j) = col[i];
+            }
+        }
+    }
+    inv
+}
+
+/// Solve `U·X = RHS` for upper-triangular `U` (s×s) against an s×n
+/// right-hand-side matrix, column-parallel back substitution.
+pub fn upper_tri_solve_many(u: &MatF64, rhs: &MatF64) -> MatF64 {
+    let s = u.rows;
+    assert_eq!(u.cols, s);
+    assert_eq!(rhs.rows, s);
+    let n = rhs.cols;
+    let mut x = MatF64::zeros(s, n);
+    let nt = crate::linalg::gemm::num_threads().min(n.max(1));
+    let cols_per = n.div_ceil(nt).max(1);
+    let bands: Vec<(usize, Vec<Vec<f64>>)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        let mut j0 = 0usize;
+        while j0 < n {
+            let jend = (j0 + cols_per).min(n);
+            handles.push(scope.spawn(move || {
+                let mut cols = Vec::with_capacity(jend - j0);
+                for j in j0..jend {
+                    let mut col = vec![0.0f64; s];
+                    for i in (0..s).rev() {
+                        let urow = u.row(i);
+                        let mut sum = rhs.at(i, j);
+                        for (k, &ck) in col.iter().enumerate().skip(i + 1) {
+                            sum -= urow[k] * ck;
+                        }
+                        col[i] = sum / urow[i];
+                    }
+                    cols.push(col);
+                }
+                (j0, cols)
+            }));
+            j0 = jend;
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (j0, cols) in bands {
+        for (dj, col) in cols.into_iter().enumerate() {
+            for i in 0..s {
+                *x.at_mut(i, j0 + dj) = col[i];
+            }
+        }
+    }
+    x
+}
+
+/// Upper-triangular `U` with `A⁻¹ = Uᵀ·U`, computed WITHOUT forming
+/// `A⁻¹`: with `J` the index-reversal permutation and
+/// `M = J·A·J = Lₘ·Lₘᵀ`, one has `A⁻¹ = J·Lₘ⁻ᵀ·Lₘ⁻¹·J = UᵀU` for
+/// `U = J·Lₘ⁻¹·J` (upper triangular). Cost ≈ n³/3 (cholesky) + n³/6
+/// (triangular inverse), vs ≈ 2.7·n³ for the naive
+/// chol→full-inverse→chol chain — the §Perf-L3 optimization that makes
+/// SparseGPT/Thanos feasible at OPT layer shapes on CPU.
+pub fn inverse_factor_upper(a: &MatF64) -> Result<MatF64> {
+    let n = a.rows;
+    let m = MatF64::from_fn(n, n, |i, j| a.at(n - 1 - i, n - 1 - j));
+    let lm = cholesky(&m)?;
+    let linv = lower_tri_inverse(&lm);
+    Ok(MatF64::from_fn(n, n, |i, j| linv.at(n - 1 - i, n - 1 - j)))
+}
+
+/// Solve `L·y = b` (forward substitution), `L` lower triangular.
+pub fn solve_lower(l: &MatF64, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        let lrow = l.row(i);
+        for k in 0..i {
+            sum -= lrow[k] * y[k];
+        }
+        y[i] = sum / lrow[i];
+    }
+    y
+}
+
+/// Solve `Lᵀ·x = y` (backward substitution), `L` lower triangular.
+pub fn solve_lower_t(l: &MatF64, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l.at(k, i) * x[k];
+        }
+        x[i] = sum / l.at(i, i);
+    }
+    x
+}
+
+/// Solve `A·x = b` given the Cholesky factor of `A`.
+pub fn chol_solve(l: &MatF64, b: &[f64]) -> Vec<f64> {
+    solve_lower_t(l, &solve_lower(l, b))
+}
+
+/// Full inverse of a symmetric PD matrix via Cholesky. The n identity
+/// columns are independent solves, so they are fanned out across
+/// threads (the dominant 2n³ of the ~2.3n³ total cost parallelizes).
+pub fn chol_inverse(a: &MatF64) -> Result<MatF64> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    let mut inv = MatF64::zeros(n, n);
+    let nt = crate::linalg::gemm::num_threads().min(n.max(1));
+    let cols_per = n.div_ceil(nt).max(1);
+    // collect per-thread column bands, then transpose into `inv`
+    let l_ref = &l;
+    let bands: Vec<(usize, Vec<Vec<f64>>)> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut j0 = 0usize;
+        while j0 < n {
+            let jend = (j0 + cols_per).min(n);
+            handles.push(s.spawn(move || {
+                let mut cols = Vec::with_capacity(jend - j0);
+                let mut e = vec![0.0f64; n];
+                for j in j0..jend {
+                    e[j] = 1.0;
+                    cols.push(chol_solve(l_ref, &e));
+                    e[j] = 0.0;
+                }
+                (j0, cols)
+            }));
+            j0 = jend;
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (j0, cols) in bands {
+        for (dj, col) in cols.into_iter().enumerate() {
+            let j = j0 + dj;
+            for i in 0..n {
+                *inv.at_mut(i, j) = col[i];
+            }
+        }
+    }
+    // symmetrize to remove round-off asymmetry — downstream code relies
+    // on Hinv being exactly symmetric (principal submatrices → Cholesky).
+    for i in 0..n {
+        for j in 0..i {
+            let v = 0.5 * (inv.at(i, j) + inv.at(j, i));
+            *inv.at_mut(i, j) = v;
+            *inv.at_mut(j, i) = v;
+        }
+    }
+    Ok(inv)
+}
+
+/// General square solve `A·x = b` via LU with partial pivoting.
+/// Used where symmetry is not guaranteed (padded batched systems of
+/// §H.1 mix identity rows into `R̂′`).
+pub fn lu_solve(a: &MatF64, b: &[f64]) -> Result<Vec<f64>> {
+    let n = a.rows;
+    assert_eq!(a.cols, n);
+    assert_eq!(b.len(), n);
+    let mut lu = a.clone();
+    let mut x: Vec<f64> = b.to_vec();
+    let mut piv: Vec<usize> = (0..n).collect();
+    for k in 0..n {
+        // pivot
+        let mut pmax = lu.at(k, k).abs();
+        let mut prow = k;
+        for i in k + 1..n {
+            let v = lu.at(i, k).abs();
+            if v > pmax {
+                pmax = v;
+                prow = i;
+            }
+        }
+        if pmax == 0.0 || !pmax.is_finite() {
+            bail!("singular matrix in lu_solve at column {k}");
+        }
+        if prow != k {
+            piv.swap(k, prow);
+            for j in 0..n {
+                let t = lu.at(k, j);
+                *lu.at_mut(k, j) = lu.at(prow, j);
+                *lu.at_mut(prow, j) = t;
+            }
+            x.swap(k, prow);
+        }
+        let pivot = lu.at(k, k);
+        for i in k + 1..n {
+            let f = lu.at(i, k) / pivot;
+            *lu.at_mut(i, k) = f;
+            if f != 0.0 {
+                for j in k + 1..n {
+                    let v = lu.at(k, j);
+                    *lu.at_mut(i, j) -= f * v;
+                }
+                x[i] -= f * x[k];
+            }
+        }
+    }
+    // back substitution
+    for i in (0..n).rev() {
+        let mut sum = x[i];
+        for j in i + 1..n {
+            sum -= lu.at(i, j) * x[j];
+        }
+        x[i] = sum / lu.at(i, i);
+    }
+    Ok(x)
+}
+
+/// Add the standard SparseGPT-style damping `λ·I` with
+/// `λ = percdamp · mean(diag(H))`, and replace zero diagonal entries
+/// (dead input channels) with 1 so `H` stays invertible — mirroring the
+/// reference implementations of SparseGPT/Wanda.
+pub fn damp_hessian(h: &mut MatF64, percdamp: f64) {
+    assert_eq!(h.rows, h.cols);
+    let n = h.rows;
+    let mut trace = 0.0;
+    for i in 0..n {
+        trace += h.at(i, i);
+    }
+    let lambda = percdamp * (trace / n as f64).max(f64::MIN_POSITIVE);
+    for i in 0..n {
+        let d = h.at(i, i);
+        if d == 0.0 {
+            *h.at_mut(i, i) = 1.0;
+        } else {
+            *h.at_mut(i, i) = d + lambda;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul_f64;
+    use crate::linalg::Mat;
+    use crate::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> MatF64 {
+        let mut r = Rng::new(seed);
+        let x = Mat::from_fn(n, n + 3, |_, _| r.normal_f32(0.0, 1.0));
+        let mut h = crate::linalg::gemm::xxt_f64(&x);
+        damp_hessian(&mut h, 0.01);
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(12, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = matmul_f64(&l, &l.transpose());
+        assert!(a.max_abs_diff(&rec) < 1e-9);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = MatF64::eye(3);
+        *a.at_mut(2, 2) = -1.0;
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn chol_solve_solves() {
+        let a = random_spd(20, 2);
+        let mut r = Rng::new(3);
+        let b: Vec<f64> = (0..20).map(|_| r.normal()).collect();
+        let l = cholesky(&a).unwrap();
+        let x = chol_solve(&l, &b);
+        // residual check
+        for i in 0..20 {
+            let ax: f64 = (0..20).map(|j| a.at(i, j) * x[j]).sum();
+            assert!((ax - b[i]).abs() < 1e-8, "row {i}");
+        }
+    }
+
+    #[test]
+    fn chol_inverse_is_inverse() {
+        let a = random_spd(15, 4);
+        let inv = chol_inverse(&a).unwrap();
+        let prod = matmul_f64(&a, &inv);
+        let eye = MatF64::eye(15);
+        assert!(prod.max_abs_diff(&eye) < 1e-8);
+    }
+
+    #[test]
+    fn chol_inverse_symmetric() {
+        let a = random_spd(10, 5);
+        let inv = chol_inverse(&a).unwrap();
+        assert!(inv.max_abs_diff(&inv.transpose()) == 0.0);
+    }
+
+    #[test]
+    fn lower_tri_inverse_inverts() {
+        let a = random_spd(20, 8);
+        let l = cholesky(&a).unwrap();
+        let linv = lower_tri_inverse(&l);
+        let prod = matmul_f64(&l, &linv);
+        assert!(prod.max_abs_diff(&MatF64::eye(20)) < 1e-9);
+        // strictly lower triangular result
+        for i in 0..20 {
+            for j in i + 1..20 {
+                assert_eq!(linv.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_factor_upper_identity() {
+        let a = random_spd(24, 9);
+        let u = inverse_factor_upper(&a).unwrap();
+        // upper triangular
+        for i in 0..24 {
+            for j in 0..i {
+                assert_eq!(u.at(i, j), 0.0, "({i},{j})");
+            }
+        }
+        // U^T U == A^{-1}  (check A · U^T U == I)
+        let utu = matmul_f64(&u.transpose(), &u);
+        let prod = matmul_f64(&a, &utu);
+        assert!(prod.max_abs_diff(&MatF64::eye(24)) < 1e-8);
+        // must agree with the naive chain
+        let naive = cholesky(&chol_inverse(&a).unwrap()).unwrap().transpose();
+        let utu2 = matmul_f64(&naive.transpose(), &naive);
+        assert!(utu.max_abs_diff(&utu2) < 1e-8);
+    }
+
+    #[test]
+    fn parallel_cholesky_matches_large() {
+        // exercise the threaded trailing-update path (n > PAR_MIN)
+        let a = random_spd(300, 10);
+        let l = cholesky(&a).unwrap();
+        let rec = matmul_f64(&l, &l.transpose());
+        assert!(a.max_abs_diff(&rec) < 1e-7);
+    }
+
+    #[test]
+    fn lu_solve_matches_chol_solve_on_spd() {
+        let a = random_spd(16, 6);
+        let mut r = Rng::new(7);
+        let b: Vec<f64> = (0..16).map(|_| r.normal()).collect();
+        let l = cholesky(&a).unwrap();
+        let x1 = chol_solve(&l, &b);
+        let x2 = lu_solve(&a, &b).unwrap();
+        for i in 0..16 {
+            assert!((x1[i] - x2[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn lu_solve_handles_permutation_needs() {
+        // leading zero pivot forces row exchange
+        let a = MatF64::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]);
+        let x = lu_solve(&a, &[3.0, 5.0]).unwrap();
+        assert!((x[0] - 5.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lu_solve_rejects_singular() {
+        let a = MatF64::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]);
+        assert!(lu_solve(&a, &[1.0, 1.0]).is_err());
+    }
+
+    #[test]
+    fn damp_hessian_fixes_dead_channels() {
+        let mut h = MatF64::zeros(3, 3);
+        *h.at_mut(0, 0) = 2.0;
+        damp_hessian(&mut h, 0.01);
+        assert!(h.at(1, 1) == 1.0 && h.at(2, 2) == 1.0);
+        assert!(h.at(0, 0) > 2.0);
+        assert!(cholesky(&h).is_ok());
+    }
+}

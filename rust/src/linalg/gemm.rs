@@ -1,0 +1,290 @@
+//! Blocked, multi-threaded GEMM and Gram-matrix (`XXᵀ`) kernels.
+//!
+//! These are the L3-side compute hot spots: the Fig. 9 pruning-time
+//! bench and every pure-Rust pruning path run through here. The design
+//! mirrors the classic cache-blocked loop nest: pack nothing, walk the
+//! `k` dimension innermost over a transposed-B access pattern, and
+//! split the output row range across `std::thread::scope` workers.
+
+use super::{Mat, MatF64};
+
+/// Number of worker threads used for row-parallel kernels.
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// `C = A · B` for f32 matrices (f32 accumulate, k-blocked).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · B` writing into a preallocated output (hot-loop reuse).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    c.data.iter_mut().for_each(|v| *v = 0.0);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let nt = num_threads().min(m.max(1));
+    if m * n * k < 64 * 64 * 64 || nt == 1 {
+        matmul_rows(a, b, &mut c.data, 0, m, k, n);
+        return;
+    }
+    let chunk = m.div_ceil(nt);
+    let a_ref = &*a;
+    let b_ref = &*b;
+    std::thread::scope(|s| {
+        let mut rest = c.data.as_mut_slice();
+        let mut row0 = 0usize;
+        while row0 < m {
+            let rows_here = chunk.min(m - row0);
+            let (head, tail) = rest.split_at_mut(rows_here * n);
+            rest = tail;
+            let r0 = row0;
+            s.spawn(move || {
+                matmul_rows(a_ref, b_ref, head, r0, r0 + rows_here, k, n);
+            });
+            row0 += rows_here;
+        }
+    });
+}
+
+/// Row-band worker: computes rows `[r0, r1)` of `A·B` into `out`
+/// (`out` covers exactly those rows). 4-wide k-unrolled inner loop over
+/// contiguous B rows, which the compiler auto-vectorizes.
+fn matmul_rows(a: &Mat, b: &Mat, out: &mut [f32], r0: usize, r1: usize, k: usize, n: usize) {
+    const KB: usize = 256; // k-blocking keeps the active B panel in L2
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for i in r0..r1 {
+            let arow = a.row(i);
+            let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            for kk in kb..kend {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue; // sparse-aware: pruned weights skip work
+                }
+                let brow = b.row(kk);
+                for j in 0..n {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// `C = A · B` in f64, row-parallel above a small-problem threshold.
+pub fn matmul_f64(a: &MatF64, b: &MatF64) -> MatF64 {
+    assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = MatF64::zeros(m, n);
+    let body = |i0: usize, out: &mut [f64]| {
+        for (ri, crow) in out.chunks_mut(n).enumerate() {
+            let arow = a.row(i0 + ri);
+            for (kk, &aik) in arow.iter().enumerate().take(k) {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(kk);
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    };
+    let nt = num_threads().min(m.max(1));
+    if m * n * k < 64 * 64 * 64 || nt == 1 {
+        body(0, &mut c.data);
+        return c;
+    }
+    let chunk = m.div_ceil(nt);
+    let body = &body;
+    std::thread::scope(|s| {
+        let mut rest = c.data.as_mut_slice();
+        let mut row0 = 0usize;
+        while row0 < m {
+            let rows_here = chunk.min(m - row0);
+            let (head, tail) = rest.split_at_mut(rows_here * n);
+            rest = tail;
+            let r0 = row0;
+            s.spawn(move || body(r0, head));
+            row0 += rows_here;
+        }
+    });
+    c
+}
+
+/// Gram matrix `X · Xᵀ` with f64 accumulation (`X` is `b × a`); the
+/// Hessian of the layer-reconstruction objective is `H = 2·XXᵀ`
+/// (possibly averaged over calibration samples). Exploits symmetry:
+/// only the upper triangle is computed, then mirrored.
+pub fn xxt_f64(x: &Mat) -> MatF64 {
+    let b = x.rows;
+    let mut h = MatF64::zeros(b, b);
+    let nt = num_threads().min(b.max(1));
+    let x_ref = &*x;
+    // Parallel over rows i; each worker fills h[i][i..].
+    std::thread::scope(|s| {
+        let mut rest = h.data.as_mut_slice();
+        let cols = b;
+        let chunk = b.div_ceil(nt);
+        let mut row0 = 0usize;
+        while row0 < b {
+            let rows_here = chunk.min(b - row0);
+            let (head, tail) = rest.split_at_mut(rows_here * cols);
+            rest = tail;
+            let r0 = row0;
+            s.spawn(move || {
+                for i in r0..r0 + rows_here {
+                    let xi = x_ref.row(i);
+                    let hrow = &mut head[(i - r0) * cols..(i - r0 + 1) * cols];
+                    for j in i..cols {
+                        let xj = x_ref.row(j);
+                        let mut acc = 0.0f64;
+                        for (p, &v) in xi.iter().enumerate() {
+                            acc += (v as f64) * (xj[p] as f64);
+                        }
+                        hrow[j] = acc;
+                    }
+                }
+            });
+            row0 += rows_here;
+        }
+    });
+    // mirror upper → lower
+    for i in 0..b {
+        for j in 0..i {
+            let v = h.at(j, i);
+            *h.at_mut(i, j) = v;
+        }
+    }
+    h
+}
+
+/// `y = w · X` for a single row `w` (`1×b`) against `X` (`b×a`),
+/// f64 accumulation. Used by loss probes in tests.
+pub fn row_times_mat(w: &[f32], x: &Mat) -> Vec<f64> {
+    assert_eq!(w.len(), x.rows);
+    let mut y = vec![0.0f64; x.cols];
+    for (k, &wk) in w.iter().enumerate() {
+        if wk == 0.0 {
+            continue;
+        }
+        let xrow = x.row(k);
+        let wk = wk as f64;
+        for (j, &v) in xrow.iter().enumerate() {
+            y[j] += wk * v as f64;
+        }
+    }
+    y
+}
+
+/// Reconstruction loss `‖(Ŵ − W)·X‖_F²` — the paper's objective (1).
+/// This is the ground-truth quality probe every pruning test uses.
+pub fn recon_loss(w_hat: &Mat, w: &Mat, x: &Mat) -> f64 {
+    assert_eq!((w_hat.rows, w_hat.cols), (w.rows, w.cols));
+    assert_eq!(w.cols, x.rows);
+    let mut total = 0.0f64;
+    for i in 0..w.rows {
+        let mut delta: Vec<f32> = w_hat.row(i).to_vec();
+        for (j, d) in delta.iter_mut().enumerate() {
+            *d -= w.row(i)[j];
+        }
+        let y = row_times_mat(&delta, x);
+        total += y.iter().map(|v| v * v).sum::<f64>();
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0f32;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_small() {
+        let mut r = Rng::new(1);
+        let a = Mat::from_fn(7, 5, |_, _| r.normal_f32(0.0, 1.0));
+        let b = Mat::from_fn(5, 9, |_, _| r.normal_f32(0.0, 1.0));
+        let c = matmul(&a, &b);
+        let cn = naive_matmul(&a, &b);
+        assert!(c.max_abs_diff(&cn) < 1e-4);
+    }
+
+    #[test]
+    fn matmul_matches_naive_threaded_size() {
+        let mut r = Rng::new(2);
+        let a = Mat::from_fn(130, 70, |_, _| r.normal_f32(0.0, 1.0));
+        let b = Mat::from_fn(70, 90, |_, _| r.normal_f32(0.0, 1.0));
+        let c = matmul(&a, &b);
+        let cn = naive_matmul(&a, &b);
+        assert!(c.max_abs_diff(&cn) < 1e-3);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut r = Rng::new(3);
+        let a = Mat::from_fn(12, 12, |_, _| r.normal_f32(0.0, 1.0));
+        let eye = Mat::from_fn(12, 12, |i, j| if i == j { 1.0 } else { 0.0 });
+        assert!(matmul(&a, &eye).max_abs_diff(&a) < 1e-6);
+        assert!(matmul(&eye, &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn xxt_is_symmetric_and_correct() {
+        let mut r = Rng::new(4);
+        let x = Mat::from_fn(33, 21, |_, _| r.normal_f32(0.0, 1.0));
+        let h = xxt_f64(&x);
+        for i in 0..33 {
+            for j in 0..33 {
+                assert_eq!(h.at(i, j), h.at(j, i));
+                let direct: f64 = (0..21)
+                    .map(|p| x.at(i, p) as f64 * x.at(j, p) as f64)
+                    .sum();
+                assert!((h.at(i, j) - direct).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn recon_loss_zero_when_unchanged() {
+        let mut r = Rng::new(5);
+        let w = Mat::from_fn(6, 8, |_, _| r.normal_f32(0.0, 1.0));
+        let x = Mat::from_fn(8, 10, |_, _| r.normal_f32(0.0, 1.0));
+        assert_eq!(recon_loss(&w, &w, &x), 0.0);
+    }
+
+    #[test]
+    fn recon_loss_matches_manual_single_entry() {
+        // zeroing one weight w_kq with no compensation costs
+        // w_kq^2 * ||X_q:||^2 — exactly the OBD metric (eq. 5).
+        let mut r = Rng::new(6);
+        let w = Mat::from_fn(4, 5, |_, _| r.normal_f32(0.0, 1.0));
+        let x = Mat::from_fn(5, 7, |_, _| r.normal_f32(0.0, 1.0));
+        let mut w_hat = w.clone();
+        *w_hat.at_mut(2, 3) = 0.0;
+        let loss = recon_loss(&w_hat, &w, &x);
+        let xnorm: f64 = x.row(3).iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let expected = (w.at(2, 3) as f64).powi(2) * xnorm;
+        assert!((loss - expected).abs() / expected.max(1e-12) < 1e-5);
+    }
+}

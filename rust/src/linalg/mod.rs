@@ -1,0 +1,317 @@
+//! From-scratch dense linear algebra.
+//!
+//! The pruning algorithms (SparseGPT's OBS updates, Thanos' block
+//! systems, the structured update rule eq. (13)) need GEMM, Cholesky
+//! factorization, triangular / general solves, matrix inversion and
+//! permutation handling. No linear-algebra crates exist in the offline
+//! vendor set, so everything here is implemented directly:
+//!
+//! * [`Mat`] — row-major `f32` matrix (weights, activations).
+//! * [`MatF64`] — row-major `f64` matrix (Hessians and all solve paths;
+//!   pruning quality is sensitive to the conditioning of `H = 2XXᵀ`,
+//!   so the numeric core runs in double precision like the paper's
+//!   PyTorch implementation effectively does for small models).
+//! * [`gemm`] — blocked, multi-threaded matrix multiply + `XXᵀ`.
+//! * [`chol`] — Cholesky, triangular solves, PSD inverse, LU solve.
+//! * [`perm`] — permutation vectors/matrices (structured pruning).
+//! * [`batched`] — the paper's §H.1 padded batched-systems path.
+
+pub mod batched;
+pub mod chol;
+pub mod gemm;
+pub mod perm;
+
+/// Row-major `f32` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+/// Row-major `f64` matrix used for Hessian-side math.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF64 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a generator `f(i, j)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                *t.at_mut(j, i) = self.at(i, j);
+            }
+        }
+        t
+    }
+
+    /// Columns `[c0, c1)` as a new matrix.
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let mut out = Mat::zeros(self.rows, c1 - c0);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Rows `[r0, r1)` as a new matrix.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat::from_vec(
+            r1 - r0,
+            self.cols,
+            self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        )
+    }
+
+    pub fn frob_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Fraction of exactly-zero entries.
+    pub fn sparsity(&self) -> f64 {
+        let zeros = self.data.iter().filter(|&&v| v == 0.0).count();
+        zeros as f64 / self.data.len() as f64
+    }
+
+    pub fn to_f64(&self) -> MatF64 {
+        MatF64 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v as f64).collect(),
+        }
+    }
+
+    /// Max absolute elementwise difference (test helper).
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl MatF64 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF64 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            *m.at_mut(i, i) = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        MatF64 { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        MatF64 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> MatF64 {
+        let mut t = MatF64::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                *t.at_mut(j, i) = self.at(i, j);
+            }
+        }
+        t
+    }
+
+    /// Principal submatrix with the given (row == col) indices. For a
+    /// symmetric PD matrix the result is symmetric PD — this is how the
+    /// per-row Thanos system `R̂ = Hinv[q][:, q]` is extracted.
+    pub fn principal_submatrix(&self, idx: &[usize]) -> MatF64 {
+        assert_eq!(self.rows, self.cols);
+        let s = idx.len();
+        let mut out = MatF64::zeros(s, s);
+        for (oi, &i) in idx.iter().enumerate() {
+            for (oj, &j) in idx.iter().enumerate() {
+                *out.at_mut(oi, oj) = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    /// Select rows by index (the `R` matrix of eq. (7)).
+    pub fn select_rows(&self, idx: &[usize]) -> MatF64 {
+        let mut out = MatF64::zeros(idx.len(), self.cols);
+        for (oi, &i) in idx.iter().enumerate() {
+            out.row_mut(oi).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Submatrix `[r0, r1) × [c0, c1)`.
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> MatF64 {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        let mut out = MatF64::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            out.row_mut(i - r0).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &MatF64) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn to_f32(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+}
+
+/// Squared ℓ² norms of the rows of `x` (the `‖X_{j:}‖₂²` terms of the
+/// Wanda / OBD metric), accumulated in f64.
+pub fn row_norms_sq(x: &Mat) -> Vec<f64> {
+    (0..x.rows)
+        .map(|i| x.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(3, 5, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().at(4, 2), m.at(2, 4));
+    }
+
+    #[test]
+    fn slice_cols_matches_manual() {
+        let m = Mat::from_fn(4, 6, |i, j| (i + j) as f32);
+        let s = m.slice_cols(2, 5);
+        assert_eq!(s.rows, 4);
+        assert_eq!(s.cols, 3);
+        for i in 0..4 {
+            for j in 0..3 {
+                assert_eq!(s.at(i, j), m.at(i, j + 2));
+            }
+        }
+    }
+
+    #[test]
+    fn principal_submatrix_symmetric() {
+        let h = MatF64::from_fn(5, 5, |i, j| 1.0 / (1.0 + (i + j) as f64));
+        let sub = h.principal_submatrix(&[0, 2, 4]);
+        assert_eq!(sub.rows, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((sub.at(i, j) - sub.at(j, i)).abs() < 1e-15);
+            }
+        }
+        assert_eq!(sub.at(1, 2), h.at(2, 4));
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let mut m = Mat::zeros(2, 4);
+        m.data[1] = 3.0;
+        m.data[6] = -1.0;
+        assert_eq!(m.sparsity(), 6.0 / 8.0);
+    }
+
+    #[test]
+    fn row_norms_sq_basic() {
+        let x = Mat::from_vec(2, 3, vec![1.0, 2.0, 2.0, 0.0, 3.0, 4.0]);
+        let n = row_norms_sq(&x);
+        assert_eq!(n, vec![9.0, 25.0]);
+    }
+}

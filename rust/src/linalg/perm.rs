@@ -1,0 +1,182 @@
+//! Permutation handling for structured pruning (paper §G.4.4).
+//!
+//! Structured Thanos permutes rows of `W` so outlier rows sit at the
+//! end, and columns so the `s` cheapest-to-remove columns sit first;
+//! after pruning the inverse permutations restore the original order.
+//! Permutations are represented as index vectors (`perm[new] = old`),
+//! never as dense 0/1 matrices — applying one is O(c·b) instead of a
+//! full GEMM.
+
+use super::{Mat, MatF64};
+
+/// A permutation `σ`: position `i` of the permuted object is taken from
+/// position `sigma[i]` of the original.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Perm {
+    pub sigma: Vec<usize>,
+}
+
+impl Perm {
+    pub fn identity(n: usize) -> Self {
+        Perm { sigma: (0..n).collect() }
+    }
+
+    /// Permutation that sorts `keys` ascending (stable).
+    pub fn sorting(keys: &[f64]) -> Self {
+        let mut sigma: Vec<usize> = (0..keys.len()).collect();
+        sigma.sort_by(|&a, &b| {
+            keys[a]
+                .partial_cmp(&keys[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        Perm { sigma }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sigma.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sigma.is_empty()
+    }
+
+    /// Inverse permutation: `inv.sigma[old] = new`.
+    pub fn inverse(&self) -> Perm {
+        let mut inv = vec![0usize; self.sigma.len()];
+        for (new, &old) in self.sigma.iter().enumerate() {
+            inv[old] = new;
+        }
+        Perm { sigma: inv }
+    }
+
+    /// Validity check: `sigma` must be a bijection on `0..n`.
+    pub fn is_valid(&self) -> bool {
+        let n = self.sigma.len();
+        let mut seen = vec![false; n];
+        for &s in &self.sigma {
+            if s >= n || seen[s] {
+                return false;
+            }
+            seen[s] = true;
+        }
+        true
+    }
+
+    /// Apply to the rows of `m`: `out.row(i) = m.row(sigma[i])` (the
+    /// paper's `W' = Q·W`).
+    pub fn apply_rows(&self, m: &Mat) -> Mat {
+        assert_eq!(self.sigma.len(), m.rows);
+        let mut out = Mat::zeros(m.rows, m.cols);
+        for (new, &old) in self.sigma.iter().enumerate() {
+            out.row_mut(new).copy_from_slice(m.row(old));
+        }
+        out
+    }
+
+    /// Apply to the columns of `m`: `out[:, j] = m[:, sigma[j]]`
+    /// (the paper's `W·P` with our index convention).
+    pub fn apply_cols(&self, m: &Mat) -> Mat {
+        assert_eq!(self.sigma.len(), m.cols);
+        let mut out = Mat::zeros(m.rows, m.cols);
+        for i in 0..m.rows {
+            let src = m.row(i);
+            let dst = out.row_mut(i);
+            for (new, &old) in self.sigma.iter().enumerate() {
+                dst[new] = src[old];
+            }
+        }
+        out
+    }
+
+    /// Conjugate a symmetric matrix: `out[i][j] = h[sigma[i]][sigma[j]]`.
+    /// Column-permuting `W` permutes the input features, so the Hessian
+    /// must be permuted on both axes.
+    pub fn conjugate_sym(&self, h: &MatF64) -> MatF64 {
+        assert_eq!(h.rows, h.cols);
+        assert_eq!(self.sigma.len(), h.rows);
+        let n = h.rows;
+        let mut out = MatF64::zeros(n, n);
+        for (ni, &oi) in self.sigma.iter().enumerate() {
+            for (nj, &oj) in self.sigma.iter().enumerate() {
+                *out.at_mut(ni, nj) = h.at(oi, oj);
+            }
+        }
+        out
+    }
+
+    /// Apply to a plain vector.
+    pub fn apply_vec<T: Copy>(&self, v: &[T]) -> Vec<T> {
+        assert_eq!(self.sigma.len(), v.len());
+        self.sigma.iter().map(|&old| v[old]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn sorting_perm_sorts() {
+        let keys = vec![3.0, 1.0, 2.0, 0.5];
+        let p = Perm::sorting(&keys);
+        let sorted = p.apply_vec(&keys);
+        assert_eq!(sorted, vec![0.5, 1.0, 2.0, 3.0]);
+        assert!(p.is_valid());
+    }
+
+    #[test]
+    fn inverse_roundtrip_rows_cols() {
+        let mut r = Rng::new(8);
+        let m = Mat::from_fn(6, 5, |_, _| r.normal_f32(0.0, 1.0));
+        let keys: Vec<f64> = (0..6).map(|_| r.normal()).collect();
+        let q = Perm::sorting(&keys);
+        let back = q.inverse().apply_rows(&q.apply_rows(&m));
+        assert_eq!(back, m);
+
+        let ck: Vec<f64> = (0..5).map(|_| r.normal()).collect();
+        let p = Perm::sorting(&ck);
+        let back = p.inverse().apply_cols(&p.apply_cols(&m));
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn conjugate_sym_matches_definition_and_preserves_symmetry() {
+        let mut r = Rng::new(9);
+        let x = Mat::from_fn(5, 8, |_, _| r.normal_f32(0.0, 1.0));
+        let h = crate::linalg::gemm::xxt_f64(&x);
+        let keys: Vec<f64> = (0..5).map(|_| r.normal()).collect();
+        let p = Perm::sorting(&keys);
+        let hp = p.conjugate_sym(&h);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(hp.at(i, j), h.at(p.sigma[i], p.sigma[j]));
+                assert_eq!(hp.at(i, j), hp.at(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn permuted_matmul_consistency() {
+        // (QW)(permuted X) == Q(W X) when X rows are permuted to match
+        // the column permutation of W.
+        let mut r = Rng::new(10);
+        let w = Mat::from_fn(4, 6, |_, _| r.normal_f32(0.0, 1.0));
+        let x = Mat::from_fn(6, 3, |_, _| r.normal_f32(0.0, 1.0));
+        let keys: Vec<f64> = (0..6).map(|_| r.normal()).collect();
+        let p = Perm::sorting(&keys);
+        let wp = p.apply_cols(&w);
+        let xp = p.apply_rows(&x);
+        let direct = crate::linalg::gemm::matmul(&w, &x);
+        let via_perm = crate::linalg::gemm::matmul(&wp, &xp);
+        assert!(direct.max_abs_diff(&via_perm) < 1e-5);
+    }
+
+    #[test]
+    fn invalid_perm_detected() {
+        assert!(!Perm { sigma: vec![0, 0, 1] }.is_valid());
+        assert!(!Perm { sigma: vec![0, 3] }.is_valid());
+        assert!(Perm::identity(4).is_valid());
+    }
+}

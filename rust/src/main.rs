@@ -1,0 +1,212 @@
+//! `thanos` — the launcher binary.
+//!
+//! Subcommands (hand-rolled CLI; no clap in the offline vendor set):
+//!
+//! ```text
+//! thanos info   [--model small]                    # manifest + config summary
+//! thanos train  [--model small --train_steps 400]  # train + save checkpoint
+//! thanos prune  <method> <pattern> [--model ...]   # prune a checkpoint
+//! thanos eval   [--model ...]                      # ppl + zero-shot of a checkpoint
+//! thanos e2e    [--model ...]                      # train → prune-all-methods → eval
+//! ```
+//!
+//! `method` ∈ magnitude|wanda|sparsegpt|thanos; `pattern` ∈
+//! unstructured:<p> | structured:<p>:<alpha> | nm:<n>:<m>[:<alpha>].
+
+use anyhow::{bail, Context, Result};
+use thanos::config::RunConfig;
+use thanos::coordinator::{Backend, Coordinator, PruneSpec};
+use thanos::data::{Corpus, CorpusConfig};
+use thanos::eval;
+use thanos::model::ModelState;
+use thanos::pruning::{Method, Pattern, PruneOpts};
+use thanos::runtime::Runtime;
+use thanos::train::{format_loss_curve, Trainer};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_method(s: &str) -> Result<Method> {
+    Ok(match s {
+        "magnitude" => Method::Magnitude,
+        "wanda" => Method::Wanda,
+        "sparsegpt" => Method::SparseGpt,
+        "thanos" => Method::Thanos,
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+fn parse_pattern(s: &str, default_alpha: f64) -> Result<Pattern> {
+    let parts: Vec<&str> = s.split(':').collect();
+    Ok(match parts[0] {
+        "unstructured" => Pattern::Unstructured {
+            p: parts.get(1).context("unstructured:<p>")?.parse()?,
+        },
+        "structured" => Pattern::Structured {
+            p: parts.get(1).context("structured:<p>[:alpha]")?.parse()?,
+            alpha: parts.get(2).map(|a| a.parse()).transpose()?.unwrap_or(default_alpha),
+        },
+        "nm" => Pattern::SemiStructured {
+            n: parts.get(1).context("nm:<n>:<m>")?.parse()?,
+            m: parts.get(2).context("nm:<n>:<m>")?.parse()?,
+            alpha: parts.get(3).map(|a| a.parse()).transpose()?.unwrap_or(default_alpha),
+        },
+        other => bail!("unknown pattern '{other}'"),
+    })
+}
+
+fn corpus_for(rc: &RunConfig) -> Corpus {
+    Corpus::build(&CorpusConfig {
+        seq_len: rc.model.seq_len,
+        train_seqs: rc.train_seqs,
+        calib_seqs: rc.calib_seqs,
+        eval_seqs: rc.eval_seqs,
+        ..Default::default()
+    })
+}
+
+fn ckpt_path(rc: &RunConfig) -> String {
+    format!("{}/{}.thnck", rc.ckpt_dir, rc.model.name)
+}
+
+fn run() -> Result<()> {
+    let mut rc = RunConfig::default();
+    let args = rc.parse_args(std::env::args().skip(1))?;
+    let cmd = args.first().map(String::as_str).unwrap_or("info");
+
+    match cmd {
+        "info" => {
+            let rt = Runtime::load(&rc.artifacts_dir)?;
+            println!("artifacts: {} executables", rt.manifest.executables.len());
+            for (name, m) in &rt.manifest.models {
+                println!(
+                    "  model {name}: {} params, {} layers, d={} ff={}",
+                    m.flat_size, m.config.n_layers, m.config.d_model, m.config.d_ff
+                );
+            }
+            Ok(())
+        }
+        "train" => {
+            let rt = Runtime::load(&rc.artifacts_dir)?;
+            let mm = rt.model(&rc.model.name)?;
+            let corpus = corpus_for(&rc);
+            let state = ModelState::init(mm, rc.seed);
+            let mut trainer = Trainer::new(&rt, state, rc.lr as f32)?;
+            println!(
+                "training {} ({} params) for {} steps…",
+                rc.model.name, mm.flat_size, rc.train_steps
+            );
+            let log = trainer.train(&corpus, rc.train_steps, rc.seed ^ 0x7EA1)?;
+            print!("{}", format_loss_curve(&log, rc.train_steps / 10));
+            let path = ckpt_path(&rc);
+            trainer.state.save(&path)?;
+            println!("saved checkpoint to {path}");
+            Ok(())
+        }
+        "prune" => {
+            let method = parse_method(args.get(1).context("prune <method> <pattern>")?)?;
+            let pattern =
+                parse_pattern(args.get(2).context("prune <method> <pattern>")?, rc.alpha)?;
+            let rt = Runtime::load(&rc.artifacts_dir)?;
+            let corpus = corpus_for(&rc);
+            let mut state =
+                ModelState::load(ckpt_path(&rc)).context("run `thanos train` first")?;
+            let ppl0 = eval::perplexity(&rt, &state, &corpus.eval)?;
+            let spec = PruneSpec {
+                method,
+                pattern,
+                opts: PruneOpts { block_size: rc.block_size, ..Default::default() },
+                backend: Backend::Aot,
+            };
+            let report = Coordinator::new(&rt).prune_model(&mut state, &corpus.calib, &spec)?;
+            println!("{}", report.summary());
+            let ppl1 = eval::perplexity(&rt, &state, &corpus.eval)?;
+            println!(
+                "{} {}: ppl {:.3} -> {:.3}",
+                method.name(),
+                pattern.label(),
+                ppl0,
+                ppl1
+            );
+            let out = format!("{}/{}-pruned.thnck", rc.ckpt_dir, rc.model.name);
+            state.save(&out)?;
+            println!("saved pruned checkpoint to {out}");
+            Ok(())
+        }
+        "eval" => {
+            let rt = Runtime::load(&rc.artifacts_dir)?;
+            let corpus = corpus_for(&rc);
+            let state = ModelState::load(ckpt_path(&rc))?;
+            let ppl = eval::perplexity(&rt, &state, &corpus.eval)?;
+            println!(
+                "perplexity: {ppl:.3}  (sparsity {:.1}%)",
+                state.prunable_sparsity() * 100.0
+            );
+            let zs = eval::zero_shot_suite(&rt, &state, &corpus.grammar, 50, rc.seed)?;
+            print!("{}", eval::format_zero_shot(&zs));
+            Ok(())
+        }
+        "e2e" => {
+            println!("run: cargo run --release --example e2e_compress");
+            Ok(())
+        }
+        // perf tooling: time one AOT executable (compile once, then N
+        // timed executions with synthetic inputs of the declared shapes)
+        "exec-bench" => {
+            let name = args.get(1).context("exec-bench <executable> [reps]")?;
+            let reps: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(5);
+            let rt = Runtime::load(&rc.artifacts_dir)?;
+            let entry = rt
+                .manifest
+                .executables
+                .get(name)
+                .with_context(|| format!("unknown executable '{name}'"))?
+                .clone();
+            let mut rng = thanos::rng::Rng::new(7);
+            let inputs: Vec<xla::Literal> = entry
+                .args
+                .iter()
+                .map(|a| -> Result<xla::Literal> {
+                    let n = a.numel();
+                    match a.dtype {
+                        thanos::runtime::Dtype::F32 => {
+                            let mut v = vec![0.0f32; n];
+                            rng.fill_normal(&mut v, 0.5);
+                            // PSD-ify square f32 inputs named like Hessians is
+                            // impossible generically; add diagonal dominance
+                            if a.shape.len() == 2 && a.shape[0] == a.shape[1] {
+                                let d = a.shape[0];
+                                for i in 0..d {
+                                    v[i * d + i] += d as f32;
+                                }
+                            }
+                            thanos::runtime::lit_f32(&v, &a.shape)
+                        }
+                        thanos::runtime::Dtype::I32 => {
+                            let v: Vec<i32> =
+                                (0..n).map(|_| rng.below(64) as i32).collect();
+                            thanos::runtime::lit_i32(&v, &a.shape)
+                        }
+                    }
+                })
+                .collect::<Result<_>>()?;
+            let t0 = std::time::Instant::now();
+            rt.exec(name, &inputs)?; // includes compile
+            println!("first call (incl. compile): {:.3}s", t0.elapsed().as_secs_f64());
+            let t1 = std::time::Instant::now();
+            for _ in 0..reps {
+                rt.exec(name, &inputs)?;
+            }
+            println!(
+                "steady-state: {:.4}s/exec over {reps} reps",
+                t1.elapsed().as_secs_f64() / reps as f64
+            );
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (info|train|prune|eval|e2e)"),
+    }
+}

@@ -1,0 +1,127 @@
+//! Lightweight metrics: named counters and wall-clock stage timers.
+//!
+//! The coordinator and the benches both report through this module so
+//! that pipeline-stage timing (capture / hessian / prune / re-forward)
+//! is visible without external tracing crates.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A set of named counters + accumulated stage durations. Thread-safe.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    timers: BTreeMap<String, Duration>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn add_time(&self, name: &str, d: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        *g.timers.entry(name.to_string()).or_insert(Duration::ZERO) += d;
+    }
+
+    /// Time a closure under a named stage.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add_time(name, t0.elapsed());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn timer_secs(&self, name: &str) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .timers
+            .get(name)
+            .map(|d| d.as_secs_f64())
+            .unwrap_or(0.0)
+    }
+
+    /// Human-readable multi-line report.
+    pub fn report(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in &g.counters {
+            out.push_str(&format!("  {k:<40} {v}\n"));
+        }
+        for (k, d) in &g.timers {
+            out.push_str(&format!("  {k:<40} {:.3}s\n", d.as_secs_f64()));
+        }
+        out
+    }
+}
+
+/// Simple stopwatch for benches.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("layers_pruned", 3);
+        m.incr("layers_pruned", 2);
+        assert_eq!(m.counter("layers_pruned"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timers_accumulate() {
+        let m = Metrics::new();
+        m.add_time("stage", Duration::from_millis(30));
+        m.add_time("stage", Duration::from_millis(20));
+        assert!((m.timer_secs("stage") - 0.05).abs() < 1e-9);
+        let v = m.time("stage2", || 7);
+        assert_eq!(v, 7);
+        assert!(m.timer_secs("stage2") >= 0.0);
+    }
+
+    #[test]
+    fn report_lists_everything() {
+        let m = Metrics::new();
+        m.incr("a", 1);
+        m.add_time("b", Duration::from_millis(5));
+        let r = m.report();
+        assert!(r.contains('a') && r.contains('b'));
+    }
+}

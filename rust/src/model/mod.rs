@@ -1,0 +1,344 @@
+//! Model state: the flat parameter vector, named-layer access by
+//! manifest layout, and checkpoint IO (own binary format — no external
+//! serialization crates offline).
+//!
+//! Checkpoint format (`.thnck`):
+//! ```text
+//! magic "THNS" | u32 version | u64 json_len | json header | f32 data (LE)
+//! ```
+//! The JSON header carries the model config and the parameter layout so
+//! a checkpoint is self-describing (loadable without the manifest).
+
+use crate::config::ModelConfig;
+use crate::jsonutil::{obj, Json};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::runtime::{ModelManifest, ParamEntry};
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"THNS";
+const VERSION: u32 = 1;
+
+/// Transformer parameter state over a single flat f32 vector.
+#[derive(Clone)]
+pub struct ModelState {
+    pub config: ModelConfig,
+    pub layout: Vec<ParamEntry>,
+    pub block_flat_size: usize,
+    pub flat: Vec<f32>,
+}
+
+impl ModelState {
+    /// Fresh random init (GPT-2 style: N(0, 0.02), residual-path scaled,
+    /// norms at 1) following the manifest layout.
+    pub fn init(mm: &ModelManifest, seed: u64) -> ModelState {
+        let mut rng = Rng::new(seed);
+        let mut flat = vec![0.0f32; mm.flat_size];
+        let resid_std = 0.02 / (2.0 * mm.config.n_layers as f32).sqrt();
+        for e in &mm.layout {
+            let dst = &mut flat[e.offset..e.offset + e.numel()];
+            if e.name.ends_with("ln1") || e.name.ends_with("ln2") || e.name.ends_with("ln_f") {
+                dst.iter_mut().for_each(|v| *v = 1.0);
+            } else if e.name.ends_with("wo") || e.name.ends_with("w2") {
+                rng.fill_normal(dst, resid_std);
+            } else {
+                rng.fill_normal(dst, 0.02);
+            }
+        }
+        ModelState {
+            config: mm.config.clone(),
+            layout: mm.layout.clone(),
+            block_flat_size: mm.block_flat_size,
+            flat,
+        }
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ParamEntry> {
+        self.layout
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("no param '{name}'"))
+    }
+
+    /// Extract a weight matrix by name (must be 2-D).
+    pub fn get_mat(&self, name: &str) -> Result<Mat> {
+        let e = self.entry(name)?;
+        if e.shape.len() != 2 {
+            bail!("param '{name}' is not a matrix: {:?}", e.shape);
+        }
+        Ok(Mat::from_vec(
+            e.shape[0],
+            e.shape[1],
+            self.flat[e.offset..e.offset + e.numel()].to_vec(),
+        ))
+    }
+
+    /// Write a weight matrix back into the flat vector.
+    pub fn set_mat(&mut self, name: &str, m: &Mat) -> Result<()> {
+        let e = self.entry(name)?.clone();
+        if e.shape != [m.rows, m.cols] {
+            bail!(
+                "shape mismatch for '{name}': {:?} vs {}x{}",
+                e.shape,
+                m.rows,
+                m.cols
+            );
+        }
+        self.flat[e.offset..e.offset + e.numel()].copy_from_slice(&m.data);
+        Ok(())
+    }
+
+    /// The contiguous flat slice of transformer block `l` (input to the
+    /// `block_capture` executable).
+    pub fn block_slice(&self, l: usize) -> Result<&[f32]> {
+        let first = self.entry(&format!("blocks.{l}.ln1"))?;
+        let off = first.offset;
+        Ok(&self.flat[off..off + self.block_flat_size])
+    }
+
+    /// Overwrite block `l` from a flat slice.
+    pub fn set_block(&mut self, l: usize, data: &[f32]) -> Result<()> {
+        let first = self.entry(&format!("blocks.{l}.ln1"))?.offset;
+        if data.len() != self.block_flat_size {
+            bail!("block slice size mismatch");
+        }
+        self.flat[first..first + self.block_flat_size].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Names of the prunable layers of block `l`, pipeline order.
+    pub fn prunable_layers(&self, l: usize) -> Vec<String> {
+        ["wq", "wk", "wv", "wo", "w1", "w2"]
+            .iter()
+            .map(|s| format!("blocks.{l}.{s}"))
+            .collect()
+    }
+
+    /// Overall sparsity of the prunable layers.
+    pub fn prunable_sparsity(&self) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for l in 0..self.config.n_layers {
+            for name in self.prunable_layers(l) {
+                let e = self.entry(&name).unwrap();
+                let s = &self.flat[e.offset..e.offset + e.numel()];
+                zeros += s.iter().filter(|&&v| v == 0.0).count();
+                total += s.len();
+            }
+        }
+        zeros as f64 / total as f64
+    }
+
+    // -- checkpoint IO ---------------------------------------------------
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let header = obj(vec![
+            ("config", self.config.to_json()),
+            ("block_flat_size", Json::Num(self.block_flat_size as f64)),
+            (
+                "layout",
+                Json::Arr(
+                    self.layout
+                        .iter()
+                        .map(|e| {
+                            obj(vec![
+                                ("name", Json::Str(e.name.clone())),
+                                ("offset", Json::Num(e.offset as f64)),
+                                (
+                                    "shape",
+                                    crate::jsonutil::arr_usize(&e.shape),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string_compact();
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for v in &self.flat {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<ModelState> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(&path)
+                .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
+        );
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not a thanos checkpoint (bad magic)");
+        }
+        let mut v4 = [0u8; 4];
+        f.read_exact(&mut v4)?;
+        let version = u32::from_le_bytes(v4);
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let mut l8 = [0u8; 8];
+        f.read_exact(&mut l8)?;
+        let hlen = u64::from_le_bytes(l8) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
+        let config = ModelConfig::from_json(header.get("config")?)?;
+        let layout: Vec<ParamEntry> = header
+            .get("layout")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(ParamEntry {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    offset: e.get("offset")?.as_usize()?,
+                    shape: e
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|d| d.as_usize())
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let flat_size: usize = layout.iter().map(|e| e.numel()).sum();
+        let mut data = Vec::new();
+        f.read_to_end(&mut data)?;
+        if data.len() != flat_size * 4 {
+            bail!(
+                "checkpoint data length {} != expected {}",
+                data.len(),
+                flat_size * 4
+            );
+        }
+        let flat: Vec<f32> = data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(ModelState {
+            config,
+            layout,
+            block_flat_size: header.get("block_flat_size")?.as_usize()?,
+            flat,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> ModelManifest {
+        // layout mirroring the python param_specs for a micro config
+        let cfg = ModelConfig {
+            name: "micro".into(),
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 16,
+            seq_len: 4,
+        };
+        let mut layout = Vec::new();
+        let mut off = 0usize;
+        let push = |layout: &mut Vec<ParamEntry>, name: &str, shape: Vec<usize>, off: &mut usize| {
+            let numel: usize = shape.iter().product();
+            layout.push(ParamEntry { name: name.into(), offset: *off, shape });
+            *off += numel;
+        };
+        push(&mut layout, "emb", vec![16, 8], &mut off);
+        push(&mut layout, "pos", vec![4, 8], &mut off);
+        let mut block_flat = 0;
+        for l in 0..2 {
+            let before = off;
+            push(&mut layout, &format!("blocks.{l}.ln1"), vec![8], &mut off);
+            for w in ["wq", "wk", "wv", "wo"] {
+                push(&mut layout, &format!("blocks.{l}.{w}"), vec![8, 8], &mut off);
+            }
+            push(&mut layout, &format!("blocks.{l}.ln2"), vec![8], &mut off);
+            push(&mut layout, &format!("blocks.{l}.w1"), vec![16, 8], &mut off);
+            push(&mut layout, &format!("blocks.{l}.w2"), vec![8, 16], &mut off);
+            block_flat = off - before;
+        }
+        push(&mut layout, "ln_f", vec![8], &mut off);
+        ModelManifest { config: cfg, flat_size: off, block_flat_size: block_flat, layout }
+    }
+
+    #[test]
+    fn init_layout_and_access() {
+        let mm = fake_manifest();
+        let st = ModelState::init(&mm, 42);
+        assert_eq!(st.flat.len(), mm.flat_size);
+        // norms at 1
+        let e = st.entry("blocks.0.ln1").unwrap();
+        assert!(st.flat[e.offset..e.offset + 8].iter().all(|&v| v == 1.0));
+        // matrices non-trivial
+        let wq = st.get_mat("blocks.0.wq").unwrap();
+        assert!(wq.frob_norm_sq() > 0.0);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mm = fake_manifest();
+        let mut st = ModelState::init(&mm, 1);
+        let mut w = st.get_mat("blocks.1.w1").unwrap();
+        w.data[3] = 99.0;
+        st.set_mat("blocks.1.w1", &w).unwrap();
+        assert_eq!(st.get_mat("blocks.1.w1").unwrap().data[3], 99.0);
+        // wrong shape rejected
+        let bad = Mat::zeros(3, 3);
+        assert!(st.set_mat("blocks.1.w1", &bad).is_err());
+    }
+
+    #[test]
+    fn block_slice_contains_block_params() {
+        let mm = fake_manifest();
+        let st = ModelState::init(&mm, 2);
+        let b1 = st.block_slice(1).unwrap();
+        assert_eq!(b1.len(), mm.block_flat_size);
+        // w2 of block 1 is at the end of the slice
+        let e = st.entry("blocks.1.w2").unwrap();
+        let rel = e.offset - st.entry("blocks.1.ln1").unwrap().offset;
+        assert_eq!(&b1[rel..rel + 4], &st.flat[e.offset..e.offset + 4]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let mm = fake_manifest();
+        let mut st = ModelState::init(&mm, 3);
+        st.flat[7] = -1.25;
+        let dir = std::env::temp_dir().join("thanos_test_ckpt");
+        let path = dir.join("m.thnck");
+        st.save(&path).unwrap();
+        let back = ModelState::load(&path).unwrap();
+        assert_eq!(back.flat, st.flat);
+        assert_eq!(back.config, st.config);
+        assert_eq!(back.block_flat_size, st.block_flat_size);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sparsity_accounting() {
+        let mm = fake_manifest();
+        let mut st = ModelState::init(&mm, 4);
+        assert_eq!(st.prunable_sparsity(), 0.0);
+        let mut w = st.get_mat("blocks.0.wq").unwrap();
+        w.data.iter_mut().for_each(|v| *v = 0.0);
+        st.set_mat("blocks.0.wq", &w).unwrap();
+        let total: usize = (0..2)
+            .flat_map(|l| st.prunable_layers(l))
+            .map(|n| st.entry(&n).unwrap().numel())
+            .sum();
+        assert!((st.prunable_sparsity() - 64.0 / total as f64).abs() < 1e-12);
+    }
+}

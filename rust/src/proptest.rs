@@ -1,0 +1,124 @@
+//! Mini property-testing framework (no `proptest` crate offline).
+//!
+//! Provides seeded generators and a `check` runner that reports the
+//! failing case's seed + a human description so failures reproduce
+//! deterministically. Used by the pruning test-suite for invariants
+//! like "every method hits the requested sparsity exactly" and "Thanos
+//! never increases reconstruction loss vs. no-update masking".
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 32, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs. `gen` receives a fresh
+/// forked RNG per case; `prop` returns `Err(description)` on violation.
+/// Panics with the case index + seed on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    cfg: &Config,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let mut r = root.fork();
+        let input = generate(&mut r);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed (case {case}, root seed {:#x}): {msg}\ninput: {input:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Generator helpers ------------------------------------------------------
+
+/// Random dims in `[lo, hi]`.
+pub fn dim(r: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + r.below(hi - lo + 1)
+}
+
+/// Random dense matrix with N(0,1) entries.
+pub fn mat(r: &mut Rng, rows: usize, cols: usize) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    r.fill_normal(&mut m.data, 1.0);
+    m
+}
+
+/// Random matrix with heavy-tailed entries (mixture of N(0,1) and
+/// N(0,10) outliers) — models real LLM weight/activation statistics
+/// where outlier channels drive the pruning-method gap.
+pub fn mat_heavy(r: &mut Rng, rows: usize, cols: usize, outlier_frac: f64) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    for v in m.data.iter_mut() {
+        let std = if r.uniform() < outlier_frac { 10.0 } else { 1.0 };
+        *v = r.normal_f32(0.0, std);
+    }
+    m
+}
+
+/// Random sparsity ratio in `[0.1, 0.9]` quantized to 1/16ths so exact
+/// counts are reproducible in failure messages.
+pub fn sparsity(r: &mut Rng) -> f64 {
+    let q = 2 + r.below(13); // 2..=14 of 16
+    q as f64 / 16.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(
+            &Config { cases: 10, seed: 1 },
+            |r| dim(r, 1, 5),
+            |&n| {
+                if n >= 1 && n <= 5 {
+                    Ok(())
+                } else {
+                    Err(format!("dim out of range: {n}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_reports_failures() {
+        check(
+            &Config { cases: 10, seed: 2 },
+            |r| dim(r, 1, 5),
+            |&n| if n < 3 { Ok(()) } else { Err("too big".into()) },
+        );
+    }
+
+    #[test]
+    fn generators_are_reproducible() {
+        let mk = || {
+            let mut root = Rng::new(77);
+            let mut r = root.fork();
+            mat(&mut r, 4, 4).data
+        };
+        assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn heavy_tail_has_outliers() {
+        let mut r = Rng::new(5);
+        let m = mat_heavy(&mut r, 40, 40, 0.05);
+        let big = m.data.iter().filter(|v| v.abs() > 5.0).count();
+        assert!(big > 10, "expected heavy tail, got {big} large entries");
+    }
+}

@@ -1,0 +1,114 @@
+//! Magnitude pruning (Han et al., 2015) — the data-free baseline
+//! (paper Alg. 4 + structured/semi-structured extensions used in
+//! Tables 2–3).
+
+use crate::linalg::Mat;
+use crate::pruning::metric::{nm_mask, smallest_r_mask};
+use crate::pruning::Pruned;
+
+fn abs_metric(w: &Mat) -> Vec<f64> {
+    w.data.iter().map(|&v| v.abs() as f64).collect()
+}
+
+/// Remove the ⌊p·c·b⌋ smallest-|w| weights anywhere in the layer.
+pub fn unstructured(w: &Mat, p: f64) -> Pruned {
+    assert!((0.0..1.0).contains(&p));
+    let r = (p * (w.rows * w.cols) as f64).floor() as usize;
+    let mask = smallest_r_mask(&abs_metric(w), r);
+    apply(w, &mask)
+}
+
+/// n:m magnitude: n smallest-|w| per group of m consecutive weights.
+pub fn semi_structured(w: &Mat, n: usize, m: usize) -> Pruned {
+    let mask = nm_mask(&abs_metric(w), w.rows, w.cols, n, m);
+    apply(w, &mask)
+}
+
+/// Structured magnitude: remove the ⌈p·b⌉ columns with the smallest
+/// ℓ² norm (data-free column saliency).
+pub fn structured(w: &Mat, p: f64) -> Pruned {
+    assert!((0.0..1.0).contains(&p));
+    let s = ((p * w.cols as f64).ceil() as usize).min(w.cols);
+    let col_norms: Vec<f64> = (0..w.cols)
+        .map(|j| (0..w.rows).map(|i| (w.at(i, j) as f64).powi(2)).sum())
+        .collect();
+    let col_mask = smallest_r_mask(&col_norms, s);
+    let mut mask = vec![false; w.rows * w.cols];
+    for i in 0..w.rows {
+        for j in 0..w.cols {
+            mask[i * w.cols + j] = col_mask[j];
+        }
+    }
+    apply(w, &mask)
+}
+
+fn apply(w: &Mat, mask: &[bool]) -> Pruned {
+    let mut out = w.clone();
+    for (v, &m) in out.data.iter_mut().zip(mask) {
+        if m {
+            *v = 0.0;
+        }
+    }
+    Pruned { w: out, mask: mask.to_vec() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::testutil::random_w;
+
+    #[test]
+    fn unstructured_hits_exact_sparsity() {
+        let w = random_w(16, 24, 1);
+        for &p in &[0.1, 0.25, 0.5, 0.75] {
+            let pruned = unstructured(&w, p);
+            let want = (p * (16.0 * 24.0)).floor() as usize;
+            let zeros = pruned.w.data.iter().filter(|&&v| v == 0.0).count();
+            assert_eq!(zeros, want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn unstructured_removes_smallest() {
+        let w = Mat::from_vec(1, 4, vec![0.1, -5.0, 0.2, 3.0]);
+        let pruned = unstructured(&w, 0.5);
+        assert_eq!(pruned.w.data, vec![0.0, -5.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn semi_structured_format_valid() {
+        let w = random_w(8, 16, 2);
+        let pruned = semi_structured(&w, 2, 4);
+        for i in 0..8 {
+            for g in (0..16).step_by(4) {
+                let zeros = pruned.w.row(i)[g..g + 4].iter().filter(|&&v| v == 0.0).count();
+                assert_eq!(zeros, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn structured_removes_whole_columns() {
+        let w = random_w(6, 10, 3);
+        let pruned = structured(&w, 0.3);
+        let mut removed_cols = 0;
+        for j in 0..10 {
+            let all_zero = (0..6).all(|i| pruned.w.at(i, j) == 0.0);
+            let none_zero = (0..6).all(|i| pruned.w.at(i, j) != 0.0);
+            assert!(all_zero || none_zero, "column {j} partially pruned");
+            if all_zero {
+                removed_cols += 1;
+            }
+        }
+        assert_eq!(removed_cols, 3); // ceil(0.3*10)
+    }
+
+    #[test]
+    fn mask_matches_zeros() {
+        let w = random_w(4, 6, 4);
+        let pruned = unstructured(&w, 0.5);
+        for (k, &m) in pruned.mask.iter().enumerate() {
+            assert_eq!(m, pruned.w.data[k] == 0.0);
+        }
+    }
+}

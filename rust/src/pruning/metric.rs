@@ -1,0 +1,178 @@
+//! Mask-selection primitives: the `ψ_X` mapping (eq. 11) and the `φ`
+//! index extraction (eq. 12), plus the top-r selection machinery they
+//! share.
+
+use crate::linalg::Mat;
+use crate::pruning::CalibStats;
+
+/// Boolean mask over a `c×rest` metric matrix: true at the positions of
+/// the `r` smallest metric values (the `ψ` of eq. 11, applied to an
+/// arbitrary score matrix). Ties are broken by index for determinism.
+pub fn smallest_r_mask(metric: &[f64], r: usize) -> Vec<bool> {
+    let n = metric.len();
+    let r = r.min(n);
+    let mut mask = vec![false; n];
+    if r == 0 {
+        return mask;
+    }
+    if r == n {
+        mask.iter_mut().for_each(|m| *m = true);
+        return mask;
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.select_nth_unstable_by(r - 1, |&a, &b| {
+        metric[a as usize]
+            .partial_cmp(&metric[b as usize])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    for &i in &idx[..r] {
+        mask[i as usize] = true;
+    }
+    mask
+}
+
+/// The Wanda/OBD saliency `|W_ij|·‖X_{j:}‖₂` over a column window
+/// `[c0, c1)` of `w`, flattened row-major into a `c×(c1-c0)` score
+/// buffer. `xnorm_sq[j]` indexes the *original* column space.
+pub fn wanda_metric_window(w: &Mat, stats: &CalibStats, c0: usize, c1: usize) -> Vec<f64> {
+    assert!(c0 <= c1 && c1 <= w.cols);
+    let width = c1 - c0;
+    let mut out = vec![0.0f64; w.rows * width];
+    for i in 0..w.rows {
+        let row = w.row(i);
+        let dst = &mut out[i * width..(i + 1) * width];
+        for (k, j) in (c0..c1).enumerate() {
+            dst[k] = (row[j].abs() as f64) * stats.xnorm_sq[j].sqrt();
+        }
+    }
+    out
+}
+
+/// `ψ_X(W_window, r)` — the global-residual-mask construction of
+/// Alg. 1 line 6: mask of the `r` smallest Wanda-metric entries over
+/// the residual window `[c0, b)`, returned as a `c×(b-c0)` row-major
+/// boolean buffer.
+pub fn psi_mask(w: &Mat, stats: &CalibStats, c0: usize, r: usize) -> Vec<bool> {
+    let metric = wanda_metric_window(w, stats, c0, w.cols);
+    smallest_r_mask(&metric, r)
+}
+
+/// `φ(mask_row)` — indices of the set entries (eq. 12). Offsets are
+/// relative to the window the mask was built over.
+pub fn phi(mask_row: &[bool]) -> Vec<usize> {
+    mask_row
+        .iter()
+        .enumerate()
+        .filter_map(|(i, &m)| if m { Some(i) } else { None })
+        .collect()
+}
+
+/// Per-row top-k-smallest selection within each row of a score matrix
+/// (Wanda's row-sparsity constraint, Alg. 6 line 4). Returns the same
+/// layout of booleans.
+pub fn per_row_smallest(metric: &[f64], rows: usize, cols: usize, k: usize) -> Vec<bool> {
+    assert_eq!(metric.len(), rows * cols);
+    let mut mask = vec![false; rows * cols];
+    for i in 0..rows {
+        let row = &metric[i * cols..(i + 1) * cols];
+        let rm = smallest_r_mask(row, k);
+        mask[i * cols..(i + 1) * cols].copy_from_slice(&rm);
+    }
+    mask
+}
+
+/// Per-group n-smallest within every group of `m` consecutive entries
+/// of each row — the n:m mask (Alg. 8 line 10). `cols % m == 0`.
+pub fn nm_mask(metric: &[f64], rows: usize, cols: usize, n: usize, m: usize) -> Vec<bool> {
+    assert_eq!(cols % m, 0, "n:m needs cols divisible by m");
+    assert!(n <= m);
+    let mut mask = vec![false; rows * cols];
+    for i in 0..rows {
+        for g in (0..cols).step_by(m) {
+            let grp = &metric[i * cols + g..i * cols + g + m];
+            let gm = smallest_r_mask(grp, n);
+            mask[i * cols + g..i * cols + g + m].copy_from_slice(&gm);
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::testutil;
+
+    #[test]
+    fn smallest_r_mask_selects_smallest() {
+        let metric = vec![5.0, 1.0, 4.0, 0.5, 3.0];
+        let m = smallest_r_mask(&metric, 2);
+        assert_eq!(m, vec![false, true, false, true, false]);
+        assert_eq!(smallest_r_mask(&metric, 0), vec![false; 5]);
+        assert_eq!(smallest_r_mask(&metric, 5), vec![true; 5]);
+        // r beyond len saturates
+        assert_eq!(smallest_r_mask(&metric, 9), vec![true; 5]);
+    }
+
+    #[test]
+    fn smallest_r_mask_tie_break_deterministic() {
+        let metric = vec![1.0; 6];
+        let m = smallest_r_mask(&metric, 3);
+        assert_eq!(m.iter().filter(|&&x| x).count(), 3);
+        let m2 = smallest_r_mask(&metric, 3);
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn phi_matches_paper_examples() {
+        // paper §4.5: φ((1,0,0,1,1)) = (1,4,5) in 1-based = (0,3,4) 0-based
+        assert_eq!(phi(&[true, false, false, true, true]), vec![0, 3, 4]);
+        assert_eq!(phi(&[false, false, true, true, false]), vec![2, 3]);
+        assert_eq!(phi(&[false; 4]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn wanda_metric_window_matches_definition() {
+        let (w, stats, _) = testutil::setup(3, 6, 12, 2);
+        let metric = wanda_metric_window(&w, &stats, 2, 5);
+        for i in 0..3 {
+            for (k, j) in (2..5).enumerate() {
+                let expect = (w.at(i, j).abs() as f64) * stats.xnorm_sq[j].sqrt();
+                assert!((metric[i * 3 + k] - expect).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn psi_mask_counts() {
+        let (w, stats, _) = testutil::setup(4, 8, 16, 3);
+        let mask = psi_mask(&w, &stats, 0, 13);
+        assert_eq!(mask.iter().filter(|&&m| m).count(), 13);
+        let mask = psi_mask(&w, &stats, 3, 7);
+        assert_eq!(mask.len(), 4 * 5);
+        assert_eq!(mask.iter().filter(|&&m| m).count(), 7);
+    }
+
+    #[test]
+    fn per_row_smallest_counts_per_row() {
+        let metric: Vec<f64> = (0..12).map(|i| (i % 4) as f64).collect();
+        let mask = per_row_smallest(&metric, 3, 4, 2);
+        for i in 0..3 {
+            let cnt = mask[i * 4..(i + 1) * 4].iter().filter(|&&m| m).count();
+            assert_eq!(cnt, 2);
+        }
+    }
+
+    #[test]
+    fn nm_mask_exactly_n_per_group() {
+        let (w, stats, _) = testutil::setup(5, 8, 16, 4);
+        let metric = wanda_metric_window(&w, &stats, 0, 8);
+        let mask = nm_mask(&metric, 5, 8, 2, 4);
+        for i in 0..5 {
+            for g in (0..8).step_by(4) {
+                let cnt = mask[i * 8 + g..i * 8 + g + 4].iter().filter(|&&m| m).count();
+                assert_eq!(cnt, 2, "row {i} group {g}");
+            }
+        }
+    }
+}

@@ -1,0 +1,312 @@
+//! The paper's pruning algorithms and every baseline, pure Rust.
+//!
+//! | method | paper ref | module |
+//! |---|---|---|
+//! | Magnitude | Alg. 4 (Han et al. 2015) | [`magnitude`] |
+//! | Wanda | Alg. 6 (Sun et al. 2023) | [`wanda`] |
+//! | SparseGPT | Alg. 5 (Frantar & Alistarh 2023) | [`sparsegpt`] |
+//! | Thanos unstructured | Alg. 1 / Alg. 9 | [`thanos`] |
+//! | Thanos structured + outlier rows | Alg. 2 / Alg. 7 | [`thanos`] |
+//! | Thanos semi-structured n:m | Alg. 8 | [`thanos`] |
+//!
+//! Every method consumes the same [`CalibStats`] (accumulated Hessian
+//! `H = (2/d)·Σ XˡXˡᵀ` and calibration row norms `‖X_{j:}‖₂²`), so the
+//! coordinator computes calibration statistics once per layer and fans
+//! out to whichever method the run requests.
+//!
+//! This pure-Rust path is (a) the baseline implementations the paper
+//! compares against, (b) the oracle the AOT (JAX/Pallas → HLO) path is
+//! cross-validated against, and (c) the engine of the Fig. 9
+//! pruning-time benchmark where per-shape AOT artifacts would explode.
+
+pub mod magnitude;
+pub mod metric;
+pub mod nm;
+pub mod obs;
+pub mod sparsegpt;
+pub mod thanos;
+pub mod wanda;
+
+use crate::linalg::chol::damp_hessian;
+use crate::linalg::gemm::xxt_f64;
+use crate::linalg::{row_norms_sq, Mat, MatF64};
+
+/// Default Hessian damping (fraction of mean diagonal), the standard
+/// `percdamp` of the SparseGPT reference implementation.
+pub const PERCDAMP: f64 = 0.01;
+
+/// Calibration statistics for one linear layer with input dim `b`:
+/// everything any method needs, accumulated over calibration batches.
+#[derive(Clone, Debug)]
+pub struct CalibStats {
+    /// running sum of `2·XXᵀ` over calibration chunks (undamped)
+    pub h_sum: MatF64,
+    /// running sum of squared row norms of X (`‖X_{j:}‖₂²` over the
+    /// whole calibration set — the Wanda/OBD metric term)
+    pub xnorm_sq: Vec<f64>,
+    /// number of accumulated chunks (columns of X seen, for averaging)
+    pub n_cols: usize,
+}
+
+impl CalibStats {
+    pub fn new(b: usize) -> Self {
+        CalibStats { h_sum: MatF64::zeros(b, b), xnorm_sq: vec![0.0; b], n_cols: 0 }
+    }
+
+    /// Accumulate one calibration chunk `X ∈ ℝ^{b×a}`.
+    pub fn accumulate(&mut self, x: &Mat) {
+        assert_eq!(x.rows, self.h_sum.rows, "input dim mismatch");
+        let g = xxt_f64(x);
+        for (acc, v) in self.h_sum.data.iter_mut().zip(&g.data) {
+            *acc += 2.0 * v;
+        }
+        for (acc, v) in self.xnorm_sq.iter_mut().zip(row_norms_sq(x)) {
+            *acc += v;
+        }
+        self.n_cols += x.cols;
+    }
+
+    /// Convenience constructor from a single calibration matrix.
+    pub fn from_x(x: &Mat) -> Self {
+        let mut s = CalibStats::new(x.rows);
+        s.accumulate(x);
+        s
+    }
+
+    pub fn b(&self) -> usize {
+        self.h_sum.rows
+    }
+
+    /// Damped Hessian (average over accumulated columns, then
+    /// `λ = percdamp·mean(diag)` added). Methods clone from here.
+    pub fn hessian(&self, percdamp: f64) -> MatF64 {
+        let mut h = self.h_sum.clone();
+        if self.n_cols > 0 {
+            let inv = 1.0 / self.n_cols as f64;
+            for v in h.data.iter_mut() {
+                *v *= inv;
+            }
+        }
+        damp_hessian(&mut h, percdamp);
+        h
+    }
+
+    /// `‖X_{j:}‖₂` (not squared) — the metric term as the paper writes it.
+    pub fn xnorm(&self, j: usize) -> f64 {
+        self.xnorm_sq[j].sqrt()
+    }
+}
+
+/// Sparsity-pattern request shared by all methods.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Pattern {
+    /// remove ⌊p·c·b⌋ weights anywhere
+    Unstructured { p: f64 },
+    /// remove whole columns for total sparsity `p`, keeping the `alpha`
+    /// fraction of highest-loss rows untouched (paper §4.7.1)
+    Structured { p: f64, alpha: f64 },
+    /// n of every m consecutive weights per row are zero; `alpha`
+    /// outlier rows are skipped (sparsity drops accordingly — §5.1)
+    SemiStructured { n: usize, m: usize, alpha: f64 },
+}
+
+impl Pattern {
+    pub fn label(&self) -> String {
+        match self {
+            Pattern::Unstructured { p } => format!("unstructured {:.0}%", p * 100.0),
+            Pattern::Structured { p, alpha } => {
+                format!("structured {:.0}% (α={alpha})", p * 100.0)
+            }
+            Pattern::SemiStructured { n, m, alpha } => format!("{n}:{m} (α={alpha})"),
+        }
+    }
+}
+
+/// Which pruning algorithm to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Magnitude,
+    Wanda,
+    SparseGpt,
+    Thanos,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Magnitude => "Magnitude",
+            Method::Wanda => "Wanda",
+            Method::SparseGpt => "SparseGPT",
+            Method::Thanos => "Thanos",
+        }
+    }
+
+    pub const ALL: [Method; 4] =
+        [Method::Magnitude, Method::Wanda, Method::SparseGpt, Method::Thanos];
+}
+
+/// Hyper-parameters that only some methods read.
+#[derive(Clone, Copy, Debug)]
+pub struct PruneOpts {
+    /// Thanos block size B (Alg. 1); also SparseGPT's mask block Bs
+    pub block_size: usize,
+    /// Hessian damping
+    pub percdamp: f64,
+    /// Recompute + invert the residual Hessian per block exactly as
+    /// Alg. 1 line 17 prescribes — the paper's O(b⁴/B) complexity
+    /// (Table 1). Off by default: the suffix-factor identity
+    /// `(H[j:, j:])⁻¹ = U[j:, j:]ᵀ U[j:, j:]` (with `H⁻¹ = UᵀU`)
+    /// yields bit-equal math from ONE O(b³) factorization per layer
+    /// (see EXPERIMENTS.md §Perf-L3; equality pinned by tests).
+    pub paper_faithful_inverse: bool,
+}
+
+impl Default for PruneOpts {
+    fn default() -> Self {
+        PruneOpts { block_size: 128, percdamp: PERCDAMP, paper_faithful_inverse: false }
+    }
+}
+
+/// Result of pruning one layer.
+#[derive(Clone, Debug)]
+pub struct Pruned {
+    pub w: Mat,
+    /// per-entry removal mask (true = weight was removed)
+    pub mask: Vec<bool>,
+}
+
+impl Pruned {
+    pub fn from_w(w: Mat, original: &Mat) -> Pruned {
+        let mask = w
+            .data
+            .iter()
+            .zip(&original.data)
+            .map(|(&new, &old)| new == 0.0 && old != 0.0)
+            .collect();
+        Pruned { w, mask }
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        self.w.sparsity()
+    }
+}
+
+/// Dispatch: prune `w` with `method` under `pattern`.
+pub fn prune(
+    method: Method,
+    w: &Mat,
+    stats: &CalibStats,
+    pattern: Pattern,
+    opts: &PruneOpts,
+) -> anyhow::Result<Pruned> {
+    match (method, pattern) {
+        (Method::Magnitude, Pattern::Unstructured { p }) => Ok(magnitude::unstructured(w, p)),
+        (Method::Magnitude, Pattern::SemiStructured { n, m, .. }) => {
+            Ok(magnitude::semi_structured(w, n, m))
+        }
+        (Method::Magnitude, Pattern::Structured { p, .. }) => Ok(magnitude::structured(w, p)),
+        (Method::Wanda, Pattern::Unstructured { p }) => Ok(wanda::unstructured(w, stats, p)),
+        (Method::Wanda, Pattern::SemiStructured { n, m, .. }) => {
+            Ok(wanda::semi_structured(w, stats, n, m))
+        }
+        (Method::Wanda, Pattern::Structured { p, .. }) => Ok(wanda::structured(w, stats, p)),
+        (Method::SparseGpt, Pattern::Unstructured { p }) => {
+            sparsegpt::unstructured(w, stats, p, opts)
+        }
+        (Method::SparseGpt, Pattern::SemiStructured { n, m, .. }) => {
+            sparsegpt::semi_structured(w, stats, n, m, opts)
+        }
+        (Method::SparseGpt, Pattern::Structured { p, .. }) => {
+            sparsegpt::structured(w, stats, p, opts)
+        }
+        (Method::Thanos, Pattern::Unstructured { p }) => thanos::unstructured(w, stats, p, opts),
+        (Method::Thanos, Pattern::SemiStructured { n, m, alpha }) => {
+            thanos::semi_structured(w, stats, n, m, alpha, opts)
+        }
+        (Method::Thanos, Pattern::Structured { p, alpha }) => {
+            thanos::structured(w, stats, p, alpha, opts)
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// A correlated calibration matrix: mixes a few latent factors so
+    /// H is anisotropic (the regime where update-based methods win).
+    pub fn correlated_x(b: usize, a: usize, seed: u64) -> Mat {
+        let mut r = Rng::new(seed);
+        let k = (b / 4).max(2);
+        let factors = Mat::from_fn(k, a, |_, _| r.normal_f32(0.0, 1.0));
+        let loading = Mat::from_fn(b, k, |_, _| r.normal_f32(0.0, 1.0));
+        let mut x = crate::linalg::gemm::matmul(&loading, &factors);
+        for v in x.data.iter_mut() {
+            *v += r.normal_f32(0.0, 0.3);
+        }
+        x
+    }
+
+    pub fn random_w(c: usize, b: usize, seed: u64) -> Mat {
+        let mut r = Rng::new(seed);
+        Mat::from_fn(c, b, |_, _| {
+            // avoid exact zeros so sparsity accounting is unambiguous
+            let v = r.normal_f32(0.0, 1.0);
+            if v == 0.0 {
+                1e-3
+            } else {
+                v
+            }
+        })
+    }
+
+    pub fn setup(c: usize, b: usize, a: usize, seed: u64) -> (Mat, CalibStats, Mat) {
+        let w = random_w(c, b, seed);
+        let x = correlated_x(b, a, seed ^ 0xDEAD);
+        let stats = CalibStats::from_x(&x);
+        (w, stats, x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calib_stats_accumulation_matches_concat() {
+        use crate::linalg::Mat;
+        use crate::rng::Rng;
+        let mut r = Rng::new(3);
+        let x1 = Mat::from_fn(6, 9, |_, _| r.normal_f32(0.0, 1.0));
+        let x2 = Mat::from_fn(6, 5, |_, _| r.normal_f32(0.0, 1.0));
+        // concatenated
+        let mut xc = Mat::zeros(6, 14);
+        for i in 0..6 {
+            xc.row_mut(i)[..9].copy_from_slice(x1.row(i));
+            xc.row_mut(i)[9..].copy_from_slice(x2.row(i));
+        }
+        let mut s_inc = CalibStats::new(6);
+        s_inc.accumulate(&x1);
+        s_inc.accumulate(&x2);
+        let s_all = CalibStats::from_x(&xc);
+        assert!(s_inc.h_sum.max_abs_diff(&s_all.h_sum) < 1e-9);
+        for j in 0..6 {
+            assert!((s_inc.xnorm_sq[j] - s_all.xnorm_sq[j]).abs() < 1e-9);
+        }
+        assert_eq!(s_inc.n_cols, 14);
+    }
+
+    #[test]
+    fn hessian_is_damped_and_pd() {
+        let (_, stats, _) = testutil::setup(4, 8, 20, 1);
+        let h = stats.hessian(PERCDAMP);
+        assert!(crate::linalg::chol::cholesky(&h).is_ok());
+    }
+
+    #[test]
+    fn pattern_labels() {
+        assert_eq!(Pattern::Unstructured { p: 0.5 }.label(), "unstructured 50%");
+        assert_eq!(Pattern::SemiStructured { n: 2, m: 4, alpha: 0.0 }.label(), "2:4 (α=0)");
+    }
+}

@@ -1,0 +1,119 @@
+//! n:m sparse-format utilities: validation, storage accounting, and a
+//! sparse-matmul cost model standing in for the Ampere 2:4 hardware
+//! path (see DESIGN.md §Substitutions — no sparse tensor cores exist
+//! on this testbed, so the *format* is verified exactly and the
+//! speedup is modeled).
+
+use crate::linalg::Mat;
+
+/// Check that every group of `m` consecutive weights in every row
+/// contains at least `n` zeros. `skip_rows` lists rows excluded from
+/// the constraint (outlier rows under α > 0).
+pub fn validate(w: &Mat, n: usize, m: usize, skip_rows: &[usize]) -> Result<(), String> {
+    if w.cols % m != 0 {
+        return Err(format!("cols {} not divisible by m={m}", w.cols));
+    }
+    let skip: std::collections::HashSet<usize> = skip_rows.iter().copied().collect();
+    for i in 0..w.rows {
+        if skip.contains(&i) {
+            continue;
+        }
+        for g in (0..w.cols).step_by(m) {
+            let zeros = w.row(i)[g..g + m].iter().filter(|&&v| v == 0.0).count();
+            if zeros < n {
+                return Err(format!(
+                    "row {i} group {g}: {zeros} zeros, need ≥ {n} for {n}:{m}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Storage of an n:m compressed layer in bytes: kept values (f32/f16
+/// width configurable) + per-group index metadata (2-bit indices for
+/// 2:4, ⌈log2(m choose n)⌉ in general — we use the NVIDIA layout of
+/// 2 bits per kept weight for 2:4 and 3 bits for 4:8).
+pub fn compressed_bytes(c: usize, b: usize, n: usize, m: usize, bytes_per_weight: usize) -> usize {
+    let groups = c * b / m;
+    let kept = groups * (m - n);
+    let index_bits_per_kept = match (n, m) {
+        (2, 4) => 2,
+        (4, 8) => 3,
+        _ => (usize::BITS - (m - 1).leading_zeros()) as usize,
+    };
+    kept * bytes_per_weight + (kept * index_bits_per_kept).div_ceil(8)
+}
+
+/// Dense storage in bytes.
+pub fn dense_bytes(c: usize, b: usize, bytes_per_weight: usize) -> usize {
+    c * b * bytes_per_weight
+}
+
+/// Modeled matmul speedup of an n:m layer vs dense on sparse tensor
+/// cores. NVIDIA's 2:4 path doubles MAC throughput (NVIDIA Ampere
+/// whitepaper, 2020); we model throughput gain as m/(m−n) discounted
+/// by a fixed metadata/issue overhead.
+pub fn modeled_speedup(n: usize, m: usize) -> f64 {
+    const OVERHEAD: f64 = 0.12; // decode + operand-select overhead
+    let ideal = m as f64 / (m - n) as f64;
+    1.0 + (ideal - 1.0) * (1.0 - OVERHEAD)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::testutil::setup;
+
+    #[test]
+    fn validate_accepts_valid_format() {
+        let (w, stats, _) = setup(8, 16, 32, 40);
+        let p = crate::pruning::thanos::semi_structured(
+            &w,
+            &stats,
+            2,
+            4,
+            0.0,
+            &crate::pruning::PruneOpts::default(),
+        )
+        .unwrap();
+        assert!(validate(&p.w, 2, 4, &[]).is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_dense_matrix() {
+        let (w, _, _) = setup(4, 8, 16, 41);
+        assert!(validate(&w, 2, 4, &[]).is_err());
+    }
+
+    #[test]
+    fn validate_respects_skip_rows() {
+        let (w, _, _) = setup(4, 8, 16, 42);
+        let mut wp = w.clone();
+        // make rows 1..4 valid 2:4, leave row 0 dense
+        for i in 1..4 {
+            for g in (0..8).step_by(4) {
+                wp.row_mut(i)[g] = 0.0;
+                wp.row_mut(i)[g + 1] = 0.0;
+            }
+        }
+        assert!(validate(&wp, 2, 4, &[]).is_err());
+        assert!(validate(&wp, 2, 4, &[0]).is_ok());
+    }
+
+    #[test]
+    fn compression_ratio_sane() {
+        // 2:4 with f16 weights: 50% values + 2-bit indices → ~56% of dense f16
+        let dense = dense_bytes(1024, 1024, 2);
+        let comp = compressed_bytes(1024, 1024, 2, 4, 2);
+        let ratio = comp as f64 / dense as f64;
+        assert!(ratio > 0.5 && ratio < 0.65, "ratio {ratio}");
+    }
+
+    #[test]
+    fn speedup_monotone_in_sparsity() {
+        assert!(modeled_speedup(2, 4) > 1.5);
+        assert!(modeled_speedup(2, 4) < 2.0);
+        assert!(modeled_speedup(4, 8) > modeled_speedup(2, 4) * 0.99 - 0.01);
+    }
+}

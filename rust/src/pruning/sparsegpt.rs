@@ -1,0 +1,303 @@
+//! SparseGPT (Frantar & Alistarh, 2023) — column-sequential OBS pruning
+//! (paper Alg. 5, App. F.3), the strongest prior method Thanos is
+//! benchmarked against.
+//!
+//! Implementation follows the reference trick: take the upper Cholesky
+//! factor `U` of `H⁻¹` (`H⁻¹ = UᵀU`). After eliminating columns
+//! `< j`, the downdated inverse restricted to the remaining columns is
+//! `U[j:, j:]ᵀ·U[j:, j:]`, so row `j` of `U` directly provides both the
+//! OBS metric denominator (`U_jj²  = [H⁻¹_cur]_jj`) and the update
+//! direction (`U[j, j:]/U_jj = H⁻¹_cur[j, j:]/[H⁻¹_cur]_jj`) — no
+//! per-column Hessian downdates needed, which is what makes the method
+//! O(b³) instead of O(b⁴).
+
+use crate::linalg::chol::inverse_factor_upper;
+use crate::linalg::gemm::num_threads;
+use crate::linalg::{Mat, MatF64};
+use crate::pruning::metric::smallest_r_mask;
+use crate::pruning::{CalibStats, PruneOpts, Pruned};
+use anyhow::Result;
+
+/// Upper Cholesky factor `U` (row-major) with `H⁻¹ = UᵀU`, via the
+/// reversal-trick factorization (no full inverse is ever formed —
+/// §Perf-L3).
+fn inverse_cholesky_upper(stats: &CalibStats, percdamp: f64) -> Result<MatF64> {
+    let h = stats.hessian(percdamp);
+    inverse_factor_upper(&h)
+}
+
+/// Unstructured SparseGPT at sparsity `p`, adaptive mask per column
+/// block of `opts.block_size` (the `Bs` of Alg. 5).
+pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Result<Pruned> {
+    assert!((0.0..1.0).contains(&p));
+    let u = inverse_cholesky_upper(stats, opts.percdamp)?;
+    let (c, b) = (w.rows, w.cols);
+    let bs = opts.block_size.clamp(1, b);
+    let mut wk = w.clone();
+    let mut mask = vec![false; c * b];
+    let mut j1 = 0;
+    while j1 < b {
+        let j2 = (j1 + bs).min(b);
+        let width = j2 - j1;
+        // block mask: r smallest of w²/U_jj² within the c×width block
+        let mut metric = vec![0.0f64; c * width];
+        for i in 0..c {
+            let row = wk.row(i);
+            for (k, j) in (j1..j2).enumerate() {
+                let d = u.at(j, j);
+                metric[i * width + k] = (row[j] as f64).powi(2) / (d * d);
+            }
+        }
+        let r = (p * (c * width) as f64).floor() as usize;
+        let bm = smallest_r_mask(&metric, r);
+        for i in 0..c {
+            for k in 0..width {
+                mask[i * b + j1 + k] = bm[i * width + k];
+            }
+        }
+        update_rows(&mut wk, &mask, &u, j1, j2);
+        j1 = j2;
+    }
+    Ok(Pruned { w: wk, mask })
+}
+
+/// n:m SparseGPT: the mask for each group of `m` columns is chosen when
+/// the column walk reaches the group (metric uses current weights), so
+/// the adaptive-mask property is preserved (`Bs = m` in Alg. 5).
+pub fn semi_structured(
+    w: &Mat,
+    stats: &CalibStats,
+    n: usize,
+    m: usize,
+    opts: &PruneOpts,
+) -> Result<Pruned> {
+    assert!(w.cols % m == 0, "n:m needs b divisible by m");
+    assert!(n <= m);
+    let u = inverse_cholesky_upper(stats, opts.percdamp)?;
+    let (c, b) = (w.rows, w.cols);
+    let mut wk = w.clone();
+    let mut mask = vec![false; c * b];
+    // per-row independent: parallelize across row bands
+    let u_ref = &u;
+    let nt = num_threads().min(c.max(1));
+    let chunk = c.div_ceil(nt);
+    std::thread::scope(|scope| {
+        let mut wrest = wk.data.as_mut_slice();
+        let mut mrest = mask.as_mut_slice();
+        let mut row0 = 0;
+        while row0 < c {
+            let rows_here = chunk.min(c - row0);
+            let (whead, wtail) = wrest.split_at_mut(rows_here * b);
+            let (mhead, mtail) = mrest.split_at_mut(rows_here * b);
+            wrest = wtail;
+            mrest = mtail;
+            scope.spawn(move || {
+                for ri in 0..rows_here {
+                    let row = &mut whead[ri * b..(ri + 1) * b];
+                    let rmask = &mut mhead[ri * b..(ri + 1) * b];
+                    for g in (0..b).step_by(m) {
+                        // choose n smallest metric within the group
+                        let metric: Vec<f64> = (g..g + m)
+                            .map(|j| {
+                                let d = u_ref.at(j, j);
+                                (row[j] as f64).powi(2) / (d * d)
+                            })
+                            .collect();
+                        let gm = smallest_r_mask(&metric, n);
+                        // apply OBS updates column by column inside the group
+                        for (k, j) in (g..g + m).enumerate() {
+                            if !gm[k] {
+                                continue;
+                            }
+                            rmask[j] = true;
+                            let d = u_ref.at(j, j);
+                            let err = row[j] as f64 / d;
+                            let urow = u_ref.row(j);
+                            for t in j..b {
+                                row[t] -= (err * urow[t]) as f32;
+                            }
+                            row[j] = 0.0;
+                        }
+                    }
+                }
+            });
+            row0 += rows_here;
+        }
+    });
+    Ok(Pruned { w: wk, mask })
+}
+
+/// Structured SparseGPT baseline: the ⌈p·b⌉ columns with the smallest
+/// aggregated OBS saliency `Σ_i w_ij²/[H⁻¹]_jj` are masked up front,
+/// then pruned by the standard left-to-right column walk — each pruned
+/// column's OBS update compensates only into columns *to its right*
+/// (everything left of the walk is frozen, the defining property of
+/// Alg. 5). This is exactly "SparseGPT run with a column-uniform mask";
+/// the cumulative interaction between the removed columns is
+/// approximated by the sum of rightward single-column corrections —
+/// the approximation the paper identifies as Thanos' opening (§5.2,
+/// App. A.1).
+pub fn structured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Result<Pruned> {
+    assert!((0.0..1.0).contains(&p));
+    let (c, b) = (w.rows, w.cols);
+    let s = ((p * b as f64).ceil() as usize).min(b);
+    let h = stats.hessian(opts.percdamp);
+    let u = inverse_factor_upper(&h)?;
+    // diag(H⁻¹)_j = Σ_k U[k, j]² (no full inverse needed)
+    let hinv_diag: Vec<f64> = (0..b)
+        .map(|j| (0..=j).map(|k| u.at(k, j) * u.at(k, j)).sum())
+        .collect();
+    // one-shot column selection by aggregated OBS saliency (eq. 45)
+    let scores: Vec<f64> = (0..b)
+        .map(|j| {
+            let col: f64 = (0..c).map(|i| (w.at(i, j) as f64).powi(2)).sum();
+            col / hinv_diag[j]
+        })
+        .collect();
+    let col_mask = smallest_r_mask(&scores, s);
+    let mut mask = vec![false; c * b];
+    for i in 0..c {
+        for j in 0..b {
+            mask[i * b + j] = col_mask[j];
+        }
+    }
+    let mut wk = w.clone();
+    update_rows(&mut wk, &mask, &u, 0, b);
+    Ok(Pruned { w: wk, mask })
+}
+
+/// Apply per-column OBS updates for the masked entries in `[j1, j2)`,
+/// rows in parallel (rows are independent once `U` is fixed).
+fn update_rows(wk: &mut Mat, mask: &[bool], u: &MatF64, j1: usize, j2: usize) {
+    let (c, b) = (wk.rows, wk.cols);
+    let nt = num_threads().min(c.max(1));
+    let chunk = c.div_ceil(nt);
+    std::thread::scope(|scope| {
+        let mut wrest = wk.data.as_mut_slice();
+        let mut row0 = 0;
+        while row0 < c {
+            let rows_here = chunk.min(c - row0);
+            let (whead, wtail) = wrest.split_at_mut(rows_here * b);
+            wrest = wtail;
+            let mask_ref = &mask[row0 * b..(row0 + rows_here) * b];
+            scope.spawn(move || {
+                for ri in 0..rows_here {
+                    let row = &mut whead[ri * b..(ri + 1) * b];
+                    let rmask = &mask_ref[ri * b..(ri + 1) * b];
+                    for j in j1..j2 {
+                        if !rmask[j] {
+                            continue;
+                        }
+                        let d = u.at(j, j);
+                        let err = row[j] as f64 / d;
+                        let urow = u.row(j);
+                        for t in j..b {
+                            row[t] -= (err * urow[t]) as f32;
+                        }
+                        row[j] = 0.0;
+                    }
+                }
+            });
+            row0 += rows_here;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::recon_loss;
+    use crate::pruning::testutil::setup;
+    use crate::pruning::PruneOpts;
+
+    fn opts() -> PruneOpts {
+        PruneOpts { block_size: 8, percdamp: 0.01, ..Default::default() }
+    }
+
+    #[test]
+    fn unstructured_sparsity_close_to_target() {
+        let (w, stats, _) = setup(16, 32, 64, 20);
+        let pruned = unstructured(&w, &stats, 0.5, &opts()).unwrap();
+        // per-block exact counts; global = sum of per-block floors
+        let zeros = pruned.w.data.iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(zeros, 16 * 32 / 2);
+    }
+
+    #[test]
+    fn beats_wanda_on_reconstruction() {
+        // the weight-update step must reduce loss vs mask-only pruning
+        let mut wins = 0;
+        for seed in 0..5 {
+            let (w, stats, x) = setup(24, 32, 96, 200 + seed);
+            let sg = unstructured(&w, &stats, 0.5, &opts()).unwrap();
+            let wa = crate::pruning::wanda::unstructured(&w, &stats, 0.5);
+            if recon_loss(&sg.w, &w, &x) < recon_loss(&wa.w, &w, &x) {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 4, "sparsegpt won {wins}/5");
+    }
+
+    #[test]
+    fn pruned_positions_are_exactly_zero_and_kept_change() {
+        let (w, stats, _) = setup(8, 16, 32, 21);
+        let pruned = unstructured(&w, &stats, 0.4, &opts()).unwrap();
+        let mut kept_changed = 0;
+        for (k, &m) in pruned.mask.iter().enumerate() {
+            if m {
+                assert_eq!(pruned.w.data[k], 0.0);
+            } else if (pruned.w.data[k] - w.data[k]).abs() > 1e-7 {
+                kept_changed += 1;
+            }
+        }
+        assert!(kept_changed > 0, "OBS update should adjust surviving weights");
+    }
+
+    #[test]
+    fn nm_format_valid_and_better_than_wanda_nm() {
+        let (w, stats, x) = setup(16, 32, 64, 22);
+        let sg = semi_structured(&w, &stats, 2, 4, &opts()).unwrap();
+        for i in 0..16 {
+            for g in (0..32).step_by(4) {
+                let zeros = sg.w.row(i)[g..g + 4].iter().filter(|&&v| v == 0.0).count();
+                assert_eq!(zeros, 2);
+            }
+        }
+        let wa = crate::pruning::wanda::semi_structured(&w, &stats, 2, 4);
+        assert!(recon_loss(&sg.w, &w, &x) < recon_loss(&wa.w, &w, &x));
+    }
+
+    #[test]
+    fn structured_removes_exactly_s_columns() {
+        let (w, stats, _) = setup(12, 16, 48, 23);
+        let pruned = structured(&w, &stats, 0.25, &opts()).unwrap();
+        let removed: Vec<usize> = (0..16)
+            .filter(|&j| (0..12).all(|i| pruned.w.at(i, j) == 0.0))
+            .collect();
+        assert_eq!(removed.len(), 4);
+    }
+
+    #[test]
+    fn structured_beats_wanda_structured() {
+        let mut wins = 0;
+        for seed in 0..5 {
+            let (w, stats, x) = setup(16, 20, 60, 300 + seed);
+            let sg = structured(&w, &stats, 0.3, &opts()).unwrap();
+            let wa = crate::pruning::wanda::structured(&w, &stats, 0.3);
+            if recon_loss(&sg.w, &w, &x) < recon_loss(&wa.w, &w, &x) {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 4, "sparsegpt-struct won {wins}/5");
+    }
+
+    #[test]
+    fn blocksize_one_equals_most_adaptive_mask() {
+        // Bs=1 is pure column-by-column OBS; must run and hit sparsity
+        let (w, stats, _) = setup(6, 12, 24, 24);
+        let o = PruneOpts { block_size: 1, percdamp: 0.01, ..Default::default() };
+        let pruned = unstructured(&w, &stats, 0.5, &o).unwrap();
+        let zeros = pruned.w.data.iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(zeros, 6 * 12 / 2);
+    }
+}

@@ -1,0 +1,340 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute
+//! from the request path.
+//!
+//! The bridge follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Executables are compiled lazily and cached for the lifetime of the
+//! [`Runtime`]; all artifact metadata (argument shapes/dtypes, layer
+//! shapes, the flat-parameter layout) comes from `manifest.json`
+//! written by `python/compile/aot.py`.
+
+use crate::jsonutil::Json;
+use crate::linalg::Mat;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Element type of an executable argument.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// Declared argument of an AOT executable.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl ArgSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ExeEntry {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+}
+
+/// Flat-parameter layout row.
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Per-model manifest section.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub config: crate::config::ModelConfig,
+    pub flat_size: usize,
+    pub block_flat_size: usize,
+    pub layout: Vec<ParamEntry>,
+}
+
+impl ModelManifest {
+    pub fn entry(&self, name: &str) -> Result<&ParamEntry> {
+        self.layout
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("no param '{name}' in layout"))
+    }
+
+    /// Offset + size of the contiguous flat slice holding block `l`.
+    pub fn block_span(&self, l: usize) -> Result<(usize, usize)> {
+        let first = self.entry(&format!("blocks.{l}.ln1"))?;
+        Ok((first.offset, self.block_flat_size))
+    }
+}
+
+/// The manifest: constants + models + executables.
+#[derive(Debug)]
+pub struct Manifest {
+    pub nb_calib: usize,
+    pub nb_eval: usize,
+    pub train_bs: usize,
+    pub models: HashMap<String, ModelManifest>,
+    pub executables: HashMap<String, ExeEntry>,
+}
+
+impl Manifest {
+    pub fn parse(j: &Json) -> Result<Manifest> {
+        let consts = j.get("constants")?;
+        let mut models = HashMap::new();
+        for (name, mj) in j.get("models")?.as_obj()? {
+            let cfgj = mj.get("config")?;
+            let cfg = crate::config::ModelConfig {
+                name: name.clone(),
+                vocab: cfgj.get("vocab")?.as_usize()?,
+                d_model: cfgj.get("d_model")?.as_usize()?,
+                n_layers: cfgj.get("n_layers")?.as_usize()?,
+                n_heads: cfgj.get("n_heads")?.as_usize()?,
+                d_ff: cfgj.get("d_ff")?.as_usize()?,
+                seq_len: cfgj.get("seq_len")?.as_usize()?,
+            };
+            let layout = mj
+                .get("param_layout")?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(ParamEntry {
+                        name: e.get("name")?.as_str()?.to_string(),
+                        offset: e.get("offset")?.as_usize()?,
+                        shape: e
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<_>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    config: cfg,
+                    flat_size: mj.get("flat_size")?.as_usize()?,
+                    block_flat_size: mj.get("block_flat_size")?.as_usize()?,
+                    layout,
+                },
+            );
+        }
+        let mut executables = HashMap::new();
+        for (name, ej) in j.get("executables")?.as_obj()? {
+            let args = ej
+                .get("args")?
+                .as_arr()?
+                .iter()
+                .map(|a| {
+                    let dtype = match a.get("dtype")?.as_str()? {
+                        "i32" => Dtype::I32,
+                        _ => Dtype::F32,
+                    };
+                    Ok(ArgSpec {
+                        shape: a
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<_>>()?,
+                        dtype,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            executables.insert(
+                name.clone(),
+                ExeEntry { file: ej.get("file")?.as_str()?.to_string(), args },
+            );
+        }
+        Ok(Manifest {
+            nb_calib: consts.get("nb_calib")?.as_usize()?,
+            nb_eval: consts.get("nb_eval")?.as_usize()?,
+            train_bs: consts.get("train_bs")?.as_usize()?,
+            models,
+            executables,
+        })
+    }
+}
+
+/// The runtime: PJRT CPU client + lazily-compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    pub metrics: crate::metrics::Metrics,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let j = Json::parse_file(&mpath)
+            .with_context(|| "artifacts missing — run `make artifacts` first")?;
+        let manifest = Manifest::parse(&j)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            cache: Mutex::new(HashMap::new()),
+            metrics: crate::metrics::Metrics::new(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.manifest.models.get(name).with_context(|| {
+            format!("model '{name}' not in manifest (run `make artifacts MODELS=...,{name}`)")
+        })
+    }
+
+    pub fn has_exe(&self, name: &str) -> bool {
+        self.manifest.executables.contains_key(name)
+    }
+
+    fn compile(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self
+            .manifest
+            .executables
+            .get(name)
+            .with_context(|| format!("unknown executable '{name}'"))?;
+        let path = self.dir.join(&entry.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.metrics.add_time("runtime.compile", t0.elapsed());
+        self.metrics.incr("runtime.compiled_executables", 1);
+        let arc = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Execute `name` with the given inputs; returns the decomposed
+    /// output tuple (every AOT graph returns a tuple).
+    pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let entry = self
+            .manifest
+            .executables
+            .get(name)
+            .with_context(|| format!("unknown executable '{name}'"))?;
+        if inputs.len() != entry.args.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                entry.args.len(),
+                inputs.len()
+            );
+        }
+        for (i, (lit, spec)) in inputs.iter().zip(&entry.args).enumerate() {
+            let n = lit.element_count();
+            if n != spec.numel() {
+                bail!(
+                    "{name}: input {i} has {n} elements, expected {:?}",
+                    spec.shape
+                );
+            }
+        }
+        let exe = self.compile(name)?;
+        let t0 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        self.metrics.add_time(&format!("exec.{name}"), t0.elapsed());
+        self.metrics.incr(&format!("exec_count.{name}"), 1);
+        result.to_tuple().map_err(Into::into)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal marshalling helpers
+// ---------------------------------------------------------------------------
+
+/// f32 literal with the given dims.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    assert_eq!(data.len(), n, "lit_f32 shape mismatch");
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims_i64).map_err(Into::into)
+}
+
+/// i32 literal with the given dims.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    assert_eq!(data.len(), n, "lit_i32 shape mismatch");
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims_i64).map_err(Into::into)
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 literal to a Vec.
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(Into::into)
+}
+
+/// Extract to a [`Mat`] with the given dims.
+pub fn to_mat(l: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v = to_vec_f32(l)?;
+    if v.len() != rows * cols {
+        bail!("literal has {} elements, expected {rows}x{cols}", v.len());
+    }
+    Ok(Mat::from_vec(rows, cols, v))
+}
+
+pub fn mat_lit(m: &Mat) -> Result<xla::Literal> {
+    lit_f32(&m.data, &[m.rows, m.cols])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_minimal() {
+        let src = r#"{
+          "constants": {"nb_calib": 8, "nb_eval": 8, "train_bs": 8},
+          "models": {"tiny": {
+            "config": {"vocab":512,"d_model":128,"n_layers":2,"n_heads":4,"d_ff":512,"seq_len":128},
+            "flat_size": 100, "block_flat_size": 40,
+            "param_layout": [{"name":"emb","offset":0,"shape":[512,128]},
+                             {"name":"blocks.0.ln1","offset":60,"shape":[128]}]
+          }},
+          "executables": {"embed_tiny": {"file": "embed_tiny.hlo.txt",
+            "args": [{"shape":[100],"dtype":"f32"},{"shape":[8,128],"dtype":"i32"}]}}
+        }"#;
+        let m = Manifest::parse(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(m.nb_calib, 8);
+        let tiny = &m.models["tiny"];
+        assert_eq!(tiny.config.d_model, 128);
+        assert_eq!(tiny.entry("emb").unwrap().numel(), 512 * 128);
+        assert_eq!(tiny.block_span(0).unwrap(), (60, 40));
+        let e = &m.executables["embed_tiny"];
+        assert_eq!(e.args[1].dtype, Dtype::I32);
+        assert_eq!(e.args[1].numel(), 8 * 128);
+    }
+}

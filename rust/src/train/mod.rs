@@ -1,0 +1,107 @@
+//! Training driver: runs the AOT Adam train-step executable over the
+//! synthetic corpus and logs the loss curve.
+//!
+//! The whole optimizer lives inside the HLO graph (L2); Rust owns the
+//! three flat state buffers (params, m, v), samples batches, and loops.
+
+use crate::data::{Corpus, Token};
+use crate::model::ModelState;
+use crate::rng::Rng;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, to_vec_f32, Runtime};
+use anyhow::{Context, Result};
+
+/// Adam trainer over the `train_step_<model>` executable.
+pub struct Trainer<'a> {
+    rt: &'a Runtime,
+    pub state: ModelState,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    pub step: usize,
+    pub lr: f32,
+    exe_name: String,
+    bs: usize,
+    seq: usize,
+}
+
+/// One point of the loss log.
+#[derive(Clone, Copy, Debug)]
+pub struct LossPoint {
+    pub step: usize,
+    pub loss: f32,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(rt: &'a Runtime, state: ModelState, lr: f32) -> Result<Trainer<'a>> {
+        let exe_name = format!("train_step_{}", state.config.name);
+        if !rt.has_exe(&exe_name) {
+            anyhow::bail!("missing executable {exe_name} — rebuild artifacts");
+        }
+        let n = state.flat.len();
+        Ok(Trainer {
+            rt,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+            lr,
+            exe_name,
+            bs: rt.manifest.train_bs,
+            seq: state.config.seq_len,
+            state,
+        })
+    }
+
+    /// One optimizer step on the given batch (`bs*seq` tokens).
+    pub fn step_on(&mut self, tokens: &[Token]) -> Result<f32> {
+        assert_eq!(tokens.len(), self.bs * self.seq, "batch shape");
+        let toks_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let inputs = [
+            lit_f32(&self.state.flat, &[self.state.flat.len()])?,
+            lit_f32(&self.m, &[self.m.len()])?,
+            lit_f32(&self.v, &[self.v.len()])?,
+            lit_i32(&toks_i32, &[self.bs, self.seq])?,
+            lit_scalar_i32(self.step as i32),
+            lit_scalar_f32(self.lr),
+        ];
+        let out = self.rt.exec(&self.exe_name, &inputs)?;
+        let loss = to_vec_f32(&out[0])?[0];
+        self.state.flat = to_vec_f32(&out[1])?;
+        self.m = to_vec_f32(&out[2])?;
+        self.v = to_vec_f32(&out[3])?;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Train for `steps` steps on random corpus batches; returns the
+    /// loss curve (every step) for EXPERIMENTS.md.
+    pub fn train(&mut self, corpus: &Corpus, steps: usize, seed: u64) -> Result<Vec<LossPoint>> {
+        let mut rng = Rng::new(seed);
+        let nseqs = corpus.train.n_seqs();
+        anyhow::ensure!(nseqs >= self.bs, "corpus too small for batch size");
+        let mut log = Vec::with_capacity(steps);
+        let mut batch: Vec<Token> = Vec::with_capacity(self.bs * self.seq);
+        for _ in 0..steps {
+            batch.clear();
+            for _ in 0..self.bs {
+                let s = rng.below(nseqs);
+                batch.extend_from_slice(corpus.train.seq(s));
+            }
+            let loss = self
+                .step_on(&batch)
+                .with_context(|| format!("train step {}", self.step))?;
+            log.push(LossPoint { step: self.step, loss });
+        }
+        Ok(log)
+    }
+}
+
+/// Pretty-print a loss curve, subsampled.
+pub fn format_loss_curve(log: &[LossPoint], every: usize) -> String {
+    let mut out = String::new();
+    for p in log.iter().step_by(every.max(1)) {
+        out.push_str(&format!("  step {:>5}  loss {:.4}\n", p.step, p.loss));
+    }
+    if let Some(last) = log.last() {
+        out.push_str(&format!("  final {:>5}  loss {:.4}\n", last.step, last.loss));
+    }
+    out
+}

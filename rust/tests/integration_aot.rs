@@ -1,0 +1,314 @@
+//! Integration tests over the AOT artifacts: the JAX/Pallas HLO path
+//! executed through the PJRT runtime, cross-validated against the
+//! pure-Rust implementations.
+//!
+//! These tests need `make artifacts` to have run (they are skipped with
+//! a notice otherwise, so `cargo test` works in a fresh checkout).
+
+use thanos::coordinator::{Backend, Coordinator, PruneSpec};
+use thanos::data::{Corpus, CorpusConfig};
+use thanos::eval;
+use thanos::linalg::gemm::recon_loss;
+use thanos::linalg::Mat;
+use thanos::model::ModelState;
+use thanos::pruning::{self, CalibStats, Method, Pattern, PruneOpts};
+use thanos::rng::Rng;
+use thanos::runtime::{lit_f32, lit_scalar_f32, lit_scalar_i32, mat_lit, to_mat, to_vec_f32, Runtime};
+use thanos::train::Trainer;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load("artifacts").expect("loading runtime"))
+}
+
+/// Correlated calibration setup at an artifact shape.
+fn setup(c: usize, b: usize, a: usize, seed: u64) -> (Mat, CalibStats, Mat) {
+    let mut r = Rng::new(seed);
+    let w = Mat::from_fn(c, b, |_, _| r.normal_f32(0.0, 1.0));
+    let k = b / 4;
+    let factors = Mat::from_fn(k, a, |_, _| r.normal_f32(0.0, 1.0));
+    let loading = Mat::from_fn(b, k, |_, _| r.normal_f32(0.0, 0.3));
+    let mut x = thanos::linalg::gemm::matmul(&loading, &factors);
+    for v in x.data.iter_mut() {
+        *v += r.normal_f32(0.0, 0.3);
+    }
+    let stats = CalibStats::from_x(&x);
+    (w, stats, x)
+}
+
+fn h_f32(stats: &CalibStats) -> Vec<f32> {
+    stats.h_sum.data.iter().map(|&v| v as f32).collect()
+}
+
+fn xn_f32(stats: &CalibStats) -> Vec<f32> {
+    stats.xnorm_sq.iter().map(|&v| v as f32).collect()
+}
+
+#[test]
+fn aot_wanda_matches_rust() {
+    let Some(rt) = runtime() else { return };
+    let (c, b) = (128, 128);
+    let (w, stats, _) = setup(c, b, 300, 1);
+    let out = rt
+        .exec(
+            &format!("prune_wanda_{c}x{b}"),
+            &[
+                mat_lit(&w).unwrap(),
+                lit_f32(&xn_f32(&stats), &[b]).unwrap(),
+                lit_scalar_i32((b / 2) as i32),
+            ],
+        )
+        .unwrap();
+    let w_aot = to_mat(&out[0], c, b).unwrap();
+    let w_rust = pruning::wanda::unstructured(&w, &stats, 0.5).w;
+    // same masks (ties are measure-zero with random data), same values
+    let diff = w_aot.max_abs_diff(&w_rust);
+    assert!(diff < 1e-5, "wanda AOT vs Rust diff {diff}");
+}
+
+#[test]
+fn aot_magnitude_matches_rust() {
+    let Some(rt) = runtime() else { return };
+    let (c, b) = (128, 128);
+    let (w, _, _) = setup(c, b, 300, 2);
+    let r = (c * b) / 2;
+    let out = rt
+        .exec(
+            &format!("prune_magnitude_{c}x{b}"),
+            &[mat_lit(&w).unwrap(), lit_scalar_i32(r as i32)],
+        )
+        .unwrap();
+    let w_aot = to_mat(&out[0], c, b).unwrap();
+    let w_rust = pruning::magnitude::unstructured(&w, 0.5).w;
+    assert!(w_aot.max_abs_diff(&w_rust) < 1e-6);
+}
+
+#[test]
+fn aot_hessian_accum_matches_rust_stats() {
+    let Some(rt) = runtime() else { return };
+    let b = 128;
+    let a = 1024; // the artifact's chunk size
+    let mut r = Rng::new(3);
+    let xt: Vec<f32> = (0..a * b).map(|_| r.normal_f32(0.0, 1.0)).collect();
+    let h0 = vec![0.0f32; b * b];
+    let out = rt
+        .exec(
+            &format!("hessian_accum_{b}"),
+            &[lit_f32(&h0, &[b, b]).unwrap(), lit_f32(&xt, &[a, b]).unwrap()],
+        )
+        .unwrap();
+    let h_aot = to_vec_f32(&out[0]).unwrap();
+    let xn_aot = to_vec_f32(&out[1]).unwrap();
+    // Rust: X = transpose(xt)
+    let xmat = Mat::from_vec(a, b, xt).transpose();
+    let stats = CalibStats::from_x(&xmat);
+    for i in 0..b * b {
+        let rel = (h_aot[i] as f64 - stats.h_sum.data[i]).abs()
+            / stats.h_sum.data[i].abs().max(1.0);
+        assert!(rel < 1e-3, "H[{i}] {} vs {}", h_aot[i], stats.h_sum.data[i]);
+    }
+    for j in 0..b {
+        let rel = (xn_aot[j] as f64 - stats.xnorm_sq[j]).abs() / stats.xnorm_sq[j].max(1.0);
+        assert!(rel < 1e-3);
+    }
+}
+
+#[test]
+fn aot_thanos_unstructured_close_to_rust() {
+    let Some(rt) = runtime() else { return };
+    let (c, b) = (128, 128);
+    let (w, stats, x) = setup(c, b, 300, 4);
+    let name = rt
+        .manifest
+        .executables
+        .keys()
+        .find(|k| k.starts_with(&format!("prune_thanos_unstr_{c}x{b}_B")))
+        .cloned()
+        .expect("thanos unstr artifact");
+    let out = rt
+        .exec(
+            &name,
+            &[
+                mat_lit(&w).unwrap(),
+                lit_f32(&h_f32(&stats), &[b, b]).unwrap(),
+                lit_f32(&xn_f32(&stats), &[b]).unwrap(),
+                lit_scalar_f32(0.5),
+            ],
+        )
+        .unwrap();
+    let w_aot = to_mat(&out[0], c, b).unwrap();
+    let sp = w_aot.sparsity();
+    assert!((sp - 0.5).abs() < 0.02, "AOT thanos sparsity {sp}");
+    // quality parity with the Rust implementation (f32 vs f64 paths)
+    let opts = PruneOpts { block_size: 128, ..Default::default() };
+    let w_rust = pruning::thanos::unstructured(&w, &stats, 0.5, &opts).unwrap().w;
+    let l_aot = recon_loss(&w_aot, &w, &x);
+    let l_rust = recon_loss(&w_rust, &w, &x);
+    assert!(
+        l_aot < l_rust * 1.25 + 1e-6,
+        "AOT loss {l_aot} vs Rust {l_rust}"
+    );
+    // and it must beat Wanda (update matters)
+    let l_wanda = recon_loss(&pruning::wanda::unstructured(&w, &stats, 0.5).w, &w, &x);
+    assert!(l_aot < l_wanda, "AOT thanos {l_aot} !< wanda {l_wanda}");
+}
+
+#[test]
+fn aot_thanos_structured_columns() {
+    let Some(rt) = runtime() else { return };
+    let (c, b) = (128, 128);
+    let (w, stats, _) = setup(c, b, 300, 5);
+    let out = rt
+        .exec(
+            &format!("prune_thanos_struct_{c}x{b}"),
+            &[
+                mat_lit(&w).unwrap(),
+                lit_f32(&h_f32(&stats), &[b, b]).unwrap(),
+                lit_f32(&xn_f32(&stats), &[b]).unwrap(),
+                lit_scalar_f32(0.3),
+                lit_scalar_f32(0.1),
+            ],
+        )
+        .unwrap();
+    let w_aot = to_mat(&out[0], c, b).unwrap();
+    // expected: ceil(0.1*128)=13 outlier rows untouched; others share a
+    // removed-column set of size ceil(0.3*128/0.9)=43
+    let untouched: Vec<usize> = (0..c)
+        .filter(|&i| w_aot.row(i) == w.row(i))
+        .collect();
+    assert_eq!(untouched.len(), 13, "outlier rows");
+    let pruned_rows: Vec<usize> = (0..c).filter(|i| !untouched.contains(i)).collect();
+    let removed: Vec<usize> = (0..b)
+        .filter(|&j| pruned_rows.iter().all(|&i| w_aot.at(i, j) == 0.0))
+        .collect();
+    assert_eq!(removed.len(), 43, "removed columns");
+}
+
+#[test]
+fn aot_thanos_nm_format() {
+    let Some(rt) = runtime() else { return };
+    let (c, b) = (128, 128);
+    let (w, stats, x) = setup(c, b, 300, 6);
+    let name = rt
+        .manifest
+        .executables
+        .keys()
+        .find(|k| k.starts_with(&format!("prune_thanos_nm_{c}x{b}_2_4_B")))
+        .cloned()
+        .expect("thanos nm artifact");
+    let out = rt
+        .exec(
+            &name,
+            &[
+                mat_lit(&w).unwrap(),
+                lit_f32(&h_f32(&stats), &[b, b]).unwrap(),
+                lit_f32(&xn_f32(&stats), &[b]).unwrap(),
+                lit_scalar_f32(0.0),
+            ],
+        )
+        .unwrap();
+    let w_aot = to_mat(&out[0], c, b).unwrap();
+    pruning::nm::validate(&w_aot, 2, 4, &[]).expect("2:4 format");
+    // joint update keeps it ahead of wanda 2:4
+    let l_aot = recon_loss(&w_aot, &w, &x);
+    let l_wanda = recon_loss(&pruning::wanda::semi_structured(&w, &stats, 2, 4).w, &w, &x);
+    assert!(l_aot < l_wanda);
+}
+
+#[test]
+fn train_step_reduces_loss_tiny() {
+    let Some(rt) = runtime() else { return };
+    let Ok(mm) = rt.model("tiny") else {
+        eprintln!("SKIP: tiny model not in artifacts");
+        return;
+    };
+    let corpus = Corpus::build(&CorpusConfig {
+        seq_len: mm.config.seq_len,
+        train_seqs: 64,
+        calib_seqs: 8,
+        eval_seqs: 8,
+        ..Default::default()
+    });
+    let state = ModelState::init(mm, 99);
+    let mut trainer = Trainer::new(&rt, state, 2e-3).unwrap();
+    let log = trainer.train(&corpus, 12, 7).unwrap();
+    let first = log[0].loss;
+    let last = log.last().unwrap().loss;
+    assert!(
+        last < first - 0.1,
+        "loss did not fall: {first} -> {last}"
+    );
+    assert!((first - (mm.config.vocab as f32).ln()).abs() < 1.0);
+}
+
+#[test]
+fn full_pipeline_prune_tiny_wanda_and_thanos() {
+    let Some(rt) = runtime() else { return };
+    let Ok(mm) = rt.model("tiny") else { return };
+    let corpus = Corpus::build(&CorpusConfig {
+        seq_len: mm.config.seq_len,
+        train_seqs: 64,
+        calib_seqs: 16,
+        eval_seqs: 8,
+        ..Default::default()
+    });
+    // brief training so pruning has signal to destroy
+    let state0 = ModelState::init(mm, 5);
+    let mut trainer = Trainer::new(&rt, state0, 2e-3).unwrap();
+    trainer.train(&corpus, 20, 11).unwrap();
+    let base = trainer.state.clone();
+    let ppl_dense = eval::perplexity(&rt, &base, &corpus.eval).unwrap();
+    assert!(ppl_dense.is_finite() && ppl_dense > 1.0);
+
+    for (method, backend) in [
+        (Method::Wanda, Backend::Aot),
+        (Method::Thanos, Backend::Aot),
+        (Method::SparseGpt, Backend::Aot), // exercises the Rust fallback
+    ] {
+        let mut state = base.clone();
+        let spec = PruneSpec {
+            method,
+            pattern: Pattern::Unstructured { p: 0.5 },
+            opts: PruneOpts::default(),
+            backend,
+        };
+        let report = Coordinator::new(&rt)
+            .prune_model(&mut state, &corpus.calib, &spec)
+            .unwrap();
+        let sp = report.overall_sparsity();
+        assert!(
+            (sp - 0.5).abs() < 0.02,
+            "{} sparsity {sp}",
+            method.name()
+        );
+        assert_eq!(report.layers.len(), mm.config.n_layers * 6);
+        let ppl = eval::perplexity(&rt, &state, &corpus.eval).unwrap();
+        assert!(
+            ppl.is_finite() && ppl >= ppl_dense * 0.8,
+            "{}: ppl {ppl} vs dense {ppl_dense}",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn zero_shot_suite_runs_on_tiny() {
+    let Some(rt) = runtime() else { return };
+    let Ok(mm) = rt.model("tiny") else { return };
+    let corpus = Corpus::build(&CorpusConfig {
+        seq_len: mm.config.seq_len,
+        train_seqs: 8,
+        calib_seqs: 8,
+        eval_seqs: 8,
+        ..Default::default()
+    });
+    let state = ModelState::init(mm, 17);
+    let results = eval::zero_shot_suite(&rt, &state, &corpus.grammar, 12, 3).unwrap();
+    assert_eq!(results.len(), 7);
+    for (t, acc) in &results {
+        assert!((0.0..=1.0).contains(acc), "{}: {acc}", t.name());
+    }
+}

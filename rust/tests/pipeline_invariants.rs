@@ -1,0 +1,166 @@
+//! Pipeline-level invariants over the coordinator + model state +
+//! checkpoint IO (needs artifacts; skipped gracefully otherwise).
+
+use thanos::coordinator::{Backend, Coordinator, PruneSpec};
+use thanos::data::{Corpus, CorpusConfig};
+use thanos::eval;
+use thanos::model::ModelState;
+use thanos::pruning::{Method, Pattern, PruneOpts};
+use thanos::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return None;
+    }
+    Some(Runtime::load("artifacts").expect("loading runtime"))
+}
+
+fn small_corpus(seq_len: usize) -> Corpus {
+    Corpus::build(&CorpusConfig {
+        seq_len,
+        train_seqs: 32,
+        calib_seqs: 16,
+        eval_seqs: 8,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn pipeline_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let Ok(mm) = rt.model("tiny") else { return };
+    let corpus = small_corpus(mm.config.seq_len);
+    let base = ModelState::init(mm, 31);
+    let spec = PruneSpec {
+        method: Method::Thanos,
+        pattern: Pattern::Unstructured { p: 0.5 },
+        opts: PruneOpts::default(),
+        backend: Backend::Rust,
+    };
+    let run = || {
+        let mut st = base.clone();
+        Coordinator::new(&rt)
+            .prune_model(&mut st, &corpus.calib, &spec)
+            .unwrap();
+        st.flat
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed + same calib must give identical pruned weights");
+}
+
+#[test]
+fn rust_and_aot_backends_agree_on_quality() {
+    // identical mask selection is not guaranteed (f32 vs f64 stats),
+    // but end-model perplexity must be close
+    let Some(rt) = runtime() else { return };
+    let Ok(mm) = rt.model("tiny") else { return };
+    let corpus = small_corpus(mm.config.seq_len);
+    let base = ModelState::init(mm, 33);
+    let mut ppls = Vec::new();
+    for backend in [Backend::Rust, Backend::Aot] {
+        let mut st = base.clone();
+        let spec = PruneSpec {
+            method: Method::Wanda,
+            pattern: Pattern::Unstructured { p: 0.5 },
+            opts: PruneOpts::default(),
+            backend,
+        };
+        Coordinator::new(&rt)
+            .prune_model(&mut st, &corpus.calib, &spec)
+            .unwrap();
+        ppls.push(eval::perplexity(&rt, &st, &corpus.eval).unwrap());
+    }
+    let rel = (ppls[0] - ppls[1]).abs() / ppls[0];
+    assert!(rel < 0.01, "backend ppl mismatch: {ppls:?}");
+}
+
+#[test]
+fn pruned_checkpoint_roundtrips_through_disk() {
+    let Some(rt) = runtime() else { return };
+    let Ok(mm) = rt.model("tiny") else { return };
+    let corpus = small_corpus(mm.config.seq_len);
+    let mut st = ModelState::init(mm, 35);
+    let spec = PruneSpec {
+        method: Method::Thanos,
+        pattern: Pattern::SemiStructured { n: 2, m: 4, alpha: 0.1 },
+        opts: PruneOpts::default(),
+        backend: Backend::Rust,
+    };
+    Coordinator::new(&rt)
+        .prune_model(&mut st, &corpus.calib, &spec)
+        .unwrap();
+    let dir = std::env::temp_dir().join("thanos_pipeline_test");
+    let path = dir.join("pruned.thnck");
+    st.save(&path).unwrap();
+    let back = ModelState::load(&path).unwrap();
+    assert_eq!(back.flat, st.flat);
+    // sparsity + eval identical after reload
+    assert_eq!(back.prunable_sparsity(), st.prunable_sparsity());
+    let p1 = eval::perplexity(&rt, &st, &corpus.eval).unwrap();
+    let p2 = eval::perplexity(&rt, &back, &corpus.eval).unwrap();
+    assert_eq!(p1, p2);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn structured_pruning_shrinks_effective_columns_consistently() {
+    // every layer pruned by structured Thanos removes the same COUNT of
+    // columns (⌈p·b/(1−α)⌉ for its own b) across the whole model
+    let Some(rt) = runtime() else { return };
+    let Ok(mm) = rt.model("tiny") else { return };
+    let corpus = small_corpus(mm.config.seq_len);
+    let mut st = ModelState::init(mm, 37);
+    let (p, alpha) = (0.25, 0.1);
+    let spec = PruneSpec {
+        method: Method::Thanos,
+        pattern: Pattern::Structured { p, alpha },
+        opts: PruneOpts::default(),
+        backend: Backend::Rust,
+    };
+    Coordinator::new(&rt)
+        .prune_model(&mut st, &corpus.calib, &spec)
+        .unwrap();
+    for l in 0..st.config.n_layers {
+        for name in st.prunable_layers(l) {
+            let w = st.get_mat(&name).unwrap();
+            let keep_rows = (alpha * w.rows as f64).ceil() as usize;
+            let want_cols = ((p * w.cols as f64) / (1.0 - alpha)).ceil() as usize;
+            // a column counts as removed if zero in all non-outlier rows;
+            // outlier rows are the `keep_rows` with unchanged weights
+            let mut zero_cols = 0;
+            for j in 0..w.cols {
+                let zeros = (0..w.rows).filter(|&i| w.at(i, j) == 0.0).count();
+                if zeros >= w.rows - keep_rows {
+                    zero_cols += 1;
+                }
+            }
+            assert_eq!(zero_cols, want_cols, "{name}");
+        }
+    }
+}
+
+#[test]
+fn eval_perplexity_stable_across_batch_boundaries() {
+    // 8 eval seqs vs the same 8 + padding path must agree exactly
+    let Some(rt) = runtime() else { return };
+    let Ok(mm) = rt.model("tiny") else { return };
+    let corpus = small_corpus(mm.config.seq_len);
+    let st = ModelState::init(mm, 39);
+    let full = eval::perplexity(&rt, &st, &corpus.eval).unwrap();
+    // a split with a partial final batch (5 = 8-batch + pad path)
+    let partial = thanos::data::Sequences {
+        seq_len: corpus.eval.seq_len,
+        tokens: corpus.eval.tokens[..5 * corpus.eval.seq_len].to_vec(),
+    };
+    let p5 = eval::perplexity(&rt, &st, &partial).unwrap();
+    assert!(p5.is_finite());
+    // and the first batch alone matches the mean over itself
+    let first8 = thanos::data::Sequences {
+        seq_len: corpus.eval.seq_len,
+        tokens: corpus.eval.tokens[..8 * corpus.eval.seq_len].to_vec(),
+    };
+    let p8 = eval::perplexity(&rt, &st, &first8).unwrap();
+    assert!((p8.ln() - full.ln()).abs() < 0.2, "{p8} vs {full}");
+}

@@ -1,0 +1,322 @@
+//! Property-based tests over the pruning library (mini-proptest):
+//! invariants that must hold for EVERY method on randomly generated
+//! layers, plus cross-method quality orderings the paper's tables rely
+//! on. No artifacts needed — pure Rust.
+
+use thanos::linalg::gemm::recon_loss;
+use thanos::linalg::Mat;
+use thanos::proptest::{check, dim, mat_heavy, sparsity, Config};
+use thanos::pruning::{self, CalibStats, Method, Pattern, PruneOpts};
+use thanos::rng::Rng;
+
+fn gen_layer(r: &mut Rng) -> (Mat, CalibStats, Mat, f64) {
+    let c = dim(r, 6, 24);
+    let b = dim(r, 2, 6) * 4; // multiple of 4 for n:m
+    let a = b * 3 + dim(r, 0, 16);
+    let w = mat_heavy(r, c, b, 0.02);
+    let x = mat_heavy(r, b, a, 0.05);
+    let stats = CalibStats::from_x(&x);
+    let p = sparsity(r);
+    (w, stats, x, p)
+}
+
+fn opts() -> PruneOpts {
+    PruneOpts { block_size: 8, ..Default::default() }
+}
+
+#[test]
+fn prop_every_method_masks_are_exact_zeros() {
+    check(
+        &Config { cases: 24, seed: 0xA1 },
+        |r| gen_layer(r),
+        |(w, stats, _x, p)| {
+            for method in Method::ALL {
+                let pruned =
+                    pruning::prune(method, w, stats, Pattern::Unstructured { p: *p }, &opts())
+                        .map_err(|e| e.to_string())?;
+                for (k, &m) in pruned.mask.iter().enumerate() {
+                    if m && pruned.w.data[k] != 0.0 {
+                        return Err(format!("{}: masked weight not zero", method.name()));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_unstructured_sparsity_hits_target() {
+    check(
+        &Config { cases: 24, seed: 0xA2 },
+        |r| gen_layer(r),
+        |(w, stats, _x, p)| {
+            let cells = w.rows * w.cols;
+            // magnitude + thanos: exact global count
+            for method in [Method::Magnitude, Method::Thanos] {
+                let pruned =
+                    pruning::prune(method, w, stats, Pattern::Unstructured { p: *p }, &opts())
+                        .map_err(|e| e.to_string())?;
+                let zeros = pruned.w.data.iter().filter(|&&v| v == 0.0).count();
+                let want = (p * cells as f64).floor() as usize;
+                if zeros != want {
+                    return Err(format!(
+                        "{}: {zeros} zeros, want {want} (p={p})",
+                        method.name()
+                    ));
+                }
+            }
+            // wanda: per-row count
+            let pruned =
+                pruning::prune(Method::Wanda, w, stats, Pattern::Unstructured { p: *p }, &opts())
+                    .map_err(|e| e.to_string())?;
+            let k = (p * w.cols as f64).floor() as usize;
+            for i in 0..w.rows {
+                let zeros = pruned.w.row(i).iter().filter(|&&v| v == 0.0).count();
+                if zeros != k {
+                    return Err(format!("wanda row {i}: {zeros} != {k}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_nm_format_all_methods() {
+    check(
+        &Config { cases: 16, seed: 0xA3 },
+        |r| gen_layer(r),
+        |(w, stats, _x, _p)| {
+            for method in Method::ALL {
+                let pruned = pruning::prune(
+                    method,
+                    w,
+                    stats,
+                    Pattern::SemiStructured { n: 2, m: 4, alpha: 0.0 },
+                    &opts(),
+                )
+                .map_err(|e| e.to_string())?;
+                pruning::nm::validate(&pruned.w, 2, 4, &[])
+                    .map_err(|e| format!("{}: {e}", method.name()))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_structured_removes_whole_columns() {
+    check(
+        &Config { cases: 16, seed: 0xA4 },
+        |r| gen_layer(r),
+        |(w, stats, _x, _p)| {
+            for method in [Method::Magnitude, Method::Wanda, Method::SparseGpt] {
+                let pruned = pruning::prune(
+                    method,
+                    w,
+                    stats,
+                    Pattern::Structured { p: 0.25, alpha: 0.0 },
+                    &opts(),
+                )
+                .map_err(|e| e.to_string())?;
+                for j in 0..w.cols {
+                    let zeros = (0..w.rows).filter(|&i| pruned.w.at(i, j) == 0.0).count();
+                    if zeros != 0 && zeros != w.rows {
+                        return Err(format!("{}: column {j} partial", method.name()));
+                    }
+                }
+            }
+            // thanos with alpha=0 too
+            let pruned = pruning::prune(
+                Method::Thanos,
+                w,
+                stats,
+                Pattern::Structured { p: 0.25, alpha: 0.0 },
+                &opts(),
+            )
+            .map_err(|e| e.to_string())?;
+            for j in 0..w.cols {
+                let zeros = (0..w.rows).filter(|&i| pruned.w.at(i, j) == 0.0).count();
+                if zeros != 0 && zeros != w.rows {
+                    return Err(format!("thanos: column {j} partial"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_update_methods_beat_mask_only_on_same_mask() {
+    // For SparseGPT and Thanos: re-zeroing their own mask WITHOUT the
+    // weight update must never do better (the OBS update is optimal for
+    // the chosen mask).
+    check(
+        &Config { cases: 16, seed: 0xA5 },
+        |r| gen_layer(r),
+        |(w, stats, x, p)| {
+            for method in [Method::SparseGpt, Method::Thanos] {
+                let pruned =
+                    pruning::prune(method, w, stats, Pattern::Unstructured { p: *p }, &opts())
+                        .map_err(|e| e.to_string())?;
+                let mut mask_only = w.clone();
+                for (k, &m) in pruned.mask.iter().enumerate() {
+                    if m {
+                        mask_only.data[k] = 0.0;
+                    }
+                }
+                let lu = recon_loss(&pruned.w, w, x);
+                let lm = recon_loss(&mask_only, w, x);
+                if lu > lm * 1.0001 + 1e-9 {
+                    return Err(format!(
+                        "{} p={p}: update {lu} worse than mask-only {lm}",
+                        method.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_idempotent_on_already_pruned() {
+    // pruning an already-pruned matrix at the same pattern keeps the
+    // zeros (n:m formats remain valid)
+    check(
+        &Config { cases: 12, seed: 0xA6 },
+        |r| gen_layer(r),
+        |(w, stats, _x, _p)| {
+            let once = pruning::prune(
+                Method::Thanos,
+                w,
+                stats,
+                Pattern::SemiStructured { n: 2, m: 4, alpha: 0.0 },
+                &opts(),
+            )
+            .map_err(|e| e.to_string())?;
+            let twice = pruning::prune(
+                Method::Thanos,
+                &once.w,
+                stats,
+                Pattern::SemiStructured { n: 2, m: 4, alpha: 0.0 },
+                &opts(),
+            )
+            .map_err(|e| e.to_string())?;
+            pruning::nm::validate(&twice.w, 2, 4, &[]).map_err(|e| e.to_string())?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quality_ordering_structured_thanos_best() {
+    // The Table-2 structured ranking at layer level: mean reconstruction
+    // loss over seeds — Thanos(joint) <= SparseGPT(one-shot+rightward)
+    // <= Wanda(no update). Averaged, not per-case (noise).
+    let mut l_th = 0.0;
+    let mut l_sg = 0.0;
+    let mut l_wa = 0.0;
+    let n = 8;
+    for seed in 0..n {
+        let mut r = Rng::new(0xB000 + seed);
+        let (w, stats, x, _) = gen_layer(&mut r);
+        let th = pruning::prune(
+            Method::Thanos,
+            &w,
+            &stats,
+            Pattern::Structured { p: 0.3, alpha: 0.0 },
+            &opts(),
+        )
+        .unwrap();
+        let sg = pruning::prune(
+            Method::SparseGpt,
+            &w,
+            &stats,
+            Pattern::Structured { p: 0.3, alpha: 0.0 },
+            &opts(),
+        )
+        .unwrap();
+        let wa = pruning::prune(
+            Method::Wanda,
+            &w,
+            &stats,
+            Pattern::Structured { p: 0.3, alpha: 0.0 },
+            &opts(),
+        )
+        .unwrap();
+        l_th += recon_loss(&th.w, &w, &x);
+        l_sg += recon_loss(&sg.w, &w, &x);
+        l_wa += recon_loss(&wa.w, &w, &x);
+    }
+    assert!(l_th < l_sg, "thanos {l_th} !< sparsegpt {l_sg}");
+    assert!(l_sg < l_wa, "sparsegpt {l_sg} !< wanda {l_wa}");
+}
+
+#[test]
+fn quality_ordering_unstructured_update_methods_beat_metric_methods() {
+    let mut l_th = 0.0;
+    let mut l_sg = 0.0;
+    let mut l_wa = 0.0;
+    let mut l_mg = 0.0;
+    for seed in 0..8 {
+        let mut r = Rng::new(0xC000 + seed);
+        let (w, stats, x, _) = gen_layer(&mut r);
+        let run = |m: Method| {
+            let p = pruning::prune(m, &w, &stats, Pattern::Unstructured { p: 0.5 }, &opts())
+                .unwrap();
+            recon_loss(&p.w, &w, &x)
+        };
+        l_th += run(Method::Thanos);
+        l_sg += run(Method::SparseGpt);
+        l_wa += run(Method::Wanda);
+        l_mg += run(Method::Magnitude);
+    }
+    assert!(l_th < l_wa && l_sg < l_wa, "updates must beat wanda");
+    assert!(l_wa < l_mg, "wanda must beat magnitude");
+}
+
+#[test]
+fn alpha_outlier_rows_monotone_benefit_structured() {
+    // with heavy-tailed rows, protecting outliers (α=0.1) should reduce
+    // loss vs α=0 at matched total sparsity, on average (the Table 2
+    // α-ablation)
+    let mut l_a0 = 0.0;
+    let mut l_a1 = 0.0;
+    for seed in 0..8 {
+        let mut r = Rng::new(0xD000 + seed);
+        let c = 20;
+        let b = 24;
+        let w = {
+            let mut w = mat_heavy(&mut r, c, b, 0.01);
+            // make two rows strong outliers
+            for j in 0..b {
+                *w.at_mut(3, j) *= 8.0;
+                *w.at_mut(11, j) *= 8.0;
+            }
+            w
+        };
+        let x = mat_heavy(&mut r, b, 96, 0.03);
+        let stats = CalibStats::from_x(&x);
+        let a0 = pruning::prune(
+            Method::Thanos,
+            &w,
+            &stats,
+            Pattern::Structured { p: 0.3, alpha: 0.0 },
+            &opts(),
+        )
+        .unwrap();
+        let a1 = pruning::prune(
+            Method::Thanos,
+            &w,
+            &stats,
+            Pattern::Structured { p: 0.3, alpha: 0.1 },
+            &opts(),
+        )
+        .unwrap();
+        l_a0 += recon_loss(&a0.w, &w, &x);
+        l_a1 += recon_loss(&a1.w, &w, &x);
+    }
+    assert!(l_a1 < l_a0, "alpha=0.1 {l_a1} !< alpha=0 {l_a0}");
+}
