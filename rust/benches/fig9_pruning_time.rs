@@ -17,7 +17,9 @@
 
 mod common;
 use common::*;
-use thanos::pruning::{self, PruneOpts};
+use thanos::engine;
+use thanos::linalg::Mat;
+use thanos::pruning::{self, CalibStats, Method, Pattern, PruneOpts};
 
 struct OptModel {
     name: &'static str,
@@ -26,7 +28,124 @@ struct OptModel {
     n_blocks: usize,
 }
 
+/// Marker env var: set by the parent bench process when it re-executes
+/// itself with `THANOS_THREADS=1` for the engine-scaling comparison.
+const CHILD_ENV: &str = "THANOS_FIG9_CHILD";
+
+fn fnv1a64(h: &mut u64, bytes: &[u8]) {
+    for &byte in bytes {
+        *h ^= byte as u64;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    }
+}
+
+/// Whole-model pruning through the engine: the six layer shapes of one
+/// block pruned layer-parallel (Thanos unstructured 50%, fast mode).
+/// Returns the prune wall seconds, an FNV-1a checksum over the pruned
+/// weight bits + masks (bit-identical across thread counts by design),
+/// and the engine-counter delta scoped to the prune call alone (the
+/// calibration setup is excluded from both the wall time and the
+/// counters so the readout describes the pruning it claims to measure).
+fn whole_model_suite(d: usize, ff: usize, tokens: usize) -> (f64, u64, engine::EngineStats) {
+    let (_, stats_d, _) = bench_layer(8, d, tokens.max(d / 2), 7);
+    let (_, stats_ff, _) = bench_layer(8, ff, tokens.max(ff / 2), 8);
+    let shapes = [(d, d), (d, d), (d, d), (d, d), (ff, d), (d, ff)];
+    let ws: Vec<Mat> = shapes
+        .iter()
+        .map(|&(c, b)| {
+            let mut r = thanos::rng::Rng::new((c * 31 + b) as u64);
+            Mat::from_fn(c, b, |_, _| r.normal_f32(0.0, 1.0))
+        })
+        .collect();
+    let layers: Vec<(&Mat, &CalibStats)> = ws
+        .iter()
+        .zip(shapes.iter())
+        .map(|(w, &(_c, b))| (w, if b == d { &stats_d } else { &stats_ff }))
+        .collect();
+    let opts = PruneOpts { block_size: 128, ..Default::default() };
+    let stats0 = engine::global().stats();
+    let t0 = std::time::Instant::now();
+    let results =
+        pruning::prune_many(&layers, Method::Thanos, Pattern::Unstructured { p: 0.5 }, &opts);
+    let secs = t0.elapsed().as_secs_f64();
+    let delta = engine::global().stats().delta_since(&stats0);
+    let mut checksum = 0xcbf2_9ce4_8422_2325u64;
+    for res in results {
+        let (pruned, _) = res.expect("suite prune failed");
+        for v in &pruned.w.data {
+            fnv1a64(&mut checksum, &v.to_bits().to_le_bytes());
+        }
+        for &m in &pruned.mask {
+            fnv1a64(&mut checksum, &[m as u8]);
+        }
+    }
+    (secs, checksum, delta)
+}
+
+fn engine_scaling_section(csv_tokens: usize) {
+    let d = env_usize("THANOS_FIG9_SCALE_D", 512);
+    println!("== engine scaling: whole-model suite, layer-parallel (d={d}) ==");
+    let (par_secs, par_sum, st) = whole_model_suite(d, 4 * d, csv_tokens);
+    println!(
+        "  parallel:      {par_secs:>6.2}s on {} threads ({} jobs, {} inline, {} tasks, \
+         queue peak {}, {:.0}% occupancy)",
+        st.threads,
+        st.jobs_submitted,
+        st.jobs_inline,
+        st.tasks_executed,
+        st.queue_peak,
+        st.occupancy(par_secs) * 100.0
+    );
+    let child = std::env::current_exe().ok().and_then(|exe| {
+        std::process::Command::new(exe)
+            .env(engine::THREADS_ENV, "1")
+            .env(CHILD_ENV, "1")
+            .output()
+            .ok()
+    });
+    let parsed = child.filter(|out| out.status.success()).and_then(|out| {
+        let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+        stdout.lines().find_map(|line| {
+            let rest = line.strip_prefix("ENGINE_SCALING secs=")?;
+            let (secs, sum) = rest.split_once(" checksum=")?;
+            Some((secs.parse::<f64>().ok()?, u64::from_str_radix(sum.trim(), 16).ok()?))
+        })
+    });
+    match parsed {
+        Some((ser_secs, ser_sum)) => {
+            let speedup = ser_secs / par_secs.max(1e-9);
+            let identical = ser_sum == par_sum;
+            println!(
+                "  single-thread: {ser_secs:>6.2}s -> {speedup:.2}x speedup, pruned weights {}",
+                if identical { "bit-identical" } else { "DIFFER (determinism bug!)" }
+            );
+            let mut csv = Csv::new("fig9_engine_scaling");
+            let header = "d,threads,parallel_secs,serial_secs,speedup,bit_identical";
+            csv.row(
+                header,
+                &format!(
+                    "{},{},{:.3},{:.3},{:.2},{}",
+                    d, st.threads, par_secs, ser_secs, speedup, identical
+                ),
+            );
+            println!("  wrote bench_results/fig9_engine_scaling.csv");
+        }
+        None => println!(
+            "  (single-thread child run unavailable; rerun with THANOS_THREADS=1 to compare)"
+        ),
+    }
+}
+
 fn main() {
+    if std::env::var(CHILD_ENV).is_ok() {
+        // child mode: run ONLY the whole-model suite (the parent set
+        // THANOS_THREADS=1) and report time + weight checksum
+        let d = env_usize("THANOS_FIG9_SCALE_D", 512);
+        let tokens = env_usize("THANOS_FIG9_TOKENS", 512);
+        let (secs, checksum, _) = whole_model_suite(d, 4 * d, tokens);
+        println!("ENGINE_SCALING secs={secs:.6} checksum={checksum:016x}");
+        return;
+    }
     // OPT family architectural shapes (Zhang et al., 2022)
     let all = [
         OptModel { name: "OPT-125M", d: 768, ff: 3072, n_blocks: 12 },
@@ -123,4 +242,12 @@ fn main() {
     println!("update methods and flat in size; paper-faithful unstructured Thanos");
     println!("grows ~b^4/B and crosses above SparseGPT as size grows.");
     println!("wrote bench_results/fig9_pruning_time.csv");
+    println!();
+
+    // engine-scaling readout: whole-model layer-parallel pruning vs the
+    // single-threaded engine setting, with bit-identity verification
+    // (disable with THANOS_FIG9_SCALING=0)
+    if env_str("THANOS_FIG9_SCALING", "1") != "0" {
+        engine_scaling_section(a);
+    }
 }

@@ -64,8 +64,12 @@ pub struct PruneReport {
     pub layers: Vec<LayerReport>,
     pub capture_secs: f64,
     pub hessian_secs: f64,
+    /// wall time of the pruning stage (layers overlap under the
+    /// layer-parallel engine path; per-layer times are in [`LayerReport`])
     pub prune_secs: f64,
     pub total_secs: f64,
+    /// [`crate::engine`] activity during this run (queue/occupancy)
+    pub engine: crate::engine::EngineStats,
 }
 
 impl PruneReport {
@@ -81,13 +85,21 @@ impl PruneReport {
 
     pub fn summary(&self) -> String {
         format!(
-            "pruned {} layers to {:.1}% sparsity in {:.1}s (capture {:.1}s, hessian {:.1}s, prune {:.1}s)",
+            "pruned {} layers to {:.1}% sparsity in {:.1}s (capture {:.1}s, hessian {:.1}s, \
+             prune {:.1}s) | engine: {} threads, {} jobs ({} inline), {} tasks, \
+             queue peak {}, {:.0}% occupancy",
             self.layers.len(),
             self.overall_sparsity() * 100.0,
             self.total_secs,
             self.capture_secs,
             self.hessian_secs,
-            self.prune_secs
+            self.prune_secs,
+            self.engine.threads,
+            self.engine.jobs_submitted,
+            self.engine.jobs_inline,
+            self.engine.tasks_executed,
+            self.engine.queue_peak,
+            self.engine.occupancy(self.total_secs) * 100.0,
         )
     }
 }
@@ -111,8 +123,9 @@ impl Accum {
         }
     }
 
-    /// Feed one captured chunk `xt`: row-major `[a, b]` (tokens × features).
-    fn add_chunk(&mut self, rt: &Runtime, xt: &[f32], a: usize) -> Result<()> {
+    /// Rust-backend accumulation: no runtime needed, so calibration
+    /// sites can accumulate concurrently on the engine pool.
+    fn add_chunk_rust(&mut self, xt: &[f32], a: usize) -> Result<()> {
         match self {
             Accum::Rust(stats) => {
                 let b = stats.b();
@@ -122,6 +135,14 @@ impl Accum {
                 stats.accumulate(&xmat);
                 Ok(())
             }
+            Accum::Aot { .. } => unreachable!("add_chunk_rust on an AOT accumulator"),
+        }
+    }
+
+    /// Feed one captured chunk `xt`: row-major `[a, b]` (tokens × features).
+    fn add_chunk(&mut self, rt: &Runtime, xt: &[f32], a: usize) -> Result<()> {
+        match self {
+            Accum::Rust(_) => self.add_chunk_rust(xt, a),
             Accum::Aot { h, xnorm_sq, b } => {
                 let name = format!("hessian_accum_{b}");
                 let out = rt.exec(
@@ -158,6 +179,7 @@ impl<'a> Coordinator<'a> {
         spec: &PruneSpec,
     ) -> Result<PruneReport> {
         let t_total = Instant::now();
+        let engine_stats0 = crate::engine::global().stats();
         let cfg = state.config.clone();
         let rt = self.rt;
         let nbc = rt.manifest.nb_calib;
@@ -217,34 +239,108 @@ impl<'a> Coordinator<'a> {
             let mut accums: Vec<Accum> = (0..4)
                 .map(|s| Accum::new(spec.backend, site_b(s)))
                 .collect();
-            for cap in &captures {
-                for (site, accum) in accums.iter_mut().enumerate() {
-                    let xt = to_vec_f32(&cap[1 + site])?;
-                    accum.add_chunk(rt, &xt, a)?;
+            match spec.backend {
+                Backend::Rust => {
+                    // decode the capture outputs to plain buffers up
+                    // front (the literal layer stays on this thread),
+                    // then fan the four independent per-site Hessian
+                    // accumulations out on the engine (chunk order
+                    // within a site is fixed, so sums are bit-identical
+                    // for any thread count)
+                    let mut site_chunks: Vec<Vec<Vec<f32>>> =
+                        (0..4).map(|_| Vec::with_capacity(captures.len())).collect();
+                    for cap in &captures {
+                        for (site, chunks) in site_chunks.iter_mut().enumerate() {
+                            chunks.push(to_vec_f32(&cap[1 + site])?);
+                        }
+                    }
+                    let errors: std::sync::Mutex<Vec<anyhow::Error>> =
+                        std::sync::Mutex::new(Vec::new());
+                    crate::engine::global().for_each_band(&mut accums, 1, |site, slot| {
+                        for xt in &site_chunks[site] {
+                            if let Err(e) = slot[0].add_chunk_rust(xt, a) {
+                                errors.lock().unwrap().push(e);
+                                break;
+                            }
+                        }
+                    });
+                    if let Some(e) = errors.into_inner().unwrap().into_iter().next() {
+                        return Err(e.context("accumulating calibration statistics"));
+                    }
+                }
+                Backend::Aot => {
+                    // strictly sequential (needs the runtime): decode
+                    // one chunk at a time so peak memory stays at one
+                    // decoded chunk, as before
+                    for cap in &captures {
+                        for (site, accum) in accums.iter_mut().enumerate() {
+                            let xt = to_vec_f32(&cap[1 + site])?;
+                            accum.add_chunk(rt, &xt, a)?;
+                        }
+                    }
                 }
             }
             report.hessian_secs += t_h.elapsed().as_secs_f64();
 
             // -- prune the six layers --------------------------------------
-            for lname in ["wq", "wk", "wv", "wo", "w1", "w2"] {
-                let full = format!("blocks.{l}.{lname}");
-                let w = state.get_mat(&full)?;
-                let site = site_of(lname);
-                let t_p = Instant::now();
-                let (w_new, used_aot) =
-                    self.prune_layer(&w, &accums[site], spec).with_context(|| full.clone())?;
-                let secs = t_p.elapsed().as_secs_f64();
-                report.prune_secs += secs;
-                report.layers.push(LayerReport {
-                    name: full.clone(),
-                    c: w.rows,
-                    b: w.cols,
-                    sparsity: w_new.sparsity(),
-                    secs,
-                    aot: used_aot,
-                });
-                state.set_mat(&full, &w_new)?;
+            let lnames = ["wq", "wk", "wv", "wo", "w1", "w2"];
+            let t_p = Instant::now();
+            if spec.backend == Backend::Rust {
+                // layer-parallel: the six layers of a block are
+                // independent given the per-site statistics, so they are
+                // captured once and pruned concurrently on the engine
+                // (layer tasks × row-parallel inner kernels share the
+                // same pool — no oversubscription)
+                let ws: Vec<(String, Mat, usize)> = lnames
+                    .iter()
+                    .map(|lname| {
+                        let full = format!("blocks.{l}.{lname}");
+                        let w = state.get_mat(&full)?;
+                        Ok((full, w, site_of(lname)))
+                    })
+                    .collect::<Result<_>>()?;
+                let layer_inputs: Vec<(&Mat, &CalibStats)> = ws
+                    .iter()
+                    .map(|(_, w, site)| match &accums[*site] {
+                        Accum::Rust(stats) => (w, stats),
+                        Accum::Aot { .. } => unreachable!("Rust backend built Rust accums"),
+                    })
+                    .collect();
+                let results =
+                    pruning::prune_many(&layer_inputs, spec.method, spec.pattern, &spec.opts);
+                for ((full, w, _site), res) in ws.iter().zip(results) {
+                    let (pruned, secs) = res.with_context(|| full.clone())?;
+                    report.layers.push(LayerReport {
+                        name: full.clone(),
+                        c: w.rows,
+                        b: w.cols,
+                        sparsity: pruned.w.sparsity(),
+                        secs,
+                        aot: false,
+                    });
+                    state.set_mat(full, &pruned.w)?;
+                }
+            } else {
+                for lname in lnames {
+                    let full = format!("blocks.{l}.{lname}");
+                    let w = state.get_mat(&full)?;
+                    let site = site_of(lname);
+                    let t_layer = Instant::now();
+                    let (w_new, used_aot) = self
+                        .prune_layer(&w, &accums[site], spec)
+                        .with_context(|| full.clone())?;
+                    report.layers.push(LayerReport {
+                        name: full.clone(),
+                        c: w.rows,
+                        b: w.cols,
+                        sparsity: w_new.sparsity(),
+                        secs: t_layer.elapsed().as_secs_f64(),
+                        aot: used_aot,
+                    });
+                    state.set_mat(&full, &w_new)?;
+                }
             }
+            report.prune_secs += t_p.elapsed().as_secs_f64();
 
             // -- re-forward through the pruned block -----------------------
             let t_rf = Instant::now();
@@ -260,6 +356,9 @@ impl<'a> Coordinator<'a> {
         }
 
         report.total_secs = t_total.elapsed().as_secs_f64();
+        report.engine = crate::engine::global().stats().delta_since(&engine_stats0);
+        rt.metrics
+            .record_engine("engine.prune_model", &report.engine, report.total_secs);
         Ok(report)
     }
 

@@ -1,0 +1,608 @@
+//! The `PruneEngine` — a persistent, work-stealing thread pool shared
+//! by every parallel kernel in the crate.
+//!
+//! The seed implementation spawned fresh `std::thread::scope` workers
+//! inside every GEMM / Cholesky / row-update call, which (a) pays the
+//! spawn+join cost on every hot-loop iteration and (b) makes two-level
+//! parallelism (layer-parallel outer loop × row-parallel inner kernels)
+//! oversubscribe the machine. The engine replaces all of that with ONE
+//! pool sized to the hardware (or to `THANOS_THREADS`):
+//!
+//! * **Scoped job submission** — [`PruneEngine::run`] submits a batch
+//!   of `n_tasks` index-addressed tasks and blocks until all of them
+//!   finished, so jobs may borrow stack data (same contract as
+//!   `std::thread::scope`, without the per-call spawns).
+//! * **Work stealing via an atomic claim counter** — workers (and the
+//!   submitting thread itself) claim task indices with a `fetch_add`,
+//!   so fast workers automatically steal the tail of slow workers'
+//!   ranges and concurrent jobs interleave on the same pool.
+//! * **No oversubscription by construction** — nested submissions
+//!   (a layer-parallel task whose inner GEMM submits row-parallel
+//!   tasks) land on the same fixed-size pool; the submitter always
+//!   drains its own job, so nesting cannot deadlock and the two levels
+//!   share one thread budget instead of multiplying.
+//! * **Determinism** — every task computes an independent output range,
+//!   so results are bit-identical for any thread count. `THANOS_THREADS=1`
+//!   (or [`with_serial`]) forces fully inline execution; the test suite
+//!   pins serial == parallel bit-equality for all pruning methods.
+//! * **Counters** — jobs / tasks / queue depth / busy time are exported
+//!   through [`EngineStats`] and surfaced in the coordinator report and
+//!   the `fig9_pruning_time` bench.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Environment variable fixing the pool size (`>= 1`). Unset or invalid
+/// values fall back to `std::thread::available_parallelism()`.
+pub const THREADS_ENV: &str = "THANOS_THREADS";
+
+/// Oversubscription factor for [`PruneEngine::chunk`]: splitting work
+/// into a few more tasks than threads lets the claim counter balance
+/// load when several jobs share the pool.
+const TASKS_PER_THREAD: usize = 4;
+
+static GLOBAL: OnceLock<PruneEngine> = OnceLock::new();
+
+thread_local! {
+    static SERIAL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// The process-wide engine, created on first use. Pool size comes from
+/// [`THREADS_ENV`] or the hardware parallelism.
+pub fn global() -> &'static PruneEngine {
+    GLOBAL.get_or_init(|| PruneEngine::with_threads(configured_threads()))
+}
+
+fn configured_threads() -> usize {
+    std::env::var(THREADS_ENV)
+        .ok()
+        .and_then(|v| parse_threads(&v))
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Parse a `THANOS_THREADS` value; `None` for anything that is not a
+/// positive integer.
+pub fn parse_threads(v: &str) -> Option<usize> {
+    v.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+/// Run `f` with every engine submission on this thread forced inline
+/// (exactly the execution `THANOS_THREADS=1` would produce), restoring
+/// the previous mode afterwards — the in-process hook the determinism
+/// tests use to compare serial vs parallel results bit-for-bit.
+pub fn with_serial<R>(f: impl FnOnce() -> R) -> R {
+    struct Guard(bool);
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            SERIAL.with(|s| s.set(self.0));
+        }
+    }
+    let prev = SERIAL.with(|s| s.replace(true));
+    let _guard = Guard(prev);
+    f()
+}
+
+/// Cumulative engine activity counters (monotone since engine start).
+/// Use [`EngineStats::delta_since`] to scope them to one pipeline run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EngineStats {
+    /// pool size (including the submitting thread as a participant)
+    pub threads: usize,
+    /// jobs that went through the shared queue
+    pub jobs_submitted: u64,
+    /// jobs executed inline (serial mode, single-thread pool, or 1 task)
+    pub jobs_inline: u64,
+    /// individual tasks executed (queued + inline)
+    pub tasks_executed: u64,
+    /// deepest queue depth observed since engine start
+    pub queue_peak: usize,
+    /// summed wall time spent inside task bodies, across all workers
+    pub busy_secs: f64,
+}
+
+impl EngineStats {
+    /// Counters accumulated since `earlier` (same engine). `queue_peak`
+    /// stays the engine-lifetime peak — a high-water mark, not a rate.
+    pub fn delta_since(&self, earlier: &EngineStats) -> EngineStats {
+        EngineStats {
+            threads: self.threads,
+            jobs_submitted: self.jobs_submitted - earlier.jobs_submitted,
+            jobs_inline: self.jobs_inline - earlier.jobs_inline,
+            tasks_executed: self.tasks_executed - earlier.tasks_executed,
+            queue_peak: self.queue_peak,
+            busy_secs: self.busy_secs - earlier.busy_secs,
+        }
+    }
+
+    /// Approximate pool occupancy over a wall-clock window: busy time
+    /// divided by `threads × wall`. Nested jobs can double-count the
+    /// submitting thread, so the value is clamped to `[0, 1]`.
+    pub fn occupancy(&self, wall_secs: f64) -> f64 {
+        if wall_secs <= 0.0 || self.threads == 0 {
+            return 0.0;
+        }
+        (self.busy_secs / (wall_secs * self.threads as f64)).clamp(0.0, 1.0)
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+    jobs_submitted: AtomicU64,
+    jobs_inline: AtomicU64,
+    tasks_executed: AtomicU64,
+    queue_peak: AtomicUsize,
+    busy_nanos: AtomicU64,
+}
+
+impl Shared {
+    fn new() -> Shared {
+        Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            jobs_submitted: AtomicU64::new(0),
+            jobs_inline: AtomicU64::new(0),
+            tasks_executed: AtomicU64::new(0),
+            queue_peak: AtomicUsize::new(0),
+            busy_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Claim-and-execute tasks of `job` until its counter is exhausted.
+    fn execute(&self, job: &Job) {
+        while let Some(i) = job.claim() {
+            let t0 = Instant::now();
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // SAFETY: `run_dyn` keeps the closure alive until every
+                // claimed task has completed (it blocks on the latch),
+                // and tasks only run between claim and complete.
+                let f = unsafe { &*job.f };
+                f(i);
+            }));
+            self.busy_nanos
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.tasks_executed.fetch_add(1, Ordering::Relaxed);
+            if let Err(payload) = result {
+                let mut slot = job.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            job.complete_one();
+        }
+    }
+}
+
+/// One submitted batch: `n_tasks` index-addressed calls into a
+/// lifetime-erased closure, with an atomic claim counter and a
+/// mutex/condvar completion latch.
+struct Job {
+    n_tasks: usize,
+    next: AtomicUsize,
+    /// Raw (lifetime-erased) pointer to the submitter's closure; only
+    /// dereferenced between claim and completion, which `run_dyn`
+    /// brackets inside the closure's real lifetime.
+    f: *const (dyn Fn(usize) + Sync),
+    remaining: Mutex<usize>,
+    done_cv: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+// SAFETY: the raw closure pointer is only dereferenced while the
+// submitting call frame is alive (see `run_dyn`); all other fields are
+// standard thread-safe primitives.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    fn claim(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i < self.n_tasks {
+            Some(i)
+        } else {
+            None
+        }
+    }
+
+    fn complete_one(&self) {
+        let mut remaining = self.remaining.lock().unwrap();
+        *remaining -= 1;
+        if *remaining == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// The pool. One lives for the whole process ([`global`]); tests may
+/// build private instances, which join their workers on drop.
+pub struct PruneEngine {
+    shared: Arc<Shared>,
+    threads: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl PruneEngine {
+    /// Build a pool of `threads` total participants: `threads - 1`
+    /// persistent workers plus the submitting thread itself.
+    pub fn with_threads(threads: usize) -> PruneEngine {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared::new());
+        let mut handles = Vec::new();
+        for i in 0..threads - 1 {
+            let sh = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("prune-engine-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawning engine worker");
+            handles.push(handle);
+        }
+        PruneEngine { shared, threads, handles: Mutex::new(handles) }
+    }
+
+    /// Total participants (workers + submitter).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Suggested items-per-task for splitting `items` units of row-like
+    /// work: a few tasks per thread so concurrent jobs balance.
+    pub fn chunk(&self, items: usize) -> usize {
+        if items == 0 {
+            return 1;
+        }
+        let target = (self.threads * TASKS_PER_THREAD).clamp(1, items);
+        items.div_ceil(target)
+    }
+
+    /// Snapshot of the cumulative activity counters.
+    pub fn stats(&self) -> EngineStats {
+        let s = &self.shared;
+        EngineStats {
+            threads: self.threads,
+            jobs_submitted: s.jobs_submitted.load(Ordering::Relaxed),
+            jobs_inline: s.jobs_inline.load(Ordering::Relaxed),
+            tasks_executed: s.tasks_executed.load(Ordering::Relaxed),
+            queue_peak: s.queue_peak.load(Ordering::Relaxed),
+            busy_secs: s.busy_nanos.load(Ordering::Relaxed) as f64 * 1e-9,
+        }
+    }
+
+    /// Run `f(0..n_tasks)` across the pool and block until every task
+    /// completed. Tasks may borrow the caller's stack (the call does not
+    /// return before the last task finishes). Panics in tasks are
+    /// re-raised here after the batch drains, like `std::thread::scope`.
+    pub fn run<F: Fn(usize) + Sync>(&self, n_tasks: usize, f: F) {
+        self.run_dyn(n_tasks, &f);
+    }
+
+    fn run_dyn(&self, n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n_tasks == 0 {
+            return;
+        }
+        let serial = SERIAL.with(|s| s.get());
+        if serial || self.threads == 1 || n_tasks == 1 {
+            self.shared.jobs_inline.fetch_add(1, Ordering::Relaxed);
+            let t0 = Instant::now();
+            for i in 0..n_tasks {
+                f(i);
+            }
+            self.shared
+                .busy_nanos
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.shared
+                .tasks_executed
+                .fetch_add(n_tasks as u64, Ordering::Relaxed);
+            return;
+        }
+
+        // Erase the closure's lifetime so workers can hold it through
+        // the shared queue. Sound because this frame blocks on the
+        // completion latch below: the closure outlives every call.
+        let f_erased: *const (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let job = Arc::new(Job {
+            n_tasks,
+            next: AtomicUsize::new(0),
+            f: f_erased,
+            remaining: Mutex::new(n_tasks),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut queue = self.shared.queue.lock().unwrap();
+            queue.push_back(Arc::clone(&job));
+            let depth = queue.len();
+            self.shared.queue_peak.fetch_max(depth, Ordering::Relaxed);
+        }
+        self.shared.jobs_submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.work_cv.notify_all();
+
+        // The submitter helps with its own job first (this is what makes
+        // nested submission deadlock-free), then waits for stragglers.
+        self.shared.execute(&job);
+        {
+            let mut remaining = job.remaining.lock().unwrap();
+            while *remaining > 0 {
+                remaining = job.done_cv.wait(remaining).unwrap();
+            }
+        }
+        if let Some(payload) = job.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Split `data` into contiguous bands of `band_len` elements (the
+    /// last may be shorter) and run `f(band_index, band)` for each, in
+    /// parallel. Bands are disjoint, so no synchronization is needed in
+    /// `f`. This is the engine-backed replacement for the repeated
+    /// `split_at_mut` + `thread::scope` pattern of the seed kernels.
+    pub fn for_each_band<T, F>(&self, data: &mut [T], band_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let n = data.len();
+        if n == 0 {
+            return;
+        }
+        let band_len = band_len.max(1);
+        let n_bands = n.div_ceil(band_len);
+        let base = SendPtr(data.as_mut_ptr());
+        self.run(n_bands, move |i| {
+            let start = i * band_len;
+            let len = band_len.min(n - start);
+            // SAFETY: bands are disjoint sub-ranges of `data`, which
+            // outlives `run` (it blocks until all tasks finish).
+            let band = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), len) };
+            f(i, band);
+        });
+    }
+
+    /// Two-slice variant of [`for_each_band`](Self::for_each_band): both
+    /// slices are banded with the same band *count* (`band_a` elements
+    /// of `a` / `band_b` elements of `b` per band) and `f` receives the
+    /// matching pair. Used where a weight band and its mask band must be
+    /// updated together.
+    pub fn for_each_band2<T, U, F>(
+        &self,
+        a: &mut [T],
+        b: &mut [U],
+        band_a: usize,
+        band_b: usize,
+        f: F,
+    ) where
+        T: Send,
+        U: Send,
+        F: Fn(usize, &mut [T], &mut [U]) + Sync,
+    {
+        let (na, nb) = (a.len(), b.len());
+        if na == 0 && nb == 0 {
+            return;
+        }
+        let band_a = band_a.max(1);
+        let band_b = band_b.max(1);
+        let n_bands = na.div_ceil(band_a);
+        assert_eq!(
+            n_bands,
+            nb.div_ceil(band_b),
+            "for_each_band2 slices disagree on band count"
+        );
+        let pa = SendPtr(a.as_mut_ptr());
+        let pb = SendPtr(b.as_mut_ptr());
+        self.run(n_bands, move |i| {
+            let sa = i * band_a;
+            let sb = i * band_b;
+            let la = band_a.min(na - sa);
+            let lb = band_b.min(nb - sb);
+            // SAFETY: disjoint bands of two distinct live slices.
+            let (ba, bb) = unsafe {
+                (
+                    std::slice::from_raw_parts_mut(pa.0.add(sa), la),
+                    std::slice::from_raw_parts_mut(pb.0.add(sb), lb),
+                )
+            };
+            f(i, ba, bb);
+        });
+    }
+}
+
+impl Drop for PruneEngine {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.work_cv.notify_all();
+        for handle in self.handles.lock().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Raw pointer wrapper so band base addresses can cross threads.
+struct SendPtr<T>(*mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+// SAFETY: the pointer is only used to derive disjoint sub-slices of a
+// slice that outlives the parallel region.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                // Drop jobs whose every task has been claimed; their
+                // latches complete without further queue involvement.
+                queue.retain(|j| j.next.load(Ordering::Relaxed) < j.n_tasks);
+                if let Some(j) = queue.front() {
+                    break Arc::clone(j);
+                }
+                queue = shared.work_cv.wait(queue).unwrap();
+            }
+        };
+        shared.execute(&job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_visits_every_index_exactly_once() {
+        let eng = PruneEngine::with_threads(4);
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        eng.run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn nested_jobs_complete_without_deadlock() {
+        let eng = PruneEngine::with_threads(3);
+        let total = AtomicUsize::new(0);
+        let inner = &eng;
+        eng.run(5, |_| {
+            inner.run(7, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 35);
+    }
+
+    #[test]
+    fn for_each_band_bands_are_disjoint_and_complete() {
+        let eng = PruneEngine::with_threads(4);
+        let mut data = vec![usize::MAX; 1003];
+        eng.for_each_band(&mut data, 13, |bi, band| {
+            for v in band.iter_mut() {
+                *v = bi;
+            }
+        });
+        for (k, &v) in data.iter().enumerate() {
+            assert_eq!(v, k / 13, "element {k}");
+        }
+    }
+
+    #[test]
+    fn for_each_band2_pairs_match() {
+        let eng = PruneEngine::with_threads(3);
+        let mut a = vec![0u32; 60];
+        let mut b = vec![false; 30];
+        eng.for_each_band2(&mut a, &mut b, 8, 4, |bi, ba, bb| {
+            for v in ba.iter_mut() {
+                *v = bi as u32;
+            }
+            for v in bb.iter_mut() {
+                *v = true;
+            }
+        });
+        assert!(b.iter().all(|&m| m));
+        for (k, &v) in a.iter().enumerate() {
+            assert_eq!(v as usize, k / 8);
+        }
+    }
+
+    #[test]
+    fn serial_mode_forces_inline_execution() {
+        let eng = PruneEngine::with_threads(4);
+        let before = eng.stats();
+        let out = with_serial(|| {
+            let count = AtomicUsize::new(0);
+            eng.run(16, |_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            count.load(Ordering::Relaxed)
+        });
+        assert_eq!(out, 16);
+        let after = eng.stats().delta_since(&before);
+        assert_eq!(after.jobs_submitted, 0, "serial mode must not queue");
+        assert_eq!(after.jobs_inline, 1);
+        assert_eq!(after.tasks_executed, 16);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let eng = PruneEngine::with_threads(1);
+        let count = AtomicUsize::new(0);
+        eng.run(9, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 9);
+        assert_eq!(eng.stats().jobs_submitted, 0);
+    }
+
+    #[test]
+    fn task_panic_propagates_and_engine_survives() {
+        let eng = PruneEngine::with_threads(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            eng.run(8, |i| {
+                if i == 3 {
+                    panic!("task boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "panic must propagate to the submitter");
+        let count = AtomicUsize::new(0);
+        eng.run(4, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 4, "engine usable after panic");
+    }
+
+    #[test]
+    fn parse_threads_accepts_positive_integers_only() {
+        assert_eq!(parse_threads("1"), Some(1));
+        assert_eq!(parse_threads(" 8 "), Some(8));
+        assert_eq!(parse_threads("0"), None);
+        assert_eq!(parse_threads("-2"), None);
+        assert_eq!(parse_threads("many"), None);
+        assert_eq!(parse_threads(""), None);
+    }
+
+    #[test]
+    fn chunk_targets_a_few_tasks_per_thread() {
+        let eng = PruneEngine::with_threads(4);
+        assert_eq!(eng.chunk(0), 1);
+        assert_eq!(eng.chunk(1), 1);
+        let c = eng.chunk(1000);
+        let tasks = 1000usize.div_ceil(c);
+        assert!((4..=4 * TASKS_PER_THREAD).contains(&tasks), "{tasks} tasks");
+    }
+
+    #[test]
+    fn occupancy_is_bounded() {
+        let s = EngineStats { threads: 4, busy_secs: 100.0, ..Default::default() };
+        assert!(s.occupancy(1.0) <= 1.0);
+        assert_eq!(s.occupancy(0.0), 0.0);
+    }
+
+    #[test]
+    fn global_engine_is_usable() {
+        let eng = global();
+        assert!(eng.threads() >= 1);
+        let count = AtomicUsize::new(0);
+        eng.run(3, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 3);
+    }
+}

@@ -22,7 +22,8 @@
 //! | module | role |
 //! |---|---|
 //! | [`rng`] | deterministic xoshiro256** RNG, Gaussian/Zipf samplers |
-//! | [`linalg`] | from-scratch dense LA: GEMM, Cholesky, solves, permutations, padded batched systems |
+//! | [`engine`] | the `PruneEngine`: persistent work-stealing thread pool with scoped job submission; all crate parallelism (layer-level and row-level) shares its thread budget |
+//! | [`linalg`] | from-scratch dense LA: GEMM, Cholesky, solves, permutations, padded batched systems — row-parallel through [`engine`] |
 //! | [`jsonutil`] | hand-rolled JSON (artifact manifests, configs, reports) |
 //! | [`config`] | model/run configuration + CLI override layer |
 //! | [`data`] | synthetic hierarchical-Markov corpus (train/calib/eval splits) |
@@ -38,6 +39,7 @@
 
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod harness;
 pub mod data;
 pub mod eval;

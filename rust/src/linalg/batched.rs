@@ -14,32 +14,122 @@
 //! graph uses the padded formulation (static shapes), so this module is
 //! also the cross-check oracle for the AOT path.
 
-use super::chol::{chol_solve, cholesky};
+use super::chol::{chol_solve, chol_solve_into, cholesky, cholesky_in_place};
 use super::MatF64;
 use anyhow::Result;
+
+/// Reusable workspace for one Thanos row system, pooled **per engine
+/// worker** through [`with_row_solve_scratch`]: the removal indices
+/// `q`, the rhs `u = w[q]`, the `R̂` buffer (factorized in place) and
+/// the solve temporaries all persist across rows, blocks and layers
+/// instead of being reallocated for every row solve.
+pub struct RowSolveScratch {
+    /// removal indices of the current row (caller-filled)
+    pub q: Vec<usize>,
+    /// rhs `u = w[q]` (caller-filled)
+    pub u: Vec<f64>,
+    /// solution `λ` (output of [`solve_row_in_scratch`])
+    pub lam: Vec<f64>,
+    rhat: MatF64,
+    y: Vec<f64>,
+}
+
+impl RowSolveScratch {
+    pub fn new() -> RowSolveScratch {
+        RowSolveScratch {
+            q: Vec::new(),
+            u: Vec::new(),
+            lam: Vec::new(),
+            rhat: MatF64::zeros(0, 0),
+            y: Vec::new(),
+        }
+    }
+}
+
+impl Default for RowSolveScratch {
+    fn default() -> RowSolveScratch {
+        RowSolveScratch::new()
+    }
+}
+
+thread_local! {
+    static ROW_SOLVE_SCRATCH: std::cell::RefCell<RowSolveScratch> =
+        std::cell::RefCell::new(RowSolveScratch::new());
+}
+
+/// Borrow this worker's pooled [`RowSolveScratch`]. Must not be nested
+/// (the per-thread buffer is handed out exclusively).
+pub fn with_row_solve_scratch<R>(f: impl FnOnce(&mut RowSolveScratch) -> R) -> R {
+    ROW_SOLVE_SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+/// Solve `λ·R̂ = u` for the row system described by `s.q` / `s.u`
+/// (`R̂ = hinv[q][:, q]`), writing `λ` into `s.lam`. Identical
+/// arithmetic to the allocating path ([`cholesky`] + [`chol_solve`]),
+/// only the storage is reused — pinned bit-identical by tests.
+pub fn solve_row_in_scratch(hinv: &MatF64, s: &mut RowSolveScratch) -> Result<()> {
+    let RowSolveScratch { q, u, lam, rhat, y } = s;
+    assert_eq!(q.len(), u.len());
+    lam.clear();
+    let n = q.len();
+    if n == 0 {
+        return Ok(());
+    }
+    rhat.rows = n;
+    rhat.cols = n;
+    rhat.data.clear();
+    rhat.data.resize(n * n, 0.0);
+    for (a, &qa) in q.iter().enumerate() {
+        for (b, &qb) in q.iter().enumerate() {
+            rhat.data[a * n + b] = hinv.at(qa, qb);
+        }
+    }
+    cholesky_in_place(rhat)?;
+    chol_solve_into(rhat, u, y, lam);
+    Ok(())
+}
 
 /// Solve `λ_i · R̂_i = u_i` for every row, where
 /// `R̂_i = hinv[q_i][:, q_i]` — exact-size Cholesky per row.
 /// `R̂` is a principal submatrix of the symmetric-PD `hinv`, hence
 /// symmetric-PD itself; `λ·R̂ = u  ⇔  R̂·λᵀ = uᵀ`.
+///
+/// Rows are independent systems: multi-row calls fan out across the
+/// shared [`crate::engine`] pool, each worker reusing its pooled
+/// scratch. Single-row calls (the per-row path inside already-parallel
+/// block updates) stay inline on the calling worker.
 pub fn solve_rows_direct(
     hinv: &MatF64,
     qs: &[Vec<usize>],
     us: &[Vec<f64>],
 ) -> Result<Vec<Vec<f64>>> {
     assert_eq!(qs.len(), us.len());
-    let mut out = Vec::with_capacity(qs.len());
-    for (q, u) in qs.iter().zip(us) {
-        assert_eq!(q.len(), u.len());
-        if q.is_empty() {
-            out.push(Vec::new());
-            continue;
+    let solve_one = |i: usize, s: &mut RowSolveScratch| -> Result<Vec<f64>> {
+        assert_eq!(qs[i].len(), us[i].len());
+        s.q.clear();
+        s.q.extend_from_slice(&qs[i]);
+        s.u.clear();
+        s.u.extend_from_slice(&us[i]);
+        solve_row_in_scratch(hinv, s)?;
+        Ok(s.lam.clone())
+    };
+    let n_rows = qs.len();
+    let eng = crate::engine::global();
+    if n_rows > 1 && eng.threads() > 1 {
+        let mut slots: Vec<Result<Vec<f64>>> = Vec::with_capacity(n_rows);
+        slots.resize_with(n_rows, || Ok(Vec::new()));
+        eng.for_each_band(&mut slots, 1, |i, slot| {
+            slot[0] = with_row_solve_scratch(|s| solve_one(i, s));
+        });
+        slots.into_iter().collect()
+    } else {
+        let mut s = RowSolveScratch::new();
+        let mut out = Vec::with_capacity(n_rows);
+        for i in 0..n_rows {
+            out.push(solve_one(i, &mut s)?);
         }
-        let rhat = hinv.principal_submatrix(q);
-        let l = cholesky(&rhat)?;
-        out.push(chol_solve(&l, u));
+        Ok(out)
     }
-    Ok(out)
 }
 
 /// §H.1 padded formulation: every system is embedded into an
@@ -156,6 +246,34 @@ mod tests {
             for (a, b) in d.iter().zip(p) {
                 assert!((a - b).abs() < 1e-9, "{a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn scratch_solver_bit_identical_to_allocating_path() {
+        // the pooled-scratch path must reproduce the allocating
+        // cholesky + chol_solve chain bit-for-bit, and must be
+        // independent of engine thread count
+        let hinv = setup(16, 19);
+        let mut r = Rng::new(20);
+        let qs: Vec<Vec<usize>> = vec![vec![0, 2, 9], vec![5], vec![1, 3, 4, 11, 14], vec![]];
+        let us: Vec<Vec<f64>> = qs
+            .iter()
+            .map(|q| q.iter().map(|_| r.normal()).collect())
+            .collect();
+        let got = solve_rows_direct(&hinv, &qs, &us).unwrap();
+        let serial =
+            crate::engine::with_serial(|| solve_rows_direct(&hinv, &qs, &us).unwrap());
+        for (q, (u, (g, s))) in qs.iter().zip(us.iter().zip(got.iter().zip(&serial))) {
+            if q.is_empty() {
+                assert!(g.is_empty());
+                continue;
+            }
+            let rhat = hinv.principal_submatrix(q);
+            let l = cholesky(&rhat).unwrap();
+            let reference = chol_solve(&l, u);
+            assert_eq!(g, &reference, "scratch vs allocating");
+            assert_eq!(g, s, "parallel vs serial");
         }
     }
 

@@ -10,17 +10,28 @@ use anyhow::{bail, Result};
 /// Lower-triangular Cholesky factor `L` with `A = L·Lᵀ`.
 /// Fails if `A` is not (numerically) positive definite — callers damp
 /// the Hessian first (see [`damp_hessian`]).
-///
-/// Right-looking in-place variant: per column, the trailing-submatrix
-/// rank-1 downdate (the O(n²) part of every step) is row-parallel
-/// across `std::thread::scope` workers once the trailing size is large
-/// enough to amortize spawning (§Perf-L3 in EXPERIMENTS.md).
 pub fn cholesky(a: &MatF64) -> Result<MatF64> {
     assert_eq!(a.rows, a.cols, "cholesky needs a square matrix");
-    let n = a.rows;
     let mut m = a.clone();
-    let nt = crate::linalg::gemm::num_threads();
-    // threshold below which the serial update is faster than spawning
+    cholesky_in_place(&mut m)?;
+    Ok(m)
+}
+
+/// In-place variant of [`cholesky`]: factorizes `m` into its own
+/// storage (hot loops reuse one buffer across thousands of small row
+/// systems instead of cloning — see `batched::RowSolveScratch`).
+///
+/// Right-looking: per column, the trailing-submatrix rank-1 downdate
+/// (the O(n²) part of every step) is split into row bands on the shared
+/// [`crate::engine`] pool once the trailing size is large enough to
+/// amortize submission (DESIGN.md §Perf-L3). Band splits never change
+/// per-row arithmetic, so the factor is bit-identical for any thread
+/// count.
+pub fn cholesky_in_place(m: &mut MatF64) -> Result<()> {
+    assert_eq!(m.rows, m.cols, "cholesky needs a square matrix");
+    let n = m.rows;
+    let eng = crate::engine::global();
+    // threshold below which the serial update is faster than submitting
     const PAR_MIN: usize = 192;
     let mut colj = vec![0.0f64; n];
     for j in 0..n {
@@ -39,7 +50,7 @@ pub fn cholesky(a: &MatF64) -> Result<MatF64> {
         if trailing == 0 {
             continue;
         }
-        if trailing < PAR_MIN || nt == 1 {
+        if trailing < PAR_MIN || eng.threads() == 1 {
             for i in j + 1..n {
                 let ci = colj[i];
                 if ci == 0.0 {
@@ -52,30 +63,21 @@ pub fn cholesky(a: &MatF64) -> Result<MatF64> {
             }
         } else {
             let colj_ref = &colj;
-            let chunk = trailing.div_ceil(nt).max(1);
-            std::thread::scope(|s| {
-                let (_, rest) = m.data.split_at_mut((j + 1) * n);
-                let mut rest = rest;
-                let mut i0 = j + 1;
-                while i0 < n {
-                    let rows_here = chunk.min(n - i0);
-                    let (head, tail) = rest.split_at_mut(rows_here * n);
-                    rest = tail;
-                    let start = i0;
-                    s.spawn(move || {
-                        for ri in 0..rows_here {
-                            let i = start + ri;
-                            let ci = colj_ref[i];
-                            if ci == 0.0 {
-                                continue;
-                            }
-                            let row = &mut head[ri * n..(ri + 1) * n];
-                            for k in j + 1..=i {
-                                row[k] -= ci * colj_ref[k];
-                            }
-                        }
-                    });
-                    i0 += rows_here;
+            let rows_per = eng.chunk(trailing);
+            let tail = &mut m.data[(j + 1) * n..];
+            eng.for_each_band(tail, rows_per * n, |bi, head| {
+                let start = j + 1 + bi * rows_per;
+                let rows_here = head.len() / n;
+                for ri in 0..rows_here {
+                    let i = start + ri;
+                    let ci = colj_ref[i];
+                    if ci == 0.0 {
+                        continue;
+                    }
+                    let row = &mut head[ri * n..(ri + 1) * n];
+                    for k in j + 1..=i {
+                        row[k] -= ci * colj_ref[k];
+                    }
                 }
             });
         }
@@ -86,7 +88,7 @@ pub fn cholesky(a: &MatF64) -> Result<MatF64> {
             *m.at_mut(i, j) = 0.0;
         }
     }
-    Ok(m)
+    Ok(())
 }
 
 /// Inverse of a lower-triangular matrix, column-parallel: column `j`
@@ -96,35 +98,31 @@ pub fn cholesky(a: &MatF64) -> Result<MatF64> {
 pub fn lower_tri_inverse(l: &MatF64) -> MatF64 {
     let n = l.rows;
     let mut inv = MatF64::zeros(n, n);
-    let nt = crate::linalg::gemm::num_threads().min(n.max(1));
-    let cols_per = n.div_ceil(nt).max(1);
-    let bands: Vec<(usize, Vec<Vec<f64>>)> = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        let mut j0 = 0usize;
-        while j0 < n {
-            let jend = (j0 + cols_per).min(n);
-            handles.push(s.spawn(move || {
-                let mut cols = Vec::with_capacity(jend - j0);
-                for j in j0..jend {
-                    let mut x = vec![0.0f64; n];
-                    x[j] = 1.0 / l.at(j, j);
-                    for i in j + 1..n {
-                        let li = l.row(i);
-                        let mut sum = 0.0;
-                        for (k, &xk) in x.iter().enumerate().take(i).skip(j) {
-                            sum += li[k] * xk;
-                        }
-                        x[i] = -sum / li[i];
-                    }
-                    cols.push(x);
+    let eng = crate::engine::global();
+    let cols_per = eng.chunk(n);
+    let n_bands = n.div_ceil(cols_per.max(1));
+    let mut bands: Vec<Vec<Vec<f64>>> = vec![Vec::new(); n_bands];
+    eng.for_each_band(&mut bands, 1, |bi, slot| {
+        let j0 = bi * cols_per;
+        let jend = (j0 + cols_per).min(n);
+        let mut cols = Vec::with_capacity(jend - j0);
+        for j in j0..jend {
+            let mut x = vec![0.0f64; n];
+            x[j] = 1.0 / l.at(j, j);
+            for i in j + 1..n {
+                let li = l.row(i);
+                let mut sum = 0.0;
+                for (k, &xk) in x.iter().enumerate().take(i).skip(j) {
+                    sum += li[k] * xk;
                 }
-                (j0, cols)
-            }));
-            j0 = jend;
+                x[i] = -sum / li[i];
+            }
+            cols.push(x);
         }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        slot[0] = cols;
     });
-    for (j0, cols) in bands {
+    for (bi, cols) in bands.into_iter().enumerate() {
+        let j0 = bi * cols_per;
         for (dj, col) in cols.into_iter().enumerate() {
             let j = j0 + dj;
             for i in j..n {
@@ -143,34 +141,30 @@ pub fn upper_tri_solve_many(u: &MatF64, rhs: &MatF64) -> MatF64 {
     assert_eq!(rhs.rows, s);
     let n = rhs.cols;
     let mut x = MatF64::zeros(s, n);
-    let nt = crate::linalg::gemm::num_threads().min(n.max(1));
-    let cols_per = n.div_ceil(nt).max(1);
-    let bands: Vec<(usize, Vec<Vec<f64>>)> = std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        let mut j0 = 0usize;
-        while j0 < n {
-            let jend = (j0 + cols_per).min(n);
-            handles.push(scope.spawn(move || {
-                let mut cols = Vec::with_capacity(jend - j0);
-                for j in j0..jend {
-                    let mut col = vec![0.0f64; s];
-                    for i in (0..s).rev() {
-                        let urow = u.row(i);
-                        let mut sum = rhs.at(i, j);
-                        for (k, &ck) in col.iter().enumerate().skip(i + 1) {
-                            sum -= urow[k] * ck;
-                        }
-                        col[i] = sum / urow[i];
-                    }
-                    cols.push(col);
+    let eng = crate::engine::global();
+    let cols_per = eng.chunk(n);
+    let n_bands = n.div_ceil(cols_per.max(1));
+    let mut bands: Vec<Vec<Vec<f64>>> = vec![Vec::new(); n_bands];
+    eng.for_each_band(&mut bands, 1, |bi, slot| {
+        let j0 = bi * cols_per;
+        let jend = (j0 + cols_per).min(n);
+        let mut cols = Vec::with_capacity(jend - j0);
+        for j in j0..jend {
+            let mut col = vec![0.0f64; s];
+            for i in (0..s).rev() {
+                let urow = u.row(i);
+                let mut sum = rhs.at(i, j);
+                for (k, &ck) in col.iter().enumerate().skip(i + 1) {
+                    sum -= urow[k] * ck;
                 }
-                (j0, cols)
-            }));
-            j0 = jend;
+                col[i] = sum / urow[i];
+            }
+            cols.push(col);
         }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        slot[0] = cols;
     });
-    for (j0, cols) in bands {
+    for (bi, cols) in bands.into_iter().enumerate() {
+        let j0 = bi * cols_per;
         for (dj, col) in cols.into_iter().enumerate() {
             for i in 0..s {
                 *x.at_mut(i, j0 + dj) = col[i];
@@ -231,6 +225,35 @@ pub fn chol_solve(l: &MatF64, b: &[f64]) -> Vec<f64> {
     solve_lower_t(l, &solve_lower(l, b))
 }
 
+/// Allocation-free [`chol_solve`]: forward substitution into `y`, back
+/// substitution into `x` (both resized in place). Exactly the same
+/// arithmetic as [`solve_lower`] + [`solve_lower_t`], so results are
+/// bit-identical — the buffer-reuse variant the per-row Thanos solves
+/// use through `batched::RowSolveScratch`.
+pub fn chol_solve_into(l: &MatF64, b: &[f64], y: &mut Vec<f64>, x: &mut Vec<f64>) {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    y.clear();
+    y.resize(n, 0.0);
+    for i in 0..n {
+        let mut sum = b[i];
+        let lrow = l.row(i);
+        for k in 0..i {
+            sum -= lrow[k] * y[k];
+        }
+        y[i] = sum / lrow[i];
+    }
+    x.clear();
+    x.resize(n, 0.0);
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l.at(k, i) * x[k];
+        }
+        x[i] = sum / l.at(i, i);
+    }
+}
+
 /// Full inverse of a symmetric PD matrix via Cholesky. The n identity
 /// columns are independent solves, so they are fanned out across
 /// threads (the dominant 2n³ of the ~2.3n³ total cost parallelizes).
@@ -238,30 +261,26 @@ pub fn chol_inverse(a: &MatF64) -> Result<MatF64> {
     let n = a.rows;
     let l = cholesky(a)?;
     let mut inv = MatF64::zeros(n, n);
-    let nt = crate::linalg::gemm::num_threads().min(n.max(1));
-    let cols_per = n.div_ceil(nt).max(1);
-    // collect per-thread column bands, then transpose into `inv`
+    let eng = crate::engine::global();
+    let cols_per = eng.chunk(n);
+    let n_bands = n.div_ceil(cols_per.max(1));
+    // collect per-band column groups, then transpose into `inv`
     let l_ref = &l;
-    let bands: Vec<(usize, Vec<Vec<f64>>)> = std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        let mut j0 = 0usize;
-        while j0 < n {
-            let jend = (j0 + cols_per).min(n);
-            handles.push(s.spawn(move || {
-                let mut cols = Vec::with_capacity(jend - j0);
-                let mut e = vec![0.0f64; n];
-                for j in j0..jend {
-                    e[j] = 1.0;
-                    cols.push(chol_solve(l_ref, &e));
-                    e[j] = 0.0;
-                }
-                (j0, cols)
-            }));
-            j0 = jend;
+    let mut bands: Vec<Vec<Vec<f64>>> = vec![Vec::new(); n_bands];
+    eng.for_each_band(&mut bands, 1, |bi, slot| {
+        let j0 = bi * cols_per;
+        let jend = (j0 + cols_per).min(n);
+        let mut cols = Vec::with_capacity(jend - j0);
+        let mut e = vec![0.0f64; n];
+        for j in j0..jend {
+            e[j] = 1.0;
+            cols.push(chol_solve(l_ref, &e));
+            e[j] = 0.0;
         }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+        slot[0] = cols;
     });
-    for (j0, cols) in bands {
+    for (bi, cols) in bands.into_iter().enumerate() {
+        let j0 = bi * cols_per;
         for (dj, col) in cols.into_iter().enumerate() {
             let j = j0 + dj;
             for i in 0..n {
@@ -462,6 +481,28 @@ mod tests {
         let l = cholesky(&a).unwrap();
         let rec = matmul_f64(&l, &l.transpose());
         assert!(a.max_abs_diff(&rec) < 1e-7);
+    }
+
+    #[test]
+    fn cholesky_in_place_matches_cholesky() {
+        let a = random_spd(40, 21);
+        let l = cholesky(&a).unwrap();
+        let mut m = a.clone();
+        cholesky_in_place(&mut m).unwrap();
+        assert_eq!(l.data, m.data, "in-place factor must be bit-identical");
+    }
+
+    #[test]
+    fn chol_solve_into_matches_chol_solve() {
+        let a = random_spd(18, 22);
+        let l = cholesky(&a).unwrap();
+        let mut r = Rng::new(23);
+        let b: Vec<f64> = (0..18).map(|_| r.normal()).collect();
+        let direct = chol_solve(&l, &b);
+        let mut y = Vec::new();
+        let mut x = Vec::new();
+        chol_solve_into(&l, &b, &mut y, &mut x);
+        assert_eq!(direct, x, "scratch solve must be bit-identical");
     }
 
     #[test]

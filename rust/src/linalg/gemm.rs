@@ -4,15 +4,18 @@
 //! bench and every pure-Rust pruning path run through here. The design
 //! mirrors the classic cache-blocked loop nest: pack nothing, walk the
 //! `k` dimension innermost over a transposed-B access pattern, and
-//! split the output row range across `std::thread::scope` workers.
+//! split the output row range into bands executed on the shared
+//! [`crate::engine::PruneEngine`] pool (row-band tasks are independent,
+//! so results are bit-identical for any thread count).
+
+use crate::engine;
 
 use super::{Mat, MatF64};
 
-/// Number of worker threads used for row-parallel kernels.
+/// Number of worker threads available to row-parallel kernels (the
+/// shared engine's pool size; honours `THANOS_THREADS`).
 pub fn num_threads() -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+    engine::global().threads()
 }
 
 /// `C = A · B` for f32 matrices (f32 accumulate, k-blocked).
@@ -30,27 +33,15 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(c.cols, b.cols);
     c.data.iter_mut().for_each(|v| *v = 0.0);
     let (m, k, n) = (a.rows, a.cols, b.cols);
-    let nt = num_threads().min(m.max(1));
-    if m * n * k < 64 * 64 * 64 || nt == 1 {
+    let eng = engine::global();
+    if m * n * k < 64 * 64 * 64 || eng.threads() == 1 {
         matmul_rows(a, b, &mut c.data, 0, m, k, n);
         return;
     }
-    let chunk = m.div_ceil(nt);
-    let a_ref = &*a;
-    let b_ref = &*b;
-    std::thread::scope(|s| {
-        let mut rest = c.data.as_mut_slice();
-        let mut row0 = 0usize;
-        while row0 < m {
-            let rows_here = chunk.min(m - row0);
-            let (head, tail) = rest.split_at_mut(rows_here * n);
-            rest = tail;
-            let r0 = row0;
-            s.spawn(move || {
-                matmul_rows(a_ref, b_ref, head, r0, r0 + rows_here, k, n);
-            });
-            row0 += rows_here;
-        }
+    let rows_per = eng.chunk(m);
+    eng.for_each_band(&mut c.data, rows_per * n, |bi, out| {
+        let r0 = bi * rows_per;
+        matmul_rows(a, b, out, r0, r0 + out.len() / n, k, n);
     });
 }
 
@@ -97,25 +88,13 @@ pub fn matmul_f64(a: &MatF64, b: &MatF64) -> MatF64 {
             }
         }
     };
-    let nt = num_threads().min(m.max(1));
-    if m * n * k < 64 * 64 * 64 || nt == 1 {
+    let eng = engine::global();
+    if m * n * k < 64 * 64 * 64 || eng.threads() == 1 {
         body(0, &mut c.data);
         return c;
     }
-    let chunk = m.div_ceil(nt);
-    let body = &body;
-    std::thread::scope(|s| {
-        let mut rest = c.data.as_mut_slice();
-        let mut row0 = 0usize;
-        while row0 < m {
-            let rows_here = chunk.min(m - row0);
-            let (head, tail) = rest.split_at_mut(rows_here * n);
-            rest = tail;
-            let r0 = row0;
-            s.spawn(move || body(r0, head));
-            row0 += rows_here;
-        }
-    });
+    let rows_per = eng.chunk(m);
+    eng.for_each_band(&mut c.data, rows_per * n, |bi, out| body(bi * rows_per, out));
     c
 }
 
@@ -126,36 +105,35 @@ pub fn matmul_f64(a: &MatF64, b: &MatF64) -> MatF64 {
 pub fn xxt_f64(x: &Mat) -> MatF64 {
     let b = x.rows;
     let mut h = MatF64::zeros(b, b);
-    let nt = num_threads().min(b.max(1));
-    let x_ref = &*x;
-    // Parallel over rows i; each worker fills h[i][i..].
-    std::thread::scope(|s| {
-        let mut rest = h.data.as_mut_slice();
-        let cols = b;
-        let chunk = b.div_ceil(nt);
-        let mut row0 = 0usize;
-        while row0 < b {
-            let rows_here = chunk.min(b - row0);
-            let (head, tail) = rest.split_at_mut(rows_here * cols);
-            rest = tail;
-            let r0 = row0;
-            s.spawn(move || {
-                for i in r0..r0 + rows_here {
-                    let xi = x_ref.row(i);
-                    let hrow = &mut head[(i - r0) * cols..(i - r0 + 1) * cols];
-                    for j in i..cols {
-                        let xj = x_ref.row(j);
-                        let mut acc = 0.0f64;
-                        for (p, &v) in xi.iter().enumerate() {
-                            acc += (v as f64) * (xj[p] as f64);
-                        }
-                        hrow[j] = acc;
-                    }
+    if b == 0 {
+        return h;
+    }
+    let eng = engine::global();
+    let band_body = |r0: usize, head: &mut [f64]| {
+        let rows_here = head.len() / b;
+        for i in r0..r0 + rows_here {
+            let xi = x.row(i);
+            let hrow = &mut head[(i - r0) * b..(i - r0 + 1) * b];
+            for j in i..b {
+                let xj = x.row(j);
+                let mut acc = 0.0f64;
+                for (p, &v) in xi.iter().enumerate() {
+                    acc += (v as f64) * (xj[p] as f64);
                 }
-            });
-            row0 += rows_here;
+                hrow[j] = acc;
+            }
         }
-    });
+    };
+    // ~b²·a/2 useful flops: run tiny Gram matrices inline.
+    if b * b * x.cols < 32 * 32 * 32 || eng.threads() == 1 {
+        band_body(0, &mut h.data);
+    } else {
+        let rows_per = eng.chunk(b);
+        // Parallel over row bands; band bi fills h[i][i..] for its rows.
+        eng.for_each_band(&mut h.data, rows_per * b, |bi, head| {
+            band_body(bi * rows_per, head);
+        });
+    }
     // mirror upper → lower
     for i in 0..b {
         for j in 0..i {

@@ -1,14 +1,17 @@
-//! Lightweight metrics: named counters and wall-clock stage timers.
+//! Lightweight metrics: named counters, gauges and wall-clock stage
+//! timers.
 //!
 //! The coordinator and the benches both report through this module so
 //! that pipeline-stage timing (capture / hessian / prune / re-forward)
-//! is visible without external tracing crates.
+//! and the [`crate::engine`] pool's queue/occupancy counters are
+//! visible without external tracing crates.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-/// A set of named counters + accumulated stage durations. Thread-safe.
+/// A set of named counters + gauges + accumulated stage durations.
+/// Thread-safe.
 #[derive(Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
@@ -17,6 +20,7 @@ pub struct Metrics {
 #[derive(Default)]
 struct Inner {
     counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
     timers: BTreeMap<String, Duration>,
 }
 
@@ -41,6 +45,30 @@ impl Metrics {
         let out = f();
         self.add_time(name, t0.elapsed());
         out
+    }
+
+    /// Set a point-in-time gauge (last write wins).
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    /// Record a [`crate::engine::EngineStats`] snapshot as gauges under
+    /// `<prefix>.*` — the per-engine queue/occupancy readout the
+    /// coordinator report and the fig9 bench surface. `wall_secs` is
+    /// the observation window used for the occupancy estimate.
+    pub fn record_engine(&self, prefix: &str, stats: &crate::engine::EngineStats, wall_secs: f64) {
+        self.set_gauge(&format!("{prefix}.threads"), stats.threads as f64);
+        self.set_gauge(&format!("{prefix}.jobs_submitted"), stats.jobs_submitted as f64);
+        self.set_gauge(&format!("{prefix}.jobs_inline"), stats.jobs_inline as f64);
+        self.set_gauge(&format!("{prefix}.tasks_executed"), stats.tasks_executed as f64);
+        self.set_gauge(&format!("{prefix}.queue_peak"), stats.queue_peak as f64);
+        self.set_gauge(&format!("{prefix}.busy_secs"), stats.busy_secs);
+        self.set_gauge(&format!("{prefix}.occupancy"), stats.occupancy(wall_secs));
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -69,6 +97,9 @@ impl Metrics {
         let mut out = String::new();
         for (k, v) in &g.counters {
             out.push_str(&format!("  {k:<40} {v}\n"));
+        }
+        for (k, v) in &g.gauges {
+            out.push_str(&format!("  {k:<40} {v:.3}\n"));
         }
         for (k, d) in &g.timers {
             out.push_str(&format!("  {k:<40} {:.3}s\n", d.as_secs_f64()));
@@ -121,7 +152,35 @@ mod tests {
         let m = Metrics::new();
         m.incr("a", 1);
         m.add_time("b", Duration::from_millis(5));
+        m.set_gauge("g", 0.5);
         let r = m.report();
-        assert!(r.contains('a') && r.contains('b'));
+        assert!(r.contains('a') && r.contains('b') && r.contains('g'));
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let m = Metrics::new();
+        assert_eq!(m.gauge("x"), None);
+        m.set_gauge("x", 1.0);
+        m.set_gauge("x", 2.5);
+        assert_eq!(m.gauge("x"), Some(2.5));
+    }
+
+    #[test]
+    fn engine_snapshot_lands_as_gauges() {
+        let m = Metrics::new();
+        let stats = crate::engine::EngineStats {
+            threads: 4,
+            jobs_submitted: 10,
+            jobs_inline: 2,
+            tasks_executed: 80,
+            queue_peak: 3,
+            busy_secs: 2.0,
+        };
+        m.record_engine("engine", &stats, 1.0);
+        assert_eq!(m.gauge("engine.threads"), Some(4.0));
+        assert_eq!(m.gauge("engine.jobs_submitted"), Some(10.0));
+        assert_eq!(m.gauge("engine.queue_peak"), Some(3.0));
+        assert_eq!(m.gauge("engine.occupancy"), Some(0.5));
     }
 }

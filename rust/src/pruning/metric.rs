@@ -9,15 +9,25 @@ use crate::pruning::CalibStats;
 /// the `r` smallest metric values (the `ψ` of eq. 11, applied to an
 /// arbitrary score matrix). Ties are broken by index for determinism.
 pub fn smallest_r_mask(metric: &[f64], r: usize) -> Vec<bool> {
+    let mut mask = Vec::new();
+    smallest_r_mask_into(metric, r, &mut mask);
+    mask
+}
+
+/// [`smallest_r_mask`] writing into a reused buffer (cleared and
+/// resized in place) — the hot-loop variant the block-wise walks use so
+/// the `c×rest` mask is not reallocated per block.
+pub fn smallest_r_mask_into(metric: &[f64], r: usize, mask: &mut Vec<bool>) {
     let n = metric.len();
     let r = r.min(n);
-    let mut mask = vec![false; n];
+    mask.clear();
+    mask.resize(n, false);
     if r == 0 {
-        return mask;
+        return;
     }
     if r == n {
         mask.iter_mut().for_each(|m| *m = true);
-        return mask;
+        return;
     }
     let mut idx: Vec<u32> = (0..n as u32).collect();
     idx.select_nth_unstable_by(r - 1, |&a, &b| {
@@ -29,24 +39,55 @@ pub fn smallest_r_mask(metric: &[f64], r: usize) -> Vec<bool> {
     for &i in &idx[..r] {
         mask[i as usize] = true;
     }
-    mask
 }
 
 /// The Wanda/OBD saliency `|W_ij|·‖X_{j:}‖₂` over a column window
 /// `[c0, c1)` of `w`, flattened row-major into a `c×(c1-c0)` score
 /// buffer. `xnorm_sq[j]` indexes the *original* column space.
 pub fn wanda_metric_window(w: &Mat, stats: &CalibStats, c0: usize, c1: usize) -> Vec<f64> {
+    let mut out = Vec::new();
+    wanda_metric_window_into(w, stats, c0, c1, &mut out);
+    out
+}
+
+/// [`wanda_metric_window`] writing into a reused buffer — the per-call
+/// scratch the Thanos block walk threads through every block instead of
+/// reallocating the full `c×rest` metric each iteration.
+pub fn wanda_metric_window_into(
+    w: &Mat,
+    stats: &CalibStats,
+    c0: usize,
+    c1: usize,
+    out: &mut Vec<f64>,
+) {
+    wanda_metric_window_rows_into(w, w.rows, stats, c0, c1, out);
+}
+
+/// Same, restricted to the first `rows` rows of `w` (the n:m walk
+/// scores only non-outlier rows; passing `rows` here avoids cloning a
+/// row-slice of `W` per block).
+pub fn wanda_metric_window_rows_into(
+    w: &Mat,
+    rows: usize,
+    stats: &CalibStats,
+    c0: usize,
+    c1: usize,
+    out: &mut Vec<f64>,
+) {
     assert!(c0 <= c1 && c1 <= w.cols);
+    assert!(rows <= w.rows);
     let width = c1 - c0;
-    let mut out = vec![0.0f64; w.rows * width];
-    for i in 0..w.rows {
+    out.clear();
+    out.resize(rows * width, 0.0);
+    // hoist the per-column ‖X_j‖ terms out of the row loop
+    let col_norm: Vec<f64> = (c0..c1).map(|j| stats.xnorm_sq[j].sqrt()).collect();
+    for i in 0..rows {
         let row = w.row(i);
         let dst = &mut out[i * width..(i + 1) * width];
         for (k, j) in (c0..c1).enumerate() {
-            dst[k] = (row[j].abs() as f64) * stats.xnorm_sq[j].sqrt();
+            dst[k] = (row[j].abs() as f64) * col_norm[k];
         }
     }
-    out
 }
 
 /// `ψ_X(W_window, r)` — the global-residual-mask construction of
@@ -141,6 +182,21 @@ mod tests {
                 assert!((metric[i * 3 + k] - expect).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn into_variants_match_and_reset_reused_buffers() {
+        let (w, stats, _) = testutil::setup(5, 12, 24, 11);
+        let full = wanda_metric_window(&w, &stats, 3, 10);
+        let mut buf = vec![9.0f64; 3]; // wrong size + stale values
+        wanda_metric_window_into(&w, &stats, 3, 10, &mut buf);
+        assert_eq!(full, buf);
+        let mut rows_buf = Vec::new();
+        wanda_metric_window_rows_into(&w, 3, &stats, 3, 10, &mut rows_buf);
+        assert_eq!(&full[..3 * 7], &rows_buf[..]);
+        let mut mask = vec![true; 99];
+        smallest_r_mask_into(&full, 10, &mut mask);
+        assert_eq!(mask, smallest_r_mask(&full, 10));
     }
 
     #[test]

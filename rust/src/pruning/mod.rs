@@ -191,6 +191,38 @@ impl Pruned {
     }
 }
 
+/// Prune several **independent** layers concurrently through the
+/// shared [`crate::engine`] pool — the BESA-style observation that the
+/// block-wise objective decouples the layers of one transformer block,
+/// so layer-level parallelism is free accuracy-wise. Each layer task
+/// runs the ordinary [`prune`] dispatch (whose inner kernels submit
+/// row-parallel work to the *same* pool, so the two levels share one
+/// thread budget instead of oversubscribing).
+///
+/// Returns one `(Pruned, secs)` result per input layer, in input order;
+/// `secs` is that layer's own wall time (layers overlap, so the sum can
+/// exceed the batch wall time). Results are bit-identical to calling
+/// [`prune`] sequentially — pinned by the determinism tests.
+pub fn prune_many(
+    layers: &[(&Mat, &CalibStats)],
+    method: Method,
+    pattern: Pattern,
+    opts: &PruneOpts,
+) -> Vec<anyhow::Result<(Pruned, f64)>> {
+    let mut slots: Vec<Option<anyhow::Result<(Pruned, f64)>>> = Vec::with_capacity(layers.len());
+    slots.resize_with(layers.len(), || None);
+    crate::engine::global().for_each_band(&mut slots, 1, |i, slot| {
+        let (w, stats) = layers[i];
+        let t0 = std::time::Instant::now();
+        let res = prune(method, w, stats, pattern, opts);
+        slot[0] = Some(res.map(|p| (p, t0.elapsed().as_secs_f64())));
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("prune_many: every layer slot is filled"))
+        .collect()
+}
+
 /// Dispatch: prune `w` with `method` under `pattern`.
 pub fn prune(
     method: Method,

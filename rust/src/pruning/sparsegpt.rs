@@ -12,9 +12,8 @@
 //! O(b³) instead of O(b⁴).
 
 use crate::linalg::chol::inverse_factor_upper;
-use crate::linalg::gemm::num_threads;
 use crate::linalg::{Mat, MatF64};
-use crate::pruning::metric::smallest_r_mask;
+use crate::pruning::metric::{smallest_r_mask, smallest_r_mask_into};
 use crate::pruning::{CalibStats, PruneOpts, Pruned};
 use anyhow::Result;
 
@@ -77,51 +76,41 @@ pub fn semi_structured(
     let (c, b) = (w.rows, w.cols);
     let mut wk = w.clone();
     let mut mask = vec![false; c * b];
-    // per-row independent: parallelize across row bands
+    // per-row independent: row bands on the shared engine pool
     let u_ref = &u;
-    let nt = num_threads().min(c.max(1));
-    let chunk = c.div_ceil(nt);
-    std::thread::scope(|scope| {
-        let mut wrest = wk.data.as_mut_slice();
-        let mut mrest = mask.as_mut_slice();
-        let mut row0 = 0;
-        while row0 < c {
-            let rows_here = chunk.min(c - row0);
-            let (whead, wtail) = wrest.split_at_mut(rows_here * b);
-            let (mhead, mtail) = mrest.split_at_mut(rows_here * b);
-            wrest = wtail;
-            mrest = mtail;
-            scope.spawn(move || {
-                for ri in 0..rows_here {
-                    let row = &mut whead[ri * b..(ri + 1) * b];
-                    let rmask = &mut mhead[ri * b..(ri + 1) * b];
-                    for g in (0..b).step_by(m) {
-                        // choose n smallest metric within the group
-                        let metric: Vec<f64> = (g..g + m)
-                            .map(|j| {
-                                let d = u_ref.at(j, j);
-                                (row[j] as f64).powi(2) / (d * d)
-                            })
-                            .collect();
-                        let gm = smallest_r_mask(&metric, n);
-                        // apply OBS updates column by column inside the group
-                        for (k, j) in (g..g + m).enumerate() {
-                            if !gm[k] {
-                                continue;
-                            }
-                            rmask[j] = true;
-                            let d = u_ref.at(j, j);
-                            let err = row[j] as f64 / d;
-                            let urow = u_ref.row(j);
-                            for t in j..b {
-                                row[t] -= (err * urow[t]) as f32;
-                            }
-                            row[j] = 0.0;
-                        }
-                    }
+    let eng = crate::engine::global();
+    let rows_per = eng.chunk(c);
+    let band = rows_per * b;
+    eng.for_each_band2(&mut wk.data, &mut mask, band, band, |_bi, whead, mhead| {
+        let rows_here = whead.len() / b;
+        // group-metric scratch reused across this band's rows
+        let mut metric = vec![0.0f64; m];
+        let mut gm = Vec::new();
+        for ri in 0..rows_here {
+            let row = &mut whead[ri * b..(ri + 1) * b];
+            let rmask = &mut mhead[ri * b..(ri + 1) * b];
+            for g in (0..b).step_by(m) {
+                // choose n smallest metric within the group
+                for (k, j) in (g..g + m).enumerate() {
+                    let d = u_ref.at(j, j);
+                    metric[k] = (row[j] as f64).powi(2) / (d * d);
                 }
-            });
-            row0 += rows_here;
+                smallest_r_mask_into(&metric, n, &mut gm);
+                // apply OBS updates column by column inside the group
+                for (k, j) in (g..g + m).enumerate() {
+                    if !gm[k] {
+                        continue;
+                    }
+                    rmask[j] = true;
+                    let d = u_ref.at(j, j);
+                    let err = row[j] as f64 / d;
+                    let urow = u_ref.row(j);
+                    for t in j..b {
+                        row[t] -= (err * urow[t]) as f32;
+                    }
+                    row[j] = 0.0;
+                }
+            }
         }
     });
     Ok(Pruned { w: wk, mask })
@@ -167,38 +156,31 @@ pub fn structured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Resu
 }
 
 /// Apply per-column OBS updates for the masked entries in `[j1, j2)`,
-/// rows in parallel (rows are independent once `U` is fixed).
+/// row bands in parallel on the shared engine (rows are independent
+/// once `U` is fixed).
 fn update_rows(wk: &mut Mat, mask: &[bool], u: &MatF64, j1: usize, j2: usize) {
     let (c, b) = (wk.rows, wk.cols);
-    let nt = num_threads().min(c.max(1));
-    let chunk = c.div_ceil(nt);
-    std::thread::scope(|scope| {
-        let mut wrest = wk.data.as_mut_slice();
-        let mut row0 = 0;
-        while row0 < c {
-            let rows_here = chunk.min(c - row0);
-            let (whead, wtail) = wrest.split_at_mut(rows_here * b);
-            wrest = wtail;
-            let mask_ref = &mask[row0 * b..(row0 + rows_here) * b];
-            scope.spawn(move || {
-                for ri in 0..rows_here {
-                    let row = &mut whead[ri * b..(ri + 1) * b];
-                    let rmask = &mask_ref[ri * b..(ri + 1) * b];
-                    for j in j1..j2 {
-                        if !rmask[j] {
-                            continue;
-                        }
-                        let d = u.at(j, j);
-                        let err = row[j] as f64 / d;
-                        let urow = u.row(j);
-                        for t in j..b {
-                            row[t] -= (err * urow[t]) as f32;
-                        }
-                        row[j] = 0.0;
-                    }
+    let eng = crate::engine::global();
+    let rows_per = eng.chunk(c);
+    eng.for_each_band(&mut wk.data, rows_per * b, |bi, whead| {
+        let row0 = bi * rows_per;
+        let rows_here = whead.len() / b;
+        let mask_ref = &mask[row0 * b..(row0 + rows_here) * b];
+        for ri in 0..rows_here {
+            let row = &mut whead[ri * b..(ri + 1) * b];
+            let rmask = &mask_ref[ri * b..(ri + 1) * b];
+            for j in j1..j2 {
+                if !rmask[j] {
+                    continue;
                 }
-            });
-            row0 += rows_here;
+                let d = u.at(j, j);
+                let err = row[j] as f64 / d;
+                let urow = u.row(j);
+                for t in j..b {
+                    row[t] -= (err * urow[t]) as f32;
+                }
+                row[j] = 0.0;
+            }
         }
     });
 }

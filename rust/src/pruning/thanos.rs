@@ -16,12 +16,14 @@
 //! accounted for exactly (the effect the paper credits for its
 //! structured-pruning wins — §5.2, App. A.1).
 
-use crate::linalg::batched::{apply_row_update, solve_rows_direct};
+use crate::linalg::batched::{apply_row_update, solve_row_in_scratch, with_row_solve_scratch};
 use crate::linalg::chol::chol_inverse;
-use crate::linalg::gemm::{matmul_f64, num_threads};
+use crate::linalg::gemm::matmul_f64;
 use crate::linalg::perm::Perm;
 use crate::linalg::{Mat, MatF64};
-use crate::pruning::metric::{nm_mask, phi, smallest_r_mask, wanda_metric_window};
+use crate::pruning::metric::{
+    nm_mask, smallest_r_mask_into, wanda_metric_window_into, wanda_metric_window_rows_into,
+};
 use crate::pruning::{CalibStats, PruneOpts, Pruned};
 use anyhow::{Context, Result};
 
@@ -84,6 +86,13 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
     let h_full = stats.hessian(opts.percdamp);
     let suffix = SuffixInverse::new(h_full, opts.paper_faithful_inverse)?;
 
+    // Per-call scratch carried across the block walk: the full `c×rest`
+    // metric / mask buffers used to be reallocated on every block
+    // iteration (O(b/B) large allocations per layer for pure churn).
+    let mut metric: Vec<f64> = Vec::new();
+    let mut res_mask: Vec<bool> = Vec::new();
+    let mut local: Vec<bool> = Vec::new();
+
     let mut j1 = 0;
     while j1 < b && r_left > 0 {
         let j2 = (j1 + bsize).min(b);
@@ -94,9 +103,10 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
 
         // ψ_X over the residual window (global residual mask, line 6),
         // local part = first `width` columns (line 7)
-        let metric = wanda_metric_window(&wk, stats, j1, b);
-        let res_mask = smallest_r_mask(&metric, r_left.min(c * rest));
-        let mut local = vec![false; c * width];
+        wanda_metric_window_into(&wk, stats, j1, b, &mut metric);
+        smallest_r_mask_into(&metric, r_left.min(c * rest), &mut res_mask);
+        local.clear();
+        local.resize(c * width, false);
         for i in 0..c {
             local[i * width..(i + 1) * width]
                 .copy_from_slice(&res_mask[i * rest..i * rest + width]);
@@ -167,6 +177,9 @@ pub fn semi_structured(
     let mut mask_q = vec![false; c * b];
     let suffix = SuffixInverse::new(h_full, opts.paper_faithful_inverse)?;
 
+    // block-metric scratch reused across the walk (scores only the
+    // non-outlier rows directly — no per-block row-slice clone)
+    let mut block_metric: Vec<f64> = Vec::new();
     let mut j1 = 0;
     while j1 < b {
         let j2 = (j1 + bsize).min(b);
@@ -174,8 +187,7 @@ pub fn semi_structured(
         debug_assert_eq!(width % m, 0);
         let (hinv_bb, hinv_rows) = suffix.block_factors(j1, width, b)?;
         // n:m mask over the block, pruned rows only
-        let sub = wq.slice_rows(0, c_prune);
-        let block_metric = wanda_metric_window(&sub, stats, j1, j2);
+        wanda_metric_window_rows_into(&wq, c_prune, stats, j1, j2, &mut block_metric);
         let local = nm_mask(&block_metric, c_prune, width, n, m);
         for i in 0..c_prune {
             for k in 0..width {
@@ -239,41 +251,33 @@ pub fn structured(
     let us = u.block(0, s, 0, s);
     let u_top = u.block(0, s, 0, b);
     let z = crate::linalg::chol::upper_tri_solve_many(&us, &u_top);
-    // W[0..c_prune] += Δ = −W[:,0..s]·Z
-    let nt = num_threads().min(c_prune.max(1));
-    let chunk = c_prune.div_ceil(nt).max(1);
+    // W[0..c_prune] += Δ = −W[:,0..s]·Z, row bands on the shared engine
     let z_ref = &z;
-    std::thread::scope(|scope| {
-        let mut rest = wp.data.as_mut_slice();
-        let mut row0 = 0usize;
-        while row0 < c_prune {
-            let rows_here = chunk.min(c_prune - row0);
-            let (head, tail) = rest.split_at_mut(rows_here * b);
-            rest = tail;
-            scope.spawn(move || {
-                for ri in 0..rows_here {
-                    let row = &mut head[ri * b..(ri + 1) * b];
-                    // accumulate Δ in f64 then apply
-                    let mut delta = vec![0.0f64; b];
-                    for t in 0..s {
-                        let wt = row[t] as f64;
-                        if wt == 0.0 {
-                            continue;
-                        }
-                        let zr = z_ref.row(t);
-                        for jj in 0..b {
-                            delta[jj] += wt * zr[jj];
-                        }
-                    }
-                    for jj in 0..b {
-                        row[jj] -= delta[jj] as f32;
-                    }
-                    for item in row.iter_mut().take(s) {
-                        *item = 0.0;
-                    }
+    let eng = crate::engine::global();
+    let rows_per = eng.chunk(c_prune);
+    eng.for_each_band(&mut wp.data[..c_prune * b], rows_per * b, |_bi, head| {
+        let rows_here = head.len() / b;
+        // Δ accumulator (f64) reused across the band's rows
+        let mut delta = vec![0.0f64; b];
+        for ri in 0..rows_here {
+            let row = &mut head[ri * b..(ri + 1) * b];
+            delta.iter_mut().for_each(|v| *v = 0.0);
+            for t in 0..s {
+                let wt = row[t] as f64;
+                if wt == 0.0 {
+                    continue;
                 }
-            });
-            row0 += rows_here;
+                let zr = z_ref.row(t);
+                for jj in 0..b {
+                    delta[jj] += wt * zr[jj];
+                }
+            }
+            for jj in 0..b {
+                row[jj] -= delta[jj] as f32;
+            }
+            for item in row.iter_mut().take(s) {
+                *item = 0.0;
+            }
         }
     });
 
@@ -301,34 +305,25 @@ pub fn row_losses(w: &Mat, h: &MatF64) -> Vec<f64> {
     let (c, b) = (w.rows, w.cols);
     assert_eq!(h.rows, b);
     let mut out = vec![0.0f64; c];
-    let nt = num_threads().min(c.max(1));
-    let chunk = c.div_ceil(nt).max(1);
-    std::thread::scope(|scope| {
-        let mut rest = out.as_mut_slice();
-        let mut row0 = 0usize;
-        while row0 < c {
-            let rows_here = chunk.min(c - row0);
-            let (head, tail) = rest.split_at_mut(rows_here);
-            rest = tail;
-            scope.spawn(move || {
-                for (k, loss) in head.iter_mut().enumerate() {
-                    let wrow = w.row(row0 + k);
-                    let mut acc = 0.0f64;
-                    for (jj, &wj) in wrow.iter().enumerate() {
-                        if wj == 0.0 {
-                            continue;
-                        }
-                        let hrow = h.row(jj);
-                        let mut dot = 0.0f64;
-                        for (t, &wt) in wrow.iter().enumerate() {
-                            dot += wt as f64 * hrow[t];
-                        }
-                        acc += wj as f64 * dot;
-                    }
-                    *loss = acc;
+    let eng = crate::engine::global();
+    let rows_per = eng.chunk(c);
+    eng.for_each_band(&mut out, rows_per, |bi, head| {
+        let row0 = bi * rows_per;
+        for (k, loss) in head.iter_mut().enumerate() {
+            let wrow = w.row(row0 + k);
+            let mut acc = 0.0f64;
+            for (jj, &wj) in wrow.iter().enumerate() {
+                if wj == 0.0 {
+                    continue;
                 }
-            });
-            row0 += rows_here;
+                let hrow = h.row(jj);
+                let mut dot = 0.0f64;
+                for (t, &wt) in wrow.iter().enumerate() {
+                    dot += wt as f64 * hrow[t];
+                }
+                acc += wj as f64 * dot;
+            }
+            *loss = acc;
         }
     });
     out
@@ -366,36 +361,42 @@ fn update_rows_blocked_subset(
     assert_eq!(hinv_bb.rows, width);
     assert_eq!(hinv_rows.rows, width);
     assert_eq!(hinv_rows.cols, rest);
-    let nt = num_threads().min(c_limit.max(1));
-    let chunk = c_limit.div_ceil(nt).max(1);
+    if c_limit == 0 {
+        return Ok(());
+    }
     let errors: std::sync::Mutex<Vec<anyhow::Error>> = std::sync::Mutex::new(Vec::new());
-    std::thread::scope(|scope| {
-        let mut wrest = wk.data.as_mut_slice();
-        let mut row0 = 0usize;
-        while row0 < c_limit {
-            let rows_here = chunk.min(c_limit - row0);
-            let (whead, wtail) = wrest.split_at_mut(rows_here * b);
-            wrest = wtail;
-            let local_ref = &local[row0 * width..(row0 + rows_here) * width];
-            let errs = &errors;
-            scope.spawn(move || {
-                for ri in 0..rows_here {
-                    let lmask = &local_ref[ri * width..(ri + 1) * width];
-                    let q = phi(lmask);
-                    if q.is_empty() {
-                        continue;
-                    }
-                    let row = &mut whead[ri * b + j1..(ri + 1) * b];
-                    debug_assert_eq!(row.len(), rest);
-                    let u: Vec<f64> = q.iter().map(|&t| row[t] as f64).collect();
-                    match solve_rows_direct(hinv_bb, &[q.clone()], &[u]) {
-                        Ok(lams) => apply_row_update(row, hinv_rows, &q, &lams[0]),
-                        Err(e) => errs.lock().unwrap().push(e),
+    let eng = crate::engine::global();
+    let rows_per = eng.chunk(c_limit);
+    eng.for_each_band(&mut wk.data[..c_limit * b], rows_per * b, |bi, whead| {
+        let row0 = bi * rows_per;
+        let rows_here = whead.len() / b;
+        let local_ref = &local[row0 * width..(row0 + rows_here) * width];
+        // q / u / R̂ / λ buffers live in this worker's pooled scratch —
+        // no per-row (or even per-block) allocations on the hot path
+        with_row_solve_scratch(|s| {
+            for ri in 0..rows_here {
+                let lmask = &local_ref[ri * width..(ri + 1) * width];
+                s.q.clear();
+                for (k, &selected) in lmask.iter().enumerate() {
+                    if selected {
+                        s.q.push(k);
                     }
                 }
-            });
-            row0 += rows_here;
-        }
+                if s.q.is_empty() {
+                    continue;
+                }
+                let row = &mut whead[ri * b + j1..(ri + 1) * b];
+                debug_assert_eq!(row.len(), rest);
+                s.u.clear();
+                for &t in &s.q {
+                    s.u.push(row[t] as f64);
+                }
+                match solve_row_in_scratch(hinv_bb, s) {
+                    Ok(()) => apply_row_update(row, hinv_rows, &s.q, &s.lam),
+                    Err(e) => errors.lock().unwrap().push(e),
+                }
+            }
+        });
     });
     let errs = errors.into_inner().unwrap();
     if let Some(e) = errs.into_iter().next() {

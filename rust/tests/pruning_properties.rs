@@ -210,6 +210,83 @@ fn prop_idempotent_on_already_pruned() {
     );
 }
 
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn engine_serial_and_parallel_bit_identical_all_methods() {
+    // `THANOS_THREADS=1` forces every engine job inline;
+    // `engine::with_serial` reproduces exactly that execution path
+    // in-process. Pruned weights AND masks must be bit-identical to the
+    // default-parallel run for every method × pattern: band splits and
+    // work stealing must never change arithmetic.
+    let patterns = [
+        Pattern::Unstructured { p: 0.5 },
+        Pattern::SemiStructured { n: 2, m: 4, alpha: 0.1 },
+        Pattern::Structured { p: 0.3, alpha: 0.1 },
+    ];
+    let mut root = Rng::new(0xE7);
+    for case in 0..4 {
+        let mut r = root.fork();
+        let (w, stats, _x, _p) = gen_layer(&mut r);
+        for method in Method::ALL {
+            for pattern in patterns {
+                let par = pruning::prune(method, &w, &stats, pattern, &opts()).unwrap();
+                let ser = thanos::engine::with_serial(|| {
+                    pruning::prune(method, &w, &stats, pattern, &opts()).unwrap()
+                });
+                assert_eq!(
+                    bits(&par.w),
+                    bits(&ser.w),
+                    "case {case}: {} {pattern:?} weights differ serial vs parallel",
+                    method.name()
+                );
+                assert_eq!(
+                    par.mask,
+                    ser.mask,
+                    "case {case}: {} {pattern:?} masks differ serial vs parallel",
+                    method.name()
+                );
+            }
+        }
+    }
+    // the greedy OBS reference implementation as well
+    let mut r = root.fork();
+    let (w, stats, _x, _p) = gen_layer(&mut r);
+    let par = pruning::obs::unstructured(&w, &stats, 0.4, &opts()).unwrap();
+    let ser = thanos::engine::with_serial(|| {
+        pruning::obs::unstructured(&w, &stats, 0.4, &opts()).unwrap()
+    });
+    assert_eq!(bits(&par.w), bits(&ser.w), "obs weights differ serial vs parallel");
+    assert_eq!(par.mask, ser.mask, "obs masks differ serial vs parallel");
+}
+
+#[test]
+fn prune_many_matches_sequential_prune_bitwise() {
+    // the layer-parallel fan-out must be a pure scheduling change:
+    // same outputs, same order, as one-at-a-time pruning
+    let mut root = Rng::new(0xE8);
+    let mut make_layer = |root: &mut Rng| {
+        let mut r = root.fork();
+        gen_layer(&mut r)
+    };
+    let (w1, s1, _x1, _) = make_layer(&mut root);
+    let (w2, s2, _x2, _) = make_layer(&mut root);
+    let (w3, s3, _x3, _) = make_layer(&mut root);
+    let layers = vec![(&w1, &s1), (&w2, &s2), (&w3, &s3)];
+    let pattern = Pattern::Unstructured { p: 0.5 };
+    let many = pruning::prune_many(&layers, Method::Thanos, pattern, &opts());
+    assert_eq!(many.len(), 3);
+    for ((w, s), res) in layers.iter().zip(many) {
+        let (p, secs) = res.unwrap();
+        assert!(secs >= 0.0);
+        let seq = pruning::prune(Method::Thanos, w, s, pattern, &opts()).unwrap();
+        assert_eq!(bits(&p.w), bits(&seq.w), "prune_many vs prune weights");
+        assert_eq!(p.mask, seq.mask, "prune_many vs prune masks");
+    }
+}
+
 #[test]
 fn quality_ordering_structured_thanos_best() {
     // The Table-2 structured ranking at layer level: mean reconstruction

@@ -1,0 +1,241 @@
+//! Offline stub of the `xla` (xla-rs / PJRT) bindings.
+//!
+//! The container this repo builds in has no XLA/PJRT shared libraries,
+//! so the real bindings cannot link. This crate re-creates exactly the
+//! API surface the `thanos` crate uses — [`Literal`] marshalling is
+//! fully functional (it is plain host memory), while client creation,
+//! HLO parsing and executable compilation return a descriptive
+//! [`Error`]. Every AOT code path in `thanos` is already gated on the
+//! presence of `artifacts/manifest.json` (written by `make artifacts`),
+//! so with the stub the pure-Rust pipeline, the test-suite and the
+//! benches all build and run; only actual HLO execution is unavailable.
+//!
+//! Swapping the real bindings back in is a one-line change in
+//! `rust/Cargo.toml` — no `thanos` source touches are needed.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`: convertible into `anyhow::Error`
+/// through the std `Error` impl.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable in the offline xla stub (no PJRT runtime in this build; \
+         swap in the real `xla` bindings to execute AOT artifacts)"
+    ))
+}
+
+/// Element storage of a [`Literal`].
+#[derive(Debug, Clone)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side literal: dtype-tagged buffer plus dimensions. Fully
+/// functional (it is how `thanos` marshals data in and out of
+/// executables, and tests construct literals without a runtime).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Types storable in a [`Literal`].
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(l: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(l: &Literal) -> Result<Vec<Self>> {
+        match &l.data {
+            Data::F32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(l: &Literal) -> Result<Vec<Self>> {
+        match &l.data {
+            Data::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::wrap(vec![v]) }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape to {dims:?} ({n} elements) from {} elements",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(t) => t.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Extract the host buffer.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self)
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(t) => Ok(t),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+
+    /// Build a tuple literal (test/bench helper; the real bindings
+    /// return tuples from executions).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { dims: vec![elems.len() as i64], data: Data::Tuple(elems) }
+    }
+}
+
+/// Parsed HLO module. Construction always fails in the stub.
+#[derive(Debug)]
+#[non_exhaustive]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parsing HLO text ({path})")))
+    }
+}
+
+/// Computation wrapper over a parsed module.
+#[derive(Debug)]
+#[non_exhaustive]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by executions; never constructed in the stub.
+#[derive(Debug)]
+pub struct PjRtBuffer(std::convert::Infallible);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.0 {}
+    }
+}
+
+/// Compiled executable; never constructed in the stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(std::convert::Infallible);
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.0 {}
+    }
+}
+
+/// PJRT client handle. Creation succeeds (so `Runtime::load` can parse
+/// manifests and report a precise error only when an executable is
+/// actually compiled); `compile` fails with the stub notice.
+#[derive(Debug)]
+#[non_exhaustive]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling an XLA computation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.element_count(), 4);
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn literal_scalar_and_tuple() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.element_count(), 1);
+        let t = Literal::tuple(vec![s.clone(), Literal::scalar(1.5f32)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].to_vec::<i32>().unwrap(), vec![7]);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn runtime_surface_errors_cleanly() {
+        assert!(HloModuleProto::from_text_file("missing.hlo.txt").is_err());
+        let client = PjRtClient::cpu().unwrap();
+        let proto_err = HloModuleProto::from_text_file("x").unwrap_err();
+        assert!(proto_err.to_string().contains("offline xla stub"));
+        // compile fails with the stub notice
+        // (XlaComputation can only be built from a proto, which cannot
+        // exist here, so exercise the error text via from_text_file)
+        let _ = client;
+    }
+}
