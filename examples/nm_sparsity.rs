@@ -73,6 +73,13 @@ fn main() -> Result<()> {
                     String::new()
                 }
             );
+
+            // real compressed execution: pack every pruned layer
+            // (coordinator-chosen format) and measure the CPU kernels
+            if alpha == 0.0 {
+                let sm = report.sparse_model(&st)?;
+                print!("{}", thanos::eval::compression_report(&st, &sm)?);
+            }
         }
         print!("{}", thanos::eval::nm_report(&state, n, m));
         // measured CPU speedup of the zero-skipping GEMM on one layer

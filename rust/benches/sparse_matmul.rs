@@ -1,0 +1,71 @@
+//! Measured dense-vs-sparse matmul: the wall-clock counterpart of the
+//! modeled n:m figure (DESIGN.md §Sparse — the Fig. 9-adjacent claim
+//! that Thanos's hardware-friendly patterns convert into real
+//! throughput once the weights are stored compressed).
+//!
+//! For each layer shape × batch width the sweep prunes one matrix to
+//! 50/60/70% unstructured (→ CSR), 2:4 and 4:8 (→ NmPacked) and 50/70%
+//! structured (→ DenseCompact), then times
+//!
+//! * the dense GEMM on the unpruned matrix (the serving baseline),
+//! * the dense GEMM on the pruned matrix (zero-skipping),
+//! * the compressed-format kernel,
+//!
+//! and reports actual compressed bytes. Every case is cross-validated
+//! against `linalg::gemm` within 1e-5 relative error — a divergence
+//! fails the process, which is what makes the CI quick run a format
+//! regression gate.
+//!
+//! ```bash
+//! cargo bench --bench sparse_matmul                 # full sweep
+//! THANOS_SPARSE_QUICK=1 cargo bench --bench sparse_matmul   # CI smoke
+//! ```
+
+mod common;
+use common::*;
+use thanos::sparse::bench::{sweep, SweepRow};
+
+fn main() {
+    let quick = env_str("THANOS_SPARSE_QUICK", "0") == "1";
+    let shapes = thanos::sparse::bench::default_shapes(quick);
+    let batches = thanos::sparse::bench::default_batches(quick);
+
+    let mut csv = Csv::new("sparse_matmul");
+    let mut worst_err = 0.0f64;
+    let mut nm24_matvec: Vec<SweepRow> = Vec::new();
+    println!("== measured dense vs sparse matmul (CPU kernels) ==");
+    println!("(dense = unpruned GEMM; bytes = compressed vs dense f32)\n");
+    for &(c, b) in shapes {
+        for &batch in batches {
+            println!("-- {c}x{b}, batch {batch} --");
+            let rows = sweep(c, b, batch, 0xBEC).expect("sweep failed");
+            for row in rows {
+                println!("{}", row.pretty());
+                csv.row(SweepRow::csv_header(), &row.csv());
+                worst_err = worst_err.max(row.max_rel_err);
+                if row.case == "nm(2:4)" && batch == 1 {
+                    nm24_matvec.push(row);
+                }
+            }
+            println!();
+        }
+    }
+
+    for row in &nm24_matvec {
+        println!(
+            "2:4 matvec {}x{}: measured {:.2}x vs dense (modeled GPU figure, secondary: {:.2}x)",
+            row.rows,
+            row.cols,
+            row.speedup_vs_dense(),
+            thanos::pruning::nm::modeled_speedup(2, 4),
+        );
+    }
+    println!("wrote bench_results/sparse_matmul.csv");
+
+    // regression gate: the formats must agree with the dense GEMM
+    assert!(
+        worst_err <= 1e-5,
+        "sparse kernel diverged from linalg::gemm: max rel err {worst_err:.3e}"
+    );
+    println!("kernel cross-validation vs gemm: OK (max rel err {worst_err:.1e})");
+}

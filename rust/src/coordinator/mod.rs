@@ -70,6 +70,9 @@ pub struct PruneReport {
     pub total_secs: f64,
     /// [`crate::engine`] activity during this run (queue/occupancy)
     pub engine: crate::engine::EngineStats,
+    /// the pattern this run pruned to — lets [`Self::sparse_model`]
+    /// pick the matching compressed format per layer
+    pub pattern: Option<Pattern>,
 }
 
 impl PruneReport {
@@ -101,6 +104,20 @@ impl PruneReport {
             self.engine.queue_peak,
             self.engine.occupancy(self.total_secs) * 100.0,
         )
+    }
+
+    /// Emit the compressed form of the pruned model: every prunable
+    /// layer packed in the format matching this run's pattern
+    /// (n:m → `NmPacked`, unstructured → `Csr`, structured →
+    /// `DenseCompact`). Feed the result to
+    /// [`crate::model::ModelState::save_compressed`] (which round-trip
+    /// verifies bitwise before writing) for a checkpoint-v2 file, or
+    /// serve it through [`crate::sparse::kernels`].
+    pub fn sparse_model(&self, state: &ModelState) -> Result<crate::sparse::SparseModel> {
+        let pattern = self
+            .pattern
+            .context("PruneReport has no pattern (default-constructed report)")?;
+        crate::sparse::SparseModel::compress_state(state, &pattern)
     }
 }
 
@@ -190,7 +207,7 @@ impl<'a> Coordinator<'a> {
         let a = nbc * seq; // tokens per chunk
         let d = cfg.d_model;
 
-        let mut report = PruneReport::default();
+        let mut report = PruneReport { pattern: Some(spec.pattern), ..Default::default() };
 
         // embed calibration chunks → x literals
         let t_cap = Instant::now();
@@ -504,6 +521,26 @@ mod tests {
         let s = stats_from_f32(&h, &xn, 2);
         assert_eq!(s.h_sum.at(1, 1), 5.0);
         assert_eq!(s.xnorm_sq, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn sparse_model_requires_pattern() {
+        let cfg = crate::config::ModelConfig {
+            name: "t".into(),
+            vocab: 4,
+            d_model: 2,
+            n_layers: 0,
+            n_heads: 1,
+            d_ff: 4,
+            seq_len: 2,
+        };
+        let state = ModelState { config: cfg, layout: vec![], block_flat_size: 0, flat: vec![] };
+        assert!(PruneReport::default().sparse_model(&state).is_err());
+        let r = PruneReport {
+            pattern: Some(Pattern::Unstructured { p: 0.5 }),
+            ..Default::default()
+        };
+        assert!(r.sparse_model(&state).unwrap().layers.is_empty());
     }
 
     #[test]

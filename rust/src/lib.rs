@@ -32,7 +32,8 @@
 //! | [`model`] | transformer parameter state + checkpoint IO |
 //! | [`train`] | training driver over the AOT train-step executable |
 //! | [`coordinator`] | Algorithm 3 pipeline: capture → Hessian → prune → re-forward |
-//! | [`eval`] | perplexity + synthetic zero-shot harness + n:m speedup model |
+//! | [`sparse`] | compressed weight formats (n:m packed, CSR, dense-compact) + real sparse×dense kernels + checkpoint-v2 tensors |
+//! | [`eval`] | perplexity + synthetic zero-shot harness + measured/modeled compression report |
 //! | [`proptest`] | mini property-testing framework used by the test suite |
 //! | [`metrics`] | lightweight counters/timers used across the pipeline |
 //! | [`harness`] | experiment harness shared by examples and paper-table benches |
@@ -51,6 +52,7 @@ pub mod proptest;
 pub mod pruning;
 pub mod rng;
 pub mod runtime;
+pub mod sparse;
 pub mod train;
 
 /// Crate-wide result alias.

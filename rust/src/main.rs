@@ -8,10 +8,15 @@
 //! thanos prune  <method> <pattern> [--model ...]   # prune a checkpoint
 //! thanos eval   [--model ...]                      # ppl + zero-shot of a checkpoint
 //! thanos e2e    [--model ...]                      # train → prune-all-methods → eval
+//! thanos compress <pattern> [--model ...]          # pack a pruned checkpoint (v2)
+//! thanos sparse-bench [quick]                      # measured sparse-kernel sweep
 //! ```
 //!
 //! `method` ∈ magnitude|wanda|sparsegpt|thanos; `pattern` ∈
 //! unstructured:<p> | structured:<p>:<alpha> | nm:<n>:<m>[:<alpha>].
+//!
+//! `compress` and `sparse-bench` are artifact-free: they run entirely
+//! on the Rust `sparse/` subsystem (no AOT executables needed).
 
 use anyhow::{bail, Context, Result};
 use thanos::config::RunConfig;
@@ -154,6 +159,81 @@ fn run() -> Result<()> {
             println!("run: cargo run --release --example e2e_compress");
             Ok(())
         }
+        // pack a pruned checkpoint into compressed formats (checkpoint
+        // v2) and print the measured compression report — artifact-free
+        "compress" => {
+            let pattern =
+                parse_pattern(args.get(1).context("compress <pattern> [--model ...]")?, rc.alpha)?;
+            let pruned_path = format!("{}/{}-pruned.thnck", rc.ckpt_dir, rc.model.name);
+            let src = if std::path::Path::new(&pruned_path).exists() {
+                pruned_path
+            } else {
+                ckpt_path(&rc)
+            };
+            let state = ModelState::load(&src)
+                .context("run `thanos train` + `thanos prune` first")?;
+            let sparsity = state.prunable_sparsity();
+            // a dense checkpoint would "compress" every row as an
+            // outlier and grow the file — refuse instead of misleading
+            anyhow::ensure!(
+                sparsity > 0.01,
+                "checkpoint {src} is dense (sparsity {:.2}%) — run `thanos prune` first",
+                sparsity * 100.0
+            );
+            println!(
+                "compressing {} (sparsity {:.1}%) as {}…",
+                src,
+                sparsity * 100.0,
+                pattern.label()
+            );
+            let sm = thanos::sparse::SparseModel::compress_state(&state, &pattern)?;
+            print!("{}", eval::compression_report(&state, &sm)?);
+            let out = format!("{}/{}-compressed.thnck", rc.ckpt_dir, rc.model.name);
+            // save_compressed round-trip-verifies every layer bitwise
+            state.save_compressed(&out, &sm)?;
+            let (back, reloaded) = ModelState::load_with_sparse(&out)?;
+            anyhow::ensure!(
+                back.flat
+                    .iter()
+                    .zip(&state.flat)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "v2 reload not bit-identical"
+            );
+            anyhow::ensure!(reloaded.is_some(), "v2 checkpoint lost its sparse tensors");
+            let metrics = thanos::metrics::Metrics::new();
+            metrics.record_compression(
+                "sparse.compress",
+                sm.dense_bytes(),
+                sm.compressed_bytes(),
+            );
+            print!("{}", metrics.report());
+            println!("saved compressed checkpoint to {out} (reload verified bit-identical)");
+            Ok(())
+        }
+        // measured dense-vs-sparse kernel sweep (the sparse_matmul bench
+        // in-process; `quick` or THANOS_SPARSE_QUICK=1 for CI-size shapes)
+        "sparse-bench" => {
+            let quick = args.get(1).map(String::as_str) == Some("quick")
+                || std::env::var("THANOS_SPARSE_QUICK").map(|v| v == "1").unwrap_or(false);
+            // same shape/batch tables as benches/sparse_matmul.rs, so
+            // the CLI and the bench binary measure the same sweep
+            for &(c, b) in thanos::sparse::bench::default_shapes(quick) {
+                for &batch in thanos::sparse::bench::default_batches(quick) {
+                    println!("-- {c}x{b}, batch {batch} --");
+                    for row in thanos::sparse::bench::sweep(c, b, batch, 0xBEC)? {
+                        println!("{}", row.pretty());
+                        anyhow::ensure!(
+                            row.max_rel_err <= 1e-5,
+                            "{}: kernel diverged from gemm ({:.2e})",
+                            row.case,
+                            row.max_rel_err
+                        );
+                    }
+                }
+            }
+            println!("(dense = unpruned GEMM baseline; bytes = compressed/dense f32)");
+            Ok(())
+        }
         // perf tooling: time one AOT executable (compile once, then N
         // timed executions with synthetic inputs of the declared shapes)
         "exec-bench" => {
@@ -207,6 +287,8 @@ fn run() -> Result<()> {
             );
             Ok(())
         }
-        other => bail!("unknown command '{other}' (info|train|prune|eval|e2e)"),
+        other => bail!(
+            "unknown command '{other}' (info|train|prune|eval|e2e|compress|sparse-bench)"
+        ),
     }
 }

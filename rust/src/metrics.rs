@@ -71,6 +71,23 @@ impl Metrics {
         self.set_gauge(&format!("{prefix}.occupancy"), stats.occupancy(wall_secs));
     }
 
+    /// Record a compression outcome as gauges under `<prefix>.*`:
+    /// dense bytes, compressed bytes, and the compressed/dense ratio —
+    /// the readout `thanos compress` and the sparse bench surface.
+    pub fn record_compression(&self, prefix: &str, dense_bytes: usize, compressed_bytes: usize) {
+        self.set_gauge(&format!("{prefix}.dense_bytes"), dense_bytes as f64);
+        self.set_gauge(
+            &format!("{prefix}.compressed_bytes"),
+            compressed_bytes as f64,
+        );
+        let ratio = if dense_bytes > 0 {
+            compressed_bytes as f64 / dense_bytes as f64
+        } else {
+            0.0
+        };
+        self.set_gauge(&format!("{prefix}.ratio"), ratio);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.inner
             .lock()
@@ -164,6 +181,17 @@ mod tests {
         m.set_gauge("x", 1.0);
         m.set_gauge("x", 2.5);
         assert_eq!(m.gauge("x"), Some(2.5));
+    }
+
+    #[test]
+    fn compression_snapshot_lands_as_gauges() {
+        let m = Metrics::new();
+        m.record_compression("sparse.compress", 1000, 560);
+        assert_eq!(m.gauge("sparse.compress.dense_bytes"), Some(1000.0));
+        assert_eq!(m.gauge("sparse.compress.compressed_bytes"), Some(560.0));
+        assert_eq!(m.gauge("sparse.compress.ratio"), Some(0.56));
+        m.record_compression("empty", 0, 0);
+        assert_eq!(m.gauge("empty.ratio"), Some(0.0));
     }
 
     #[test]

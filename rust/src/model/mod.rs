@@ -2,24 +2,35 @@
 //! manifest layout, and checkpoint IO (own binary format — no external
 //! serialization crates offline).
 //!
-//! Checkpoint format (`.thnck`):
+//! Checkpoint formats (`.thnck`):
 //! ```text
-//! magic "THNS" | u32 version | u64 json_len | json header | f32 data (LE)
+//! v1 (dense):      magic "THNS" | u32 1 | u64 json_len | json header | f32 data (LE)
+//! v2 (compressed): magic "THNS" | u32 2 | u64 json_len | json header
+//!                  | f32 data of the non-compressed params (layout order, LE)
+//!                  | serialized sparse tensors (header `sparse` order)
 //! ```
 //! The JSON header carries the model config and the parameter layout so
-//! a checkpoint is self-describing (loadable without the manifest).
+//! a checkpoint is self-describing (loadable without the manifest); a
+//! v2 header additionally lists `sparse: [{name, len}]` — the layers
+//! stored as [`crate::sparse::SparseTensor`] blobs instead of dense
+//! f32. [`ModelState::load`] reads both versions; compressed layers
+//! reconstruct **bit-identically** (pinned by the round-trip tests).
 
 use crate::config::ModelConfig;
 use crate::jsonutil::{obj, Json};
 use crate::linalg::Mat;
 use crate::rng::Rng;
 use crate::runtime::{ModelManifest, ParamEntry};
-use anyhow::{bail, Context, Result};
+use crate::sparse::{SparseLayer, SparseModel, SparseTensor};
+use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"THNS";
-const VERSION: u32 = 1;
+/// v1: the whole flat vector as dense f32.
+const VERSION_DENSE: u32 = 1;
+/// v2: compressed prunable layers + dense remainder.
+const VERSION_SPARSE: u32 = 2;
 
 /// Transformer parameter state over a single flat f32 vector.
 #[derive(Clone)]
@@ -133,11 +144,10 @@ impl ModelState {
 
     // -- checkpoint IO ---------------------------------------------------
 
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        if let Some(parent) = path.as_ref().parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        let header = obj(vec![
+    /// The shared v1/v2 JSON header; v2 appends the `sparse` segment
+    /// list.
+    fn header_json(&self, sparse: Option<Json>) -> String {
+        let mut pairs = vec![
             ("config", self.config.to_json()),
             ("block_flat_size", Json::Num(self.block_flat_size as f64)),
             (
@@ -158,11 +168,26 @@ impl ModelState {
                         .collect(),
                 ),
             ),
-        ])
-        .to_string_compact();
-        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        ];
+        if let Some(s) = sparse {
+            pairs.push(("sparse", s));
+        }
+        obj(pairs).to_string_compact()
+    }
+
+    fn open_writer(path: impl AsRef<Path>) -> Result<std::io::BufWriter<std::fs::File>> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        Ok(std::io::BufWriter::new(std::fs::File::create(&path)?))
+    }
+
+    /// Save a v1 (fully dense) checkpoint.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let header = self.header_json(None);
+        let mut f = Self::open_writer(path)?;
         f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&VERSION_DENSE.to_le_bytes())?;
         f.write_all(&(header.len() as u64).to_le_bytes())?;
         f.write_all(header.as_bytes())?;
         for v in &self.flat {
@@ -171,7 +196,65 @@ impl ModelState {
         Ok(())
     }
 
+    /// Save a v2 checkpoint: the layers covered by `sparse` are stored
+    /// as compressed tensors, everything else as dense f32. Verifies
+    /// first that every compressed layer reproduces the current weights
+    /// bitwise, so a reload is guaranteed bit-identical.
+    pub fn save_compressed(&self, path: impl AsRef<Path>, sparse: &SparseModel) -> Result<()> {
+        sparse.verify_roundtrip(self)?;
+        let segs: Vec<(String, Vec<u8>)> = sparse
+            .layers
+            .iter()
+            .map(|l| (l.name.clone(), l.tensor.to_bytes()))
+            .collect();
+        let compressed: std::collections::HashSet<&str> =
+            segs.iter().map(|(n, _)| n.as_str()).collect();
+        ensure!(
+            compressed.len() == segs.len(),
+            "duplicate layer in sparse model"
+        );
+        let sparse_json = Json::Arr(
+            segs.iter()
+                .map(|(name, bytes)| {
+                    obj(vec![
+                        ("name", Json::Str(name.clone())),
+                        ("len", Json::Num(bytes.len() as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let header = self.header_json(Some(sparse_json));
+        let mut f = Self::open_writer(path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION_SPARSE.to_le_bytes())?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for e in &self.layout {
+            if compressed.contains(e.name.as_str()) {
+                continue;
+            }
+            for v in &self.flat[e.offset..e.offset + e.numel()] {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        for (_, bytes) in &segs {
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint of either version (the sparse tensors of a v2
+    /// file are decompressed and dropped; use [`Self::load_with_sparse`]
+    /// to keep them).
     pub fn load(path: impl AsRef<Path>) -> Result<ModelState> {
+        Ok(Self::load_with_sparse(path)?.0)
+    }
+
+    /// Load a checkpoint; for v2 files additionally returns the
+    /// compressed tensors ready for [`crate::sparse::kernels`].
+    pub fn load_with_sparse(
+        path: impl AsRef<Path>,
+    ) -> Result<(ModelState, Option<SparseModel>)> {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(&path)
                 .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
@@ -184,7 +267,7 @@ impl ModelState {
         let mut v4 = [0u8; 4];
         f.read_exact(&mut v4)?;
         let version = u32::from_le_bytes(v4);
-        if version != VERSION {
+        if version != VERSION_DENSE && version != VERSION_SPARSE {
             bail!("unsupported checkpoint version {version}");
         }
         let mut l8 = [0u8; 8];
@@ -212,25 +295,85 @@ impl ModelState {
             })
             .collect::<Result<_>>()?;
         let flat_size: usize = layout.iter().map(|e| e.numel()).sum();
+        let block_flat_size = header.get("block_flat_size")?.as_usize()?;
         let mut data = Vec::new();
         f.read_to_end(&mut data)?;
-        if data.len() != flat_size * 4 {
-            bail!(
-                "checkpoint data length {} != expected {}",
-                data.len(),
-                flat_size * 4
-            );
+
+        if version == VERSION_DENSE {
+            if data.len() != flat_size * 4 {
+                bail!(
+                    "checkpoint data length {} != expected {}",
+                    data.len(),
+                    flat_size * 4
+                );
+            }
+            let flat: Vec<f32> = data
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            return Ok((ModelState { config, layout, block_flat_size, flat }, None));
         }
-        let flat: Vec<f32> = data
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        Ok(ModelState {
-            config,
-            layout,
-            block_flat_size: header.get("block_flat_size")?.as_usize()?,
-            flat,
-        })
+
+        // v2: dense remainder in layout order, then the sparse segments
+        let sparse_list: Vec<(String, usize)> = header
+            .get("sparse")?
+            .as_arr()?
+            .iter()
+            .map(|e| Ok((e.get("name")?.as_str()?.to_string(), e.get("len")?.as_usize()?)))
+            .collect::<Result<_>>()?;
+        let compressed: std::collections::HashSet<&str> =
+            sparse_list.iter().map(|(n, _)| n.as_str()).collect();
+        let mut flat = vec![0.0f32; flat_size];
+        let mut off = 0usize;
+        for e in &layout {
+            if compressed.contains(e.name.as_str()) {
+                continue;
+            }
+            let nbytes = e.numel() * 4;
+            // `nbytes <= len - off` (not `off + nbytes <= len`): a
+            // corrupt header could make the sum wrap in release builds
+            ensure!(
+                nbytes <= data.len() - off,
+                "truncated dense section at param '{}'",
+                e.name
+            );
+            for (dst, c) in flat[e.offset..e.offset + e.numel()]
+                .iter_mut()
+                .zip(data[off..off + nbytes].chunks_exact(4))
+            {
+                *dst = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            off += nbytes;
+        }
+        let mut layers = Vec::with_capacity(sparse_list.len());
+        for (name, len) in sparse_list {
+            ensure!(
+                len <= data.len() - off,
+                "truncated sparse segment '{name}'"
+            );
+            let tensor = SparseTensor::from_bytes(&data[off..off + len])
+                .with_context(|| format!("decoding compressed layer '{name}'"))?;
+            off += len;
+            let e = layout
+                .iter()
+                .find(|e| e.name == name)
+                .with_context(|| format!("compressed layer '{name}' not in layout"))?;
+            ensure!(
+                e.shape == [tensor.rows(), tensor.cols()],
+                "compressed layer '{name}': shape {:?} vs {}x{}",
+                e.shape,
+                tensor.rows(),
+                tensor.cols()
+            );
+            let dense = tensor.to_dense();
+            flat[e.offset..e.offset + e.numel()].copy_from_slice(&dense.data);
+            layers.push(SparseLayer { name, tensor });
+        }
+        ensure!(off == data.len(), "trailing bytes in v2 checkpoint");
+        Ok((
+            ModelState { config, layout, block_flat_size, flat },
+            Some(SparseModel { layers }),
+        ))
     }
 }
 
@@ -324,6 +467,41 @@ mod tests {
         assert_eq!(back.flat, st.flat);
         assert_eq!(back.config, st.config);
         assert_eq!(back.block_flat_size, st.block_flat_size);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_v2_roundtrip_and_v1_back_compat() {
+        let mm = fake_manifest();
+        let mut st = ModelState::init(&mm, 7);
+        // prune every prunable layer to 2:4, then compress
+        for l in 0..2 {
+            for name in st.prunable_layers(l) {
+                let w = st.get_mat(&name).unwrap();
+                let pruned = crate::pruning::magnitude::semi_structured(&w, 2, 4).w;
+                st.set_mat(&name, &pruned).unwrap();
+            }
+        }
+        let pattern = crate::pruning::Pattern::SemiStructured { n: 2, m: 4, alpha: 0.0 };
+        let sm = SparseModel::compress_state(&st, &pattern).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let dir = std::env::temp_dir().join("thanos_test_ckpt_v2");
+        let p2 = dir.join("m2.thnck");
+        st.save_compressed(&p2, &sm).unwrap();
+        let (back, sparse) = ModelState::load_with_sparse(&p2).unwrap();
+        assert_eq!(bits(&back.flat), bits(&st.flat), "v2 reload must be bit-identical");
+        assert_eq!(sparse.unwrap().layers.len(), 12);
+        // v1 files still load through the same entry points
+        let p1 = dir.join("m1.thnck");
+        st.save(&p1).unwrap();
+        let (b1, none) = ModelState::load_with_sparse(&p1).unwrap();
+        assert!(none.is_none());
+        assert_eq!(bits(&b1.flat), bits(&st.flat));
+        assert_eq!(bits(&ModelState::load(&p2).unwrap().flat), bits(&st.flat));
+        // compressed layers shrink the file despite the longer header
+        let s1 = std::fs::metadata(&p1).unwrap().len();
+        let s2 = std::fs::metadata(&p2).unwrap().len();
+        assert!(s2 < s1, "v2 {s2} bytes !< v1 {s1} bytes");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,21 +1,44 @@
-//! n:m sparse-format utilities: validation, storage accounting, and a
-//! sparse-matmul cost model standing in for the Ampere 2:4 hardware
-//! path (see DESIGN.md §Substitutions — no sparse tensor cores exist
-//! on this testbed, so the *format* is verified exactly and the
-//! speedup is modeled).
+//! n:m sparse-format utilities: validation, storage accounting, and
+//! the modeled sparse-tensor-core speedup figure.
+//!
+//! Since the `sparse/` subsystem landed, the *measured* story lives
+//! there: [`crate::sparse::NmPacked`] materializes the format and
+//! [`crate::sparse::kernels`] executes it on CPU (DESIGN.md §Sparse).
+//! This module keeps the format validator, delegates byte accounting
+//! to [`crate::sparse::nm_bytes`] (the single source of truth), and
+//! retains [`modeled_speedup`] as the labeled secondary GPU figure
+//! (DESIGN.md §Substitutions — no sparse tensor cores on this testbed).
 
 use crate::linalg::Mat;
+use std::collections::HashSet;
+
+/// Pre-built row set for [`validate`]'s `skip_rows` argument. Callers
+/// validating many layers against the same outlier set build it once
+/// instead of paying a `HashSet` construction per call.
+pub type RowSet = HashSet<usize>;
+
+/// Build a [`RowSet`] from a slice of row indices.
+pub fn row_set(rows: &[usize]) -> RowSet {
+    rows.iter().copied().collect()
+}
 
 /// Check that every group of `m` consecutive weights in every row
 /// contains at least `n` zeros. `skip_rows` lists rows excluded from
 /// the constraint (outlier rows under α > 0).
-pub fn validate(w: &Mat, n: usize, m: usize, skip_rows: &[usize]) -> Result<(), String> {
-    if w.cols % m != 0 {
-        return Err(format!("cols {} not divisible by m={m}", w.cols));
+///
+/// Documented errors (never panics): a column count with a tail group
+/// (`cols % m != 0`) is rejected with the same error as the packer
+/// ([`crate::sparse::nm_tail_error`]), and the first violating group is
+/// reported with its row/group coordinates.
+pub fn validate(w: &Mat, n: usize, m: usize, skip_rows: &RowSet) -> Result<(), String> {
+    if m == 0 {
+        return Err("n:m needs m >= 1".to_string());
     }
-    let skip: std::collections::HashSet<usize> = skip_rows.iter().copied().collect();
+    if w.cols % m != 0 {
+        return Err(crate::sparse::nm_tail_error(w.cols, m));
+    }
     for i in 0..w.rows {
-        if skip.contains(&i) {
+        if skip_rows.contains(&i) {
             continue;
         }
         for g in (0..w.cols).step_by(m) {
@@ -31,18 +54,14 @@ pub fn validate(w: &Mat, n: usize, m: usize, skip_rows: &[usize]) -> Result<(), 
 }
 
 /// Storage of an n:m compressed layer in bytes: kept values (f32/f16
-/// width configurable) + per-group index metadata (2-bit indices for
-/// 2:4, ⌈log2(m choose n)⌉ in general — we use the NVIDIA layout of
-/// 2 bits per kept weight for 2:4 and 3 bits for 4:8).
+/// width configurable) + `⌈log2 m⌉` positional index bits per kept
+/// weight — which *is* the NVIDIA layout (2 bits per kept weight for
+/// 2:4, 3 bits for 4:8; Ampere whitepaper, 2020). Delegates to
+/// [`crate::sparse::nm_bytes`], the byte accounting the real packer
+/// ([`crate::sparse::NmPacked::bytes`]) is pinned against; this entry
+/// point is the zero-outlier-row case.
 pub fn compressed_bytes(c: usize, b: usize, n: usize, m: usize, bytes_per_weight: usize) -> usize {
-    let groups = c * b / m;
-    let kept = groups * (m - n);
-    let index_bits_per_kept = match (n, m) {
-        (2, 4) => 2,
-        (4, 8) => 3,
-        _ => (usize::BITS - (m - 1).leading_zeros()) as usize,
-    };
-    kept * bytes_per_weight + (kept * index_bits_per_kept).div_ceil(8)
+    crate::sparse::nm_bytes(c, b, n, m, 0, bytes_per_weight)
 }
 
 /// Dense storage in bytes.
@@ -53,7 +72,9 @@ pub fn dense_bytes(c: usize, b: usize, bytes_per_weight: usize) -> usize {
 /// Modeled matmul speedup of an n:m layer vs dense on sparse tensor
 /// cores. NVIDIA's 2:4 path doubles MAC throughput (NVIDIA Ampere
 /// whitepaper, 2020); we model throughput gain as m/(m−n) discounted
-/// by a fixed metadata/issue overhead.
+/// by a fixed metadata/issue overhead. Reports label this figure as
+/// modeled; the measured CPU figure comes from the `sparse_matmul`
+/// bench and [`crate::eval::compression_report`].
 pub fn modeled_speedup(n: usize, m: usize) -> f64 {
     const OVERHEAD: f64 = 0.12; // decode + operand-select overhead
     let ideal = m as f64 / (m - n) as f64;
@@ -77,13 +98,28 @@ mod tests {
             &crate::pruning::PruneOpts::default(),
         )
         .unwrap();
-        assert!(validate(&p.w, 2, 4, &[]).is_ok());
+        assert!(validate(&p.w, 2, 4, &RowSet::new()).is_ok());
     }
 
     #[test]
     fn validate_rejects_dense_matrix() {
         let (w, _, _) = setup(4, 8, 16, 41);
-        assert!(validate(&w, 2, 4, &[]).is_err());
+        assert!(validate(&w, 2, 4, &RowSet::new()).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_tail_like_the_packer() {
+        let w = Mat::zeros(2, 10);
+        assert_eq!(
+            validate(&w, 2, 4, &RowSet::new()),
+            Err(crate::sparse::nm_tail_error(10, 4))
+        );
+        assert_eq!(
+            crate::sparse::NmPacked::from_dense(&w, 2, 4)
+                .unwrap_err()
+                .to_string(),
+            crate::sparse::nm_tail_error(10, 4)
+        );
     }
 
     #[test]
@@ -97,8 +133,8 @@ mod tests {
                 wp.row_mut(i)[g + 1] = 0.0;
             }
         }
-        assert!(validate(&wp, 2, 4, &[]).is_err());
-        assert!(validate(&wp, 2, 4, &[0]).is_ok());
+        assert!(validate(&wp, 2, 4, &RowSet::new()).is_err());
+        assert!(validate(&wp, 2, 4, &row_set(&[0])).is_ok());
     }
 
     #[test]
@@ -108,6 +144,16 @@ mod tests {
         let comp = compressed_bytes(1024, 1024, 2, 4, 2);
         let ratio = comp as f64 / dense as f64;
         assert!(ratio > 0.5 && ratio < 0.65, "ratio {ratio}");
+    }
+
+    #[test]
+    fn compressed_bytes_is_sparse_accounting_without_outliers() {
+        for &(n, m) in &[(2usize, 4usize), (4, 8), (1, 2), (3, 4)] {
+            assert_eq!(
+                compressed_bytes(64, 8 * m, n, m, 2),
+                crate::sparse::nm_bytes(64, 8 * m, n, m, 0, 2),
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Measured dense-vs-sparse sweep shared by the `sparse_matmul` bench
+//! binary and the `thanos sparse-bench` CLI path: one pruned layer per
+//! (format, sparsity) case, timed against the dense GEMM on identical
+//! inputs and cross-validated within 1e-5 relative error.
+
+use super::{kernels, max_rel_err, Csr, DenseCompact, NmPacked, SparseTensor};
+use crate::linalg::gemm::matmul_into;
+use crate::linalg::Mat;
+use crate::pruning::magnitude;
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// One measured case of the sweep.
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub rows: usize,
+    pub cols: usize,
+    pub batch: usize,
+    /// format + sparsity label, e.g. `csr@70%`, `nm(2:4)`
+    pub case: String,
+    /// exact zero fraction of the pruned dense matrix
+    pub sparsity: f64,
+    /// dense GEMM on the *unpruned* matrix (the serving baseline), ms
+    pub dense_ms: f64,
+    /// dense GEMM on the pruned matrix (zero-skipping), ms
+    pub pruned_dense_ms: f64,
+    /// compressed-format kernel, ms
+    pub sparse_ms: f64,
+    pub bytes_dense: usize,
+    pub bytes_sparse: usize,
+    /// kernel vs `linalg::gemm` cross-validation error
+    pub max_rel_err: f64,
+}
+
+impl SweepRow {
+    pub fn csv_header() -> &'static str {
+        "rows,cols,batch,case,sparsity,dense_ms,pruned_dense_ms,sparse_ms,\
+         speedup_vs_dense,bytes_dense,bytes_sparse,max_rel_err"
+    }
+
+    pub fn csv(&self) -> String {
+        format!(
+            "{},{},{},{},{:.3},{:.4},{:.4},{:.4},{:.2},{},{},{:.2e}",
+            self.rows,
+            self.cols,
+            self.batch,
+            self.case,
+            self.sparsity,
+            self.dense_ms,
+            self.pruned_dense_ms,
+            self.sparse_ms,
+            self.speedup_vs_dense(),
+            self.bytes_dense,
+            self.bytes_sparse,
+            self.max_rel_err,
+        )
+    }
+
+    /// Measured speedup of the compressed kernel over the dense GEMM.
+    pub fn speedup_vs_dense(&self) -> f64 {
+        self.dense_ms / self.sparse_ms.max(1e-9)
+    }
+
+    pub fn pretty(&self) -> String {
+        format!(
+            "  {:<13} sparsity {:>5.1}%  dense {:>8.3}ms  pruned-dense {:>8.3}ms  \
+             sparse {:>8.3}ms ({:>5.2}x)  bytes {:>5.1}%  err {:.1e}",
+            self.case,
+            self.sparsity * 100.0,
+            self.dense_ms,
+            self.pruned_dense_ms,
+            self.sparse_ms,
+            self.speedup_vs_dense(),
+            100.0 * self.bytes_sparse as f64 / self.bytes_dense.max(1) as f64,
+            self.max_rel_err,
+        )
+    }
+}
+
+/// Layer shapes the sweep drivers (`benches/sparse_matmul.rs` and
+/// `thanos sparse-bench`) share, so the two entry points measure the
+/// same thing.
+pub fn default_shapes(quick: bool) -> &'static [(usize, usize)] {
+    if quick {
+        &[(256, 512)]
+    } else {
+        &[(768, 768), (1024, 1024), (2048, 2048)]
+    }
+}
+
+/// Batch widths matching [`default_shapes`].
+pub fn default_batches(quick: bool) -> &'static [usize] {
+    if quick {
+        &[1, 32]
+    } else {
+        &[1, 32, 256]
+    }
+}
+
+/// Best-of-`reps` wall time of `f` after one warm-up call, seconds.
+/// Shared by the sweep and by `eval::measured_format_speedup`.
+pub fn best_of(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    (0..reps)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .fold(f64::INFINITY, f64::min)
+}
+
+fn measure_case(
+    case: &str,
+    w_pruned: &Mat,
+    tensor: &SparseTensor,
+    x: &Mat,
+    dense_ms: f64,
+) -> SweepRow {
+    let (c, k) = (w_pruned.rows, x.cols);
+    let mut out = Mat::zeros(c, k);
+    let pruned_dense_ms = best_of(3, || matmul_into(w_pruned, x, &mut out)) * 1e3;
+    let mut out_s = Mat::zeros(c, k);
+    let sparse_ms = best_of(3, || kernels::matmul_into(tensor, x, &mut out_s)) * 1e3;
+    // reference with the same (already timed) dense GEMM
+    matmul_into(w_pruned, x, &mut out);
+    SweepRow {
+        rows: c,
+        cols: w_pruned.cols,
+        batch: k,
+        case: case.to_string(),
+        sparsity: w_pruned.sparsity(),
+        dense_ms,
+        pruned_dense_ms,
+        sparse_ms,
+        bytes_dense: c * w_pruned.cols * 4,
+        bytes_sparse: tensor.bytes(),
+        max_rel_err: max_rel_err(&out_s, &out),
+    }
+}
+
+/// Run the full format sweep on one `c×b` layer at batch width `batch`:
+/// CSR at 50/60/70% unstructured, `NmPacked` at 2:4 and 4:8 (when `b`
+/// allows), and `DenseCompact` at 50/70% structured.
+pub fn sweep(c: usize, b: usize, batch: usize, seed: u64) -> Result<Vec<SweepRow>> {
+    let mut r = Rng::new(seed);
+    let dense = Mat::from_fn(c, b, |_, _| r.normal_f32(0.0, 1.0));
+    let x = Mat::from_fn(b, batch, |_, _| r.normal_f32(0.0, 1.0));
+    let mut out = Mat::zeros(c, batch);
+    let dense_ms = best_of(3, || matmul_into(&dense, &x, &mut out)) * 1e3;
+
+    let mut rows = Vec::new();
+    for &p in &[0.5, 0.6, 0.7] {
+        let pruned = magnitude::unstructured(&dense, p).w;
+        let t = SparseTensor::Csr(Csr::from_dense(&pruned));
+        rows.push(measure_case(
+            &format!("csr@{:.0}%", p * 100.0),
+            &pruned,
+            &t,
+            &x,
+            dense_ms,
+        ));
+    }
+    for &(n, m) in &[(2usize, 4usize), (4, 8)] {
+        if b % m != 0 {
+            continue; // each n:m case only needs its own group size
+        }
+        let pruned = magnitude::semi_structured(&dense, n, m).w;
+        let t = SparseTensor::Nm(NmPacked::from_dense(&pruned, n, m)?);
+        rows.push(measure_case(&format!("nm({n}:{m})"), &pruned, &t, &x, dense_ms));
+    }
+    for &p in &[0.5, 0.7] {
+        let pruned = magnitude::structured(&dense, p).w;
+        let t = SparseTensor::DenseCompact(DenseCompact::from_dense(&pruned));
+        rows.push(measure_case(
+            &format!("struct@{:.0}%", p * 100.0),
+            &pruned,
+            &t,
+            &x,
+            dense_ms,
+        ));
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_all_formats_and_validates() {
+        let rows = sweep(24, 32, 4, 0xBEC).unwrap();
+        let cases: Vec<&str> = rows.iter().map(|r| r.case.as_str()).collect();
+        assert!(cases.iter().any(|c| c.starts_with("csr")));
+        assert!(cases.iter().any(|c| c.starts_with("nm(2:4)")));
+        assert!(cases.iter().any(|c| c.starts_with("nm(4:8)")));
+        assert!(cases.iter().any(|c| c.starts_with("struct")));
+        for row in &rows {
+            assert!(row.max_rel_err <= 1e-5, "{}: err {}", row.case, row.max_rel_err);
+            assert!(row.bytes_sparse > 0 && row.bytes_dense > 0);
+            assert!(row.csv().split(',').count() == 12);
+        }
+        // n:m cases must actually shrink storage (50% values + indices)
+        let nm = rows.iter().find(|r| r.case == "nm(2:4)").unwrap();
+        assert!(nm.bytes_sparse < nm.bytes_dense);
+    }
+}

@@ -1,0 +1,769 @@
+//! Compressed weight-tensor formats with **exact** dense round-trips.
+//!
+//! Three layouts, one per sparsity pattern the pruning methods emit
+//! (DESIGN.md §Sparse):
+//!
+//! * [`NmPacked`] — n:m semi-structured: kept values plus bit-packed
+//!   in-group indices (the NVIDIA layout: 2 bits/kept for 2:4, 3 bits
+//!   for 4:8 — i.e. ⌈log2 m⌉ bits in general), with dense *outlier
+//!   rows* for the α>0 variants where the highest-loss rows are left
+//!   unpruned.
+//! * [`Csr`] — unstructured masks: classic compressed-sparse-row.
+//! * [`DenseCompact`] — structured column removal: the kept columns as
+//!   a compact dense matrix, again with dense outlier rows.
+//!
+//! Exactness contract: `to_dense(from_dense(w)) == w` **bitwise** for
+//! every input. Entries are classified by `f32::to_bits() != 0`, so a
+//! negative zero is treated as a kept value (and a row containing one
+//! in a pruned position simply becomes an outlier row) rather than
+//! being silently canonicalized — checkpoint v2 reloads depend on this.
+
+use crate::linalg::Mat;
+use anyhow::{bail, ensure, Context, Result};
+
+/// The documented error for a column count that does not tile into
+/// groups of `m` — shared verbatim by [`NmPacked::from_dense`] and
+/// [`crate::pruning::nm::validate`] so the packer and the validator
+/// reject tails consistently.
+pub fn nm_tail_error(cols: usize, m: usize) -> String {
+    format!("cols {cols} not divisible by m={m} (n:m formats do not support tail groups)")
+}
+
+// ---------------------------------------------------------------------------
+// bit-stream helpers (little-endian, shared by pack / unpack / kernels)
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian bit stream writer.
+pub(crate) struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    n: u32,
+}
+
+impl BitWriter {
+    pub(crate) fn new() -> BitWriter {
+        BitWriter { buf: Vec::new(), acc: 0, n: 0 }
+    }
+
+    pub(crate) fn push(&mut self, v: usize, bits: u32) {
+        debug_assert!(bits <= 16 && (bits == 0 || (v as u64) < (1u64 << bits)));
+        self.acc |= (v as u64) << self.n;
+        self.n += bits;
+        while self.n >= 8 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.n -= 8;
+        }
+    }
+
+    pub(crate) fn finish(mut self) -> Vec<u8> {
+        if self.n > 0 {
+            self.buf.push(self.acc as u8);
+        }
+        self.buf
+    }
+}
+
+/// Read `nbits ≤ 16` bits at bit offset `bit_off` from a little-endian
+/// stream (a 24-bit window always covers `7 + 16` bits).
+#[inline]
+pub(crate) fn read_bits(buf: &[u8], bit_off: usize, nbits: u32) -> usize {
+    debug_assert!(nbits <= 16);
+    let byte = bit_off / 8;
+    let shift = bit_off % 8;
+    let mut window = 0u32;
+    for k in 0..3 {
+        if let Some(&b) = buf.get(byte + k) {
+            window |= (b as u32) << (8 * k);
+        }
+    }
+    ((window >> shift) & (((1u64 << nbits) - 1) as u32)) as usize
+}
+
+// ---------------------------------------------------------------------------
+// byte-stream (de)serialization helpers for checkpoint v2
+// ---------------------------------------------------------------------------
+
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: usize) {
+    out.extend_from_slice(&(v as u32).to_le_bytes());
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: usize) {
+    out.extend_from_slice(&(v as u64).to_le_bytes());
+}
+
+pub(crate) fn put_u32_slice(out: &mut Vec<u8>, s: &[u32]) {
+    for &v in s {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+pub(crate) fn put_f32_slice(out: &mut Vec<u8>, s: &[f32]) {
+    for &v in s {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked cursor over a serialized tensor blob.
+pub(crate) struct ByteReader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub(crate) fn new(b: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // `n <= len - i` (never `i + n <= len`): corrupt length fields
+        // may be near usize::MAX, and the sum would wrap in release
+        ensure!(
+            n <= self.b.len() - self.i,
+            "truncated sparse tensor blob (need {n} bytes at offset {})",
+            self.i
+        );
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<usize> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]) as usize)
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<usize> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]) as usize)
+    }
+
+    pub(crate) fn bytes(&mut self, n: usize) -> Result<Vec<u8>> {
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub(crate) fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        let nbytes = n.checked_mul(4).context("element count overflows")?;
+        let s = self.take(nbytes)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub(crate) fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let nbytes = n.checked_mul(4).context("element count overflows")?;
+        let s = self.take(nbytes)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub(crate) fn finish(&self) -> Result<()> {
+        ensure!(
+            self.i == self.b.len(),
+            "trailing bytes in sparse tensor blob ({} of {})",
+            self.b.len() - self.i,
+            self.b.len()
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NmPacked
+// ---------------------------------------------------------------------------
+
+/// n:m semi-structured layer: per group of `m` consecutive weights in a
+/// row, at most `m − n` are nonzero; the kept values are stored densely
+/// and their in-group positions are bit-packed at
+/// [`crate::sparse::nm_index_bits`] bits each. Rows that violate the
+/// pattern (the α>0 outlier rows) are stored dense.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NmPacked {
+    pub rows: usize,
+    pub cols: usize,
+    /// zeros per group
+    pub n: usize,
+    /// group size
+    pub m: usize,
+    /// kept values: packed rows ascending × groups ascending × the
+    /// `m − n` kept slots in ascending column order
+    pub values: Vec<f32>,
+    /// bit-packed in-group indices, one per kept value, little-endian
+    pub indices: Vec<u8>,
+    /// rows stored dense (ascending)
+    pub outlier_rows: Vec<u32>,
+    /// `outlier_rows.len() × cols` row-major dense data
+    pub outlier_values: Vec<f32>,
+}
+
+impl NmPacked {
+    /// Kept weights per group.
+    #[inline]
+    pub fn keep(&self) -> usize {
+        self.m - self.n
+    }
+
+    /// Kept weights per packed row.
+    #[inline]
+    pub fn kept_per_row(&self) -> usize {
+        (self.cols / self.m) * self.keep()
+    }
+
+    /// Metadata bits per kept weight (see [`crate::sparse::nm_index_bits`]).
+    #[inline]
+    pub fn index_bits(&self) -> u32 {
+        super::nm_index_bits(self.n, self.m) as u32
+    }
+
+    /// Pack a dense matrix. Rows whose every `m`-group has at most
+    /// `m − n` entries with nonzero bits are packed; the rest become
+    /// dense outlier rows. Errors (documented, not panics): `m == 0`,
+    /// `n > m`, `m > 65536`, and `cols % m != 0` ([`nm_tail_error`]).
+    pub fn from_dense(w: &Mat, n: usize, m: usize) -> Result<NmPacked> {
+        ensure!(m >= 1, "n:m needs m >= 1");
+        ensure!(n <= m, "n:m needs n <= m (got {n}:{m})");
+        ensure!(m <= 65536, "n:m group size {m} too large for 16-bit indices");
+        if w.cols % m != 0 {
+            bail!("{}", nm_tail_error(w.cols, m));
+        }
+        let keep = m - n;
+        let groups = w.cols / m;
+        let bits = super::nm_index_bits(n, m) as u32;
+
+        let mut outlier_rows: Vec<u32> = Vec::new();
+        let mut packed_rows: Vec<usize> = Vec::new();
+        'rows: for i in 0..w.rows {
+            let row = w.row(i);
+            for g in 0..groups {
+                let nz = row[g * m..(g + 1) * m]
+                    .iter()
+                    .filter(|v| v.to_bits() != 0)
+                    .count();
+                if nz > keep {
+                    outlier_rows.push(i as u32);
+                    continue 'rows;
+                }
+            }
+            packed_rows.push(i);
+        }
+
+        let mut values = Vec::with_capacity(packed_rows.len() * groups * keep);
+        let mut bw = BitWriter::new();
+        let mut kept_idx: Vec<usize> = Vec::with_capacity(keep);
+        for &i in &packed_rows {
+            let row = w.row(i);
+            for g in 0..groups {
+                let grp = &row[g * m..(g + 1) * m];
+                kept_idx.clear();
+                kept_idx.extend((0..m).filter(|&t| grp[t].to_bits() != 0));
+                // pad with zero-valued slots so every group stores
+                // exactly `keep` entries (uniform per-row layout)
+                for (t, v) in grp.iter().enumerate() {
+                    if kept_idx.len() == keep {
+                        break;
+                    }
+                    if v.to_bits() == 0 {
+                        kept_idx.push(t);
+                    }
+                }
+                kept_idx.sort_unstable();
+                debug_assert_eq!(kept_idx.len(), keep);
+                for &t in &kept_idx {
+                    values.push(grp[t]);
+                    bw.push(t, bits);
+                }
+            }
+        }
+        let mut outlier_values = Vec::with_capacity(outlier_rows.len() * w.cols);
+        for &i in &outlier_rows {
+            outlier_values.extend_from_slice(w.row(i as usize));
+        }
+        Ok(NmPacked {
+            rows: w.rows,
+            cols: w.cols,
+            n,
+            m,
+            values,
+            indices: bw.finish(),
+            outlier_rows,
+            outlier_values,
+        })
+    }
+
+    /// Exact (bitwise) dense reconstruction.
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let keep = self.keep();
+        let kpr = self.kept_per_row();
+        let bits = self.index_bits();
+        let mut oi = 0usize;
+        let mut p = 0usize;
+        for i in 0..self.rows {
+            if oi < self.outlier_rows.len() && self.outlier_rows[oi] as usize == i {
+                out.row_mut(i)
+                    .copy_from_slice(&self.outlier_values[oi * self.cols..(oi + 1) * self.cols]);
+                oi += 1;
+                continue;
+            }
+            let vals = &self.values[p * kpr..(p + 1) * kpr];
+            let base = p * kpr * bits as usize;
+            let row = out.row_mut(i);
+            for (t, &v) in vals.iter().enumerate() {
+                let idx = read_bits(&self.indices, base + t * bits as usize, bits);
+                row[(t / keep) * self.m + idx] = v;
+            }
+            p += 1;
+        }
+        out
+    }
+
+    /// Actual storage footprint of this instance in bytes (f32 values).
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 4
+            + self.indices.len()
+            + self.outlier_rows.len() * 4
+            + self.outlier_values.len() * 4
+    }
+
+    pub(crate) fn write_bytes(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.rows);
+        put_u32(out, self.cols);
+        put_u32(out, self.n);
+        put_u32(out, self.m);
+        put_u64(out, self.values.len());
+        put_f32_slice(out, &self.values);
+        put_u64(out, self.indices.len());
+        out.extend_from_slice(&self.indices);
+        put_u32(out, self.outlier_rows.len());
+        put_u32_slice(out, &self.outlier_rows);
+        put_f32_slice(out, &self.outlier_values);
+    }
+
+    pub(crate) fn read_bytes(r: &mut ByteReader) -> Result<NmPacked> {
+        let rows = r.u32()?;
+        let cols = r.u32()?;
+        let n = r.u32()?;
+        let m = r.u32()?;
+        ensure!(m >= 1 && n <= m, "corrupt n:m header ({n}:{m})");
+        ensure!(m <= 65536, "corrupt n:m header (m {m} exceeds 16-bit indices)");
+        ensure!(cols % m == 0, "corrupt n:m header (cols {cols}, m {m})");
+        let nv = r.u64()?;
+        let values = r.f32_vec(nv)?;
+        let ni = r.u64()?;
+        let indices = r.bytes(ni)?;
+        let no = r.u32()?;
+        ensure!(no <= rows, "corrupt n:m header (outliers {no} > rows {rows})");
+        let outlier_rows = r.u32_vec(no)?;
+        let outlier_values = r.f32_vec(no * cols)?;
+        let t = NmPacked { rows, cols, n, m, values, indices, outlier_rows, outlier_values };
+        ensure!(
+            t.values.len() == (rows - no) * t.kept_per_row(),
+            "n:m value count mismatch"
+        );
+        ensure!(
+            t.indices.len() == (t.values.len() * t.index_bits() as usize).div_ceil(8),
+            "n:m index bytes mismatch"
+        );
+        ensure!(
+            t.outlier_rows.windows(2).all(|w| w[0] < w[1])
+                && t.outlier_rows.iter().all(|&x| (x as usize) < rows),
+            "n:m outlier rows not sorted/in range"
+        );
+        // validate the bit-packed index stream: every in-group index
+        // must be < m and strictly increasing within its group (the
+        // writer's invariant) — otherwise `to_dense` would index out of
+        // bounds or silently collapse duplicate slots
+        let keep = t.keep();
+        let bits = t.index_bits();
+        if keep > 0 {
+            let mut prev = 0usize;
+            for tt in 0..t.values.len() {
+                let idx = read_bits(&t.indices, tt * bits as usize, bits);
+                ensure!(idx < m, "n:m index {idx} out of range for m={m}");
+                ensure!(
+                    tt % keep == 0 || idx > prev,
+                    "n:m indices not strictly increasing within a group"
+                );
+                prev = idx;
+            }
+        }
+        Ok(t)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Csr
+// ---------------------------------------------------------------------------
+
+/// Compressed sparse row: the format for unstructured masks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// `rows + 1` offsets into `col_idx` / `values`
+    pub row_ptr: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Store every entry with nonzero bits (exact round-trip).
+    pub fn from_dense(w: &Mat) -> Csr {
+        assert!(w.cols <= u32::MAX as usize && w.data.len() <= u32::MAX as usize);
+        let mut row_ptr = Vec::with_capacity(w.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for i in 0..w.rows {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                if v.to_bits() != 0 {
+                    col_idx.push(j as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(values.len() as u32);
+        }
+        Csr { rows: w.rows, cols: w.cols, row_ptr, col_idx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Exact (bitwise) dense reconstruction.
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let row = out.row_mut(i);
+            for t in self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize {
+                row[self.col_idx[t] as usize] = self.values[t];
+            }
+        }
+        out
+    }
+
+    /// Actual storage footprint in bytes (f32 values, u32 indices).
+    pub fn bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.values.len() * 4
+    }
+
+    pub(crate) fn write_bytes(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.rows);
+        put_u32(out, self.cols);
+        put_u32_slice(out, &self.row_ptr);
+        put_u64(out, self.values.len());
+        put_u32_slice(out, &self.col_idx);
+        put_f32_slice(out, &self.values);
+    }
+
+    pub(crate) fn read_bytes(r: &mut ByteReader) -> Result<Csr> {
+        let rows = r.u32()?;
+        let cols = r.u32()?;
+        let row_ptr = r.u32_vec(rows + 1)?;
+        let nnz = r.u64()?;
+        let col_idx = r.u32_vec(nnz)?;
+        let values = r.f32_vec(nnz)?;
+        ensure!(
+            row_ptr.first() == Some(&0)
+                && row_ptr.last() == Some(&(nnz as u32))
+                && row_ptr.windows(2).all(|w| w[0] <= w[1]),
+            "corrupt CSR row pointers"
+        );
+        ensure!(
+            col_idx.iter().all(|&j| (j as usize) < cols),
+            "CSR column index out of range"
+        );
+        Ok(Csr { rows, cols, row_ptr, col_idx, values })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DenseCompact
+// ---------------------------------------------------------------------------
+
+/// Structured column removal: the kept columns of the non-outlier rows
+/// as one compact dense matrix, plus dense outlier rows (the α>0 rows
+/// that keep the removed columns).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseCompact {
+    pub rows: usize,
+    pub cols: usize,
+    /// surviving original column indices (ascending)
+    pub kept_cols: Vec<u32>,
+    /// `(rows − outlier_rows.len()) × kept_cols.len()` row-major,
+    /// packed rows in ascending original order
+    pub data: Vec<f32>,
+    /// rows stored dense (ascending)
+    pub outlier_rows: Vec<u32>,
+    /// `outlier_rows.len() × cols` row-major dense data
+    pub outlier_values: Vec<f32>,
+}
+
+impl DenseCompact {
+    /// Detect the shared removed-column set (the columns hitting the
+    /// maximum per-column zero count) and the outlier rows that keep
+    /// them. Total on every input; inputs without structured sparsity
+    /// simply compress poorly (never lossily).
+    pub fn from_dense(w: &Mat) -> DenseCompact {
+        let (c, b) = (w.rows, w.cols);
+        let mut zero_count = vec![0usize; b];
+        for i in 0..c {
+            for (j, v) in w.row(i).iter().enumerate() {
+                if v.to_bits() == 0 {
+                    zero_count[j] += 1;
+                }
+            }
+        }
+        let c_star = zero_count.iter().copied().max().unwrap_or(0);
+        let removed: Vec<bool> = (0..b)
+            .map(|j| c_star > 0 && zero_count[j] == c_star)
+            .collect();
+        let kept_cols: Vec<u32> = (0..b).filter(|&j| !removed[j]).map(|j| j as u32).collect();
+        let mut outlier_rows: Vec<u32> = Vec::new();
+        let mut packed: Vec<usize> = Vec::new();
+        for i in 0..c {
+            let keeps_removed = w
+                .row(i)
+                .iter()
+                .enumerate()
+                .any(|(j, v)| removed[j] && v.to_bits() != 0);
+            if keeps_removed {
+                outlier_rows.push(i as u32);
+            } else {
+                packed.push(i);
+            }
+        }
+        let mut data = Vec::with_capacity(packed.len() * kept_cols.len());
+        for &i in &packed {
+            let row = w.row(i);
+            for &j in &kept_cols {
+                data.push(row[j as usize]);
+            }
+        }
+        let mut outlier_values = Vec::with_capacity(outlier_rows.len() * b);
+        for &i in &outlier_rows {
+            outlier_values.extend_from_slice(w.row(i as usize));
+        }
+        DenseCompact { rows: c, cols: b, kept_cols, data, outlier_rows, outlier_values }
+    }
+
+    /// Exact (bitwise) dense reconstruction.
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        let kc = self.kept_cols.len();
+        let mut oi = 0usize;
+        let mut p = 0usize;
+        for i in 0..self.rows {
+            if oi < self.outlier_rows.len() && self.outlier_rows[oi] as usize == i {
+                out.row_mut(i)
+                    .copy_from_slice(&self.outlier_values[oi * self.cols..(oi + 1) * self.cols]);
+                oi += 1;
+                continue;
+            }
+            let src = &self.data[p * kc..(p + 1) * kc];
+            let row = out.row_mut(i);
+            for (t, &j) in self.kept_cols.iter().enumerate() {
+                row[j as usize] = src[t];
+            }
+            p += 1;
+        }
+        out
+    }
+
+    /// Actual storage footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.kept_cols.len() * 4
+            + self.data.len() * 4
+            + self.outlier_rows.len() * 4
+            + self.outlier_values.len() * 4
+    }
+
+    pub(crate) fn write_bytes(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.rows);
+        put_u32(out, self.cols);
+        put_u32(out, self.kept_cols.len());
+        put_u32_slice(out, &self.kept_cols);
+        put_u32(out, self.outlier_rows.len());
+        put_u32_slice(out, &self.outlier_rows);
+        put_f32_slice(out, &self.data);
+        put_f32_slice(out, &self.outlier_values);
+    }
+
+    pub(crate) fn read_bytes(r: &mut ByteReader) -> Result<DenseCompact> {
+        let rows = r.u32()?;
+        let cols = r.u32()?;
+        let nk = r.u32()?;
+        let kept_cols = r.u32_vec(nk)?;
+        let no = r.u32()?;
+        ensure!(no <= rows, "corrupt DenseCompact header");
+        let outlier_rows = r.u32_vec(no)?;
+        let data = r.f32_vec((rows - no) * nk)?;
+        let outlier_values = r.f32_vec(no * cols)?;
+        ensure!(
+            kept_cols.windows(2).all(|w| w[0] < w[1])
+                && kept_cols.iter().all(|&j| (j as usize) < cols),
+            "DenseCompact kept columns not sorted/in range"
+        );
+        ensure!(
+            outlier_rows.windows(2).all(|w| w[0] < w[1])
+                && outlier_rows.iter().all(|&x| (x as usize) < rows),
+            "DenseCompact outlier rows not sorted/in range"
+        );
+        Ok(DenseCompact { rows, cols, kept_cols, data, outlier_rows, outlier_values })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn bits_of(m: &Mat) -> Vec<u32> {
+        m.data.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn bit_stream_roundtrips() {
+        for bits in [0u32, 1, 2, 3, 5, 7, 8, 11, 16] {
+            let mask = if bits == 0 { 0 } else { (1usize << bits) - 1 };
+            let vals: Vec<usize> = (0..37).map(|k| (k * 2654435761usize) & mask).collect();
+            let mut bw = BitWriter::new();
+            for &v in &vals {
+                bw.push(v, bits);
+            }
+            let buf = bw.finish();
+            for (k, &v) in vals.iter().enumerate() {
+                assert_eq!(read_bits(&buf, k * bits as usize, bits), v, "bits={bits} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn nm_roundtrip_with_outliers_and_negative_zero() {
+        let mut r = Rng::new(11);
+        let (c, b, n, m) = (9, 16, 2usize, 4usize);
+        let mut w = Mat::zeros(c, b);
+        for i in 0..c {
+            if i == 3 || i == 7 {
+                // outlier rows: dense
+                for v in w.row_mut(i) {
+                    *v = r.normal_f32(0.0, 1.0);
+                }
+                continue;
+            }
+            for g in (0..b).step_by(m) {
+                w.row_mut(i)[g] = r.normal_f32(0.0, 1.0);
+                w.row_mut(i)[g + 2] = r.normal_f32(0.0, 1.0);
+            }
+        }
+        // a kept negative zero must survive bitwise
+        w.row_mut(0)[0] = -0.0;
+        let t = NmPacked::from_dense(&w, n, m).unwrap();
+        assert_eq!(t.outlier_rows, vec![3, 7]);
+        assert_eq!(bits_of(&t.to_dense()), bits_of(&w));
+        assert!(t.bytes() < w.data.len() * 4);
+    }
+
+    #[test]
+    fn nm_rejects_tail_with_documented_error() {
+        let w = Mat::zeros(2, 10);
+        let err = NmPacked::from_dense(&w, 2, 4).unwrap_err().to_string();
+        assert_eq!(err, nm_tail_error(10, 4));
+    }
+
+    #[test]
+    fn csr_roundtrip_exact() {
+        let mut r = Rng::new(12);
+        let mut w = Mat::from_fn(13, 21, |_, _| r.normal_f32(0.0, 1.0));
+        for (k, v) in w.data.iter_mut().enumerate() {
+            if k % 3 == 0 {
+                *v = 0.0;
+            }
+        }
+        w.data[5] = -0.0;
+        let t = Csr::from_dense(&w);
+        assert_eq!(bits_of(&t.to_dense()), bits_of(&w));
+        // -0.0 is kept as a value, not dropped
+        assert_eq!(t.nnz(), w.data.iter().filter(|v| v.to_bits() != 0).count());
+    }
+
+    #[test]
+    fn dense_compact_roundtrip_with_outliers() {
+        let mut r = Rng::new(13);
+        let mut w = Mat::from_fn(10, 12, |_, _| r.normal_f32(0.0, 1.0));
+        // remove columns 2, 5, 9 from all rows except outlier row 4
+        for i in 0..10 {
+            if i == 4 {
+                continue;
+            }
+            for &j in &[2usize, 5, 9] {
+                w.row_mut(i)[j] = 0.0;
+            }
+        }
+        let t = DenseCompact::from_dense(&w);
+        assert_eq!(t.outlier_rows, vec![4]);
+        assert_eq!(t.kept_cols.len(), 9);
+        assert_eq!(bits_of(&t.to_dense()), bits_of(&w));
+        assert!(t.bytes() < w.data.len() * 4 + 12 * 4);
+    }
+
+    #[test]
+    fn dense_compact_total_on_unstructured_input() {
+        // no shared zero columns: compresses poorly but stays exact
+        let mut r = Rng::new(14);
+        let w = Mat::from_fn(6, 8, |_, _| r.normal_f32(0.0, 1.0));
+        let t = DenseCompact::from_dense(&w);
+        assert_eq!(bits_of(&t.to_dense()), bits_of(&w));
+    }
+
+    #[test]
+    fn serialization_roundtrips_all_formats() {
+        let mut r = Rng::new(15);
+        let mut w = Mat::from_fn(8, 16, |_, _| r.normal_f32(0.0, 1.0));
+        for g in (0..16).step_by(4) {
+            for i in 0..7 {
+                w.row_mut(i)[g] = 0.0;
+                w.row_mut(i)[g + 1] = 0.0;
+            }
+        }
+        let nm = NmPacked::from_dense(&w, 2, 4).unwrap();
+        let mut buf = Vec::new();
+        nm.write_bytes(&mut buf);
+        let mut rd = ByteReader::new(&buf);
+        let back = NmPacked::read_bytes(&mut rd).unwrap();
+        rd.finish().unwrap();
+        assert_eq!(back, nm);
+
+        let csr = Csr::from_dense(&w);
+        let mut buf = Vec::new();
+        csr.write_bytes(&mut buf);
+        let mut rd = ByteReader::new(&buf);
+        let back = Csr::read_bytes(&mut rd).unwrap();
+        rd.finish().unwrap();
+        assert_eq!(back, csr);
+
+        let dc = DenseCompact::from_dense(&w);
+        let mut buf = Vec::new();
+        dc.write_bytes(&mut buf);
+        let mut rd = ByteReader::new(&buf);
+        let back = DenseCompact::read_bytes(&mut rd).unwrap();
+        rd.finish().unwrap();
+        assert_eq!(back, dc);
+    }
+
+    #[test]
+    fn truncated_blob_is_rejected() {
+        let w = Mat::zeros(3, 4);
+        let csr = Csr::from_dense(&w);
+        let mut buf = Vec::new();
+        csr.write_bytes(&mut buf);
+        buf.pop();
+        let mut rd = ByteReader::new(&buf);
+        assert!(Csr::read_bytes(&mut rd).is_err());
+    }
+}

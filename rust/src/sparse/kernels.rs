@@ -1,0 +1,284 @@
+//! Sparse × dense execution kernels — the measured counterpart of the
+//! modeled n:m speedup (DESIGN.md §Sparse).
+//!
+//! Every kernel computes `out = W · X` (`W` compressed `c×b`, `X` dense
+//! `b×k`) with f32 accumulation in ascending-column order per row —
+//! exactly the operation order of [`crate::linalg::gemm::matmul_into`]
+//! restricted to the nonzero entries, so results match the dense GEMM
+//! bit-for-bit on typical inputs and within 1e-5 relative error always
+//! (pinned by the cross-validation tests and the `sparse_matmul`
+//! bench's self-check).
+//!
+//! Parallelism: output rows are banded over the shared
+//! [`crate::engine::PruneEngine`] pool (disjoint bands ⇒ bit-identical
+//! results for any thread count, like every other kernel in the crate);
+//! the n:m path decodes each row's bit-packed column indices into a
+//! per-worker pooled scratch (the [`SpmvScratch`] analogue of
+//! `linalg::batched::RowSolveScratch`) so the hot loop does no
+//! allocation and no per-element bit arithmetic.
+
+use super::formats::{read_bits, Csr, DenseCompact, NmPacked};
+use super::SparseTensor;
+use crate::engine;
+use crate::linalg::Mat;
+
+/// Per-worker decode scratch for the n:m kernel: the current row's
+/// absolute column indices, reused across rows, calls and layers.
+pub struct SpmvScratch {
+    cols: Vec<u32>,
+}
+
+impl SpmvScratch {
+    fn new() -> SpmvScratch {
+        SpmvScratch { cols: Vec::new() }
+    }
+}
+
+thread_local! {
+    static SPMV_SCRATCH: std::cell::RefCell<SpmvScratch> =
+        std::cell::RefCell::new(SpmvScratch::new());
+}
+
+fn with_spmv_scratch<R>(f: impl FnOnce(&mut SpmvScratch) -> R) -> R {
+    SPMV_SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+/// `out = W · X` for a compressed tensor, row-banded on the engine.
+pub fn matmul_into(t: &SparseTensor, x: &Mat, out: &mut Mat) {
+    assert_eq!(t.cols(), x.rows, "sparse matmul inner-dim mismatch");
+    assert_eq!(out.rows, t.rows(), "sparse matmul output rows");
+    assert_eq!(out.cols, x.cols, "sparse matmul output cols");
+    let (c, k, b) = (out.rows, out.cols, x.rows);
+    if c == 0 || k == 0 {
+        return;
+    }
+    let eng = engine::global();
+    if c * k * b < 64 * 64 * 64 || eng.threads() == 1 {
+        rows_body(t, x, 0, &mut out.data, k);
+        return;
+    }
+    let rows_per = eng.chunk(c);
+    eng.for_each_band(&mut out.data, rows_per * k, |bi, head| {
+        rows_body(t, x, bi * rows_per, head, k);
+    });
+}
+
+/// Allocating convenience wrapper.
+pub fn matmul(t: &SparseTensor, x: &Mat) -> Mat {
+    let mut out = Mat::zeros(t.rows(), x.cols);
+    matmul_into(t, x, &mut out);
+    out
+}
+
+/// Matrix–vector convenience (`k = 1`, the serving hot path).
+pub fn matvec(t: &SparseTensor, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), t.cols(), "sparse matvec dim mismatch");
+    let xm = Mat::from_vec(x.len(), 1, x.to_vec());
+    matmul(t, &xm).data
+}
+
+/// Compute output rows `[r0, r0 + head.len()/k)` into `head`.
+fn rows_body(t: &SparseTensor, x: &Mat, r0: usize, head: &mut [f32], k: usize) {
+    head.iter_mut().for_each(|v| *v = 0.0);
+    let rows_here = head.len() / k;
+    match t {
+        SparseTensor::Nm(p) => nm_rows(p, x, r0, rows_here, head, k),
+        SparseTensor::Csr(c) => csr_rows(c, x, r0, rows_here, head, k),
+        SparseTensor::DenseCompact(d) => dc_rows(d, x, r0, rows_here, head, k),
+    }
+}
+
+/// `orow += v · X[col, :]` over a dense weight row with zero skipping
+/// (the outlier-row path; same inner loop as the dense GEMM).
+#[inline]
+fn dense_row(wrow: &[f32], x: &Mat, orow: &mut [f32], k: usize) {
+    for (col, &v) in wrow.iter().enumerate() {
+        if v == 0.0 {
+            continue;
+        }
+        let xrow = x.row(col);
+        for j in 0..k {
+            orow[j] += v * xrow[j];
+        }
+    }
+}
+
+fn nm_rows(t: &NmPacked, x: &Mat, r0: usize, rows_here: usize, head: &mut [f32], k: usize) {
+    let keep = t.keep();
+    let kpr = t.kept_per_row();
+    let bits = t.index_bits();
+    let mut oi = t.outlier_rows.partition_point(|&r| (r as usize) < r0);
+    let mut p = r0 - oi;
+    with_spmv_scratch(|s| {
+        for ri in 0..rows_here {
+            let i = r0 + ri;
+            let orow = &mut head[ri * k..(ri + 1) * k];
+            if oi < t.outlier_rows.len() && t.outlier_rows[oi] as usize == i {
+                dense_row(&t.outlier_values[oi * t.cols..(oi + 1) * t.cols], x, orow, k);
+                oi += 1;
+                continue;
+            }
+            let vals = &t.values[p * kpr..(p + 1) * kpr];
+            // decode this row's in-group indices to absolute columns once
+            let base = p * kpr * bits as usize;
+            s.cols.clear();
+            for tt in 0..kpr {
+                let idx = read_bits(&t.indices, base + tt * bits as usize, bits);
+                s.cols.push(((tt / keep) * t.m + idx) as u32);
+            }
+            for (tt, &v) in vals.iter().enumerate() {
+                if v == 0.0 {
+                    continue; // zero-padded kept slot
+                }
+                let xrow = x.row(s.cols[tt] as usize);
+                for j in 0..k {
+                    orow[j] += v * xrow[j];
+                }
+            }
+            p += 1;
+        }
+    });
+}
+
+fn csr_rows(t: &Csr, x: &Mat, r0: usize, rows_here: usize, head: &mut [f32], k: usize) {
+    for ri in 0..rows_here {
+        let i = r0 + ri;
+        let orow = &mut head[ri * k..(ri + 1) * k];
+        for tt in t.row_ptr[i] as usize..t.row_ptr[i + 1] as usize {
+            let v = t.values[tt];
+            if v == 0.0 {
+                continue; // stored -0.0
+            }
+            let xrow = x.row(t.col_idx[tt] as usize);
+            for j in 0..k {
+                orow[j] += v * xrow[j];
+            }
+        }
+    }
+}
+
+fn dc_rows(t: &DenseCompact, x: &Mat, r0: usize, rows_here: usize, head: &mut [f32], k: usize) {
+    let kc = t.kept_cols.len();
+    let mut oi = t.outlier_rows.partition_point(|&r| (r as usize) < r0);
+    let mut p = r0 - oi;
+    for ri in 0..rows_here {
+        let i = r0 + ri;
+        let orow = &mut head[ri * k..(ri + 1) * k];
+        if oi < t.outlier_rows.len() && t.outlier_rows[oi] as usize == i {
+            dense_row(&t.outlier_values[oi * t.cols..(oi + 1) * t.cols], x, orow, k);
+            oi += 1;
+            continue;
+        }
+        let drow = &t.data[p * kc..(p + 1) * kc];
+        for (tt, &v) in drow.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let xrow = x.row(t.kept_cols[tt] as usize);
+            for j in 0..k {
+                orow[j] += v * xrow[j];
+            }
+        }
+        p += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::rng::Rng;
+    use crate::sparse::max_rel_err;
+
+    fn pruned_nm(c: usize, b: usize, seed: u64) -> Mat {
+        let mut r = Rng::new(seed);
+        let w = Mat::from_fn(c, b, |_, _| r.normal_f32(0.0, 1.0));
+        crate::pruning::magnitude::semi_structured(&w, 2, 4).w
+    }
+
+    #[test]
+    fn nm_kernel_matches_gemm() {
+        let w = pruned_nm(33, 48, 21);
+        let mut r = Rng::new(22);
+        let x = Mat::from_fn(48, 9, |_, _| r.normal_f32(0.0, 1.0));
+        let t = SparseTensor::Nm(NmPacked::from_dense(&w, 2, 4).unwrap());
+        let got = matmul(&t, &x);
+        let want = gemm::matmul(&w, &x);
+        assert!(max_rel_err(&got, &want) <= 1e-5, "err {}", max_rel_err(&got, &want));
+    }
+
+    #[test]
+    fn nm_kernel_handles_outlier_rows() {
+        let mut w = pruned_nm(16, 32, 23);
+        let mut r = Rng::new(24);
+        for &i in &[2usize, 9, 15] {
+            for v in w.row_mut(i) {
+                *v = r.normal_f32(0.0, 1.0);
+            }
+        }
+        let x = Mat::from_fn(32, 5, |_, _| r.normal_f32(0.0, 1.0));
+        let t = SparseTensor::Nm(NmPacked::from_dense(&w, 2, 4).unwrap());
+        let got = matmul(&t, &x);
+        let want = gemm::matmul(&w, &x);
+        assert!(max_rel_err(&got, &want) <= 1e-5);
+    }
+
+    #[test]
+    fn csr_kernel_matches_gemm() {
+        let mut r = Rng::new(25);
+        let mut w = Mat::from_fn(19, 27, |_, _| r.normal_f32(0.0, 1.0));
+        for (k, v) in w.data.iter_mut().enumerate() {
+            if k % 10 < 7 {
+                *v = 0.0;
+            }
+        }
+        let x = Mat::from_fn(27, 4, |_, _| r.normal_f32(0.0, 1.0));
+        let t = SparseTensor::Csr(Csr::from_dense(&w));
+        let got = matmul(&t, &x);
+        let want = gemm::matmul(&w, &x);
+        assert!(max_rel_err(&got, &want) <= 1e-5);
+    }
+
+    #[test]
+    fn dense_compact_kernel_matches_gemm() {
+        let mut r = Rng::new(26);
+        let mut w = Mat::from_fn(14, 20, |_, _| r.normal_f32(0.0, 1.0));
+        for i in 0..14 {
+            if i == 6 {
+                continue; // outlier row keeps every column
+            }
+            for &j in &[1usize, 4, 7, 13, 18] {
+                w.row_mut(i)[j] = 0.0;
+            }
+        }
+        let x = Mat::from_fn(20, 6, |_, _| r.normal_f32(0.0, 1.0));
+        let t = SparseTensor::DenseCompact(DenseCompact::from_dense(&w));
+        let got = matmul(&t, &x);
+        let want = gemm::matmul(&w, &x);
+        assert!(max_rel_err(&got, &want) <= 1e-5);
+    }
+
+    #[test]
+    fn serial_and_parallel_bit_identical() {
+        // a shape large enough to cross the banding threshold
+        let w = pruned_nm(96, 128, 27);
+        let mut r = Rng::new(28);
+        let x = Mat::from_fn(128, 64, |_, _| r.normal_f32(0.0, 1.0));
+        let t = SparseTensor::Nm(NmPacked::from_dense(&w, 2, 4).unwrap());
+        let par = matmul(&t, &x);
+        let ser = crate::engine::with_serial(|| matmul(&t, &x));
+        let bits = |m: &Mat| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&par), bits(&ser));
+    }
+
+    #[test]
+    fn matvec_matches_matmul_column() {
+        let w = pruned_nm(24, 32, 29);
+        let mut r = Rng::new(30);
+        let xv: Vec<f32> = (0..32).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let t = SparseTensor::Nm(NmPacked::from_dense(&w, 2, 4).unwrap());
+        let y = matvec(&t, &xv);
+        let xm = Mat::from_vec(32, 1, xv);
+        assert_eq!(y, matmul(&t, &xm).data);
+    }
+}

@@ -211,7 +211,7 @@ fn aot_thanos_nm_format() {
         )
         .unwrap();
     let w_aot = to_mat(&out[0], c, b).unwrap();
-    pruning::nm::validate(&w_aot, 2, 4, &[]).expect("2:4 format");
+    pruning::nm::validate(&w_aot, 2, 4, &pruning::nm::RowSet::new()).expect("2:4 format");
     // joint update keeps it ahead of wanda 2:4
     let l_aot = recon_loss(&w_aot, &w, &x);
     let l_wanda = recon_loss(&pruning::wanda::semi_structured(&w, &stats, 2, 4).w, &w, &x);

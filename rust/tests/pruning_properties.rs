@@ -97,8 +97,21 @@ fn prop_nm_format_all_methods() {
                     &opts(),
                 )
                 .map_err(|e| e.to_string())?;
-                pruning::nm::validate(&pruned.w, 2, 4, &[])
+                pruning::nm::validate(&pruned.w, 2, 4, &pruning::nm::RowSet::new())
                     .map_err(|e| format!("{}: {e}", method.name()))?;
+                // the packed format must reconstruct the pruned weights
+                // bitwise (the sparse/ subsystem consumes these outputs)
+                let packed = thanos::sparse::NmPacked::from_dense(&pruned.w, 2, 4)
+                    .map_err(|e| e.to_string())?;
+                if packed
+                    .to_dense()
+                    .data
+                    .iter()
+                    .zip(&pruned.w.data)
+                    .any(|(a, b)| a.to_bits() != b.to_bits())
+                {
+                    return Err(format!("{}: NmPacked round-trip differs", method.name()));
+                }
             }
             Ok(())
         },
@@ -204,7 +217,8 @@ fn prop_idempotent_on_already_pruned() {
                 &opts(),
             )
             .map_err(|e| e.to_string())?;
-            pruning::nm::validate(&twice.w, 2, 4, &[]).map_err(|e| e.to_string())?;
+            pruning::nm::validate(&twice.w, 2, 4, &pruning::nm::RowSet::new())
+                .map_err(|e| e.to_string())?;
             Ok(())
         },
     );
