@@ -68,3 +68,76 @@ pub fn env_usize(name: &str, default: usize) -> usize {
 pub fn env_str(name: &str, default: &str) -> String {
     std::env::var(name).unwrap_or_else(|_| default.to_string())
 }
+
+/// `THANOS_BENCH_QUICK=1`: CI-sized shapes for every bench that feeds
+/// [`BenchJson`].
+pub fn quick_mode() -> bool {
+    env_str("THANOS_BENCH_QUICK", "0") == "1"
+}
+
+use thanos::jsonutil::{obj, Json};
+
+/// Shared machine-readable perf-trajectory writer: every bench merges
+/// its measurements into ONE `BENCH_linalg.json` at the repo root
+/// (override the path with `THANOS_BENCH_OUT`), keyed by
+/// `bench/shape/case`. Existing entries from other benches are
+/// preserved, so `linalg_kernels`, `fig9_pruning_time` and
+/// `sparse_matmul` each own a keyspace of the same file and future PRs
+/// can diff like against like.
+pub struct BenchJson {
+    path: std::path::PathBuf,
+    entries: std::collections::BTreeMap<String, Json>,
+}
+
+impl BenchJson {
+    pub fn open() -> BenchJson {
+        let path = std::env::var("THANOS_BENCH_OUT")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|_| {
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_linalg.json")
+            });
+        let entries = Json::parse_file(&path)
+            .ok()
+            .and_then(|j| j.get_opt("entries").cloned())
+            .and_then(|e| match e {
+                Json::Obj(m) => Some(m),
+                _ => None,
+            })
+            .unwrap_or_default();
+        BenchJson { path, entries }
+    }
+
+    /// Record (or replace) one entry; `fields` become the entry object.
+    /// Run context (`threads`, `quick`) is stamped per entry — entries
+    /// from different runs coexist in one file, so a file-global stamp
+    /// would mislabel retained entries.
+    pub fn record(&mut self, key: &str, fields: Vec<(&str, Json)>) {
+        let mut fields = fields;
+        fields.push((
+            "threads",
+            Json::Num(thanos::linalg::gemm::num_threads() as f64),
+        ));
+        fields.push(("quick", Json::Bool(quick_mode())));
+        self.entries.insert(key.to_string(), obj(fields));
+    }
+
+    pub fn num(v: f64) -> Json {
+        Json::Num(v)
+    }
+
+    pub fn text(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+
+    /// Write the merged document (pretty-printed, stable key order).
+    pub fn save(&self) {
+        let doc = obj(vec![
+            ("schema", Json::Str("thanos-linalg-bench/v1".to_string())),
+            ("entries", Json::Obj(self.entries.clone())),
+        ]);
+        let mut text = doc.to_string_pretty();
+        text.push('\n');
+        std::fs::write(&self.path, text).expect("write bench json");
+        println!("merged results into {}", self.path.display());
+    }
+}

@@ -82,8 +82,8 @@ fn whole_model_suite(d: usize, ff: usize, tokens: usize) -> (f64, u64, engine::E
     (secs, checksum, delta)
 }
 
-fn engine_scaling_section(csv_tokens: usize) {
-    let d = env_usize("THANOS_FIG9_SCALE_D", 512);
+fn engine_scaling_section(csv_tokens: usize, bj: &mut BenchJson) {
+    let d = env_usize("THANOS_FIG9_SCALE_D", if quick_mode() { 256 } else { 512 });
     println!("== engine scaling: whole-model suite, layer-parallel (d={d}) ==");
     let (par_secs, par_sum, st) = whole_model_suite(d, 4 * d, csv_tokens);
     println!(
@@ -129,6 +129,16 @@ fn engine_scaling_section(csv_tokens: usize) {
                 ),
             );
             println!("  wrote bench_results/fig9_engine_scaling.csv");
+            bj.record(
+                &format!("fig9_engine_scaling/d{d}"),
+                vec![
+                    ("threads", BenchJson::num(st.threads as f64)),
+                    ("parallel_secs", BenchJson::num(par_secs)),
+                    ("serial_secs", BenchJson::num(ser_secs)),
+                    ("speedup", BenchJson::num(speedup)),
+                    ("bit_identical", thanos::jsonutil::Json::Bool(identical)),
+                ],
+            );
         }
         None => println!(
             "  (single-thread child run unavailable; rerun with THANOS_THREADS=1 to compare)"
@@ -140,8 +150,8 @@ fn main() {
     if std::env::var(CHILD_ENV).is_ok() {
         // child mode: run ONLY the whole-model suite (the parent set
         // THANOS_THREADS=1) and report time + weight checksum
-        let d = env_usize("THANOS_FIG9_SCALE_D", 512);
-        let tokens = env_usize("THANOS_FIG9_TOKENS", 512);
+        let d = env_usize("THANOS_FIG9_SCALE_D", if quick_mode() { 256 } else { 512 });
+        let tokens = env_usize("THANOS_FIG9_TOKENS", if quick_mode() { 128 } else { 512 });
         let (secs, checksum, _) = whole_model_suite(d, 4 * d, tokens);
         println!("ENGINE_SCALING secs={secs:.6} checksum={checksum:016x}");
         return;
@@ -152,9 +162,11 @@ fn main() {
         OptModel { name: "OPT-350M", d: 1024, ff: 4096, n_blocks: 24 },
         OptModel { name: "OPT-1.3B", d: 2048, ff: 8192, n_blocks: 24 },
     ];
-    let max_d = env_usize("THANOS_FIG9_MAXD", 1024);
+    // THANOS_BENCH_QUICK=1: one model, fewer calibration tokens
+    let max_d = env_usize("THANOS_FIG9_MAXD", if quick_mode() { 768 } else { 1024 });
     let models: Vec<&OptModel> = all.iter().filter(|m| m.d <= max_d).collect();
-    let a = env_usize("THANOS_FIG9_TOKENS", 512); // calib tokens per layer
+    let a = env_usize("THANOS_FIG9_TOKENS", if quick_mode() { 128 } else { 512 });
+    let mut bj = BenchJson::open();
     let mut csv = Csv::new("fig9_pruning_time");
     let header = "model,method,pattern,block_secs,model_secs_est";
 
@@ -235,6 +247,13 @@ fn main() {
                 header,
                 &format!("{},{},{},{:.3},{:.1}", m.name, method, pattern, total, est),
             );
+            bj.record(
+                &format!("fig9_pruning_time/{}/{}/{}", m.name, method, pattern),
+                vec![
+                    ("block_secs", BenchJson::num(total)),
+                    ("model_secs_est", BenchJson::num(est)),
+                ],
+            );
         }
         println!();
     }
@@ -248,6 +267,7 @@ fn main() {
     // single-threaded engine setting, with bit-identity verification
     // (disable with THANOS_FIG9_SCALING=0)
     if env_str("THANOS_FIG9_SCALING", "1") != "0" {
-        engine_scaling_section(a);
+        engine_scaling_section(a, &mut bj);
     }
+    bj.save();
 }

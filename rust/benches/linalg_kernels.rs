@@ -1,0 +1,255 @@
+//! Per-kernel perf trajectory: the packed register-tiled core
+//! (DESIGN.md §Perf-L3) vs the seed loop nests, in ONE process via the
+//! `THANOS_LINALG_NAIVE` runtime switch, at default engine threads.
+//!
+//! Measures GEMM f32, SYRK f64 (`xxt_f64`), blocked Cholesky, blocked
+//! TRSM (`upper_tri_solve_many`) and an end-to-end Thanos layer prune
+//! (the Fig. 9 unit of work), then merges everything into
+//! `BENCH_linalg.json` at the repo root through the shared
+//! `benches/common` writer.
+//!
+//! Every kernel is cross-validated old-path vs new-path; divergence
+//! beyond summation-reorder tolerances fails the process — this is the
+//! CI `bench-smoke` regression gate.
+//!
+//! ```bash
+//! cargo bench --bench linalg_kernels                     # full shapes
+//! THANOS_BENCH_QUICK=1 cargo bench --bench linalg_kernels  # CI smoke
+//! ```
+
+mod common;
+use common::*;
+use thanos::linalg::chol::{cholesky_in_place, upper_tri_solve_many};
+use thanos::linalg::gemm::{matmul, xxt_f64};
+use thanos::linalg::kernel;
+use thanos::linalg::{Mat, MatF64};
+use thanos::pruning::{self, PruneOpts};
+use thanos::rng::Rng;
+use thanos::sparse::bench::best_of;
+
+/// Max |entry| of an f64 matrix (the rel-error scale).
+fn scale_f64(m: &MatF64) -> f64 {
+    m.data.iter().fold(1.0f64, |s, &v| s.max(v.abs()))
+}
+
+fn scale_f32(m: &Mat) -> f64 {
+    m.data.iter().fold(1.0f32, |s, &v| s.max(v.abs())) as f64
+}
+
+fn main() {
+    let quick = quick_mode();
+    let reps = if quick { 2 } else { 3 };
+    let mut bj = BenchJson::open();
+    let mut worst_f32 = 0.0f64;
+    let mut worst_f64 = 0.0f64;
+    println!(
+        "== linalg kernels: packed register-tiled core vs seed paths ({} threads) ==\n",
+        thanos::linalg::gemm::num_threads()
+    );
+
+    // ---- GEMM f32 ----------------------------------------------------
+    let gemm_shapes: &[(usize, usize, usize)] = if quick {
+        &[(192, 192, 192), (256, 256, 256)]
+    } else {
+        &[(512, 512, 512), (1024, 1024, 1024)]
+    };
+    for &(m, k, n) in gemm_shapes {
+        let mut r = Rng::new((m * 31 + n) as u64);
+        let a = Mat::from_fn(m, k, |_, _| r.normal_f32(0.0, 1.0));
+        let b = Mat::from_fn(k, n, |_, _| r.normal_f32(0.0, 1.0));
+        kernel::set_naive_mode(true);
+        let c_naive = matmul(&a, &b);
+        let secs_naive = best_of(reps, || {
+            matmul(&a, &b);
+        });
+        kernel::set_naive_mode(false);
+        let c_packed = matmul(&a, &b);
+        let secs_packed = best_of(reps, || {
+            matmul(&a, &b);
+        });
+        let rel = c_packed.max_abs_diff(&c_naive) as f64 / scale_f32(&c_naive);
+        worst_f32 = worst_f32.max(rel);
+        let flops = 2.0 * (m * k * n) as f64;
+        let speedup = secs_naive / secs_packed.max(1e-12);
+        println!(
+            "gemm_f32  {m}x{k}x{n}: naive {:>7.2} GF/s  packed {:>7.2} GF/s  {speedup:>5.2}x  rel {rel:.1e}",
+            flops / secs_naive / 1e9,
+            flops / secs_packed / 1e9,
+        );
+        bj.record(
+            &format!("gemm_f32/{m}x{k}x{n}"),
+            vec![
+                ("secs_naive", BenchJson::num(secs_naive)),
+                ("secs_packed", BenchJson::num(secs_packed)),
+                ("gflops_naive", BenchJson::num(flops / secs_naive / 1e9)),
+                ("gflops_packed", BenchJson::num(flops / secs_packed / 1e9)),
+                ("speedup", BenchJson::num(speedup)),
+                ("rel_err", BenchJson::num(rel)),
+            ],
+        );
+    }
+
+    // ---- SYRK f64 (xxt_f64) ------------------------------------------
+    let syrk_shapes: &[(usize, usize)] = if quick {
+        &[(192, 384)]
+    } else {
+        &[(512, 1024), (1024, 2048)]
+    };
+    for &(b, a_len) in syrk_shapes {
+        let mut r = Rng::new((b * 7 + a_len) as u64);
+        let x = Mat::from_fn(b, a_len, |_, _| r.normal_f32(0.0, 1.0));
+        kernel::set_naive_mode(true);
+        let h_naive = xxt_f64(&x);
+        let secs_naive = best_of(reps, || {
+            xxt_f64(&x);
+        });
+        kernel::set_naive_mode(false);
+        let h_packed = xxt_f64(&x);
+        let secs_packed = best_of(reps, || {
+            xxt_f64(&x);
+        });
+        let rel = h_packed.max_abs_diff(&h_naive) / scale_f64(&h_naive);
+        worst_f64 = worst_f64.max(rel);
+        let flops = 2.0 * (b * b * a_len) as f64;
+        let speedup = secs_naive / secs_packed.max(1e-12);
+        println!(
+            "syrk_f64  b={b} a={a_len}: naive {:>7.2} GF/s  packed {:>7.2} GF/s  {speedup:>5.2}x  rel {rel:.1e}",
+            flops / secs_naive / 1e9,
+            flops / secs_packed / 1e9,
+        );
+        bj.record(
+            &format!("syrk_f64/b{b}xa{a_len}"),
+            vec![
+                ("secs_naive", BenchJson::num(secs_naive)),
+                ("secs_packed", BenchJson::num(secs_packed)),
+                ("gflops_naive", BenchJson::num(flops / secs_naive / 1e9)),
+                ("gflops_packed", BenchJson::num(flops / secs_packed / 1e9)),
+                ("speedup", BenchJson::num(speedup)),
+                ("rel_err", BenchJson::num(rel)),
+            ],
+        );
+    }
+
+    // ---- blocked Cholesky f64 ----------------------------------------
+    let chol_sizes: &[usize] = if quick { &[192] } else { &[512, 1024] };
+    for &n in chol_sizes {
+        let mut r = Rng::new(n as u64 + 3);
+        let x = Mat::from_fn(n, n + 8, |_, _| r.normal_f32(0.0, 1.0));
+        let mut h = xxt_f64(&x);
+        thanos::linalg::chol::damp_hessian(&mut h, 0.01);
+        let time_chol = |naive: bool| -> (MatF64, f64) {
+            kernel::set_naive_mode(naive);
+            let mut best = f64::INFINITY;
+            let mut out = h.clone();
+            cholesky_in_place(&mut out).expect("SPD by construction"); // warm
+            for _ in 0..reps {
+                let mut m = h.clone();
+                let t0 = std::time::Instant::now();
+                cholesky_in_place(&mut m).expect("SPD by construction");
+                best = best.min(t0.elapsed().as_secs_f64());
+                out = m;
+            }
+            (out, best)
+        };
+        let (l_naive, secs_naive) = time_chol(true);
+        let (l_packed, secs_packed) = time_chol(false);
+        let rel = l_packed.max_abs_diff(&l_naive) / scale_f64(&l_naive);
+        worst_f64 = worst_f64.max(rel);
+        let speedup = secs_naive / secs_packed.max(1e-12);
+        println!(
+            "chol_f64  n={n}: naive {secs_naive:>7.4}s  blocked {secs_packed:>7.4}s  {speedup:>5.2}x  rel {rel:.1e}"
+        );
+        bj.record(
+            &format!("chol_f64/n{n}"),
+            vec![
+                ("secs_naive", BenchJson::num(secs_naive)),
+                ("secs_packed", BenchJson::num(secs_packed)),
+                ("speedup", BenchJson::num(speedup)),
+                ("rel_err", BenchJson::num(rel)),
+            ],
+        );
+    }
+
+    // ---- blocked TRSM f64 (upper_tri_solve_many) ---------------------
+    let trsm_sizes: &[(usize, usize)] = if quick { &[(128, 128)] } else { &[(512, 512)] };
+    for &(s, n) in trsm_sizes {
+        let mut r = Rng::new((s + n) as u64);
+        // diagonally dominant upper triangle: both paths stay accurate
+        let off = 1.0 / s as f64;
+        let u = MatF64::from_fn(s, s, |i, j| {
+            if i > j {
+                0.0
+            } else if i == j {
+                2.0
+            } else {
+                off * r.normal()
+            }
+        });
+        let rhs = MatF64::from_fn(s, n, |_, _| r.normal());
+        kernel::set_naive_mode(true);
+        let x_naive = upper_tri_solve_many(&u, &rhs);
+        let secs_naive = best_of(reps, || {
+            upper_tri_solve_many(&u, &rhs);
+        });
+        kernel::set_naive_mode(false);
+        let x_packed = upper_tri_solve_many(&u, &rhs);
+        let secs_packed = best_of(reps, || {
+            upper_tri_solve_many(&u, &rhs);
+        });
+        let rel = x_packed.max_abs_diff(&x_naive) / scale_f64(&x_naive);
+        worst_f64 = worst_f64.max(rel);
+        let speedup = secs_naive / secs_packed.max(1e-12);
+        println!(
+            "trsm_f64  s={s} n={n}: naive {secs_naive:>7.4}s  blocked {secs_packed:>7.4}s  {speedup:>5.2}x  rel {rel:.1e}"
+        );
+        bj.record(
+            &format!("trsm_f64/s{s}xn{n}"),
+            vec![
+                ("secs_naive", BenchJson::num(secs_naive)),
+                ("secs_packed", BenchJson::num(secs_packed)),
+                ("speedup", BenchJson::num(speedup)),
+                ("rel_err", BenchJson::num(rel)),
+            ],
+        );
+    }
+
+    // ---- end-to-end: one Fig. 9 layer prune --------------------------
+    let d = if quick { 96 } else { 256 };
+    let (w, stats, _x) = bench_layer(d, d, (d / 2).max(64), 7);
+    let opts = PruneOpts { block_size: 64, ..Default::default() };
+    kernel::set_naive_mode(true);
+    pruning::thanos::unstructured(&w, &stats, 0.5, &opts).expect("prune (naive)");
+    let secs_naive = best_of(1, || {
+        pruning::thanos::unstructured(&w, &stats, 0.5, &opts).expect("prune (naive)");
+    });
+    kernel::set_naive_mode(false);
+    pruning::thanos::unstructured(&w, &stats, 0.5, &opts).expect("prune (packed)");
+    let secs_packed = best_of(1, || {
+        pruning::thanos::unstructured(&w, &stats, 0.5, &opts).expect("prune (packed)");
+    });
+    let speedup = secs_naive / secs_packed.max(1e-12);
+    println!(
+        "fig9_e2e  d={d}: naive {secs_naive:>7.3}s  packed {secs_packed:>7.3}s  {speedup:>5.2}x (Thanos fast, unstr 50%)"
+    );
+    bj.record(
+        &format!("fig9_e2e/d{d}"),
+        vec![
+            ("secs_naive", BenchJson::num(secs_naive)),
+            ("secs_packed", BenchJson::num(secs_packed)),
+            ("speedup", BenchJson::num(speedup)),
+        ],
+    );
+
+    bj.save();
+
+    // ---- regression gates (CI bench-smoke fails on divergence) -------
+    assert!(
+        worst_f32 <= 5e-5,
+        "packed f32 kernel diverged from the seed path: rel {worst_f32:.3e}"
+    );
+    assert!(
+        worst_f64 <= 1e-9,
+        "packed f64 kernels diverged from the seed paths: rel {worst_f64:.3e}"
+    );
+    println!("\npacked-vs-naive cross-validation: OK (f32 {worst_f32:.1e}, f64 {worst_f64:.1e})");
+}

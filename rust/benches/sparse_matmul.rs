@@ -26,10 +26,12 @@ use common::*;
 use thanos::sparse::bench::{sweep, SweepRow};
 
 fn main() {
-    let quick = env_str("THANOS_SPARSE_QUICK", "0") == "1";
+    // THANOS_SPARSE_QUICK=1 (historical) or THANOS_BENCH_QUICK=1
+    let quick = env_str("THANOS_SPARSE_QUICK", "0") == "1" || quick_mode();
     let shapes = thanos::sparse::bench::default_shapes(quick);
     let batches = thanos::sparse::bench::default_batches(quick);
 
+    let mut bj = BenchJson::open();
     let mut csv = Csv::new("sparse_matmul");
     let mut worst_err = 0.0f64;
     let mut nm24_matvec: Vec<SweepRow> = Vec::new();
@@ -42,6 +44,19 @@ fn main() {
             for row in rows {
                 println!("{}", row.pretty());
                 csv.row(SweepRow::csv_header(), &row.csv());
+                bj.record(
+                    &format!("sparse_matmul/{c}x{b}/batch{batch}/{}", row.case),
+                    vec![
+                        ("sparsity", BenchJson::num(row.sparsity)),
+                        ("dense_ms", BenchJson::num(row.dense_ms)),
+                        ("pruned_dense_ms", BenchJson::num(row.pruned_dense_ms)),
+                        ("sparse_ms", BenchJson::num(row.sparse_ms)),
+                        ("speedup_vs_dense", BenchJson::num(row.speedup_vs_dense())),
+                        ("bytes_sparse", BenchJson::num(row.bytes_sparse as f64)),
+                        ("bytes_dense", BenchJson::num(row.bytes_dense as f64)),
+                        ("max_rel_err", BenchJson::num(row.max_rel_err)),
+                    ],
+                );
                 worst_err = worst_err.max(row.max_rel_err);
                 if row.case == "nm(2:4)" && batch == 1 {
                     nm24_matvec.push(row);
@@ -50,6 +65,7 @@ fn main() {
             println!();
         }
     }
+    bj.save();
 
     for row in &nm24_matvec {
         println!(

@@ -262,6 +262,16 @@ impl PruneEngine {
         items.div_ceil(target)
     }
 
+    /// [`chunk`](Self::chunk) rounded up to a multiple of `align`, so
+    /// tile-granular kernels (the packed GEMM's `MR`-row panels) never
+    /// split a tile across two bands. The result still depends only on
+    /// `items`, `align` and the pool size — never on runtime timing —
+    /// so band decomposition stays deterministic.
+    pub fn chunk_aligned(&self, items: usize, align: usize) -> usize {
+        let align = align.max(1);
+        self.chunk(items).div_ceil(align) * align
+    }
+
     /// Snapshot of the cumulative activity counters.
     pub fn stats(&self) -> EngineStats {
         let s = &self.shared;
@@ -576,6 +586,17 @@ mod tests {
         assert_eq!(parse_threads("-2"), None);
         assert_eq!(parse_threads("many"), None);
         assert_eq!(parse_threads(""), None);
+    }
+
+    #[test]
+    fn chunk_aligned_rounds_up_to_tile_multiples() {
+        let eng = PruneEngine::with_threads(4);
+        let c = eng.chunk_aligned(1000, 8);
+        assert_eq!(c % 8, 0);
+        assert!(c >= eng.chunk(1000));
+        // tiny inputs still produce a usable (aligned) band size
+        assert_eq!(eng.chunk_aligned(3, 8), 8);
+        assert_eq!(eng.chunk_aligned(0, 8), 8);
     }
 
     #[test]

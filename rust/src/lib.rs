@@ -23,7 +23,7 @@
 //! |---|---|
 //! | [`rng`] | deterministic xoshiro256** RNG, Gaussian/Zipf samplers |
 //! | [`engine`] | the `PruneEngine`: persistent work-stealing thread pool with scoped job submission; all crate parallelism (layer-level and row-level) shares its thread budget |
-//! | [`linalg`] | from-scratch dense LA: GEMM, Cholesky, solves, permutations, padded batched systems — row-parallel through [`engine`] |
+//! | [`linalg`] | from-scratch dense LA over a packed register-tiled micro-kernel core: GEMM (density-probed), `XXᵀ` SYRK, blocked Cholesky/TRSM, permutations, padded batched systems — row-parallel through [`engine`] |
 //! | [`jsonutil`] | hand-rolled JSON (artifact manifests, configs, reports) |
 //! | [`config`] | model/run configuration + CLI override layer |
 //! | [`data`] | synthetic hierarchical-Markov corpus (train/calib/eval splits) |

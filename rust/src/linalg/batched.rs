@@ -13,6 +13,12 @@
 //! suite pins them to produce identical results. The JAX/Pallas L2
 //! graph uses the padded formulation (static shapes), so this module is
 //! also the cross-check oracle for the AOT path.
+//!
+//! The per-row systems here are small (`s ≤ block_size`), so they run
+//! the blocked [`cholesky_in_place`]'s unblocked small-system path —
+//! which reproduces the seed factorization bit-for-bit (pinned by
+//! `small_systems_keep_seed_arithmetic`), keeping every row solve's
+//! numerics stable across the §Perf-L3 kernel rewrite.
 
 use super::chol::{chol_solve, chol_solve_into, cholesky, cholesky_in_place};
 use super::MatF64;

@@ -3,9 +3,39 @@
 //! All in f64: the quality gap between pruning methods is driven by the
 //! conditioning of `H = 2XXᵀ`, and f32 factorization visibly degrades
 //! SparseGPT/Thanos updates at b ≥ 1024.
+//!
+//! The O(n³) paths are blocked over the packed micro-kernel core
+//! (DESIGN.md §Perf-L3):
+//!
+//! * [`cholesky_in_place`] — blocked right-looking factorization:
+//!   unblocked panel factor, a vectorized row-sweep TRSM for the
+//!   below-panel block column, and the trailing update `A₂₂ −= L₂₁L₂₁ᵀ`
+//!   expressed as the packed GEMM kernel against a pre-packed `L₂₁ᵀ`.
+//! * [`upper_tri_solve_many`] / [`lower_tri_inverse`] — blocked TRSM:
+//!   per column band, diagonal-block substitution sweeps plus packed
+//!   GEMM updates for the off-diagonal blocks (the triangular-inverse
+//!   variant skips the structurally-zero leading blocks, preserving the
+//!   n³/6 flop count).
+//!
+//! Systems at or below the panel width (`NB`) run the exact seed
+//! arithmetic — the thousands of per-row Thanos systems
+//! (`batched::solve_row_in_scratch`) keep their bit behavior.
+//! `THANOS_LINALG_NAIVE=1` restores the seed paths everywhere (the
+//! `linalg_kernels` bench baseline).
 
+use super::kernel::{self, kf64, View};
 use super::MatF64;
 use anyhow::{bail, Result};
+
+/// Blocked-factorization panel width (also the block size of the TRSM
+/// solves). Systems with `n ≤ NB` run the unblocked seed arithmetic.
+const NB: usize = 96;
+/// Below this trailing size the engine submission is not worth it and
+/// the blocked steps run inline on the caller (same arithmetic).
+const PAR_MIN: usize = 192;
+/// Triangular solves below this system size keep the seed
+/// column-solver (the blocked machinery cannot amortize there).
+const TRSM_MIN_S: usize = 64;
 
 /// Lower-triangular Cholesky factor `L` with `A = L·Lᵀ`.
 /// Fails if `A` is not (numerically) positive definite — callers damp
@@ -21,18 +51,100 @@ pub fn cholesky(a: &MatF64) -> Result<MatF64> {
 /// storage (hot loops reuse one buffer across thousands of small row
 /// systems instead of cloning — see `batched::RowSolveScratch`).
 ///
-/// Right-looking: per column, the trailing-submatrix rank-1 downdate
-/// (the O(n²) part of every step) is split into row bands on the shared
-/// [`crate::engine`] pool once the trailing size is large enough to
-/// amortize submission (DESIGN.md §Perf-L3). Band splits never change
-/// per-row arithmetic, so the factor is bit-identical for any thread
-/// count.
+/// Blocked right-looking (DESIGN.md §Perf-L3): per `NB`-column panel,
+/// factor the diagonal block unblocked, solve the below-panel block
+/// column against `L₁₁ᵀ` with a per-row forward sweep, then downdate
+/// the trailing submatrix with the packed GEMM kernel
+/// (`A₂₂ −= L₂₁·L₂₁ᵀ`). Row bands of the TRSM and trailing update run
+/// on the shared [`crate::engine`] pool; per-element accumulation
+/// chains are independent of the banding, so the factor is
+/// bit-identical for any thread count.
 pub fn cholesky_in_place(m: &mut MatF64) -> Result<()> {
+    assert_eq!(m.rows, m.cols, "cholesky needs a square matrix");
+    if kernel::naive_mode() {
+        return cholesky_naive_in_place(m);
+    }
+    let n = m.rows;
+    let mut colj: Vec<f64> = Vec::new();
+    if n <= NB {
+        chol_unblocked(&mut m.data, n, 0, n, &mut colj)?;
+        zero_upper(m);
+        return Ok(());
+    }
+    let eng = crate::engine::global();
+    let mut panel: Vec<f64> = Vec::new();
+    let mut l11t = vec![0.0f64; NB * NB];
+    let mut j0 = 0;
+    while j0 < n {
+        let jb = NB.min(n - j0);
+        chol_unblocked(&mut m.data, n, j0, jb, &mut colj)?;
+        let t0 = j0 + jb;
+        if t0 >= n {
+            break;
+        }
+        let trailing = n - t0;
+        // transposed diagonal block, so the row sweep below reads
+        // contiguous slices
+        for c in 0..jb {
+            for t in 0..=c {
+                l11t[t * jb + c] = m.data[(j0 + c) * n + j0 + t];
+            }
+        }
+        // TRSM: rows [t0, n) of the panel columns solve against L11ᵀ.
+        // Banded on the engine; bands run inline under one thread (the
+        // pool never queues then), so there is no separate serial path.
+        {
+            let l11t_ref = &l11t;
+            let tail = &mut m.data[t0 * n..];
+            let rows_per = eng.chunk(trailing);
+            eng.for_each_band(tail, rows_per * n, |_bi, band| {
+                for rrow in band.chunks_mut(n) {
+                    let arow = &mut rrow[j0..j0 + jb];
+                    for t in 0..jb {
+                        let v = arow[t] / l11t_ref[t * jb + t];
+                        arow[t] = v;
+                        if v != 0.0 {
+                            let lrow = &l11t_ref[t * jb..(t + 1) * jb];
+                            for c in t + 1..jb {
+                                arow[c] -= v * lrow[c];
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        // copy the solved panel and pre-pack its transpose once
+        panel.clear();
+        for i in t0..n {
+            panel.extend_from_slice(&m.data[i * n + j0..i * n + j0 + jb]);
+        }
+        let bp = kf64::pack_b(View::transposed(&panel, jb), jb, trailing);
+        let pv = View::row_major(&panel, jb);
+        // trailing update: lower triangle at band granularity — each
+        // band's `ncols` stops at its own last row, so only the band's
+        // thin stale upper wedge is touched (never read, zeroed at the
+        // end) and the flop count tracks the triangle in serial and
+        // parallel alike
+        let tail = &mut m.data[t0 * n..];
+        let rows_per = eng.chunk_aligned(trailing, kf64::MR);
+        eng.for_each_band(tail, rows_per * n, |bi, band| {
+            let r0 = bi * rows_per;
+            let rows_here = band.len() / n;
+            kf64::gemm_core(band, n, t0, pv, r0, rows_here, &bp, r0 + rows_here, true);
+        });
+        j0 = t0;
+    }
+    zero_upper(m);
+    Ok(())
+}
+
+/// Seed right-looking factorization (column-at-a-time rank-1
+/// downdates, engine-banded past `PAR_MIN`): the naive reference the
+/// blocked factorization is bench-gated against.
+pub fn cholesky_naive_in_place(m: &mut MatF64) -> Result<()> {
     assert_eq!(m.rows, m.cols, "cholesky needs a square matrix");
     let n = m.rows;
     let eng = crate::engine::global();
-    // threshold below which the serial update is faster than submitting
-    const PAR_MIN: usize = 192;
     let mut colj = vec![0.0f64; n];
     for j in 0..n {
         let pivot = m.at(j, j);
@@ -82,20 +194,148 @@ pub fn cholesky_in_place(m: &mut MatF64) -> Result<()> {
             });
         }
     }
-    // zero the (stale) upper triangle
-    for i in 0..n {
-        for j in i + 1..n {
-            *m.at_mut(i, j) = 0.0;
+    zero_upper(m);
+    Ok(())
+}
+
+/// Unblocked factor of the `nb × nb` diagonal block at `(j0, j0)`
+/// inside an `ld`-strided matrix — the seed column-sweep arithmetic
+/// (scaled column copied to `colj`, then contiguous row downdates), so
+/// `n ≤ NB` systems reproduce the seed factor bit-for-bit.
+fn chol_unblocked(
+    data: &mut [f64],
+    ld: usize,
+    j0: usize,
+    nb: usize,
+    colj: &mut Vec<f64>,
+) -> Result<()> {
+    colj.clear();
+    colj.resize(nb, 0.0);
+    for j in 0..nb {
+        let pivot = data[(j0 + j) * ld + j0 + j];
+        if pivot <= 0.0 || !pivot.is_finite() {
+            let gj = j0 + j;
+            bail!("matrix not positive definite at pivot {gj} (value {pivot:.3e})");
+        }
+        let pivot = pivot.sqrt();
+        data[(j0 + j) * ld + j0 + j] = pivot;
+        for i in j + 1..nb {
+            let v = data[(j0 + i) * ld + j0 + j] / pivot;
+            data[(j0 + i) * ld + j0 + j] = v;
+            colj[i] = v;
+        }
+        for i in j + 1..nb {
+            let ci = colj[i];
+            if ci == 0.0 {
+                continue;
+            }
+            let row = &mut data[(j0 + i) * ld + j0..(j0 + i) * ld + j0 + nb];
+            for k in j + 1..=i {
+                row[k] -= ci * colj[k];
+            }
         }
     }
     Ok(())
 }
 
-/// Inverse of a lower-triangular matrix, column-parallel: column `j`
-/// of `L⁻¹` is the forward-substitution solve of `L·x = e_j`, which
-/// only touches indices `≥ j` (total n³/6 flops, embarrassingly
-/// parallel across columns).
+/// Zero the (stale) upper triangle after a factorization.
+fn zero_upper(m: &mut MatF64) {
+    let n = m.rows;
+    for i in 0..n {
+        for j in i + 1..n {
+            *m.at_mut(i, j) = 0.0;
+        }
+    }
+}
+
+/// Inverse of a lower-triangular matrix: blocked forward TRSM against
+/// the identity, column-banded on the engine. The leading row blocks of
+/// each column band are structurally zero and skipped, preserving the
+/// n³/6 flop count of the seed column solver; off-diagonal blocks are
+/// the packed GEMM kernel.
 pub fn lower_tri_inverse(l: &MatF64) -> MatF64 {
+    let n = l.rows;
+    if kernel::naive_mode() || n < TRSM_MIN_S {
+        return lower_tri_inverse_naive(l);
+    }
+    let mut inv = MatF64::zeros(n, n);
+    let eng = crate::engine::global();
+    let cols_per = eng.chunk(n);
+    let n_bands = n.div_ceil(cols_per.max(1));
+    let mut bands: Vec<Vec<f64>> = vec![Vec::new(); n_bands];
+    let lv = View::row_major(&l.data, n);
+    eng.for_each_band(&mut bands, 1, |bi, slot| {
+        let c0 = bi * cols_per;
+        let w = cols_per.min(n - c0);
+        let mut buf = vec![0.0f64; n * w];
+        for j in c0..c0 + w {
+            buf[j * w + (j - c0)] = 1.0;
+        }
+        // rows above the band's first block stay zero for every column
+        let blk0 = (c0 / NB) * NB;
+        let mut rb = blk0;
+        while rb < n {
+            let nb = NB.min(n - rb);
+            if rb > blk0 {
+                // C_rb −= L[rb.., blk0..rb] · X[blk0..rb]
+                let (above, below) = buf.split_at_mut(rb * w);
+                let cslice = &mut below[..nb * w];
+                let bview = View::row_major(&above[blk0 * w..], w);
+                kf64::gemm_core_viewb(
+                    cslice,
+                    w,
+                    0,
+                    lv.offset(rb, blk0),
+                    0,
+                    nb,
+                    rb - blk0,
+                    blk0, // absolute chunk phase: chains independent of band width
+                    bview,
+                    w,
+                    true,
+                );
+            }
+            // forward substitution within the diagonal block
+            for i in rb..rb + nb {
+                let lrow = l.row(i);
+                let (xa, xb) = buf.split_at_mut(i * w);
+                let xi = &mut xb[..w];
+                for t in rb..i {
+                    let c = lrow[t];
+                    if c == 0.0 {
+                        continue;
+                    }
+                    let xt = &xa[t * w..(t + 1) * w];
+                    for j in 0..w {
+                        xi[j] -= c * xt[j];
+                    }
+                }
+                let d = lrow[i];
+                for v in xi.iter_mut() {
+                    *v /= d;
+                }
+            }
+            rb += nb;
+        }
+        slot[0] = buf;
+    });
+    for (bi, buf) in bands.iter().enumerate() {
+        let c0 = bi * cols_per;
+        let w = cols_per.min(n - c0);
+        for j in 0..w {
+            for i in c0 + j..n {
+                *inv.at_mut(i, c0 + j) = buf[i * w + j];
+            }
+        }
+    }
+    inv
+}
+
+/// Seed column-parallel triangular inverse: column `j` of `L⁻¹` is the
+/// forward-substitution solve of `L·x = e_j`, which only touches
+/// indices `≥ j` (total n³/6 flops). Naive reference for
+/// [`lower_tri_inverse`].
+pub fn lower_tri_inverse_naive(l: &MatF64) -> MatF64 {
     let n = l.rows;
     let mut inv = MatF64::zeros(n, n);
     let eng = crate::engine::global();
@@ -134,8 +374,95 @@ pub fn lower_tri_inverse(l: &MatF64) -> MatF64 {
 }
 
 /// Solve `U·X = RHS` for upper-triangular `U` (s×s) against an s×n
-/// right-hand-side matrix, column-parallel back substitution.
+/// right-hand-side matrix: blocked TRSM, column-banded on the engine.
+/// Row blocks are processed bottom-up — back-substitution sweeps inside
+/// the diagonal block, packed GEMM updates for the already-solved
+/// blocks below.
 pub fn upper_tri_solve_many(u: &MatF64, rhs: &MatF64) -> MatF64 {
+    let s = u.rows;
+    assert_eq!(u.cols, s);
+    assert_eq!(rhs.rows, s);
+    if kernel::naive_mode() || s < TRSM_MIN_S {
+        return upper_tri_solve_many_naive(u, rhs);
+    }
+    let n = rhs.cols;
+    let mut x = MatF64::zeros(s, n);
+    if n == 0 {
+        return x;
+    }
+    let eng = crate::engine::global();
+    let cols_per = eng.chunk(n);
+    let n_bands = n.div_ceil(cols_per.max(1));
+    let mut bands: Vec<Vec<f64>> = vec![Vec::new(); n_bands];
+    let uv = View::row_major(&u.data, s);
+    let n_blocks = s.div_ceil(NB);
+    eng.for_each_band(&mut bands, 1, |bi, slot| {
+        let c0 = bi * cols_per;
+        let w = cols_per.min(n - c0);
+        let mut buf = vec![0.0f64; s * w];
+        for i in 0..s {
+            buf[i * w..(i + 1) * w].copy_from_slice(&rhs.row(i)[c0..c0 + w]);
+        }
+        for blk in (0..n_blocks).rev() {
+            let b0 = blk * NB;
+            let b1 = (b0 + NB).min(s);
+            if b1 < s {
+                // C[b0..b1) −= U[b0..b1, b1..s] · X[b1..s, band]
+                let (head, tail) = buf.split_at_mut(b1 * w);
+                let cslice = &mut head[b0 * w..];
+                let bview = View::row_major(tail, w);
+                kf64::gemm_core_viewb(
+                    cslice,
+                    w,
+                    0,
+                    uv.offset(b0, b1),
+                    0,
+                    b1 - b0,
+                    s - b1,
+                    b1, // absolute chunk phase (same for every band)
+                    bview,
+                    w,
+                    true,
+                );
+            }
+            // back substitution within the diagonal block
+            for i in (b0..b1).rev() {
+                let urow = u.row(i);
+                let (xa, xb) = buf.split_at_mut((i + 1) * w);
+                let xi = &mut xa[i * w..];
+                for t in i + 1..b1 {
+                    let c = urow[t];
+                    if c == 0.0 {
+                        continue;
+                    }
+                    let xt = &xb[(t - (i + 1)) * w..(t - i) * w];
+                    for j in 0..w {
+                        xi[j] -= c * xt[j];
+                    }
+                }
+                let d = urow[i];
+                for v in xi.iter_mut() {
+                    *v /= d;
+                }
+            }
+        }
+        slot[0] = buf;
+    });
+    for (bi, buf) in bands.iter().enumerate() {
+        let c0 = bi * cols_per;
+        let w = cols_per.min(n - c0);
+        for i in 0..s {
+            for j in 0..w {
+                *x.at_mut(i, c0 + j) = buf[i * w + j];
+            }
+        }
+    }
+    x
+}
+
+/// Seed column-parallel back substitution: naive reference for
+/// [`upper_tri_solve_many`].
+pub fn upper_tri_solve_many_naive(u: &MatF64, rhs: &MatF64) -> MatF64 {
     let s = u.rows;
     assert_eq!(u.cols, s);
     assert_eq!(rhs.rows, s);
@@ -410,6 +737,15 @@ mod tests {
     }
 
     #[test]
+    fn blocked_cholesky_rejects_indefinite_large() {
+        // indefiniteness deep in the trailing submatrix must surface
+        // through the blocked path too
+        let mut a = random_spd(200, 31);
+        *a.at_mut(170, 170) = -5.0;
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
     fn chol_solve_solves() {
         let a = random_spd(20, 2);
         let mut r = Rng::new(3);
@@ -455,6 +791,34 @@ mod tests {
     }
 
     #[test]
+    fn blocked_lower_tri_inverse_matches_naive() {
+        // large enough for the blocked TRSM path (n >= TRSM_MIN_S)
+        let a = random_spd(150, 33);
+        let l = cholesky(&a).unwrap();
+        let blocked = lower_tri_inverse(&l);
+        let naive = lower_tri_inverse_naive(&l);
+        assert!(blocked.max_abs_diff(&naive) < 1e-9);
+        for i in 0..150 {
+            for j in i + 1..150 {
+                assert_eq!(blocked.at(i, j), 0.0, "({i},{j})");
+            }
+        }
+        let prod = matmul_f64(&l, &blocked);
+        assert!(prod.max_abs_diff(&MatF64::eye(150)) < 1e-8);
+    }
+
+    #[test]
+    fn blocked_upper_tri_solve_matches_naive() {
+        let a = random_spd(140, 34);
+        let u = inverse_factor_upper(&a).unwrap();
+        let mut r = Rng::new(35);
+        let rhs = MatF64::from_fn(140, 90, |_, _| r.normal());
+        let blocked = upper_tri_solve_many(&u, &rhs);
+        let naive = upper_tri_solve_many_naive(&u, &rhs);
+        assert!(blocked.max_abs_diff(&naive) < 1e-8);
+    }
+
+    #[test]
     fn inverse_factor_upper_identity() {
         let a = random_spd(24, 9);
         let u = inverse_factor_upper(&a).unwrap();
@@ -476,11 +840,20 @@ mod tests {
 
     #[test]
     fn parallel_cholesky_matches_large() {
-        // exercise the threaded trailing-update path (n > PAR_MIN)
+        // exercise the threaded blocked path (n > PAR_MIN)
         let a = random_spd(300, 10);
         let l = cholesky(&a).unwrap();
         let rec = matmul_f64(&l, &l.transpose());
         assert!(a.max_abs_diff(&rec) < 1e-7);
+    }
+
+    #[test]
+    fn blocked_cholesky_matches_naive_reference() {
+        let a = random_spd(220, 36);
+        let l = cholesky(&a).unwrap();
+        let mut m = a.clone();
+        cholesky_naive_in_place(&mut m).unwrap();
+        assert!(l.max_abs_diff(&m) < 1e-9, "blocked vs seed factor");
     }
 
     #[test]
@@ -490,6 +863,18 @@ mod tests {
         let mut m = a.clone();
         cholesky_in_place(&mut m).unwrap();
         assert_eq!(l.data, m.data, "in-place factor must be bit-identical");
+    }
+
+    #[test]
+    fn small_systems_keep_seed_arithmetic() {
+        // n <= NB must reproduce the seed factor bit-for-bit: the
+        // thousands of per-row Thanos systems rely on it
+        let a = random_spd(64, 37);
+        let mut blocked = a.clone();
+        cholesky_in_place(&mut blocked).unwrap();
+        let mut seed = a.clone();
+        cholesky_naive_in_place(&mut seed).unwrap();
+        assert_eq!(blocked.data, seed.data);
     }
 
     #[test]

@@ -1,15 +1,31 @@
-//! Blocked, multi-threaded GEMM and Gram-matrix (`XXᵀ`) kernels.
+//! GEMM and Gram-matrix (`XXᵀ`) kernels over the packed micro-kernel
+//! core ([`super::kernel`], DESIGN.md §Perf-L3).
 //!
-//! These are the L3-side compute hot spots: the Fig. 9 pruning-time
-//! bench and every pure-Rust pruning path run through here. The design
-//! mirrors the classic cache-blocked loop nest: pack nothing, walk the
-//! `k` dimension innermost over a transposed-B access pattern, and
-//! split the output row range into bands executed on the shared
-//! [`crate::engine::PruneEngine`] pool (row-band tasks are independent,
-//! so results are bit-identical for any thread count).
+//! * [`matmul`] / [`matmul_f64`] run the packed register-tiled GEMM
+//!   with a **density-probed** fast-path split: rows are classified by
+//!   measured nonzero density, dense row runs take the branch-free
+//!   packed kernel, and the seed's zero-skipping loop nest survives
+//!   only for row runs sparse enough that skipping beats vectorizing
+//!   (`ZERO_SKIP_MAX_DENSITY`).
+//! * [`xxt_f64`] is a blocked SYRK over packed panels: each row band
+//!   computes its full output rows against the shared packed `Xᵀ`, so
+//!   the upper→lower mirror is folded into the band work — element
+//!   `(i,j)` and `(j,i)` are the same fused accumulation chain, making
+//!   the result symmetric bit-for-bit with no serial mirror pass.
+//! * [`recon_loss`] (the quality probe every pruning test calls) is
+//!   band-parallel over output rows with per-worker scratch reuse and
+//!   a register-blocked row kernel.
+//!
+//! All parallelism is row-banded on the shared
+//! [`crate::engine::PruneEngine`] pool; per-element accumulation chains
+//! never depend on band boundaries, so results are bit-identical for
+//! any thread count. `THANOS_LINALG_NAIVE=1` (or
+//! [`kernel::set_naive_mode`]) restores the seed loop nests — the
+//! old-path baseline the `linalg_kernels` bench measures against.
 
 use crate::engine;
 
+use super::kernel::{self, kf32, kf64, View};
 use super::{Mat, MatF64};
 
 /// Number of worker threads available to row-parallel kernels (the
@@ -18,7 +34,21 @@ pub fn num_threads() -> usize {
     engine::global().threads()
 }
 
-/// `C = A · B` for f32 matrices (f32 accumulate, k-blocked).
+/// Below this output width the packed path cannot amortize packing
+/// (matvec-like shapes are memory-bound anyway).
+const PACKED_MIN_N: usize = 8;
+/// Below this row count the shared B packing (`k·n` copies) is not
+/// amortized by the `m·k·n` compute.
+const PACKED_MIN_M: usize = 16;
+/// Problems smaller than this run the seed loop nest outright.
+const PACKED_MIN_FLOPS: usize = 64 * 64 * 64;
+/// A row keeps the zero-skipping scalar path only below this measured
+/// nonzero density: skipping saves `1 − density` of the multiplies but
+/// runs ~6–8× slower per multiply than the packed tile, so the
+/// crossover sits well under 20% (DESIGN.md §Perf-L3).
+const ZERO_SKIP_MAX_DENSITY: f64 = 0.15;
+
+/// `C = A · B` for f32 matrices (f32 accumulate).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch");
     let mut c = Mat::zeros(a.rows, b.cols);
@@ -27,27 +57,78 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
 }
 
 /// `C = A · B` writing into a preallocated output (hot-loop reuse).
+/// Packed register-tiled kernel for dense row runs; the zero-skip loop
+/// nest for measured-sparse row runs and for shapes too small to pack.
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows);
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.cols);
     c.data.iter_mut().for_each(|v| *v = 0.0);
     let (m, k, n) = (a.rows, a.cols, b.cols);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    if kernel::naive_mode()
+        || n < PACKED_MIN_N
+        || m < PACKED_MIN_M
+        || m * n * k < PACKED_MIN_FLOPS
+    {
+        matmul_legacy(a, b, c);
+        return;
+    }
+    let runs = density_runs(m, k, |i| a.row(i).iter().filter(|&&v| v != 0.0).count());
+    if runs.iter().all(|r| !r.2) {
+        matmul_legacy(a, b, c);
+        return;
+    }
+    let bp = kf32::pack_b(View::row_major(&b.data, n), k, n);
+    let av = View::row_major(&a.data, k);
+    for &(r0, r1, dense) in &runs {
+        let cband = &mut c.data[r0 * n..r1 * n];
+        if dense {
+            kf32::gemm_banded(cband, n, av, r0, r1 - r0, &bp, false);
+        } else {
+            legacy_rows_banded(a, b, cband, r0, r1, k, n);
+        }
+    }
+}
+
+/// Seed-path `C = A · B` (zero-skipping loop nest, fully serial): the
+/// naive reference the packed kernel is property-tested and
+/// bench-gated against.
+pub fn matmul_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_rows(a, b, &mut c.data, 0, a.rows, a.cols, b.cols);
+    c
+}
+
+/// Seed behavior of `matmul_into`: small problems inline, otherwise
+/// row-banded zero-skip workers.
+fn matmul_legacy(a: &Mat, b: &Mat, c: &mut Mat) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
     let eng = engine::global();
-    if m * n * k < 64 * 64 * 64 || eng.threads() == 1 {
+    if m * n * k < PACKED_MIN_FLOPS || eng.threads() == 1 {
         matmul_rows(a, b, &mut c.data, 0, m, k, n);
         return;
     }
-    let rows_per = eng.chunk(m);
-    eng.for_each_band(&mut c.data, rows_per * n, |bi, out| {
-        let r0 = bi * rows_per;
-        matmul_rows(a, b, out, r0, r0 + out.len() / n, k, n);
+    legacy_rows_banded(a, b, &mut c.data, 0, m, k, n);
+}
+
+/// Row range `[r0, r1)` of the zero-skip path, banded on the engine.
+fn legacy_rows_banded(a: &Mat, b: &Mat, out: &mut [f32], r0: usize, r1: usize, k: usize, n: usize) {
+    let eng = engine::global();
+    let rows_per = eng.chunk(r1 - r0);
+    eng.for_each_band(out, rows_per * n, |bi, band| {
+        let s = r0 + bi * rows_per;
+        matmul_rows(a, b, band, s, s + band.len() / n, k, n);
     });
 }
 
 /// Row-band worker: computes rows `[r0, r1)` of `A·B` into `out`
-/// (`out` covers exactly those rows). 4-wide k-unrolled inner loop over
-/// contiguous B rows, which the compiler auto-vectorizes.
+/// (`out` covers exactly those rows). The seed kernel: 4-wide
+/// k-unrolled inner loop over contiguous B rows with a per-`k`
+/// zero-check — the path that still wins for very sparse rows.
 fn matmul_rows(a: &Mat, b: &Mat, out: &mut [f32], r0: usize, r1: usize, k: usize, n: usize) {
     const KB: usize = 256; // k-blocking keeps the active B panel in L2
     for kb in (0..k).step_by(KB) {
@@ -69,45 +150,144 @@ fn matmul_rows(a: &Mat, b: &Mat, out: &mut [f32], r0: usize, r1: usize, k: usize
     }
 }
 
-/// `C = A · B` in f64, row-parallel above a small-problem threshold.
+/// Classify rows into maximal runs of equal density class:
+/// `(row_start, row_end, dense)`. The probe is O(m·k) — negligible
+/// against the O(m·k·n) multiply it routes (`n ≥ PACKED_MIN_N`).
+fn density_runs(
+    m: usize,
+    k: usize,
+    nnz_of_row: impl Fn(usize) -> usize,
+) -> Vec<(usize, usize, bool)> {
+    let cutoff = ZERO_SKIP_MAX_DENSITY * k as f64;
+    let mut runs: Vec<(usize, usize, bool)> = Vec::new();
+    for i in 0..m {
+        let dense = nnz_of_row(i) as f64 > cutoff;
+        match runs.last_mut() {
+            Some(r) if r.2 == dense => r.1 = i + 1,
+            _ => runs.push((i, i + 1, dense)),
+        }
+    }
+    runs
+}
+
+/// `C = A · B` in f64: packed kernel with the same density-probed
+/// row-run split as the f32 path.
 pub fn matmul_f64(a: &MatF64, b: &MatF64) -> MatF64 {
     assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch");
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut c = MatF64::zeros(m, n);
-    let body = |i0: usize, out: &mut [f64]| {
-        for (ri, crow) in out.chunks_mut(n).enumerate() {
-            let arow = a.row(i0 + ri);
-            for (kk, &aik) in arow.iter().enumerate().take(k) {
-                if aik == 0.0 {
-                    continue;
-                }
-                let brow = b.row(kk);
-                for j in 0..n {
-                    crow[j] += aik * brow[j];
-                }
-            }
-        }
-    };
-    let eng = engine::global();
-    if m * n * k < 64 * 64 * 64 || eng.threads() == 1 {
-        body(0, &mut c.data);
+    if m == 0 || n == 0 || k == 0 {
         return c;
     }
-    let rows_per = eng.chunk(m);
-    eng.for_each_band(&mut c.data, rows_per * n, |bi, out| body(bi * rows_per, out));
+    if kernel::naive_mode()
+        || n < PACKED_MIN_N
+        || m < PACKED_MIN_M
+        || m * n * k < PACKED_MIN_FLOPS
+    {
+        matmul_f64_legacy(a, b, &mut c);
+        return c;
+    }
+    let runs = density_runs(m, k, |i| a.row(i).iter().filter(|&&v| v != 0.0).count());
+    if runs.iter().all(|r| !r.2) {
+        matmul_f64_legacy(a, b, &mut c);
+        return c;
+    }
+    let bp = kf64::pack_b(View::row_major(&b.data, n), k, n);
+    let av = View::row_major(&a.data, k);
+    for &(r0, r1, dense) in &runs {
+        let cband = &mut c.data[r0 * n..r1 * n];
+        if dense {
+            kf64::gemm_banded(cband, n, av, r0, r1 - r0, &bp, false);
+        } else {
+            let eng = engine::global();
+            let rows_per = eng.chunk(r1 - r0);
+            eng.for_each_band(cband, rows_per * n, |bi, band| {
+                let s = r0 + bi * rows_per;
+                matmul_rows_f64(a, b, band, s, s + band.len() / n, k, n);
+            });
+        }
+    }
     c
+}
+
+/// Seed behavior of `matmul_f64`.
+fn matmul_f64_legacy(a: &MatF64, b: &MatF64, c: &mut MatF64) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let eng = engine::global();
+    if m * n * k < PACKED_MIN_FLOPS || eng.threads() == 1 {
+        matmul_rows_f64(a, b, &mut c.data, 0, m, k, n);
+        return;
+    }
+    let rows_per = eng.chunk(m);
+    eng.for_each_band(&mut c.data, rows_per * n, |bi, band| {
+        let s = bi * rows_per;
+        matmul_rows_f64(a, b, band, s, s + band.len() / n, k, n);
+    });
+}
+
+/// Seed f64 row worker (zero-skip, j-inner).
+fn matmul_rows_f64(
+    a: &MatF64,
+    b: &MatF64,
+    out: &mut [f64],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+) {
+    for (ri, crow) in out.chunks_mut(n).enumerate() {
+        let arow = a.row(r0 + ri);
+        for (kk, &aik) in arow.iter().enumerate().take(k) {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(kk);
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
 }
 
 /// Gram matrix `X · Xᵀ` with f64 accumulation (`X` is `b × a`); the
 /// Hessian of the layer-reconstruction objective is `H = 2·XXᵀ`
-/// (possibly averaged over calibration samples). Exploits symmetry:
-/// only the upper triangle is computed, then mirrored.
+/// (possibly averaged over calibration samples).
+///
+/// Packed blocked SYRK: `X` is widened to f64 once, `Xᵀ` is packed once
+/// (shared), and each engine band computes its full output rows with
+/// the register-tiled kernel. Symmetry comes for free — `(i,j)` and
+/// `(j,i)` run the bitwise-identical accumulation chain — so no mirror
+/// pass exists and bands stay perfectly load-balanced.
 pub fn xxt_f64(x: &Mat) -> MatF64 {
     let b = x.rows;
     let mut h = MatF64::zeros(b, b);
     if b == 0 {
         return h;
     }
+    // ~b²·a/2 useful flops: run tiny Gram matrices on the seed path.
+    if kernel::naive_mode() || b * b * x.cols < 32 * 32 * 32 {
+        xxt_f64_naive_into(x, &mut h);
+        return h;
+    }
+    let a_len = x.cols;
+    let xd: Vec<f64> = x.data.iter().map(|&v| v as f64).collect();
+    let bp = kf64::pack_b(View::transposed(&xd, a_len), a_len, b);
+    kf64::gemm_banded(&mut h.data, b, View::row_major(&xd, a_len), 0, b, &bp, false);
+    h
+}
+
+/// Seed-path `X · Xᵀ` (scalar upper-triangle dots + mirror): the naive
+/// reference for the packed SYRK.
+pub fn xxt_f64_naive(x: &Mat) -> MatF64 {
+    let mut h = MatF64::zeros(x.rows, x.rows);
+    if x.rows > 0 {
+        xxt_f64_naive_into(x, &mut h);
+    }
+    h
+}
+
+fn xxt_f64_naive_into(x: &Mat, h: &mut MatF64) {
+    let b = x.rows;
     let eng = engine::global();
     let band_body = |r0: usize, head: &mut [f64]| {
         let rows_here = head.len() / b;
@@ -124,12 +304,10 @@ pub fn xxt_f64(x: &Mat) -> MatF64 {
             }
         }
     };
-    // ~b²·a/2 useful flops: run tiny Gram matrices inline.
     if b * b * x.cols < 32 * 32 * 32 || eng.threads() == 1 {
         band_body(0, &mut h.data);
     } else {
         let rows_per = eng.chunk(b);
-        // Parallel over row bands; band bi fills h[i][i..] for its rows.
         eng.for_each_band(&mut h.data, rows_per * b, |bi, head| {
             band_body(bi * rows_per, head);
         });
@@ -141,7 +319,6 @@ pub fn xxt_f64(x: &Mat) -> MatF64 {
             *h.at_mut(i, j) = v;
         }
     }
-    h
 }
 
 /// `y = w · X` for a single row `w` (`1×b`) against `X` (`b×a`),
@@ -162,19 +339,68 @@ pub fn row_times_mat(w: &[f32], x: &Mat) -> Vec<f64> {
     y
 }
 
+thread_local! {
+    /// Per-worker `Ŵ − W` row buffer for [`recon_loss`], reused across
+    /// rows, calls and layers.
+    static RECON_SCRATCH: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// Reconstruction loss `‖(Ŵ − W)·X‖_F²` — the paper's objective (1).
 /// This is the ground-truth quality probe every pruning test uses.
+///
+/// Band-parallel over weight rows on the engine pool with a per-worker
+/// delta scratch (no allocation per row) and a register-blocked row
+/// kernel; per-row losses land in a slot vector reduced in ascending
+/// row order, so the result is bit-identical for any thread count.
 pub fn recon_loss(w_hat: &Mat, w: &Mat, x: &Mat) -> f64 {
     assert_eq!((w_hat.rows, w_hat.cols), (w.rows, w.cols));
     assert_eq!(w.cols, x.rows);
+    let rows = w.rows;
+    if rows == 0 {
+        return 0.0;
+    }
+    let mut row_loss = vec![0.0f64; rows];
+    let eng = engine::global();
+    let rows_per = eng.chunk(rows);
+    eng.for_each_band(&mut row_loss, rows_per, |bi, slots| {
+        RECON_SCRATCH.with(|cell| {
+            let delta = &mut *cell.borrow_mut();
+            for (si, slot) in slots.iter_mut().enumerate() {
+                let i = bi * rows_per + si;
+                delta.clear();
+                delta.extend(w_hat.row(i).iter().zip(w.row(i)).map(|(&wh, &wv)| wh - wv));
+                *slot = row_sq_loss(delta, x);
+            }
+        });
+    });
+    row_loss.iter().sum()
+}
+
+/// `‖δ·X‖²` for one row: j-blocked f64 register accumulation with the
+/// same zero-skip as [`row_times_mat`], squared and summed in ascending
+/// `j` order.
+fn row_sq_loss(delta: &[f32], x: &Mat) -> f64 {
+    let n = x.cols;
     let mut total = 0.0f64;
-    for i in 0..w.rows {
-        let mut delta: Vec<f32> = w_hat.row(i).to_vec();
-        for (j, d) in delta.iter_mut().enumerate() {
-            *d -= w.row(i)[j];
+    let mut j0 = 0;
+    while j0 < n {
+        let w = kernel::ROW_BLOCK.min(n - j0);
+        let mut acc = [0.0f64; kernel::ROW_BLOCK];
+        for (t, &d) in delta.iter().enumerate() {
+            if d == 0.0 {
+                continue;
+            }
+            let dd = d as f64;
+            let xrow = &x.row(t)[j0..j0 + w];
+            for (j, &xv) in xrow.iter().enumerate() {
+                acc[j] = kf64::fmadd(dd, xv as f64, acc[j]);
+            }
         }
-        let y = row_times_mat(&delta, x);
-        total += y.iter().map(|v| v * v).sum::<f64>();
+        for &v in acc.iter().take(w) {
+            total += v * v;
+        }
+        j0 += w;
     }
     total
 }
@@ -228,6 +454,39 @@ mod tests {
     }
 
     #[test]
+    fn packed_matmul_matches_naive_mixed_density() {
+        // sparse and dense row runs split between the two paths must
+        // still produce one coherent product
+        let mut r = Rng::new(71);
+        let mut a = Mat::from_fn(64, 96, |_, _| r.normal_f32(0.0, 1.0));
+        for i in 20..44 {
+            for (j, v) in a.row_mut(i).iter_mut().enumerate() {
+                if j % 10 != 0 {
+                    *v = 0.0; // 10% density -> zero-skip class
+                }
+            }
+        }
+        let b = Mat::from_fn(96, 80, |_, _| r.normal_f32(0.0, 1.0));
+        let c = matmul(&a, &b);
+        let cn = matmul_naive(&a, &b);
+        assert!(c.max_abs_diff(&cn) < 1e-3);
+    }
+
+    #[test]
+    fn matmul_f64_matches_f32_path_shapewise() {
+        let mut r = Rng::new(72);
+        let a = MatF64::from_fn(33, 45, |_, _| r.normal());
+        let b = MatF64::from_fn(45, 29, |_, _| r.normal());
+        let c = matmul_f64(&a, &b);
+        for i in [0usize, 7, 32] {
+            for j in [0usize, 11, 28] {
+                let direct: f64 = (0..45).map(|k| a.at(i, k) * b.at(k, j)).sum();
+                assert!((c.at(i, j) - direct).abs() < 1e-10 * direct.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
     fn xxt_is_symmetric_and_correct() {
         let mut r = Rng::new(4);
         let x = Mat::from_fn(33, 21, |_, _| r.normal_f32(0.0, 1.0));
@@ -239,6 +498,21 @@ mod tests {
                     .map(|p| x.at(i, p) as f64 * x.at(j, p) as f64)
                     .sum();
                 assert!((h.at(i, j) - direct).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_xxt_matches_naive_and_stays_symmetric() {
+        // large enough to take the packed SYRK path
+        let mut r = Rng::new(73);
+        let x = Mat::from_fn(48, 40, |_, _| r.normal_f32(0.0, 1.0));
+        let h = xxt_f64(&x);
+        let hn = xxt_f64_naive(&x);
+        assert!(h.max_abs_diff(&hn) < 1e-9);
+        for i in 0..48 {
+            for j in 0..i {
+                assert_eq!(h.at(i, j), h.at(j, i), "({i},{j})");
             }
         }
     }
@@ -264,5 +538,19 @@ mod tests {
         let xnorm: f64 = x.row(3).iter().map(|&v| (v as f64) * (v as f64)).sum();
         let expected = (w.at(2, 3) as f64).powi(2) * xnorm;
         assert!((loss - expected).abs() / expected.max(1e-12) < 1e-5);
+    }
+
+    #[test]
+    fn recon_loss_serial_parallel_bit_identical() {
+        let mut r = Rng::new(74);
+        let w = Mat::from_fn(40, 64, |_, _| r.normal_f32(0.0, 1.0));
+        let mut w_hat = w.clone();
+        for v in w_hat.data.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let x = Mat::from_fn(64, 50, |_, _| r.normal_f32(0.0, 1.0));
+        let par = recon_loss(&w_hat, &w, &x);
+        let ser = crate::engine::with_serial(|| recon_loss(&w_hat, &w, &x));
+        assert_eq!(par.to_bits(), ser.to_bits());
     }
 }

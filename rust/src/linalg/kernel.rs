@@ -1,0 +1,619 @@
+//! Packed, register-tiled micro-kernel GEMM core (DESIGN.md §Perf-L3).
+//!
+//! Every dense O(n³) kernel in the crate (GEMM, the `XXᵀ` SYRK, the
+//! blocked-Cholesky trailing update, the blocked TRSM solves) runs
+//! through the classic three-level blocked loop nest implemented here:
+//!
+//! * **Register tile** — an `MR × NR` accumulator block lives entirely
+//!   in registers across the `k` loop; the inner loops are written over
+//!   constant bounds so the compiler fully unrolls and auto-vectorizes
+//!   them (with explicit `mul_add` when the target has FMA).
+//! * **Panel packing** — the A operand is packed into `MR`-row panels
+//!   (k-major within a panel) and the B operand into `NR`-column panels
+//!   (k-major), so the micro-kernel streams both operands contiguously
+//!   with no strides, no bounds logic and no branches.
+//! * **Cache blocking** — `KC` splits the `k` dimension (a packed B
+//!   micro-panel of `KC × NR` stays cache-resident while every A panel
+//!   sweeps it), `MC` bounds the packed-A block.
+//!
+//! **Shared packed B.** B is packed once per operation ([`PackedB`])
+//! and shared read-only by every row band, so the engine-parallel
+//! drivers repack nothing per thread: each band packs only its own A
+//! rows into a per-worker scratch. This matters most for the SYRK and
+//! trailing-update paths whose B operand is a transposed (strided)
+//! view.
+//!
+//! **Determinism.** A C element's value is a single accumulation chain:
+//! `KC` chunks in ascending order, ascending `k` within a chunk. The
+//! chain never depends on which band, `MC` block or register tile the
+//! element landed in, so results are bit-identical for any thread
+//! count — the same serial==parallel contract as every other kernel in
+//! the crate (pinned by `tests/linalg_kernels.rs`).
+//!
+//! **Naive mode.** [`set_naive_mode`] /`THANOS_LINALG_NAIVE=1` force
+//! every rewired caller back onto the seed loop nests — the in-process
+//! old-path/new-path switch the `linalg_kernels` bench and the CI
+//! `bench-smoke` divergence gate are built on.
+//!
+//! Tile sizes were tuned empirically (see DESIGN.md §Perf-L3 for the
+//! numbers): f32 `8×32`, f64 `6×32`, `KC=256` — wide-`NR` shapes so a
+//! 512-bit SIMD target holds a row of the accumulator in 2–4 vectors
+//! and the broadcast-FMA inner step dominates.
+
+use crate::engine;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Env var: `1` forces the seed (naive) kernel paths process-wide.
+pub const NAIVE_ENV: &str = "THANOS_LINALG_NAIVE";
+
+/// 0 = unread, 1 = packed, 2 = naive.
+static NAIVE_MODE: AtomicU8 = AtomicU8::new(0);
+
+/// True when the seed loop nests should be used instead of the packed
+/// core (set by [`NAIVE_ENV`] or [`set_naive_mode`]).
+pub fn naive_mode() -> bool {
+    match NAIVE_MODE.load(Ordering::Relaxed) {
+        0 => {
+            let on = std::env::var(NAIVE_ENV).map(|v| v == "1").unwrap_or(false);
+            NAIVE_MODE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+            on
+        }
+        2 => true,
+        _ => false,
+    }
+}
+
+/// Runtime switch between the packed and seed kernel paths (bench /
+/// test hook; overrides [`NAIVE_ENV`]).
+pub fn set_naive_mode(on: bool) {
+    NAIVE_MODE.store(if on { 2 } else { 1 }, Ordering::Relaxed);
+}
+
+/// Read-only strided 2-D view: element `(i, j)` is
+/// `data[i * rs + j * cs]`. `rs = ld, cs = 1` is a row-major matrix;
+/// `rs = 1, cs = ld` is its transpose — which is how the SYRK and
+/// trailing-update paths feed `Xᵀ` / `L₂₁ᵀ` to the packers without
+/// materializing a transposed copy.
+#[derive(Clone, Copy)]
+pub struct View<'a, T> {
+    pub data: &'a [T],
+    pub rs: usize,
+    pub cs: usize,
+}
+
+impl<'a, T: Copy> View<'a, T> {
+    /// Row-major matrix with leading dimension `ld`.
+    pub fn row_major(data: &'a [T], ld: usize) -> View<'a, T> {
+        View { data, rs: ld, cs: 1 }
+    }
+
+    /// Transpose of a row-major matrix with leading dimension `ld`.
+    pub fn transposed(data: &'a [T], ld: usize) -> View<'a, T> {
+        View { data, rs: 1, cs: ld }
+    }
+
+    /// View shifted so its `(0, 0)` is `(i0, j0)` of `self`.
+    pub fn offset(&self, i0: usize, j0: usize) -> View<'a, T> {
+        View {
+            data: &self.data[i0 * self.rs + j0 * self.cs..],
+            rs: self.rs,
+            cs: self.cs,
+        }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> T {
+        self.data[i * self.rs + j * self.cs]
+    }
+}
+
+/// B operand packed into `NR`-column panels, chunked by `KC`: layout is
+/// `[kc-chunk][column-panel][k][column-in-panel]`, with ragged columns
+/// zero-padded to `NR`. Packed once, shared read-only across bands.
+pub struct PackedB<T> {
+    /// logical inner (`k`) dimension
+    pub k: usize,
+    /// logical column count
+    pub n: usize,
+    pub buf: Vec<T>,
+}
+
+macro_rules! kernel_mod {
+    ($name:ident, $t:ty, $mr:expr, $nr:expr, $kc:expr, $mc:expr) => {
+        pub mod $name {
+            use super::{PackedB, View};
+            use crate::engine;
+            use std::cell::RefCell;
+
+            /// Register-tile rows.
+            pub const MR: usize = $mr;
+            /// Register-tile columns (one accumulator row = `NR` lanes).
+            pub const NR: usize = $nr;
+            /// k-dimension cache-block depth.
+            pub const KC: usize = $kc;
+            /// Packed-A block rows (multiple of `MR`).
+            pub const MC: usize = $mc;
+
+            /// Fused multiply-add when the target really has FMA;
+            /// `mul_add` without it lowers to a libm call, so fall back
+            /// to separate ops there.
+            #[inline(always)]
+            pub fn fmadd(a: $t, b: $t, c: $t) -> $t {
+                if cfg!(target_feature = "fma") {
+                    a.mul_add(b, c)
+                } else {
+                    a * b + c
+                }
+            }
+
+            thread_local! {
+                static PACK_A: RefCell<Vec<$t>> = const { RefCell::new(Vec::new()) };
+                static PACK_B: RefCell<Vec<$t>> = const { RefCell::new(Vec::new()) };
+            }
+
+            /// Pack `b` (logical `k × n`) into the shared panel layout.
+            pub fn pack_b(b: View<$t>, k: usize, n: usize) -> PackedB<$t> {
+                let npan = n.div_ceil(NR).max(1);
+                let mut buf = vec![0.0 as $t; k * npan * NR];
+                let mut base = 0;
+                let mut pc = 0;
+                while pc < k {
+                    let kc = KC.min(k - pc);
+                    pack_b_chunk(&mut buf[base..base + kc * npan * NR], b, pc, kc, n);
+                    base += kc * npan * NR;
+                    pc += KC;
+                }
+                PackedB { k, n, buf }
+            }
+
+            /// Pack one `kc × n` chunk of `b` into `buf` (panel layout).
+            fn pack_b_chunk(buf: &mut [$t], b: View<$t>, k0: usize, kc: usize, n: usize) {
+                let npan = n.div_ceil(NR).max(1);
+                for jp in 0..npan {
+                    let j0 = jp * NR;
+                    let nr = NR.min(n - j0);
+                    let panel = &mut buf[jp * kc * NR..(jp + 1) * kc * NR];
+                    for p in 0..kc {
+                        let row = &mut panel[p * NR..(p + 1) * NR];
+                        for (j, slot) in row.iter_mut().enumerate() {
+                            *slot = if j < nr { b.at(k0 + p, j0 + j) } else { 0.0 };
+                        }
+                    }
+                }
+            }
+
+            /// Pack rows `[i0, i0 + mc)` of `a`, k-range `[k0, k0 + kc)`,
+            /// into `MR`-row panels (ragged rows zero-padded).
+            fn pack_a_block(
+                buf: &mut Vec<$t>,
+                a: View<$t>,
+                i0: usize,
+                mc: usize,
+                k0: usize,
+                kc: usize,
+            ) {
+                let mc_pad = mc.div_ceil(MR) * MR;
+                buf.clear();
+                buf.resize(mc_pad * kc, 0.0);
+                let mut ir = 0;
+                while ir < mc {
+                    let mr = MR.min(mc - ir);
+                    let panel = &mut buf[ir * kc..(ir + MR) * kc];
+                    for p in 0..kc {
+                        let col = &mut panel[p * MR..(p + 1) * MR];
+                        for (r, slot) in col.iter_mut().enumerate() {
+                            *slot = if r < mr { a.at(i0 + ir + r, k0 + p) } else { 0.0 };
+                        }
+                    }
+                    ir += MR;
+                }
+            }
+
+            /// The register tile: `acc[r][j] = Σ_p ap[p][r] · bp[p][j]`
+            /// over `kc` packed steps, ascending `p`.
+            #[inline(always)]
+            fn micro_acc(kc: usize, ap: &[$t], bp: &[$t]) -> [[$t; NR]; MR] {
+                let mut acc = [[0.0 as $t; NR]; MR];
+                for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)).take(kc) {
+                    for r in 0..MR {
+                        let ar = av[r];
+                        for j in 0..NR {
+                            acc[r][j] = fmadd(ar, bv[j], acc[r][j]);
+                        }
+                    }
+                }
+                acc
+            }
+
+            /// Accumulate one tile into C: rows `[row, row + mr)` of the
+            /// band slice `c` (stride `ldc`), columns
+            /// `[c_col0 + j0, c_col0 + j0 + nr)`.
+            #[inline]
+            #[allow(clippy::too_many_arguments)]
+            fn write_tile(
+                c: &mut [$t],
+                ldc: usize,
+                c_col0: usize,
+                row: usize,
+                j0: usize,
+                acc: &[[$t; NR]; MR],
+                mr: usize,
+                nr: usize,
+                sub: bool,
+            ) {
+                for (r, arow) in acc.iter().enumerate().take(mr) {
+                    let off = (row + r) * ldc + c_col0 + j0;
+                    let crow = &mut c[off..off + nr];
+                    if sub {
+                        for (dst, &v) in crow.iter_mut().zip(arow.iter()) {
+                            *dst -= v;
+                        }
+                    } else {
+                        for (dst, &v) in crow.iter_mut().zip(arow.iter()) {
+                            *dst += v;
+                        }
+                    }
+                }
+            }
+
+            /// Serial packed core against a pre-packed B:
+            /// `C[i][j] (±)= Σ_k A[row0 + i][k] · B[k][j]` for
+            /// `i < mrows`, `j < ncols`, written at
+            /// `c[i * ldc + c_col0 + j]`. Per-element accumulation order
+            /// is ascending `KC` chunk then ascending `k` — independent
+            /// of banding, so callers may split rows freely.
+            #[allow(clippy::too_many_arguments)]
+            pub fn gemm_core(
+                c: &mut [$t],
+                ldc: usize,
+                c_col0: usize,
+                a: View<$t>,
+                row0: usize,
+                mrows: usize,
+                bp: &PackedB<$t>,
+                ncols: usize,
+                sub: bool,
+            ) {
+                if mrows == 0 || ncols == 0 || bp.k == 0 {
+                    return;
+                }
+                assert!(ncols <= bp.n, "packed B has too few columns");
+                let npan = bp.n.div_ceil(NR).max(1);
+                let use_pan = ncols.div_ceil(NR);
+                PACK_A.with(|cell| {
+                    let abuf = &mut *cell.borrow_mut();
+                    let mut base = 0;
+                    let mut pc = 0;
+                    while pc < bp.k {
+                        let kc = KC.min(bp.k - pc);
+                        let mut ic = 0;
+                        while ic < mrows {
+                            let mc = MC.min(mrows - ic);
+                            pack_a_block(abuf, a, row0 + ic, mc, pc, kc);
+                            for jp in 0..use_pan {
+                                let j0 = jp * NR;
+                                let nr = NR.min(ncols - j0);
+                                let pan0 = base + jp * kc * NR;
+                                let bpanel = &bp.buf[pan0..pan0 + kc * NR];
+                                let mut ir = 0;
+                                while ir < mc {
+                                    let mr = MR.min(mc - ir);
+                                    let acc = micro_acc(kc, &abuf[ir * kc..], bpanel);
+                                    write_tile(c, ldc, c_col0, ic + ir, j0, &acc, mr, nr, sub);
+                                    ir += MR;
+                                }
+                            }
+                            ic += MC;
+                        }
+                        base += kc * npan * NR;
+                        pc += KC;
+                    }
+                });
+            }
+
+            /// Like [`gemm_core`] but with an unpacked B view: each `KC`
+            /// chunk of B is packed on the fly into a per-worker scratch.
+            /// For the small inner updates of the blocked triangular
+            /// solves, where B is produced block-by-block and cannot be
+            /// pre-packed once.
+            ///
+            /// `k_phase` anchors the `KC` chunk grid: boundaries sit at
+            /// absolute positions `(k_phase + pc) % KC == 0`. Callers
+            /// whose k-range *start* varies with band decomposition
+            /// (the triangular inverse skips leading zero blocks) pass
+            /// the absolute start so partial-sum grouping — and hence
+            /// every accumulation chain — is identical for any band
+            /// width / thread count.
+            #[allow(clippy::too_many_arguments)]
+            pub fn gemm_core_viewb(
+                c: &mut [$t],
+                ldc: usize,
+                c_col0: usize,
+                a: View<$t>,
+                row0: usize,
+                mrows: usize,
+                k: usize,
+                k_phase: usize,
+                b: View<$t>,
+                ncols: usize,
+                sub: bool,
+            ) {
+                if mrows == 0 || ncols == 0 || k == 0 {
+                    return;
+                }
+                let npan = ncols.div_ceil(NR).max(1);
+                PACK_B.with(|bcell| {
+                    let bbuf = &mut *bcell.borrow_mut();
+                    PACK_A.with(|acell| {
+                        let abuf = &mut *acell.borrow_mut();
+                        let mut pc = 0;
+                        while pc < k {
+                            let next_abs = ((k_phase + pc) / KC + 1) * KC;
+                            let kc = (next_abs - k_phase - pc).min(k - pc);
+                            bbuf.clear();
+                            bbuf.resize(kc * npan * NR, 0.0);
+                            pack_b_chunk(bbuf, b, pc, kc, ncols);
+                            let mut ic = 0;
+                            while ic < mrows {
+                                let mc = MC.min(mrows - ic);
+                                pack_a_block(abuf, a, row0 + ic, mc, pc, kc);
+                                for jp in 0..npan {
+                                    let j0 = jp * NR;
+                                    let nr = NR.min(ncols - j0);
+                                    let bpanel = &bbuf[jp * kc * NR..(jp + 1) * kc * NR];
+                                    let mut ir = 0;
+                                    while ir < mc {
+                                        let mr = MR.min(mc - ir);
+                                        let acc = micro_acc(kc, &abuf[ir * kc..], bpanel);
+                                        write_tile(c, ldc, c_col0, ic + ir, j0, &acc, mr, nr, sub);
+                                        ir += MR;
+                                    }
+                                }
+                                ic += MC;
+                            }
+                            pc += kc;
+                        }
+                    });
+                });
+            }
+
+            /// Engine-parallel driver: `C (±)= A[row0..row0+m] · B` where
+            /// `c` is the contiguous row-major `m × n` output slice.
+            /// Rows are split into `MR`-aligned bands on the shared
+            /// pool; each band runs [`gemm_core`] against the shared
+            /// packed B (bit-identical for any thread count).
+            pub fn gemm_banded(
+                c: &mut [$t],
+                n: usize,
+                a: View<$t>,
+                row0: usize,
+                m: usize,
+                bp: &PackedB<$t>,
+                sub: bool,
+            ) {
+                if m == 0 || n == 0 {
+                    return;
+                }
+                assert_eq!(c.len(), m * n, "output slice shape mismatch");
+                let eng = engine::global();
+                let rows_per = eng.chunk_aligned(m, MR);
+                eng.for_each_band(c, rows_per * n, |bi, band| {
+                    let r0 = bi * rows_per;
+                    gemm_core(band, n, 0, a, row0 + r0, band.len() / n, bp, n, sub);
+                });
+            }
+        }
+    };
+}
+
+// Tile shapes chosen by measurement (DESIGN.md §Perf-L3): wide NR keeps
+// an accumulator row in 2 native 512-bit vectors; MR bounds the live
+// register set (f32: 8×2 = 16 accumulator vectors, f64: 6×4 = 24).
+kernel_mod!(kf32, f32, 8, 32, 256, 128);
+kernel_mod!(kf64, f64, 6, 32, 256, 132);
+
+// ---------------------------------------------------------------------------
+// Register-tiled row kernels (f32) — shared by the sparse execution
+// paths and the reconstruction-loss probe. Each accumulates a j-block
+// of the output row in registers while walking the (sparse) column
+// list, instead of read-modify-writing the output row once per nonzero.
+// Per-element chains stay in ascending-`t` order over the nonzero
+// entries — the scalar loop's order; only the per-step rounding changes
+// where the target fuses the multiply-add.
+// ---------------------------------------------------------------------------
+
+/// Output-row j-block width for the row kernels (f32 lanes).
+pub const ROW_BLOCK: usize = 32;
+
+/// `orow += Σ_t vals[t] · x[cols[t] * ldx ..][j]`, skipping `vals[t] ==
+/// 0.0` (stored negative zeros / padded slots) like the scalar path.
+pub fn sparse_row_axpy(orow: &mut [f32], cols: &[u32], vals: &[f32], x: &[f32], ldx: usize) {
+    debug_assert_eq!(cols.len(), vals.len());
+    let k = orow.len();
+    let mut j0 = 0;
+    while j0 + ROW_BLOCK <= k {
+        let mut acc = [0.0f32; ROW_BLOCK];
+        for (t, &v) in vals.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let xrow = &x[cols[t] as usize * ldx + j0..cols[t] as usize * ldx + j0 + ROW_BLOCK];
+            for j in 0..ROW_BLOCK {
+                acc[j] = kf32::fmadd(v, xrow[j], acc[j]);
+            }
+        }
+        let out = &mut orow[j0..j0 + ROW_BLOCK];
+        for (dst, &v) in out.iter_mut().zip(acc.iter()) {
+            *dst += v;
+        }
+        j0 += ROW_BLOCK;
+    }
+    if j0 < k {
+        let w = k - j0;
+        let mut acc = [0.0f32; ROW_BLOCK];
+        for (t, &v) in vals.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let xrow = &x[cols[t] as usize * ldx + j0..cols[t] as usize * ldx + j0 + w];
+            for (j, &xv) in xrow.iter().enumerate() {
+                acc[j] = kf32::fmadd(v, xv, acc[j]);
+            }
+        }
+        for (dst, &v) in orow[j0..].iter_mut().zip(acc.iter()) {
+            *dst += v;
+        }
+    }
+}
+
+/// Dense-row variant (outlier rows): `orow += Σ_t wrow[t] · X[t, :]`
+/// with the same zero-skip as the scalar path.
+pub fn dense_row_axpy(orow: &mut [f32], wrow: &[f32], x: &[f32], ldx: usize) {
+    let k = orow.len();
+    let mut j0 = 0;
+    while j0 < k {
+        let w = ROW_BLOCK.min(k - j0);
+        let mut acc = [0.0f32; ROW_BLOCK];
+        for (t, &v) in wrow.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let xrow = &x[t * ldx + j0..t * ldx + j0 + w];
+            for (j, &xv) in xrow.iter().enumerate() {
+                acc[j] = kf32::fmadd(v, xv, acc[j]);
+            }
+        }
+        for (dst, &v) in orow[j0..j0 + w].iter_mut().zip(acc.iter()) {
+            *dst += v;
+        }
+        j0 += w;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+                }
+                c[i * n + j] = acc as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn packed_gemm_matches_naive_odd_shapes() {
+        let mut r = Rng::new(41);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (1, 7, 13),
+            (13, 7, 1),
+            (17, 31, 29),
+            (40, 64, 33),
+            (9, 0, 5),
+        ] {
+            let a: Vec<f32> = (0..m * k).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let mut c = vec![0.0f32; m * n];
+            let bp = kf32::pack_b(View::row_major(&b, n), k, n);
+            kf32::gemm_banded(&mut c, n, View::row_major(&a, k), 0, m, &bp, false);
+            let want = naive_gemm(m, k, n, &a, &b);
+            for (got, want) in c.iter().zip(&want) {
+                assert!(
+                    (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                    "{m}x{k}x{n}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gemm_sub_inverts_add() {
+        let mut r = Rng::new(42);
+        let (m, k, n) = (11, 19, 23);
+        let a: Vec<f32> = (0..m * k).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let mut c = vec![0.0f32; m * n];
+        let bp = kf32::pack_b(View::row_major(&b, n), k, n);
+        kf32::gemm_banded(&mut c, n, View::row_major(&a, k), 0, m, &bp, false);
+        kf32::gemm_banded(&mut c, n, View::row_major(&a, k), 0, m, &bp, true);
+        assert!(c.iter().all(|&v| v == 0.0), "add then sub must cancel exactly");
+    }
+
+    #[test]
+    fn transposed_view_packs_transpose() {
+        // B via a transposed view must equal B via its materialized
+        // transpose, bit for bit.
+        let mut r = Rng::new(43);
+        let (k, n) = (37, 21);
+        let bt: Vec<f64> = (0..k * n).map(|_| r.normal()).collect(); // n x k row-major
+        let mut b = vec![0.0f64; k * n]; // k x n row-major
+        for j in 0..n {
+            for p in 0..k {
+                b[p * n + j] = bt[j * k + p];
+            }
+        }
+        let p1 = kf64::pack_b(View::row_major(&b, n), k, n);
+        let p2 = kf64::pack_b(View::transposed(&bt, k), k, n);
+        assert_eq!(p1.buf, p2.buf);
+    }
+
+    #[test]
+    fn sparse_row_axpy_matches_scalar() {
+        let mut r = Rng::new(44);
+        let (b, k) = (23, 37); // weight cols, batch width
+        let x: Vec<f32> = (0..b * k).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let cols: Vec<u32> = vec![0, 3, 4, 9, 17, 22];
+        let mut vals: Vec<f32> = cols.iter().map(|_| r.normal_f32(0.0, 1.0)).collect();
+        vals[2] = 0.0; // padded slot must be skipped
+        let mut got = vec![0.0f32; k];
+        sparse_row_axpy(&mut got, &cols, &vals, &x, k);
+        let mut want = vec![0.0f32; k];
+        for (t, &v) in vals.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            for j in 0..k {
+                want[j] += v * x[cols[t] as usize * k + j];
+            }
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-5 * w.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn dense_row_axpy_matches_scalar() {
+        let mut r = Rng::new(45);
+        let (b, k) = (19, 33);
+        let x: Vec<f32> = (0..b * k).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let mut wrow: Vec<f32> = (0..b).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        wrow[7] = 0.0;
+        let mut got = vec![0.0f32; k];
+        dense_row_axpy(&mut got, &wrow, &x, k);
+        let mut want = vec![0.0f32; k];
+        for (t, &v) in wrow.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            for j in 0..k {
+                want[j] += v * x[t * k + j];
+            }
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-5 * w.abs().max(1.0));
+        }
+    }
+
+    // NOTE: no unit test toggles `set_naive_mode` here — the switch is
+    // process-global and `cargo test` runs tests concurrently; the
+    // bench binaries (separate processes) exercise both settings.
+}

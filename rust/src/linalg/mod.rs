@@ -11,14 +11,19 @@
 //!   pruning quality is sensitive to the conditioning of `H = 2XXᵀ`,
 //!   so the numeric core runs in double precision like the paper's
 //!   PyTorch implementation effectively does for small models).
-//! * [`gemm`] — blocked, multi-threaded matrix multiply + `XXᵀ`.
-//! * [`chol`] — Cholesky, triangular solves, PSD inverse, LU solve.
+//! * [`kernel`] — the packed, register-tiled micro-kernel GEMM core
+//!   every O(n³) path below is built on (DESIGN.md §Perf-L3).
+//! * [`gemm`] — matrix multiply + `XXᵀ` SYRK over the packed core,
+//!   with a density-probed zero-skip fast path for sparse operands.
+//! * [`chol`] — blocked Cholesky, blocked triangular solves, PSD
+//!   inverse, LU solve.
 //! * [`perm`] — permutation vectors/matrices (structured pruning).
 //! * [`batched`] — the paper's §H.1 padded batched-systems path.
 
 pub mod batched;
 pub mod chol;
 pub mod gemm;
+pub mod kernel;
 pub mod perm;
 
 /// Row-major `f32` matrix.

@@ -3,11 +3,11 @@
 //!
 //! Every kernel computes `out = W · X` (`W` compressed `c×b`, `X` dense
 //! `b×k`) with f32 accumulation in ascending-column order per row —
-//! exactly the operation order of [`crate::linalg::gemm::matmul_into`]
-//! restricted to the nonzero entries, so results match the dense GEMM
-//! bit-for-bit on typical inputs and within 1e-5 relative error always
-//! (pinned by the cross-validation tests and the `sparse_matmul`
-//! bench's self-check).
+//! the naive GEMM's operation order restricted to the nonzero entries,
+//! so results stay within 1e-5 relative error of
+//! [`crate::linalg::gemm::matmul_naive`] (pinned by the
+//! cross-validation tests and the `sparse_matmul` bench's self-check;
+//! the packed dense GEMM itself reorders sums, see DESIGN.md §Perf-L3).
 //!
 //! Parallelism: output rows are banded over the shared
 //! [`crate::engine::PruneEngine`] pool (disjoint bands ⇒ bit-identical
@@ -16,10 +16,21 @@
 //! per-worker pooled scratch (the [`SpmvScratch`] analogue of
 //! `linalg::batched::RowSolveScratch`) so the hot loop does no
 //! allocation and no per-element bit arithmetic.
+//!
+//! The inner loops reuse the packed dense core's register-tiled row
+//! kernels ([`crate::linalg::kernel::sparse_row_axpy`] /
+//! [`dense_row_axpy`]): a j-block of the output row accumulates in
+//! registers while the (decoded) column list streams past, instead of
+//! read-modify-writing the output row once per nonzero. Per-element
+//! chains keep the scalar loop's ascending-nonzero order; on FMA
+//! targets the fused multiply-add rounds once per step, which may move
+//! the lowest bits relative to the old two-rounding loop (well inside
+//! the 1e-5 gate). Serial==parallel bit-identity is unaffected.
 
 use super::formats::{read_bits, Csr, DenseCompact, NmPacked};
 use super::SparseTensor;
 use crate::engine;
+use crate::linalg::kernel::{dense_row_axpy, sparse_row_axpy};
 use crate::linalg::Mat;
 
 /// Per-worker decode scratch for the n:m kernel: the current row's
@@ -89,18 +100,11 @@ fn rows_body(t: &SparseTensor, x: &Mat, r0: usize, head: &mut [f32], k: usize) {
 }
 
 /// `orow += v · X[col, :]` over a dense weight row with zero skipping
-/// (the outlier-row path; same inner loop as the dense GEMM).
+/// (the outlier-row path): the register-tiled decoded-panel kernel.
 #[inline]
 fn dense_row(wrow: &[f32], x: &Mat, orow: &mut [f32], k: usize) {
-    for (col, &v) in wrow.iter().enumerate() {
-        if v == 0.0 {
-            continue;
-        }
-        let xrow = x.row(col);
-        for j in 0..k {
-            orow[j] += v * xrow[j];
-        }
-    }
+    debug_assert_eq!(orow.len(), k);
+    dense_row_axpy(orow, wrow, &x.data, x.cols);
 }
 
 fn nm_rows(t: &NmPacked, x: &Mat, r0: usize, rows_here: usize, head: &mut [f32], k: usize) {
@@ -126,15 +130,9 @@ fn nm_rows(t: &NmPacked, x: &Mat, r0: usize, rows_here: usize, head: &mut [f32],
                 let idx = read_bits(&t.indices, base + tt * bits as usize, bits);
                 s.cols.push(((tt / keep) * t.m + idx) as u32);
             }
-            for (tt, &v) in vals.iter().enumerate() {
-                if v == 0.0 {
-                    continue; // zero-padded kept slot
-                }
-                let xrow = x.row(s.cols[tt] as usize);
-                for j in 0..k {
-                    orow[j] += v * xrow[j];
-                }
-            }
+            // decoded-panel path: register-tiled row kernel (skips the
+            // zero-padded kept slots like the scalar loop did)
+            sparse_row_axpy(orow, &s.cols, vals, &x.data, x.cols);
             p += 1;
         }
     });
@@ -144,16 +142,9 @@ fn csr_rows(t: &Csr, x: &Mat, r0: usize, rows_here: usize, head: &mut [f32], k: 
     for ri in 0..rows_here {
         let i = r0 + ri;
         let orow = &mut head[ri * k..(ri + 1) * k];
-        for tt in t.row_ptr[i] as usize..t.row_ptr[i + 1] as usize {
-            let v = t.values[tt];
-            if v == 0.0 {
-                continue; // stored -0.0
-            }
-            let xrow = x.row(t.col_idx[tt] as usize);
-            for j in 0..k {
-                orow[j] += v * xrow[j];
-            }
-        }
+        let (lo, hi) = (t.row_ptr[i] as usize, t.row_ptr[i + 1] as usize);
+        // register-tiled row kernel; skips stored -0.0 like the scalar loop
+        sparse_row_axpy(orow, &t.col_idx[lo..hi], &t.values[lo..hi], &x.data, x.cols);
     }
 }
 
@@ -170,15 +161,7 @@ fn dc_rows(t: &DenseCompact, x: &Mat, r0: usize, rows_here: usize, head: &mut [f
             continue;
         }
         let drow = &t.data[p * kc..(p + 1) * kc];
-        for (tt, &v) in drow.iter().enumerate() {
-            if v == 0.0 {
-                continue;
-            }
-            let xrow = x.row(t.kept_cols[tt] as usize);
-            for j in 0..k {
-                orow[j] += v * xrow[j];
-            }
-        }
+        sparse_row_axpy(orow, &t.kept_cols, drow, &x.data, x.cols);
         p += 1;
     }
 }

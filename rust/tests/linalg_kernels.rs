@@ -1,0 +1,292 @@
+//! Property + determinism tests for the packed register-tiled linalg
+//! core (DESIGN.md §Perf-L3): the packed kernels vs the seed (naive)
+//! references across non-tile-multiple shapes, ±0.0 inputs, and the
+//! serial==parallel bit-identity contract for every rewired kernel.
+
+use thanos::engine;
+use thanos::linalg::chol::{
+    cholesky, cholesky_in_place, cholesky_naive_in_place, damp_hessian, lower_tri_inverse,
+    lower_tri_inverse_naive, upper_tri_solve_many, upper_tri_solve_many_naive,
+};
+use thanos::linalg::gemm::{matmul, matmul_f64, matmul_naive, recon_loss, xxt_f64, xxt_f64_naive};
+use thanos::linalg::kernel::{kf32, kf64, View};
+use thanos::linalg::{Mat, MatF64};
+use thanos::rng::Rng;
+
+fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut r = Rng::new(seed);
+    Mat::from_fn(rows, cols, |_, _| r.normal_f32(0.0, 1.0))
+}
+
+fn random_spd(n: usize, seed: u64) -> MatF64 {
+    let x = rand_mat(n, n + 5, seed);
+    let mut h = xxt_f64(&x);
+    damp_hessian(&mut h, 0.01);
+    h
+}
+
+fn bits_f32(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+fn bits_f64(m: &MatF64) -> Vec<u64> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// packed kernel vs naive reference across awkward shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packed_gemm_core_matches_naive_at_awkward_shapes() {
+    // exercise the packed core directly (the public matmul routes tiny
+    // shapes to the seed path): 1x1, row/col vectors, primes, k = 0
+    for (case, &(m, k, n)) in [
+        (1usize, 1usize, 1usize),
+        (1, 17, 29),
+        (29, 17, 1),
+        (7, 11, 13),
+        (97, 89, 101),
+        (5, 0, 9),
+        (33, 64, 47),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let a = rand_mat(m, k, 100 + case as u64);
+        let b = rand_mat(k, n, 200 + case as u64);
+        let mut c = Mat::zeros(m, n);
+        let bp = kf32::pack_b(View::row_major(&b.data, n), k, n);
+        kf32::gemm_banded(&mut c.data, n, View::row_major(&a.data, k), 0, m, &bp, false);
+        let want = matmul_naive(&a, &b);
+        let scale = want.data.iter().fold(1.0f32, |s, &v| s.max(v.abs()));
+        assert!(
+            c.max_abs_diff(&want) <= 1e-4 * scale,
+            "{m}x{k}x{n}: diff {}",
+            c.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn public_matmul_matches_naive_across_density_mix() {
+    // rows split between the packed and zero-skip paths; shape above
+    // the packed-path flop threshold
+    let mut a = rand_mat(64, 80, 7);
+    for i in 10..30 {
+        for (j, v) in a.row_mut(i).iter_mut().enumerate() {
+            if j % 12 != 0 {
+                *v = 0.0;
+            }
+        }
+    }
+    let b = rand_mat(80, 64, 8);
+    let got = matmul(&a, &b);
+    let want = matmul_naive(&a, &b);
+    let scale = want.data.iter().fold(1.0f32, |s, &v| s.max(v.abs()));
+    assert!(got.max_abs_diff(&want) <= 1e-4 * scale);
+}
+
+#[test]
+fn signed_zero_inputs_are_handled() {
+    // ±0.0 rows: zero-skip treats -0.0 as zero; the packed kernel
+    // multiplies through. Both must produce exact zeros for a ±0 row.
+    // Shape above the packed threshold so the tiled path runs.
+    let mut a = rand_mat(64, 72, 9);
+    for (j, v) in a.row_mut(3).iter_mut().enumerate() {
+        *v = if j % 2 == 0 { 0.0 } else { -0.0 };
+    }
+    let b = rand_mat(72, 64, 10);
+    let got = matmul(&a, &b);
+    let want = matmul_naive(&a, &b);
+    for j in 0..64 {
+        assert_eq!(got.at(3, j), 0.0, "±0 row must stay exactly zero");
+    }
+    let scale = want.data.iter().fold(1.0f32, |s, &v| s.max(v.abs()));
+    assert!(got.max_abs_diff(&want) <= 1e-4 * scale);
+}
+
+#[test]
+fn packed_f64_gemm_matches_direct() {
+    let mut r = Rng::new(11);
+    let a = MatF64::from_fn(37, 41, |_, _| r.normal());
+    let b = MatF64::from_fn(41, 43, |_, _| r.normal());
+    let c = matmul_f64(&a, &b);
+    for i in [0usize, 13, 36] {
+        for j in [0usize, 21, 42] {
+            let direct: f64 = (0..41).map(|p| a.at(i, p) * b.at(p, j)).sum();
+            assert!((c.at(i, j) - direct).abs() <= 1e-10 * direct.abs().max(1.0));
+        }
+    }
+}
+
+#[test]
+fn packed_syrk_matches_naive_and_is_exactly_symmetric() {
+    let x = rand_mat(73, 59, 12); // odd, above the packed threshold
+    let h = xxt_f64(&x);
+    let hn = xxt_f64_naive(&x);
+    let scale = hn.data.iter().fold(1.0f64, |s, &v| s.max(v.abs()));
+    assert!(h.max_abs_diff(&hn) <= 1e-12 * scale.max(1.0) * 1e3);
+    for i in 0..73 {
+        for j in 0..i {
+            assert_eq!(
+                h.at(i, j).to_bits(),
+                h.at(j, i).to_bits(),
+                "symmetry must be bitwise ({i},{j})"
+            );
+        }
+    }
+}
+
+#[test]
+fn blocked_cholesky_matches_naive_reference_large() {
+    let a = random_spd(210, 13);
+    let mut blocked = a.clone();
+    cholesky_in_place(&mut blocked).unwrap();
+    let mut naive = a.clone();
+    cholesky_naive_in_place(&mut naive).unwrap();
+    let scale = naive.data.iter().fold(1.0f64, |s, &v| s.max(v.abs()));
+    assert!(blocked.max_abs_diff(&naive) <= 1e-9 * scale.max(1.0));
+}
+
+#[test]
+fn blocked_trsm_and_tri_inverse_match_naive() {
+    let a = random_spd(160, 14);
+    let l = cholesky(&a).unwrap();
+    let li_blocked = lower_tri_inverse(&l);
+    let li_naive = lower_tri_inverse_naive(&l);
+    assert!(li_blocked.max_abs_diff(&li_naive) <= 1e-9);
+
+    let mut r = Rng::new(15);
+    let off = 1.0 / 160.0;
+    let u = MatF64::from_fn(160, 160, |i, j| {
+        if i > j {
+            0.0
+        } else if i == j {
+            2.0
+        } else {
+            off * r.normal()
+        }
+    });
+    let rhs = MatF64::from_fn(160, 70, |_, _| r.normal());
+    let xs = upper_tri_solve_many(&u, &rhs);
+    let xn = upper_tri_solve_many_naive(&u, &rhs);
+    assert!(xs.max_abs_diff(&xn) <= 1e-9);
+    // residual: U·X == RHS
+    let prod = matmul_f64(&u, &xs);
+    assert!(prod.max_abs_diff(&rhs) <= 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// serial == parallel bit-identity for every rewired kernel
+// ---------------------------------------------------------------------------
+
+#[test]
+fn gemm_serial_parallel_bit_identical() {
+    // shape above every packed threshold so the tiled path runs
+    let a = rand_mat(64, 72, 16);
+    let b = rand_mat(72, 64, 17);
+    let par = matmul(&a, &b);
+    let ser = engine::with_serial(|| matmul(&a, &b));
+    assert_eq!(bits_f32(&par), bits_f32(&ser));
+}
+
+#[test]
+fn gemm_f64_serial_parallel_bit_identical() {
+    let mut r = Rng::new(18);
+    let a = MatF64::from_fn(64, 72, |_, _| r.normal());
+    let b = MatF64::from_fn(72, 64, |_, _| r.normal());
+    let par = matmul_f64(&a, &b);
+    let ser = engine::with_serial(|| matmul_f64(&a, &b));
+    assert_eq!(bits_f64(&par), bits_f64(&ser));
+}
+
+#[test]
+fn syrk_serial_parallel_bit_identical() {
+    let x = rand_mat(96, 80, 19);
+    let par = xxt_f64(&x);
+    let ser = engine::with_serial(|| xxt_f64(&x));
+    assert_eq!(bits_f64(&par), bits_f64(&ser));
+}
+
+#[test]
+fn blocked_cholesky_serial_parallel_bit_identical() {
+    // n > PAR_MIN so the banded TRSM + trailing update actually fan out
+    let a = random_spd(300, 20);
+    let mut par = a.clone();
+    cholesky_in_place(&mut par).unwrap();
+    let ser = engine::with_serial(|| {
+        let mut m = a.clone();
+        cholesky_in_place(&mut m).unwrap();
+        m
+    });
+    assert_eq!(bits_f64(&par), bits_f64(&ser));
+}
+
+#[test]
+fn blocked_trsm_serial_parallel_bit_identical() {
+    let mut r = Rng::new(21);
+    let off = 1.0 / 200.0;
+    let u = MatF64::from_fn(200, 200, |i, j| {
+        if i > j {
+            0.0
+        } else if i == j {
+            2.0
+        } else {
+            off * r.normal()
+        }
+    });
+    let rhs = MatF64::from_fn(200, 96, |_, _| r.normal());
+    let par = upper_tri_solve_many(&u, &rhs);
+    let ser = engine::with_serial(|| upper_tri_solve_many(&u, &rhs));
+    assert_eq!(bits_f64(&par), bits_f64(&ser));
+}
+
+#[test]
+fn blocked_tri_inverse_serial_parallel_bit_identical() {
+    let a = random_spd(180, 22);
+    let l = cholesky(&a).unwrap();
+    let par = lower_tri_inverse(&l);
+    let ser = engine::with_serial(|| lower_tri_inverse(&l));
+    assert_eq!(bits_f64(&par), bits_f64(&ser));
+}
+
+#[test]
+fn recon_loss_serial_parallel_bit_identical_integration() {
+    let w = rand_mat(50, 70, 23);
+    let mut w_hat = w.clone();
+    for v in w_hat.data.iter_mut().step_by(2) {
+        *v = 0.0;
+    }
+    let x = rand_mat(70, 60, 24);
+    let par = recon_loss(&w_hat, &w, &x);
+    let ser = engine::with_serial(|| recon_loss(&w_hat, &w, &x));
+    assert_eq!(par.to_bits(), ser.to_bits());
+}
+
+// ---------------------------------------------------------------------------
+// the f64 packed core at awkward shapes (used by chol/TRSM internally)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packed_f64_core_matches_direct_at_awkward_shapes() {
+    for (case, &(m, k, n)) in
+        [(1usize, 1usize, 1usize), (5, 7, 3), (13, 29, 11), (40, 3, 50)].iter().enumerate()
+    {
+        let mut r = Rng::new(300 + case as u64);
+        let a: Vec<f64> = (0..m * k).map(|_| r.normal()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| r.normal()).collect();
+        let mut c = vec![0.0f64; m * n];
+        let bp = kf64::pack_b(View::row_major(&b, n), k, n);
+        kf64::gemm_banded(&mut c, n, View::row_major(&a, k), 0, m, &bp, false);
+        for i in 0..m {
+            for j in 0..n {
+                let direct: f64 = (0..k).map(|p| a[i * k + p] * b[p * n + j]).sum();
+                assert!(
+                    (c[i * n + j] - direct).abs() <= 1e-12 * direct.abs().max(1.0),
+                    "{m}x{k}x{n} at ({i},{j})"
+                );
+            }
+        }
+    }
+}
