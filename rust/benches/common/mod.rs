@@ -77,34 +77,49 @@ pub fn quick_mode() -> bool {
 
 use thanos::jsonutil::{obj, Json};
 
-/// Shared machine-readable perf-trajectory writer: every bench merges
-/// its measurements into ONE `BENCH_linalg.json` at the repo root
-/// (override the path with `THANOS_BENCH_OUT`), keyed by
-/// `bench/shape/case`. Existing entries from other benches are
-/// preserved, so `linalg_kernels`, `fig9_pruning_time` and
-/// `sparse_matmul` each own a keyspace of the same file and future PRs
-/// can diff like against like.
+/// Shared machine-readable perf-trajectory writer: benches merge their
+/// measurements into one JSON file at the repo root, keyed by
+/// `bench/shape/case`. Existing entries from other benches (and a
+/// file-level `provenance` note, if the committed file carries one) are
+/// preserved, so several benches each own a keyspace of the same file
+/// and future PRs can diff like against like. The linalg benches share
+/// `BENCH_linalg.json` ([`BenchJson::open`]); the end-to-end pruning
+/// trajectory lives in `BENCH_pruning.json`
+/// ([`BenchJson::open_named`]).
 pub struct BenchJson {
     path: std::path::PathBuf,
+    schema: String,
+    provenance: Option<String>,
     entries: std::collections::BTreeMap<String, Json>,
 }
 
 impl BenchJson {
     pub fn open() -> BenchJson {
-        let path = std::env::var("THANOS_BENCH_OUT")
+        BenchJson::open_named("BENCH_linalg.json", "thanos-linalg-bench/v1", "THANOS_BENCH_OUT")
+    }
+
+    /// Open (or create) the repo-root trajectory file `file_name` with
+    /// the given schema tag; `env_override` names an env var holding an
+    /// alternative output path.
+    pub fn open_named(file_name: &str, schema: &str, env_override: &str) -> BenchJson {
+        let path = std::env::var(env_override)
             .map(std::path::PathBuf::from)
             .unwrap_or_else(|_| {
-                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_linalg.json")
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(file_name)
             });
-        let entries = Json::parse_file(&path)
-            .ok()
+        let doc = Json::parse_file(&path).ok();
+        let provenance = doc
+            .as_ref()
+            .and_then(|j| j.get_opt("provenance"))
+            .and_then(|p| p.as_str().ok().map(str::to_string));
+        let entries = doc
             .and_then(|j| j.get_opt("entries").cloned())
             .and_then(|e| match e {
                 Json::Obj(m) => Some(m),
                 _ => None,
             })
             .unwrap_or_default();
-        BenchJson { path, entries }
+        BenchJson { path, schema: schema.to_string(), provenance, entries }
     }
 
     /// Record (or replace) one entry; `fields` become the entry object.
@@ -131,10 +146,12 @@ impl BenchJson {
 
     /// Write the merged document (pretty-printed, stable key order).
     pub fn save(&self) {
-        let doc = obj(vec![
-            ("schema", Json::Str("thanos-linalg-bench/v1".to_string())),
-            ("entries", Json::Obj(self.entries.clone())),
-        ]);
+        let mut fields = vec![("schema", Json::Str(self.schema.clone()))];
+        if let Some(p) = &self.provenance {
+            fields.push(("provenance", Json::Str(p.clone())));
+        }
+        fields.push(("entries", Json::Obj(self.entries.clone())));
+        let doc = obj(fields);
         let mut text = doc.to_string_pretty();
         text.push('\n');
         std::fs::write(&self.path, text).expect("write bench json");

@@ -69,18 +69,20 @@ pub fn with_row_solve_scratch<R>(f: impl FnOnce(&mut RowSolveScratch) -> R) -> R
     ROW_SOLVE_SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
 }
 
-/// Solve `λ·R̂ = u` for the row system described by `s.q` / `s.u`
-/// (`R̂ = hinv[q][:, q]`), writing `λ` into `s.lam`. Identical
-/// arithmetic to the allocating path ([`cholesky`] + [`chol_solve`]),
-/// only the storage is reused — pinned bit-identical by tests.
-pub fn solve_row_in_scratch(hinv: &MatF64, s: &mut RowSolveScratch) -> Result<()> {
-    let RowSolveScratch { q, u, lam, rhat, y } = s;
-    assert_eq!(q.len(), u.len());
-    lam.clear();
+/// The shared live-block solve body: gather `R̂ = hinv[q][:, q]` into
+/// `rhat`, factor in place, and solve `λ·R̂ = u` into `x` (forward
+/// temp `y`). Both [`solve_row_in_scratch`] and
+/// [`solve_band_padded_into_panel`] delegate here, so their documented
+/// bit-identity is identity of code, not of two maintained copies.
+fn solve_gathered_in(
+    hinv: &MatF64,
+    q: &[usize],
+    u: &[f64],
+    rhat: &mut MatF64,
+    y: &mut Vec<f64>,
+    x: &mut Vec<f64>,
+) -> Result<()> {
     let n = q.len();
-    if n == 0 {
-        return Ok(());
-    }
     rhat.rows = n;
     rhat.cols = n;
     rhat.data.clear();
@@ -91,8 +93,22 @@ pub fn solve_row_in_scratch(hinv: &MatF64, s: &mut RowSolveScratch) -> Result<()
         }
     }
     cholesky_in_place(rhat)?;
-    chol_solve_into(rhat, u, y, lam);
+    chol_solve_into(rhat, u, y, x);
     Ok(())
+}
+
+/// Solve `λ·R̂ = u` for the row system described by `s.q` / `s.u`
+/// (`R̂ = hinv[q][:, q]`), writing `λ` into `s.lam`. Identical
+/// arithmetic to the allocating path ([`cholesky`] + [`chol_solve`]),
+/// only the storage is reused — pinned bit-identical by tests.
+pub fn solve_row_in_scratch(hinv: &MatF64, s: &mut RowSolveScratch) -> Result<()> {
+    let RowSolveScratch { q, u, lam, rhat, y } = s;
+    assert_eq!(q.len(), u.len());
+    lam.clear();
+    if q.is_empty() {
+        return Ok(());
+    }
+    solve_gathered_in(hinv, q, u, rhat, y, lam)
 }
 
 /// Solve `λ_i · R̂_i = u_i` for every row, where
@@ -188,6 +204,169 @@ pub fn solve_rows_padded(
     Ok(out)
 }
 
+/// Per-worker workspace for the Λ-panel block update (§Perf-L4): one
+/// engine band's row systems are gathered (`qs`/`q_off`/`us`), solved
+/// through the §H.1 padded batch, and scattered into the band's Λ panel
+/// (`lam`, rows×width row-major f64, zero off-support). All buffers
+/// persist across bands, blocks and layers.
+pub struct PanelSolveScratch {
+    /// flattened removal indices of the band's rows (local to the block)
+    pub qs: Vec<usize>,
+    /// per-row offsets into `qs` / `us` (length rows + 1)
+    pub q_off: Vec<usize>,
+    /// flattened right-hand sides `u = w[q]`
+    pub us: Vec<f64>,
+    /// Λ panel output: rows×width, zero off-support
+    pub lam: Vec<f64>,
+    width: usize,
+    rhat: MatF64,
+    y: Vec<f64>,
+    x: Vec<f64>,
+}
+
+impl PanelSolveScratch {
+    pub fn new() -> PanelSolveScratch {
+        PanelSolveScratch {
+            qs: Vec::new(),
+            q_off: Vec::new(),
+            us: Vec::new(),
+            lam: Vec::new(),
+            width: 0,
+            rhat: MatF64::zeros(0, 0),
+            y: Vec::new(),
+            x: Vec::new(),
+        }
+    }
+
+    /// Reset for a band of `rows` rows at block width `width`.
+    pub fn begin(&mut self, rows: usize, width: usize) {
+        self.qs.clear();
+        self.us.clear();
+        self.q_off.clear();
+        self.q_off.push(0);
+        self.width = width;
+        self.lam.clear();
+        self.lam.resize(rows * width, 0.0);
+    }
+
+    /// Record one removal cell of the current row: local index `k`
+    /// (< width) with weight value `u`.
+    #[inline]
+    pub fn push(&mut self, k: usize, u: f64) {
+        self.qs.push(k);
+        self.us.push(u);
+    }
+
+    /// Record a support cell whose multiplier the caller already solved
+    /// (it writes `lam` directly): index only, no rhs. Bands recorded
+    /// this way must not be passed to [`solve_band_padded_into_panel`].
+    #[inline]
+    pub fn push_support(&mut self, k: usize) {
+        self.qs.push(k);
+    }
+
+    /// Close the current row's support list.
+    #[inline]
+    pub fn end_row(&mut self) {
+        self.q_off.push(self.qs.len());
+    }
+
+    /// Support indices of row `ri` (valid after `end_row`).
+    #[inline]
+    pub fn row_support(&self, ri: usize) -> &[usize] {
+        &self.qs[self.q_off[ri]..self.q_off[ri + 1]]
+    }
+
+    fn rows(&self) -> usize {
+        self.q_off.len().saturating_sub(1)
+    }
+}
+
+impl Default for PanelSolveScratch {
+    fn default() -> PanelSolveScratch {
+        PanelSolveScratch::new()
+    }
+}
+
+thread_local! {
+    static PANEL_SCRATCH: std::cell::RefCell<PanelSolveScratch> =
+        std::cell::RefCell::new(PanelSolveScratch::new());
+}
+
+/// Borrow this worker's pooled [`PanelSolveScratch`]. Must not be
+/// nested.
+pub fn with_panel_scratch<R>(f: impl FnOnce(&mut PanelSolveScratch) -> R) -> R {
+    PANEL_SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
+}
+
+/// §H.1 padded batched solve over one band: for every row recorded in
+/// `s` (via `begin`/`push`/`end_row`), solves `λ·R̂ = u` with
+/// `R̂ = hinv[q][:, q]` and scatters `λ` into the row's Λ-panel slots
+/// (`s.lam[ri * width + q[t]] = λ[t]`, zeros elsewhere).
+///
+/// The §H.1 embedding `R̂′ = diag(R̂, I)` is applied in **closed form**:
+/// the identity block factors to itself and the padded solution
+/// components are exactly zero by construction (eq. 77–79), so only
+/// the live `s_i × s_i` block of each row's padded system is swept —
+/// the band shares ONE workspace (the §H.1 uniform-shape win) without
+/// the dead flops of materializing the identity block. The
+/// materialized-padding formulation survives as [`solve_rows_padded`],
+/// the AOT-path oracle, pinned equal by `padded_matches_direct`.
+///
+/// **Bit-identity.** The live-block sweep is the exact arithmetic of
+/// the per-row solve ([`solve_row_in_scratch`]), so `λ` never depends
+/// on the band decomposition or thread count. Pinned by
+/// `tests/prune_panel.rs::padded_band_solver_bit_identical_to_per_row`.
+pub fn solve_band_padded_into_panel(hinv: &MatF64, s: &mut PanelSolveScratch) -> Result<()> {
+    let rows = s.rows();
+    let PanelSolveScratch { qs, q_off, us, lam, width, rhat, y, x } = s;
+    let width = *width;
+    debug_assert_eq!(lam.len(), rows * width);
+    // bands recorded via `push_support` (index-only, caller-solved)
+    // must not reach this solver — their rhs slots don't exist
+    debug_assert_eq!(qs.len(), us.len(), "band mixes push and push_support recording");
+    for ri in 0..rows {
+        let (o0, o1) = (q_off[ri], q_off[ri + 1]);
+        if o1 == o0 {
+            continue;
+        }
+        // live block of R̂′ = diag(R̂, I): the exact per-row solve body
+        let q = &qs[o0..o1];
+        solve_gathered_in(hinv, q, &us[o0..o1], rhat, y, x)?;
+        // scatter λ into the Λ panel (padded components are zero by
+        // construction and never materialized)
+        let lrow = &mut lam[ri * width..(ri + 1) * width];
+        for (t, &qt) in q.iter().enumerate() {
+            lrow[qt] = x[t];
+        }
+    }
+    Ok(())
+}
+
+/// Forward substitution through a gathered upper-triangular principal
+/// submatrix: solves `e · U[q][:, q] = rhs` for ascending `q` (so the
+/// gathered matrix is upper triangular), i.e.
+/// `e_t = (rhs_t − Σ_{a<t} e_a · U[q_a, q_t]) / U[q_t, q_t]`.
+///
+/// This is the batched form of SparseGPT's column-sequential error
+/// chain: with `row ← row₀ − e·U[q, :]` every masked column lands at
+/// exactly the value the one-column-at-a-time OBS walk drives it to
+/// (§Perf-L4), so the whole per-row update collapses into one Λ-panel
+/// GEMM row.
+pub fn forward_subst_upper_gather(u: &MatF64, q: &[usize], rhs: &[f64], out: &mut Vec<f64>) {
+    debug_assert_eq!(q.len(), rhs.len());
+    out.clear();
+    out.resize(q.len(), 0.0);
+    for t in 0..q.len() {
+        let qt = q[t];
+        let mut sum = rhs[t];
+        for a in 0..t {
+            sum -= out[a] * u.at(q[a], qt);
+        }
+        out[t] = sum / u.at(qt, qt);
+    }
+}
+
 /// Apply the Thanos row update `w ← w − λ·R` (eq. 10) where
 /// `R = hinv[q]` are the selected rows of the inverse Hessian. The
 /// entries at the removal indices land at (numerically) zero; they are
@@ -280,6 +459,89 @@ mod tests {
             let reference = chol_solve(&l, u);
             assert_eq!(g, &reference, "scratch vs allocating");
             assert_eq!(g, s, "parallel vs serial");
+        }
+    }
+
+    #[test]
+    fn panel_band_solver_matches_per_row_bitwise() {
+        // the §H.1 padded band solver must reproduce the exact-size
+        // per-row scratch solve bit-for-bit, whatever the band's r_max
+        // padding turns out to be (including rows with empty support)
+        let hinv = setup(16, 30);
+        let mut r = Rng::new(31);
+        let qs: Vec<Vec<usize>> = vec![
+            vec![0, 2, 9, 14],
+            vec![],
+            vec![5],
+            vec![1, 3, 4, 7, 11, 12, 15],
+            vec![8, 10],
+        ];
+        let us: Vec<Vec<f64>> = qs
+            .iter()
+            .map(|q| q.iter().map(|_| r.normal()).collect())
+            .collect();
+        let width = 16;
+        let mut ps = PanelSolveScratch::new();
+        ps.begin(qs.len(), width);
+        for (q, u) in qs.iter().zip(&us) {
+            for (&k, &v) in q.iter().zip(u) {
+                ps.push(k, v);
+            }
+            ps.end_row();
+        }
+        solve_band_padded_into_panel(&hinv, &mut ps).unwrap();
+        for (ri, (q, u)) in qs.iter().zip(&us).enumerate() {
+            let mut s = RowSolveScratch::new();
+            s.q.extend_from_slice(q);
+            s.u.extend_from_slice(u);
+            solve_row_in_scratch(&hinv, &mut s).unwrap();
+            let lrow = &ps.lam[ri * width..(ri + 1) * width];
+            let mut expect = vec![0.0f64; width];
+            for (t, &qt) in q.iter().enumerate() {
+                expect[qt] = s.lam[t];
+            }
+            for (k, (&got, &want)) in lrow.iter().zip(&expect).enumerate() {
+                assert_eq!(got.to_bits(), want.to_bits(), "row {ri} slot {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_subst_gather_matches_sequential_obs_chain() {
+        // e from the triangular gather must drive the same columns to
+        // zero as SparseGPT's sequential per-column updates (f64 chain)
+        let b = 12;
+        let mut r = Rng::new(32);
+        let x = Mat::from_fn(b, b + 6, |_, _| r.normal_f32(0.0, 1.0));
+        let mut h = xxt_f64(&x);
+        damp_hessian(&mut h, 0.01);
+        let u = crate::linalg::chol::inverse_factor_upper(&h).unwrap();
+        let q = vec![1usize, 4, 5, 9];
+        let row0: Vec<f64> = (0..b).map(|_| r.normal()).collect();
+        // sequential reference, all in f64
+        let mut row_seq = row0.clone();
+        for &j in &q {
+            let err = row_seq[j] / u.at(j, j);
+            for t in j..b {
+                row_seq[t] -= err * u.at(j, t);
+            }
+            row_seq[j] = 0.0;
+        }
+        // batched: forward substitution + one panel apply
+        let rhs: Vec<f64> = q.iter().map(|&j| row0[j]).collect();
+        let mut e = Vec::new();
+        forward_subst_upper_gather(&u, &q, &rhs, &mut e);
+        let mut row_bat = row0.clone();
+        for (t, &j) in q.iter().enumerate() {
+            for col in 0..b {
+                row_bat[col] -= e[t] * u.at(j, col);
+            }
+        }
+        for &j in &q {
+            row_bat[j] = 0.0;
+        }
+        for (col, (a, b_)) in row_seq.iter().zip(&row_bat).enumerate() {
+            assert!((a - b_).abs() < 1e-9, "col {col}: {a} vs {b_}");
         }
     }
 

@@ -183,8 +183,10 @@ macro_rules! kernel_mod {
             }
 
             /// Pack rows `[i0, i0 + mc)` of `a`, k-range `[k0, k0 + kc)`,
-            /// into `MR`-row panels (ragged rows zero-padded).
-            fn pack_a_block(
+            /// into `MR`-row panels (ragged rows zero-padded). `pub` so
+            /// same-layout kernel variants (the mixed-precision `kmix`)
+            /// can reuse the packing code instead of duplicating it.
+            pub fn pack_a_block(
                 buf: &mut Vec<$t>,
                 a: View<$t>,
                 i0: usize,
@@ -210,9 +212,10 @@ macro_rules! kernel_mod {
             }
 
             /// The register tile: `acc[r][j] = Σ_p ap[p][r] · bp[p][j]`
-            /// over `kc` packed steps, ascending `p`.
+            /// over `kc` packed steps, ascending `p`. `pub` for the
+            /// mixed-precision variant (same tile, different C store).
             #[inline(always)]
-            fn micro_acc(kc: usize, ap: &[$t], bp: &[$t]) -> [[$t; NR]; MR] {
+            pub fn micro_acc(kc: usize, ap: &[$t], bp: &[$t]) -> [[$t; NR]; MR] {
                 let mut acc = [[0.0 as $t; NR]; MR];
                 for (av, bv) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)).take(kc) {
                     for r in 0..MR {
@@ -412,6 +415,109 @@ macro_rules! kernel_mod {
 kernel_mod!(kf32, f32, 8, 32, 256, 128);
 kernel_mod!(kf64, f64, 6, 32, 256, 132);
 
+/// Mixed-precision packed kernel (DESIGN.md §Perf-L4): **f32 storage,
+/// f64 accumulation**. The A operand (the Λ / error panels of the
+/// pruning block updates) and the pre-packed B operand (`hinv_rows` /
+/// `U` / `Z` panels) are f64; the C operand is the f32 weight matrix.
+/// The micro-kernel is [`kf64`]'s `MR × NR` register tile verbatim —
+/// same packing, same ascending-`KC`-chunk / ascending-`k` accumulation
+/// chain — and each C element is rounded to f32 exactly once per `KC`
+/// chunk at the tile write, so results are bit-identical for any band
+/// decomposition / thread count (the same determinism contract as the
+/// homogeneous kernels).
+pub mod kmix {
+    use super::{kf64, PackedB, View};
+    use std::cell::RefCell;
+
+    thread_local! {
+        static PACK_A: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Accumulate one f64 tile into the f32 C block: one f32 rounding
+    /// per element per call.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    fn write_tile_f32(
+        c: &mut [f32],
+        ldc: usize,
+        c_col0: usize,
+        row: usize,
+        j0: usize,
+        acc: &[[f64; kf64::NR]; kf64::MR],
+        mr: usize,
+        nr: usize,
+        sub: bool,
+    ) {
+        for (r, arow) in acc.iter().enumerate().take(mr) {
+            let off = (row + r) * ldc + c_col0 + j0;
+            let crow = &mut c[off..off + nr];
+            if sub {
+                for (dst, &v) in crow.iter_mut().zip(arow.iter()) {
+                    *dst -= v as f32;
+                }
+            } else {
+                for (dst, &v) in crow.iter_mut().zip(arow.iter()) {
+                    *dst += v as f32;
+                }
+            }
+        }
+    }
+
+    /// Serial mixed-precision core against a pre-packed f64 B:
+    /// `C[i][j] (±)= Σ_k A[row0 + i][k] · B[k][j]` with f64 tile
+    /// accumulation, written at `c[i * ldc + c_col0 + j]` (f32). Same
+    /// loop structure and per-element chain order as
+    /// [`kf64::gemm_core`]; callers may band rows freely.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_core(
+        c: &mut [f32],
+        ldc: usize,
+        c_col0: usize,
+        a: View<f64>,
+        row0: usize,
+        mrows: usize,
+        bp: &PackedB<f64>,
+        ncols: usize,
+        sub: bool,
+    ) {
+        if mrows == 0 || ncols == 0 || bp.k == 0 {
+            return;
+        }
+        assert!(ncols <= bp.n, "packed B has too few columns");
+        let npan = bp.n.div_ceil(kf64::NR).max(1);
+        let use_pan = ncols.div_ceil(kf64::NR);
+        PACK_A.with(|cell| {
+            let abuf = &mut *cell.borrow_mut();
+            let mut base = 0;
+            let mut pc = 0;
+            while pc < bp.k {
+                let kc = kf64::KC.min(bp.k - pc);
+                let mut ic = 0;
+                while ic < mrows {
+                    let mc = kf64::MC.min(mrows - ic);
+                    kf64::pack_a_block(abuf, a, row0 + ic, mc, pc, kc);
+                    for jp in 0..use_pan {
+                        let j0 = jp * kf64::NR;
+                        let nr = kf64::NR.min(ncols - j0);
+                        let pan0 = base + jp * kc * kf64::NR;
+                        let bpanel = &bp.buf[pan0..pan0 + kc * kf64::NR];
+                        let mut ir = 0;
+                        while ir < mc {
+                            let mr = kf64::MR.min(mc - ir);
+                            let acc = kf64::micro_acc(kc, &abuf[ir * kc..], bpanel);
+                            write_tile_f32(c, ldc, c_col0, ic + ir, j0, &acc, mr, nr, sub);
+                            ir += kf64::MR;
+                        }
+                    }
+                    ic += kf64::MC;
+                }
+                base += kc * npan * kf64::NR;
+                pc += kf64::KC;
+            }
+        });
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Register-tiled row kernels (f32) — shared by the sparse execution
 // paths and the reconstruction-loss probe. Each accumulates a j-block
@@ -610,6 +716,65 @@ mod tests {
         }
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() <= 1e-5 * w.abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn mixed_kernel_matches_f64_reference() {
+        // kmix: f32 C, f64 A/B, f64 accumulation — must match the
+        // direct f64 product rounded to f32 within one extra rounding,
+        // for both add and sub, at ragged shapes.
+        let mut r = Rng::new(46);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (7, 13, 19), (23, 31, 65), (12, 0, 9)] {
+            let a: Vec<f64> = (0..m * k).map(|_| r.normal()).collect();
+            let b: Vec<f64> = (0..k * n).map(|_| r.normal()).collect();
+            let mut c: Vec<f32> = (0..m * n).map(|_| r.normal_f32(0.0, 1.0)).collect();
+            let c0 = c.clone();
+            let bp = kf64::pack_b(View::row_major(&b, n), k, n);
+            kmix::gemm_core(&mut c, n, 0, View::row_major(&a, k), 0, m, &bp, n, true);
+            for i in 0..m {
+                for j in 0..n {
+                    let dot: f64 = (0..k).map(|p| a[i * k + p] * b[p * n + j]).sum();
+                    let want = c0[i * n + j] - dot as f32;
+                    let got = c[i * n + j];
+                    assert!(
+                        (got - want).abs() <= 1e-5 * want.abs().max(1.0),
+                        "{m}x{k}x{n} ({i},{j}): {got} vs {want}"
+                    );
+                }
+            }
+            // sub then add must restore the original bits
+            kmix::gemm_core(&mut c, n, 0, View::row_major(&a, k), 0, m, &bp, n, false);
+            // (one f32 round-trip each way: tolerance, not bit equality)
+            for (got, want) in c.iter().zip(&c0) {
+                assert!((got - want).abs() <= 2e-5 * want.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_kernel_offset_columns() {
+        // c_col0 / ldc addressing: update only the right part of a
+        // wider row-major C.
+        let mut r = Rng::new(47);
+        let (m, k, ld, col0) = (9usize, 11usize, 40usize, 8usize);
+        let n = ld - col0;
+        let a: Vec<f64> = (0..m * k).map(|_| r.normal()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| r.normal()).collect();
+        let mut c: Vec<f32> = (0..m * ld).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let c0 = c.clone();
+        let bp = kf64::pack_b(View::row_major(&b, n), k, n);
+        kmix::gemm_core(&mut c, ld, col0, View::row_major(&a, k), 0, m, &bp, n, true);
+        for i in 0..m {
+            for j in 0..ld {
+                if j < col0 {
+                    assert_eq!(c[i * ld + j], c0[i * ld + j], "left of col0 untouched");
+                } else {
+                    let dot: f64 = (0..k).map(|p| a[i * k + p] * b[p * n + j - col0]).sum();
+                    let want = c0[i * ld + j] - dot as f32;
+                    assert!((c[i * ld + j] - want).abs() <= 1e-5 * want.abs().max(1.0));
+                }
+            }
         }
     }
 

@@ -159,11 +159,24 @@ pub struct PruneOpts {
     /// yields bit-equal math from ONE O(b³) factorization per layer
     /// (see EXPERIMENTS.md §Perf-L3; equality pinned by tests).
     pub paper_faithful_inverse: bool,
+    /// Apply each block's joint updates as Λ-panel algebra — the §H.1
+    /// padded batched row solves plus ONE mixed-precision packed GEMM
+    /// per engine band (DESIGN.md §Perf-L4) — instead of the per-row
+    /// scalar solve + axpy chains. On by default; the per-row path is
+    /// the cross-check reference (`benches/prune_e2e.rs`) and is also
+    /// forced process-wide by `THANOS_LINALG_NAIVE=1`, which overrides
+    /// this flag.
+    pub panel_apply: bool,
 }
 
 impl Default for PruneOpts {
     fn default() -> Self {
-        PruneOpts { block_size: 128, percdamp: PERCDAMP, paper_faithful_inverse: false }
+        PruneOpts {
+            block_size: 128,
+            percdamp: PERCDAMP,
+            paper_faithful_inverse: false,
+            panel_apply: true,
+        }
     }
 }
 

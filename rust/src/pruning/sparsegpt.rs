@@ -11,11 +11,22 @@
 //! per-column Hessian downdates needed, which is what makes the method
 //! O(b³) instead of O(b⁴).
 
+use crate::linalg::batched::{forward_subst_upper_gather, with_panel_scratch};
 use crate::linalg::chol::inverse_factor_upper;
+use crate::linalg::kernel::{self, kf64, kmix, View};
 use crate::linalg::{Mat, MatF64};
 use crate::pruning::metric::{smallest_r_mask, smallest_r_mask_into};
 use crate::pruning::{CalibStats, PruneOpts, Pruned};
 use anyhow::Result;
+
+thread_local! {
+    /// Per-worker forward-substitution buffers for the panel path
+    /// (`q` / `rhs` / `e`), reused across bands, blocks and layers —
+    /// the same no-hot-path-allocations convention as the solve
+    /// scratches in `linalg::batched`.
+    static FS_SCRATCH: std::cell::RefCell<(Vec<usize>, Vec<f64>, Vec<f64>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new(), Vec::new())) };
+}
 
 /// Upper Cholesky factor `U` (row-major) with `H⁻¹ = UᵀU`, via the
 /// reversal-trick factorization (no full inverse is ever formed —
@@ -54,7 +65,7 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
                 mask[i * b + j1 + k] = bm[i * width + k];
             }
         }
-        update_rows(&mut wk, &mask, &u, j1, j2);
+        update_rows(&mut wk, &mask, &u, j1, j2, opts);
         j1 = j2;
     }
     Ok(Pruned { w: wk, mask })
@@ -151,21 +162,75 @@ pub fn structured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Resu
         }
     }
     let mut wk = w.clone();
-    update_rows(&mut wk, &mask, &u, 0, b);
+    update_rows(&mut wk, &mask, &u, 0, b, opts);
     Ok(Pruned { w: wk, mask })
 }
 
 /// Apply per-column OBS updates for the masked entries in `[j1, j2)`,
 /// row bands in parallel on the shared engine (rows are independent
 /// once `U` is fixed).
-fn update_rows(wk: &mut Mat, mask: &[bool], u: &MatF64, j1: usize, j2: usize) {
+///
+/// Panel path (§Perf-L4): the column-sequential error chain of one row
+/// is a forward substitution through the gathered upper-triangular
+/// `U[q][:, q]` ([`forward_subst_upper_gather`]), so the whole row
+/// update collapses to `row[j1:] -= e·U[q, j1:]` — and since `U`'s row
+/// `j` vanishes left of `j`, scattering `e` into a rows×width panel
+/// makes the band apply ONE mixed-precision packed GEMM against
+/// `U[j1:j2, j1:]` packed once per block. The seed per-column loop
+/// stays as the reference (forced by `THANOS_LINALG_NAIVE=1`).
+fn update_rows(wk: &mut Mat, mask: &[bool], u: &MatF64, j1: usize, j2: usize, opts: &PruneOpts) {
     let (c, b) = (wk.rows, wk.cols);
+    let width = j2 - j1;
+    if c == 0 || width == 0 {
+        return;
+    }
+    let panel = opts.panel_apply && !kernel::naive_mode();
     let eng = crate::engine::global();
     let rows_per = eng.chunk(c);
+    // U[j1..j2, j1..b] packed once per block, shared across bands (an
+    // offset view of the layer-global factor — no submatrix copy).
+    let u_packed =
+        panel.then(|| kf64::pack_b(View::row_major(&u.data, b).offset(j1, j1), width, b - j1));
     eng.for_each_band(&mut wk.data, rows_per * b, |bi, whead| {
         let row0 = bi * rows_per;
         let rows_here = whead.len() / b;
         let mask_ref = &mask[row0 * b..(row0 + rows_here) * b];
+        if let Some(bp) = &u_packed {
+            with_panel_scratch(|ps| {
+                ps.begin(rows_here, width);
+                FS_SCRATCH.with(|cell| {
+                    let (q, rhs, e) = &mut *cell.borrow_mut();
+                    for ri in 0..rows_here {
+                        let row = &whead[ri * b..(ri + 1) * b];
+                        let rmask = &mask_ref[ri * b..(ri + 1) * b];
+                        q.clear();
+                        rhs.clear();
+                        for j in j1..j2 {
+                            if rmask[j] {
+                                q.push(j);
+                                rhs.push(row[j] as f64);
+                            }
+                        }
+                        forward_subst_upper_gather(u, q, rhs, e);
+                        for (&j, &ev) in q.iter().zip(&*e) {
+                            // the panel holds the already-solved errors
+                            ps.push_support(j - j1);
+                            ps.lam[ri * width + (j - j1)] = ev;
+                        }
+                        ps.end_row();
+                    }
+                });
+                // apply the band as one mixed-precision GEMM, clamp
+                let lam_view = View::row_major(&ps.lam, width);
+                kmix::gemm_core(whead, b, j1, lam_view, 0, rows_here, bp, b - j1, true);
+                for ri in 0..rows_here {
+                    for &k in ps.row_support(ri) {
+                        whead[ri * b + j1 + k] = 0.0;
+                    }
+                }
+            });
+            return;
+        }
         for ri in 0..rows_here {
             let row = &mut whead[ri * b..(ri + 1) * b];
             let rmask = &mask_ref[ri * b..(ri + 1) * b];

@@ -16,9 +16,13 @@
 //! accounted for exactly (the effect the paper credits for its
 //! structured-pruning wins — §5.2, App. A.1).
 
-use crate::linalg::batched::{apply_row_update, solve_row_in_scratch, with_row_solve_scratch};
+use crate::linalg::batched::{
+    apply_row_update, solve_band_padded_into_panel, solve_row_in_scratch, with_panel_scratch,
+    with_row_solve_scratch,
+};
 use crate::linalg::chol::chol_inverse;
 use crate::linalg::gemm::matmul_f64;
+use crate::linalg::kernel::{self, kf64, kmix, View};
 use crate::linalg::perm::Perm;
 use crate::linalg::{Mat, MatF64};
 use crate::pruning::metric::{
@@ -53,22 +57,43 @@ impl SuffixInverse {
     }
 
     /// For the block starting at `j1` with `width` columns out of `b`:
-    /// returns (`hinv_bb`: width×width leading block of the residual
-    /// inverse, `hinv_rows`: its first `width` rows, width×rest).
-    fn block_factors(&self, j1: usize, width: usize, b: usize) -> Result<(MatF64, MatF64)> {
+    /// the first `width` rows of the residual inverse Hessian
+    /// (width×rest). Its leading width×width block is the `R̂` gather
+    /// source (the old separate `hinv_bb` was element-for-element a
+    /// copy of those columns, so one matrix now serves both roles).
+    fn block_rows(&self, j1: usize, width: usize, b: usize, panel: bool) -> Result<MatF64> {
         let rest = b - j1;
         match self {
             SuffixInverse::Faithful { h_full } => {
                 let hres = h_full.block(j1, b, j1, b);
                 let hinv = chol_inverse(&hres)
                     .with_context(|| format!("inverting residual Hessian at block {j1}"))?;
-                Ok((hinv.block(0, width, 0, width), hinv.block(0, width, 0, rest)))
+                Ok(hinv.block(0, width, 0, rest))
             }
             SuffixInverse::Fast { u } => {
-                let usq = u.block(j1, j1 + width, j1, j1 + width);
-                let ublk = u.block(j1, j1 + width, j1, b);
-                let usq_t = usq.transpose();
-                Ok((matmul_f64(&usq_t, &usq), matmul_f64(&usq_t, &ublk)))
+                if kernel::naive_mode() || !panel {
+                    // pre-§Perf-L4 chain, preserved exactly for the
+                    // reference walks: materialized blocks through
+                    // `matmul_f64` (the seed zero-skip nest under
+                    // naive mode, the density-probed packed GEMM
+                    // otherwise — including its zero-skip routing of
+                    // the sparse leading `usqᵀ` rows)
+                    let usq = u.block(j1, j1 + width, j1, j1 + width);
+                    let ublk = u.block(j1, j1 + width, j1, b);
+                    let usq_t = usq.transpose();
+                    return Ok(matmul_f64(&usq_t, &ublk));
+                }
+                // §Perf-L4: the layer-global factor U is stored once;
+                // both GEMM operands are offset *views* of it — no
+                // per-block `usq`/`ublk` copies, no transpose
+                // materialization — and B is packed once per block,
+                // shared read-only across the engine bands.
+                let mut out = MatF64::zeros(width, rest);
+                let av = View::transposed(&u.data, b).offset(j1, j1);
+                let bv = View::row_major(&u.data, b).offset(j1, j1);
+                let bp = kf64::pack_b(bv, width, rest);
+                kf64::gemm_banded(&mut out.data, rest, av, 0, width, &bp, false);
+                Ok(out)
             }
         }
     }
@@ -99,7 +124,7 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
         let width = j2 - j1;
         let rest = b - j1;
         // Hessian of the unseen suffix (Alg. 1 line 17: H ← 2(XXᵀ)_{j:,j:})
-        let (hinv_bb, hinv_rows) = suffix.block_factors(j1, width, b)?;
+        let hinv_rows = suffix.block_rows(j1, width, b, opts.panel_apply)?;
 
         // ψ_X over the residual window (global residual mask, line 6),
         // local part = first `width` columns (line 7)
@@ -117,7 +142,12 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
         let capacity_after = c * (rest - width);
         if r_left > count + capacity_after {
             let need = r_left - capacity_after - count;
-            // add the `need` smallest not-yet-selected local cells
+            // add the `need` smallest not-yet-selected local cells.
+            // Only `need` of them are consumed, so an O(n) partition
+            // (select_nth) replaces the old full sort; the (value,
+            // index) comparator is a strict total order, so the
+            // selected *set* — all that matters for the mask — is
+            // identical to the sorted prefix, ties broken by index.
             let mut cand: Vec<(f64, usize)> = Vec::new();
             for i in 0..c {
                 for k in 0..width {
@@ -126,7 +156,12 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
                     }
                 }
             }
-            cand.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            let need = need.min(cand.len());
+            if need > 0 && need < cand.len() {
+                cand.select_nth_unstable_by(need - 1, |a, b| {
+                    a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+                });
+            }
             for &(_, idx) in cand.iter().take(need) {
                 local[idx] = true;
             }
@@ -140,7 +175,7 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
         }
 
         // joint per-row updates over the residual frame, rows in parallel
-        update_rows_blocked(&mut wk, &local, &hinv_bb, &hinv_rows, j1, width)?;
+        update_rows_blocked(&mut wk, &local, &hinv_rows, j1, width, opts)?;
         j1 = j2;
     }
     Ok(Pruned { w: wk, mask })
@@ -170,7 +205,7 @@ pub fn semi_structured(
 
     // rows sorted ascending by loss; the ⌈αc⌉ largest (outliers) land at
     // the end and are excluded from pruning (Alg. 8 lines 3–5, 12)
-    let hrow = row_losses(w, &h_full);
+    let hrow = row_losses_gated(w, &h_full, opts);
     let q = Perm::sorting(&hrow);
     let mut wq = q.apply_rows(w);
     let c_prune = c - ((alpha * c as f64).ceil() as usize).min(c);
@@ -185,7 +220,7 @@ pub fn semi_structured(
         let j2 = (j1 + bsize).min(b);
         let width = j2 - j1;
         debug_assert_eq!(width % m, 0);
-        let (hinv_bb, hinv_rows) = suffix.block_factors(j1, width, b)?;
+        let hinv_rows = suffix.block_rows(j1, width, b, opts.panel_apply)?;
         // n:m mask over the block, pruned rows only
         wanda_metric_window_rows_into(&wq, c_prune, stats, j1, j2, &mut block_metric);
         let local = nm_mask(&block_metric, c_prune, width, n, m);
@@ -194,7 +229,7 @@ pub fn semi_structured(
                 mask_q[i * b + j1 + k] = local[i * width + k];
             }
         }
-        update_rows_blocked_subset(&mut wq, &local, &hinv_bb, &hinv_rows, j1, width, c_prune)?;
+        update_rows_blocked_subset(&mut wq, &local, &hinv_rows, j1, width, c_prune, opts)?;
         j1 = j2;
     }
 
@@ -224,19 +259,57 @@ pub fn structured(
     let h = stats.hessian(opts.percdamp);
 
     // 1. row permutation: ascending loss, outliers (largest h_i) last
-    let hrow = row_losses(w, &h);
+    let hrow = row_losses_gated(w, &h, opts);
     let q = Perm::sorting(&hrow);
     let wq = q.apply_rows(w);
     let c_prune = c - ((alpha * c as f64).ceil() as usize).min(c);
 
     // 2. column permutation: ascending column loss v_j over pruned rows
-    //    (eq. 15: ‖W_{1:c−⌈αc⌉, j}‖²·‖X_{j:}‖²)
-    let v: Vec<f64> = (0..b)
-        .map(|j| {
-            let wnorm: f64 = (0..c_prune).map(|i| (wq.at(i, j) as f64).powi(2)).sum();
-            wnorm * stats.xnorm_sq[j]
-        })
-        .collect();
+    //    (eq. 15: ‖W_{1:c−⌈αc⌉, j}‖²·‖X_{j:}‖²). The old per-column
+    //    loop strode `wq` column-major (one cache line per element);
+    //    the panel walk replaces it with a row-major accumulation
+    //    pass, band-parallel on the engine. Bands are a FIXED row
+    //    count (not thread-scaled) and the partials reduce in
+    //    ascending band order, so the summation tree — hence every bit
+    //    of `v` — is independent of the thread count. The reference
+    //    walks (per-row / naive) keep the seed per-column chain so the
+    //    bench oracle stays independent of the new pass.
+    let eng = crate::engine::global();
+    let v: Vec<f64> = if opts.panel_apply && !kernel::naive_mode() {
+        const V_ROWS_PER_BAND: usize = 64;
+        let n_vbands = c_prune.div_ceil(V_ROWS_PER_BAND).max(1);
+        let mut v_partials: Vec<Vec<f64>> = vec![Vec::new(); n_vbands];
+        let wq_ref = &wq;
+        eng.for_each_band(&mut v_partials, 1, |bi, slot| {
+            let r0 = bi * V_ROWS_PER_BAND;
+            let r1 = ((bi + 1) * V_ROWS_PER_BAND).min(c_prune);
+            let mut acc = vec![0.0f64; b];
+            for i in r0..r1 {
+                for (a, &wv) in acc.iter_mut().zip(wq_ref.row(i)) {
+                    let wd = wv as f64;
+                    *a += wd * wd;
+                }
+            }
+            slot[0] = acc;
+        });
+        let mut v = vec![0.0f64; b];
+        for part in &v_partials {
+            for (dst, &pv) in v.iter_mut().zip(part) {
+                *dst += pv;
+            }
+        }
+        for (dst, &xn) in v.iter_mut().zip(&stats.xnorm_sq) {
+            *dst *= xn;
+        }
+        v
+    } else {
+        (0..b)
+            .map(|j| {
+                let wnorm: f64 = (0..c_prune).map(|i| (wq.at(i, j) as f64).powi(2)).sum();
+                wnorm * stats.xnorm_sq[j]
+            })
+            .collect()
+    };
     let pperm = Perm::sorting(&v);
     let mut wp = pperm.apply_cols(&wq);
     let hp = pperm.conjugate_sym(&h);
@@ -253,33 +326,60 @@ pub fn structured(
     let z = crate::linalg::chol::upper_tri_solve_many(&us, &u_top);
     // W[0..c_prune] += Δ = −W[:,0..s]·Z, row bands on the shared engine
     let z_ref = &z;
-    let eng = crate::engine::global();
     let rows_per = eng.chunk(c_prune);
-    eng.for_each_band(&mut wp.data[..c_prune * b], rows_per * b, |_bi, head| {
-        let rows_here = head.len() / b;
-        // Δ accumulator (f64) reused across the band's rows
-        let mut delta = vec![0.0f64; b];
-        for ri in 0..rows_here {
-            let row = &mut head[ri * b..(ri + 1) * b];
-            delta.iter_mut().for_each(|v| *v = 0.0);
-            for t in 0..s {
-                let wt = row[t] as f64;
-                if wt == 0.0 {
-                    continue;
+    if opts.panel_apply && !kernel::naive_mode() {
+        // §Perf-L4: the eq. 13 Δ is a rank-s update — one
+        // mixed-precision packed GEMM per band against Z packed once
+        // and shared. Each band snapshots its W[:, :s] operand into a
+        // f64 panel first (the GEMM writes those same columns), exactly
+        // mirroring the read-all-then-write order of the scalar loop.
+        let zp = kf64::pack_b(View::row_major(&z.data, b), s, b);
+        let zp_ref = &zp;
+        eng.for_each_band(&mut wp.data[..c_prune * b], rows_per * b, |_bi, head| {
+            let rows_here = head.len() / b;
+            let mut a_panel = vec![0.0f64; rows_here * s];
+            for ri in 0..rows_here {
+                for (dst, &wv) in a_panel[ri * s..(ri + 1) * s]
+                    .iter_mut()
+                    .zip(&head[ri * b..ri * b + s])
+                {
+                    *dst = wv as f64;
                 }
-                let zr = z_ref.row(t);
+            }
+            let a_view = View::row_major(&a_panel, s);
+            kmix::gemm_core(head, b, 0, a_view, 0, rows_here, zp_ref, b, true);
+            for ri in 0..rows_here {
+                head[ri * b..ri * b + s].iter_mut().for_each(|v| *v = 0.0);
+            }
+        });
+    } else {
+        // reference path: per-row scalar Δ accumulation (seed loop)
+        eng.for_each_band(&mut wp.data[..c_prune * b], rows_per * b, |_bi, head| {
+            let rows_here = head.len() / b;
+            // Δ accumulator (f64) reused across the band's rows
+            let mut delta = vec![0.0f64; b];
+            for ri in 0..rows_here {
+                let row = &mut head[ri * b..(ri + 1) * b];
+                delta.iter_mut().for_each(|v| *v = 0.0);
+                for t in 0..s {
+                    let wt = row[t] as f64;
+                    if wt == 0.0 {
+                        continue;
+                    }
+                    let zr = z_ref.row(t);
+                    for jj in 0..b {
+                        delta[jj] += wt * zr[jj];
+                    }
+                }
                 for jj in 0..b {
-                    delta[jj] += wt * zr[jj];
+                    row[jj] -= delta[jj] as f32;
+                }
+                for item in row.iter_mut().take(s) {
+                    *item = 0.0;
                 }
             }
-            for jj in 0..b {
-                row[jj] -= delta[jj] as f32;
-            }
-            for item in row.iter_mut().take(s) {
-                *item = 0.0;
-            }
-        }
-    });
+        });
+    }
 
     // 4. mask in permuted coordinates, then undo both permutations
     let mut mask_p = vec![false; c * b];
@@ -301,10 +401,61 @@ pub fn structured(
 
 /// Row losses `h_i = W_i·H·W_iᵀ` (∝ ‖W_{i:}X‖², eq. 14), computed from
 /// the accumulated Hessian so no calibration matrix X needs to be kept.
+///
+/// Packed path (§Perf-L4): the old O(c·b²) naive double loop is
+/// `Y = W·H` through the packed f64 GEMM (W widened once) followed by
+/// banded per-row dots `h_i = Σ_t W_it·Y_it` — same O(c·b²) flops, run
+/// at GEMM rate. Per-row chains are row-local, so results stay
+/// bit-identical for any thread count; `THANOS_LINALG_NAIVE=1` restores
+/// the seed nest.
 pub fn row_losses(w: &Mat, h: &MatF64) -> Vec<f64> {
     let (c, b) = (w.rows, w.cols);
     assert_eq!(h.rows, b);
+    if kernel::naive_mode() {
+        return row_losses_naive(w, h);
+    }
+    let wd = MatF64::from_fn(c, b, |i, j| w.at(i, j) as f64);
+    let y = matmul_f64(&wd, h);
     let mut out = vec![0.0f64; c];
+    if c == 0 {
+        return out;
+    }
+    let eng = crate::engine::global();
+    let rows_per = eng.chunk(c);
+    eng.for_each_band(&mut out, rows_per, |bi, head| {
+        let row0 = bi * rows_per;
+        for (k, loss) in head.iter_mut().enumerate() {
+            let i = row0 + k;
+            let mut acc = 0.0f64;
+            for (&wv, &yv) in wd.row(i).iter().zip(y.row(i)) {
+                acc = crate::linalg::kernel::kf64::fmadd(wv, yv, acc);
+            }
+            *loss = acc;
+        }
+    });
+    out
+}
+
+/// [`row_losses`] under the walk's path selection: the per-row
+/// reference walk (`panel_apply = false`) keeps the seed nest so the
+/// bench baseline is exactly the pre-§Perf-L4 walk.
+fn row_losses_gated(w: &Mat, h: &MatF64, opts: &PruneOpts) -> Vec<f64> {
+    if opts.panel_apply {
+        row_losses(w, h)
+    } else {
+        row_losses_naive(w, h)
+    }
+}
+
+/// Seed O(c·b²) nest (zero-skip over `W_ij`): the naive reference for
+/// [`row_losses`].
+pub fn row_losses_naive(w: &Mat, h: &MatF64) -> Vec<f64> {
+    let (c, b) = (w.rows, w.cols);
+    assert_eq!(h.rows, b);
+    let mut out = vec![0.0f64; c];
+    if c == 0 {
+        return out;
+    }
     let eng = crate::engine::global();
     let rows_per = eng.chunk(c);
     eng.for_each_band(&mut out, rows_per, |bi, head| {
@@ -330,47 +481,95 @@ pub fn row_losses(w: &Mat, h: &MatF64) -> Vec<f64> {
 }
 
 /// Per-row joint updates for a block: rows `[0, c)` of `wk`, local mask
-/// `c×width`. `hinv_bb` is the leading width×width block of the
-/// residual inverse Hessian (the `R̂` source), `hinv_rows` its first
-/// `width` rows over the whole residual frame (the `R` source).
+/// `c×width`. `hinv_rows` holds the first `width` rows of the residual
+/// inverse Hessian over the whole residual frame (width×rest); its
+/// leading width×width columns double as the `R̂` gather source.
 fn update_rows_blocked(
     wk: &mut Mat,
     local: &[bool],
-    hinv_bb: &MatF64,
     hinv_rows: &MatF64,
     j1: usize,
     width: usize,
+    opts: &PruneOpts,
 ) -> Result<()> {
     let c = wk.rows;
-    update_rows_blocked_subset(wk, local, hinv_bb, hinv_rows, j1, width, c)
+    update_rows_blocked_subset(wk, local, hinv_rows, j1, width, c, opts)
 }
 
 /// Same, but only the first `c_limit` rows are updated (outlier rows at
 /// the end of the permuted matrix are skipped).
+///
+/// Two implementations (§Perf-L4):
+///
+/// * **Λ-panel** (default) — per engine band, every row's removal
+///   system is gathered and solved through the §H.1 padded batch
+///   ([`solve_band_padded_into_panel`], bit-identical to the per-row
+///   solves), the multipliers land in a rows×width Λ panel (zero
+///   off-support), and the whole band applies as ONE mixed-precision
+///   packed GEMM `W[:, j1:] -= Λ·hinv_rows` against `hinv_rows` packed
+///   once per block and shared read-only across bands. Removed cells
+///   are then clamped to exact zero, as before.
+/// * **per-row** (reference) — the seed path: exact-size scratch solve
+///   plus one f32 axpy chain per selected weight per row. Forced by
+///   `THANOS_LINALG_NAIVE=1` (overriding `opts.panel_apply`) so the
+///   bench/CI divergence gates compare old vs new in one process.
 fn update_rows_blocked_subset(
     wk: &mut Mat,
     local: &[bool],
-    hinv_bb: &MatF64,
     hinv_rows: &MatF64,
     j1: usize,
     width: usize,
     c_limit: usize,
+    opts: &PruneOpts,
 ) -> Result<()> {
     let b = wk.cols;
     let rest = b - j1;
-    assert_eq!(hinv_bb.rows, width);
     assert_eq!(hinv_rows.rows, width);
     assert_eq!(hinv_rows.cols, rest);
     if c_limit == 0 {
         return Ok(());
     }
+    let panel = opts.panel_apply && !kernel::naive_mode();
     let errors: std::sync::Mutex<Vec<anyhow::Error>> = std::sync::Mutex::new(Vec::new());
     let eng = crate::engine::global();
     let rows_per = eng.chunk(c_limit);
+    // Λ-panel path only: hinv_rows packed once per block, shared by all
+    // bands (à la the GEMM core's PackedB contract).
+    let hinv_packed =
+        panel.then(|| kf64::pack_b(View::row_major(&hinv_rows.data, rest), width, rest));
     eng.for_each_band(&mut wk.data[..c_limit * b], rows_per * b, |bi, whead| {
         let row0 = bi * rows_per;
         let rows_here = whead.len() / b;
         let local_ref = &local[row0 * width..(row0 + rows_here) * width];
+        if let Some(bp) = &hinv_packed {
+            // gather supports + rhs, batch-solve into the Λ panel,
+            // apply the band as one mixed-precision GEMM, clamp.
+            with_panel_scratch(|ps| {
+                ps.begin(rows_here, width);
+                for ri in 0..rows_here {
+                    let lmask = &local_ref[ri * width..(ri + 1) * width];
+                    let row = &whead[ri * b + j1..(ri + 1) * b];
+                    for (k, &selected) in lmask.iter().enumerate() {
+                        if selected {
+                            ps.push(k, row[k] as f64);
+                        }
+                    }
+                    ps.end_row();
+                }
+                if let Err(e) = solve_band_padded_into_panel(hinv_rows, ps) {
+                    errors.lock().unwrap().push(e);
+                    return;
+                }
+                let lam_view = View::row_major(&ps.lam, width);
+                kmix::gemm_core(whead, b, j1, lam_view, 0, rows_here, bp, rest, true);
+                for ri in 0..rows_here {
+                    for &k in ps.row_support(ri) {
+                        whead[ri * b + j1 + k] = 0.0;
+                    }
+                }
+            });
+            return;
+        }
         // q / u / R̂ / λ buffers live in this worker's pooled scratch —
         // no per-row (or even per-block) allocations on the hot path
         with_row_solve_scratch(|s| {
@@ -391,7 +590,7 @@ fn update_rows_blocked_subset(
                 for &t in &s.q {
                     s.u.push(row[t] as f64);
                 }
-                match solve_row_in_scratch(hinv_bb, s) {
+                match solve_row_in_scratch(hinv_rows, s) {
                     Ok(()) => apply_row_update(row, hinv_rows, &s.q, &s.lam),
                     Err(e) => errors.lock().unwrap().push(e),
                 }
@@ -593,8 +792,8 @@ mod tests {
         // the fast suffix-factor path must reproduce the paper-faithful
         // per-block inversion to numerical precision, on every variant
         let (w, stats, _) = setup(14, 24, 72, 39);
-        let faithful = PruneOpts { block_size: 8, percdamp: 0.01, paper_faithful_inverse: true };
-        let fast = PruneOpts { block_size: 8, percdamp: 0.01, paper_faithful_inverse: false };
+        let faithful = PruneOpts { paper_faithful_inverse: true, ..opts(8) };
+        let fast = opts(8);
         let a = unstructured(&w, &stats, 0.5, &faithful).unwrap();
         let b = unstructured(&w, &stats, 0.5, &fast).unwrap();
         assert_eq!(a.mask, b.mask, "masks must be identical");

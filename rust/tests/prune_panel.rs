@@ -1,0 +1,239 @@
+//! §Perf-L4 Λ-panel property tests: the panel block-update path
+//! (padded batched solves + mixed-precision packed GEMM apply) pinned
+//! against the per-row reference path across variants × block sizes ×
+//! thread counts, plus the bitwise guarantees the design rests on
+//! (padding-independent solves, naive-mode reference restoration).
+//!
+//! Some tests toggle the PROCESS-GLOBAL `set_naive_mode` switch, and
+//! every comparison here assumes the mode is stable for the whole test
+//! body — so all tests in this binary serialize on one mutex. (Other
+//! test binaries are separate processes and never toggle the switch.)
+
+use std::sync::Mutex;
+use thanos::linalg::batched::{
+    solve_band_padded_into_panel, solve_row_in_scratch, PanelSolveScratch, RowSolveScratch,
+};
+use thanos::linalg::chol::{chol_inverse, damp_hessian};
+use thanos::linalg::gemm::{matmul, xxt_f64};
+use thanos::linalg::kernel;
+use thanos::linalg::Mat;
+use thanos::pruning::{self, CalibStats, Method, Pattern, PruneOpts};
+use thanos::rng::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores the packed mode even if the test body panics. (Tests run
+/// with the env switch unset, so "packed" is the correct restore.)
+struct NaiveGuard;
+impl Drop for NaiveGuard {
+    fn drop(&mut self) {
+        kernel::set_naive_mode(false);
+    }
+}
+
+fn setup(c: usize, b: usize, a: usize, seed: u64) -> (Mat, CalibStats, Mat) {
+    let mut r = Rng::new(seed);
+    let w = Mat::from_fn(c, b, |_, _| {
+        let v = r.normal_f32(0.0, 1.0);
+        if v == 0.0 {
+            1e-3
+        } else {
+            v
+        }
+    });
+    let k = (b / 4).max(2);
+    let factors = Mat::from_fn(k, a, |_, _| r.normal_f32(0.0, 1.0));
+    let loading = Mat::from_fn(b, k, |_, _| r.normal_f32(0.0, 1.0));
+    let mut x = matmul(&loading, &factors);
+    for v in x.data.iter_mut() {
+        *v += r.normal_f32(0.0, 0.3);
+    }
+    let stats = CalibStats::from_x(&x);
+    (w, stats, x)
+}
+
+fn popts(bsize: usize, panel: bool) -> PruneOpts {
+    PruneOpts { block_size: bsize, panel_apply: panel, ..Default::default() }
+}
+
+fn patterns() -> [Pattern; 3] {
+    [
+        Pattern::Unstructured { p: 0.5 },
+        Pattern::SemiStructured { n: 2, m: 4, alpha: 0.1 },
+        Pattern::Structured { p: 0.3, alpha: 0.1 },
+    ]
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+fn scale(m: &Mat) -> f32 {
+    m.data.iter().fold(1.0f32, |s, &v| s.max(v.abs()))
+}
+
+#[test]
+fn panel_matches_per_row_all_variants_and_block_sizes() {
+    let _g = lock();
+    let (w, stats, _x) = setup(20, 32, 96, 0x51);
+    for &bsize in &[4usize, 8, 16, 32] {
+        for pattern in patterns() {
+            for method in [Method::Thanos, Method::SparseGpt] {
+                let panel =
+                    pruning::prune(method, &w, &stats, pattern, &popts(bsize, true)).unwrap();
+                let perrow =
+                    pruning::prune(method, &w, &stats, pattern, &popts(bsize, false)).unwrap();
+                assert_eq!(
+                    panel.mask,
+                    perrow.mask,
+                    "{} {pattern:?} B={bsize}: masks must be bitwise identical",
+                    method.name()
+                );
+                let rel = panel.w.max_abs_diff(&perrow.w) / scale(&perrow.w);
+                assert!(
+                    rel <= 1e-5,
+                    "{} {pattern:?} B={bsize}: panel vs per-row rel diff {rel}",
+                    method.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn panel_path_serial_parallel_bit_identical() {
+    // the Λ-panel path must keep the crate's serial==parallel contract:
+    // band decomposition (and the band-local r_max padding it implies)
+    // never changes a single bit
+    let _g = lock();
+    let (w, stats, _x) = setup(18, 24, 72, 0x52);
+    for pattern in patterns() {
+        for method in [Method::Thanos, Method::SparseGpt] {
+            let par = pruning::prune(method, &w, &stats, pattern, &popts(8, true)).unwrap();
+            let ser = thanos::engine::with_serial(|| {
+                pruning::prune(method, &w, &stats, pattern, &popts(8, true)).unwrap()
+            });
+            assert_eq!(bits(&par.w), bits(&ser.w), "{} {pattern:?} weights", method.name());
+            assert_eq!(par.mask, ser.mask, "{} {pattern:?} masks", method.name());
+        }
+    }
+}
+
+#[test]
+fn naive_mode_overrides_panel_flag_bitwise() {
+    // THANOS_LINALG_NAIVE=1 (here: set_naive_mode) must restore the
+    // reference path exactly: with it on, the panel flag is inert and
+    // both settings produce bit-identical outputs — i.e. the seed
+    // arithmetic is fully preserved behind the switch.
+    let _g = lock();
+    let _restore = NaiveGuard;
+    let (w, stats, _x) = setup(14, 24, 64, 0x53);
+    kernel::set_naive_mode(true);
+    for pattern in patterns() {
+        for method in [Method::Thanos, Method::SparseGpt] {
+            let a = pruning::prune(method, &w, &stats, pattern, &popts(8, true)).unwrap();
+            let b = pruning::prune(method, &w, &stats, pattern, &popts(8, false)).unwrap();
+            assert_eq!(
+                bits(&a.w),
+                bits(&b.w),
+                "{} {pattern:?}: naive mode must make panel_apply inert",
+                method.name()
+            );
+            assert_eq!(a.mask, b.mask, "{} {pattern:?} masks", method.name());
+        }
+    }
+}
+
+#[test]
+fn padded_band_solver_bit_identical_to_per_row() {
+    // the §H.1 bitwise claim at integration scale: band-level padding
+    // (r_max up to 120, crossing the blocked-Cholesky panel width
+    // NB = 96) must not change a single bit of any row's multipliers
+    let _g = lock();
+    let width = 128usize;
+    let mut r = Rng::new(0x54);
+    let x = Mat::from_fn(width, width + 9, |_, _| r.normal_f32(0.0, 1.0));
+    let mut h = xxt_f64(&x);
+    for v in h.data.iter_mut() {
+        *v *= 2.0;
+    }
+    damp_hessian(&mut h, 0.01);
+    let hinv = chol_inverse(&h).unwrap();
+
+    // supports of very different sizes, incl. one pushing r_max > NB
+    let mut qs: Vec<Vec<usize>> = vec![
+        (0..120).collect(), // r_max = 120 > NB
+        vec![3],
+        vec![],
+        (0..width).step_by(3).collect(),
+        vec![7, 19, 64, 100, 127],
+    ];
+    qs.push((0..40).map(|k| k * 3).collect());
+    let mut us: Vec<Vec<f64>> = Vec::new();
+    for q in &qs {
+        us.push(q.iter().map(|_| r.normal()).collect());
+    }
+
+    let mut ps = PanelSolveScratch::new();
+    ps.begin(qs.len(), width);
+    for (q, u) in qs.iter().zip(&us) {
+        for (&k, &v) in q.iter().zip(u) {
+            ps.push(k, v);
+        }
+        ps.end_row();
+    }
+    solve_band_padded_into_panel(&hinv, &mut ps).unwrap();
+
+    for (ri, (q, u)) in qs.iter().zip(&us).enumerate() {
+        let mut s = RowSolveScratch::new();
+        s.q.extend_from_slice(q);
+        s.u.extend_from_slice(u);
+        solve_row_in_scratch(&hinv, &mut s).unwrap();
+        let lrow = &ps.lam[ri * width..(ri + 1) * width];
+        let mut expect = vec![0.0f64; width];
+        for (t, &qt) in q.iter().enumerate() {
+            expect[qt] = s.lam[t];
+        }
+        for (k, (&got, &want)) in lrow.iter().zip(&expect).enumerate() {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "row {ri} slot {k}: padded {got} vs exact {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn panel_block_sizes_cross_agree_on_quality() {
+    // sanity: the panel path's outputs remain real prunes — exact
+    // sparsity for unstructured, and the update must beat mask-only
+    // zeroing (the OBS optimality invariant) at every block size
+    let _g = lock();
+    let (w, stats, x) = setup(16, 32, 80, 0x55);
+    for &bsize in &[8usize, 16] {
+        let p = pruning::prune(
+            Method::Thanos,
+            &w,
+            &stats,
+            Pattern::Unstructured { p: 0.5 },
+            &popts(bsize, true),
+        )
+        .unwrap();
+        let zeros = p.w.data.iter().filter(|&&v| v == 0.0).count();
+        assert_eq!(zeros, 16 * 32 / 2, "B={bsize}");
+        let mut mask_only = w.clone();
+        for (k, &m) in p.mask.iter().enumerate() {
+            if m {
+                mask_only.data[k] = 0.0;
+            }
+        }
+        let lu = thanos::linalg::gemm::recon_loss(&p.w, &w, &x);
+        let lm = thanos::linalg::gemm::recon_loss(&mask_only, &w, &x);
+        assert!(lu <= lm * 1.0001 + 1e-9, "B={bsize}: update {lu} vs mask-only {lm}");
+    }
+}
