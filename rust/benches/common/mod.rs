@@ -140,6 +140,37 @@ impl BenchJson {
         Json::Num(v)
     }
 
+    /// v1 → v2 migration for thread-axis schemas: rows recorded without
+    /// a `/t<threads>` key suffix (the v1 addressing) are re-keyed from
+    /// their stamped per-entry `threads` field, so a v1 file loads into
+    /// a v2 writer without colliding with (or shadowing) the new
+    /// per-thread-count rows. Rows already carrying a `/t` suffix are
+    /// left untouched, so v2 files round-trip unchanged.
+    pub fn rekey_threads(&mut self, prefix: &str) {
+        let keys: Vec<String> = self
+            .entries
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        for k in keys {
+            let last = k.rsplit('/').next().unwrap_or("");
+            let suffixed = last.len() > 1
+                && last.starts_with('t')
+                && last[1..].chars().all(|c| c.is_ascii_digit());
+            if suffixed {
+                continue;
+            }
+            if let Some(entry) = self.entries.remove(&k) {
+                let t = entry
+                    .get_opt("threads")
+                    .and_then(|v| v.as_f64().ok())
+                    .unwrap_or(1.0) as usize;
+                self.entries.insert(format!("{k}/t{t}"), entry);
+            }
+        }
+    }
+
     pub fn text(v: &str) -> Json {
         Json::Str(v.to_string())
     }

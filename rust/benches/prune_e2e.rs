@@ -27,7 +27,14 @@
 //! instantly.
 //!
 //! Results merge into `BENCH_pruning.json` (schema
-//! thanos-prune-bench/v1, `THANOS_PRUNE_BENCH_OUT` override).
+//! thanos-prune-bench/v2: every key carries a `/t<threads>` suffix so
+//! rows from different `THANOS_THREADS` runs coexist — CI runs this at
+//! 1 and 4 threads; v1 rows are migrated on load via
+//! `BenchJson::rekey_threads`; `THANOS_PRUNE_BENCH_OUT` override).
+//! A `prune_e2e/select/...` keyspace records the §Perf-L5 selection
+//! stage head-to-head (select_nth oracle vs threshold engine, bitwise
+//! mask gate), so the "selection is no longer serial" claim is
+//! measured at every thread count.
 //!
 //! ```bash
 //! cargo bench --bench prune_e2e                      # full shapes
@@ -38,6 +45,8 @@ mod common;
 use common::*;
 use thanos::linalg::kernel;
 use thanos::linalg::Mat;
+use thanos::pruning::metric::{smallest_r_mask_into_with_idx, wanda_metric_window_into};
+use thanos::pruning::select::{smallest_r_mask_threshold_into, SelectScratch};
 use thanos::pruning::{self, CalibStats, Method, Pattern, PruneOpts, Pruned};
 use thanos::sparse::bench::best_of;
 
@@ -99,13 +108,13 @@ fn main() {
     ];
     let mut bj = BenchJson::open_named(
         "BENCH_pruning.json",
-        "thanos-prune-bench/v1",
+        "thanos-prune-bench/v2",
         "THANOS_PRUNE_BENCH_OUT",
     );
-    println!(
-        "== prune e2e: naive / per-row(packed linalg) / Λ-panel ({} threads) ==\n",
-        thanos::linalg::gemm::num_threads()
-    );
+    // keep v1 rows loadable: migrate thread-less keys onto the v2 axis
+    bj.rekey_threads("prune_e2e/");
+    let threads = thanos::linalg::gemm::num_threads();
+    println!("== prune e2e: naive / per-row(packed linalg) / Λ-panel ({threads} threads) ==\n");
     let largest = *shapes.last().unwrap();
     for &(c, b, a) in shapes {
         let (w, stats, x) = bench_layer(c, b, a, 0xE2E + (c + b) as u64);
@@ -171,7 +180,7 @@ fn main() {
                  panel {secs_panel:>8.3}s  {sp_perrow:>5.2}x vs per-row  rel {rel:.1e}"
             );
             bj.record(
-                &format!("prune_e2e/{key}/c{c}xb{b}"),
+                &format!("prune_e2e/{key}/c{c}xb{b}/t{threads}"),
                 vec![
                     ("secs_naive", BenchJson::num(secs_naive)),
                     ("secs_perrow", BenchJson::num(secs_perrow)),
@@ -191,9 +200,13 @@ fn main() {
             // regression.
             if !quick && (c, b, a) == largest {
                 match pat {
+                    // §Perf-L5: threshold select + interleaved/per-row
+                    // solve dispatch made the unstructured walk
+                    // compute-bound (C mirror measured ~1.6× on this
+                    // ratio; gate with machine margin)
                     Pattern::Unstructured { .. } => assert!(
-                        sp_perrow >= 0.9,
-                        "{key} c{c}xb{b}: panel regressed: {sp_perrow:.2}x"
+                        sp_perrow >= 1.2,
+                        "{key} c{c}xb{b}: unstructured panel speedup {sp_perrow:.2}x < 1.2x"
                     ),
                     _ => assert!(
                         sp_perrow >= 2.0,
@@ -201,6 +214,54 @@ fn main() {
                     ),
                 }
             }
+        }
+
+        // §Perf-L5 selection-stage head-to-head on this shape: the
+        // select_nth oracle vs the threshold engine over the full
+        // residual window, masks gated bitwise. Emitted per thread
+        // count, so the multi-threaded rows measure the stage that
+        // used to be the walk's serial Amdahl cap.
+        {
+            let sel_reps = if quick { 2 } else { 3 };
+            let mut metric = Vec::new();
+            wanda_metric_window_into(&w, &stats, 0, b, &mut metric);
+            // quick shapes sit below the engine's band floor (where the
+            // public entry rightly dispatches to the oracle) — tile the
+            // window up so the measured/gated path is the multi-band
+            // engine at every shape
+            while metric.len() < (1 << 18) {
+                metric.extend_from_within(..);
+            }
+            let r = metric.len() / 2;
+            let mut scratch = SelectScratch::new();
+            let mut m_oracle = Vec::new();
+            let mut m_thresh = Vec::new();
+            let secs_oracle = best_of(sel_reps, || {
+                smallest_r_mask_into_with_idx(&metric, r, &mut m_oracle, &mut scratch.idx);
+            });
+            let secs_thresh = best_of(sel_reps, || {
+                smallest_r_mask_threshold_into(&metric, r, &mut m_thresh, &mut scratch);
+            });
+            assert_eq!(
+                m_oracle, m_thresh,
+                "c{c}xb{b}: threshold select diverged from the select_nth oracle"
+            );
+            let sp = secs_oracle / secs_thresh.max(1e-12);
+            println!(
+                "{:>12} c={c} b={b}: oracle {secs_oracle:>8.4}s  threshold {secs_thresh:>8.4}s  \
+                 {sp:>5.2}x",
+                "select"
+            );
+            bj.record(
+                &format!("prune_e2e/select/c{c}xb{b}/t{threads}"),
+                vec![
+                    ("secs_oracle", BenchJson::num(secs_oracle)),
+                    ("secs_threshold", BenchJson::num(secs_thresh)),
+                    ("speedup", BenchJson::num(sp)),
+                    ("r_frac", BenchJson::num(0.5)),
+                    ("cells", BenchJson::num(metric.len() as f64)),
+                ],
+            );
         }
     }
     bj.save();

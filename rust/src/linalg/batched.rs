@@ -222,6 +222,13 @@ pub struct PanelSolveScratch {
     rhat: MatF64,
     y: Vec<f64>,
     x: Vec<f64>,
+    /// interleaved-batch state (§Perf-L5): `(size, row)` dispatch order
+    /// plus the structure-of-arrays factor/rhs/solve buffers
+    order: Vec<(u32, u32)>,
+    ia: Vec<f64>,
+    iu: Vec<f64>,
+    iy: Vec<f64>,
+    ix: Vec<f64>,
 }
 
 impl PanelSolveScratch {
@@ -235,6 +242,11 @@ impl PanelSolveScratch {
             rhat: MatF64::zeros(0, 0),
             y: Vec::new(),
             x: Vec::new(),
+            order: Vec::new(),
+            ia: Vec::new(),
+            iu: Vec::new(),
+            iy: Vec::new(),
+            ix: Vec::new(),
         }
     }
 
@@ -299,46 +311,239 @@ pub fn with_panel_scratch<R>(f: impl FnOnce(&mut PanelSolveScratch) -> R) -> R {
     PANEL_SCRATCH.with(|cell| f(&mut cell.borrow_mut()))
 }
 
+/// Interleaved-batch lane count: one AVX-512 f64 vector; the batched
+/// sweep processes `LANES` systems element-parallel.
+pub const LANES: usize = 8;
+/// Interleaved headroom: the batched buffers are sized for systems up
+/// to this order (systems above [`INTERLEAVE_MAX`] never enter).
+const INTERLEAVE_CAP: usize = 64;
+/// Measured interleave/per-row crossover (C mirror, AVX-512, DESIGN.md
+/// §Perf-L5): the lanes-interleaved sweep wins while the per-row
+/// sweep's contiguous `t`-loops are too short to fill vector width
+/// (2.0× at s=4, 1.8× at s=8, ~1× at s=24); beyond that both
+/// formulations are 8-wide and port-bound and per-row's L1-resident
+/// gather wins, so larger systems keep the per-row sweep.
+const INTERLEAVE_MAX: usize = 24;
+
+/// Factor + solve one identity-padded interleaved batch: `a` holds
+/// `LANES` gathered SPD systems in structure-of-arrays layout
+/// (`a[(i·smax + j)·LANES + lane]`), `u`/`y`/`x` the interleaved
+/// rhs/temporary/solution. Every lane runs the EXACT seed arithmetic —
+/// the unblocked right-looking sweep of `chol_unblocked` (contiguous
+/// `colj` copy, per-lane `ci == 0` skip preserved) and the
+/// `chol_solve_into` substitution order — so each lane's solution is
+/// bit-identical to [`solve_row_in_scratch`] on that system. Padding
+/// lanes carry `diag(R̂, I)` per §H.1 eq. 77–79: the identity block
+/// factors to itself and contributes exact zeros, which the
+/// substitutions absorb without changing any live bit.
+fn batch_factor_solve(
+    a: &mut [f64],
+    u: &[f64],
+    y: &mut [f64],
+    x: &mut [f64],
+    smax: usize,
+) -> Result<()> {
+    assert!(smax <= INTERLEAVE_CAP);
+    let mut colj = [[0.0f64; LANES]; INTERLEAVE_CAP];
+    for j in 0..smax {
+        let mut piv = [0.0f64; LANES];
+        {
+            let d = &mut a[(j * smax + j) * LANES..(j * smax + j) * LANES + LANES];
+            for (l, p) in piv.iter_mut().enumerate() {
+                let dv = d[l];
+                if dv <= 0.0 || !dv.is_finite() {
+                    anyhow::bail!(
+                        "batched system not positive definite at pivot {j} (value {dv:.3e})"
+                    );
+                }
+                *p = dv.sqrt();
+                d[l] = *p;
+            }
+        }
+        for i in j + 1..smax {
+            let off = (i * smax + j) * LANES;
+            let cc = &mut colj[i];
+            for l in 0..LANES {
+                let v = a[off + l] / piv[l];
+                a[off + l] = v;
+                cc[l] = v;
+            }
+        }
+        for i in j + 1..smax {
+            let ci = colj[i];
+            if ci.iter().all(|&v| v != 0.0) {
+                // all lanes live: the vector fast path (identical ops)
+                for t in j + 1..=i {
+                    let cj = colj[t];
+                    let dst = &mut a[(i * smax + t) * LANES..(i * smax + t) * LANES + LANES];
+                    for l in 0..LANES {
+                        dst[l] -= ci[l] * cj[l];
+                    }
+                }
+            } else {
+                // some lane's ci is zero: preserve the seed's skip
+                // exactly, lane by lane
+                for (l, &cil) in ci.iter().enumerate() {
+                    if cil == 0.0 {
+                        continue;
+                    }
+                    for t in j + 1..=i {
+                        a[(i * smax + t) * LANES + l] -= cil * colj[t][l];
+                    }
+                }
+            }
+        }
+    }
+    // forward substitution (chol_solve_into order)
+    for i in 0..smax {
+        let mut sum = [0.0f64; LANES];
+        sum.copy_from_slice(&u[i * LANES..(i + 1) * LANES]);
+        for k in 0..i {
+            let lrow = &a[(i * smax + k) * LANES..(i * smax + k) * LANES + LANES];
+            let yk = &y[k * LANES..(k + 1) * LANES];
+            for l in 0..LANES {
+                sum[l] -= lrow[l] * yk[l];
+            }
+        }
+        let d = &a[(i * smax + i) * LANES..(i * smax + i) * LANES + LANES];
+        let yi = &mut y[i * LANES..(i + 1) * LANES];
+        for l in 0..LANES {
+            yi[l] = sum[l] / d[l];
+        }
+    }
+    // back substitution
+    for i in (0..smax).rev() {
+        let mut sum = [0.0f64; LANES];
+        sum.copy_from_slice(&y[i * LANES..(i + 1) * LANES]);
+        for k in i + 1..smax {
+            let lki = &a[(k * smax + i) * LANES..(k * smax + i) * LANES + LANES];
+            let xk = &x[k * LANES..(k + 1) * LANES];
+            for l in 0..LANES {
+                sum[l] -= lki[l] * xk[l];
+            }
+        }
+        let d = &a[(i * smax + i) * LANES..(i * smax + i) * LANES + LANES];
+        let xi = &mut x[i * LANES..(i + 1) * LANES];
+        for l in 0..LANES {
+            xi[l] = sum[l] / d[l];
+        }
+    }
+    Ok(())
+}
+
 /// §H.1 padded batched solve over one band: for every row recorded in
 /// `s` (via `begin`/`push`/`end_row`), solves `λ·R̂ = u` with
 /// `R̂ = hinv[q][:, q]` and scatters `λ` into the row's Λ-panel slots
 /// (`s.lam[ri * width + q[t]] = λ[t]`, zeros elsewhere).
 ///
-/// The §H.1 embedding `R̂′ = diag(R̂, I)` is applied in **closed form**:
-/// the identity block factors to itself and the padded solution
-/// components are exactly zero by construction (eq. 77–79), so only
-/// the live `s_i × s_i` block of each row's padded system is swept —
-/// the band shares ONE workspace (the §H.1 uniform-shape win) without
-/// the dead flops of materializing the identity block. The
-/// materialized-padding formulation survives as [`solve_rows_padded`],
-/// the AOT-path oracle, pinned equal by `padded_matches_direct`.
+/// §Perf-L5 interleaved batching: the band's systems are ordered by
+/// (size descending, row ascending) and dispatched on the measured
+/// crossover — systems with `s_i ≤ 24` are gathered `LANES` at a time
+/// into a structure-of-arrays buffer, identity-padded to the batch
+/// max (the §H.1 embedding, eq. 77–79, now *materialized* but only
+/// across the near-uniform sorted batch — the sort keeps the padding
+/// wedge tiny), and factored+solved SIMD-style across the systems
+/// axis by [`batch_factor_solve`]; larger systems keep the per-row
+/// live-block sweep ([`solve_gathered_in`]), whose contiguous
+/// `t`-loops already fill vector width. The materialized-padding
+/// formulation survives as [`solve_rows_padded`], the AOT-path
+/// oracle, pinned equal by `padded_matches_direct`.
 ///
-/// **Bit-identity.** The live-block sweep is the exact arithmetic of
-/// the per-row solve ([`solve_row_in_scratch`]), so `λ` never depends
-/// on the band decomposition or thread count. Pinned by
-/// `tests/prune_panel.rs::padded_band_solver_bit_identical_to_per_row`.
+/// **Bit-identity.** Both dispatch targets run the exact arithmetic of
+/// the per-row solve ([`solve_row_in_scratch`]) — the interleaved
+/// sweep per lane, the fallback directly — and lanes never interact,
+/// so `λ` never depends on the dispatch order, batch composition, band
+/// decomposition or thread count. Pinned by
+/// `tests/prune_panel.rs::padded_band_solver_bit_identical_to_per_row`
+/// and `tests/selection.rs`.
 pub fn solve_band_padded_into_panel(hinv: &MatF64, s: &mut PanelSolveScratch) -> Result<()> {
     let rows = s.rows();
-    let PanelSolveScratch { qs, q_off, us, lam, width, rhat, y, x } = s;
+    let PanelSolveScratch { qs, q_off, us, lam, width, rhat, y, x, order, ia, iu, iy, ix } = s;
     let width = *width;
     debug_assert_eq!(lam.len(), rows * width);
     // bands recorded via `push_support` (index-only, caller-solved)
     // must not reach this solver — their rhs slots don't exist
     debug_assert_eq!(qs.len(), us.len(), "band mixes push and push_support recording");
+    order.clear();
     for ri in 0..rows {
-        let (o0, o1) = (q_off[ri], q_off[ri + 1]);
-        if o1 == o0 {
-            continue;
+        let sz = q_off[ri + 1] - q_off[ri];
+        if sz > 0 {
+            order.push((sz as u32, ri as u32));
         }
-        // live block of R̂′ = diag(R̂, I): the exact per-row solve body
+    }
+    order.sort_unstable_by(|p, q| q.0.cmp(&p.0).then(p.1.cmp(&q.1)));
+    let mut k0 = 0;
+    // (sorted-first) systems above the crossover: per-row sweep
+    while k0 < order.len() && order[k0].0 as usize > INTERLEAVE_MAX {
+        let ri = order[k0].1 as usize;
+        let (o0, o1) = (q_off[ri], q_off[ri + 1]);
         let q = &qs[o0..o1];
         solve_gathered_in(hinv, q, &us[o0..o1], rhat, y, x)?;
-        // scatter λ into the Λ panel (padded components are zero by
-        // construction and never materialized)
         let lrow = &mut lam[ri * width..(ri + 1) * width];
         for (t, &qt) in q.iter().enumerate() {
             lrow[qt] = x[t];
         }
+        k0 += 1;
+    }
+    // the rest interleave in LANES-wide sorted batches
+    while k0 < order.len() {
+        let nb = LANES.min(order.len() - k0);
+        let smax = order[k0].0 as usize;
+        let alen = smax * smax * LANES;
+        // grow-only buffers: stale cells from earlier batches are fully
+        // overwritten by the targeted gather + identity-pad below
+        if ia.len() < alen {
+            ia.resize(alen, 0.0);
+        }
+        let ulen = smax * LANES;
+        if iu.len() < ulen {
+            iu.resize(ulen, 0.0);
+        }
+        if iy.len() < ulen {
+            iy.resize(ulen, 0.0);
+        }
+        if ix.len() < ulen {
+            ix.resize(ulen, 0.0);
+        }
+        let a = &mut ia[..alen];
+        let ub = &mut iu[..ulen];
+        for l in 0..LANES {
+            let sz = if l < nb { order[k0 + l].0 as usize } else { 0 };
+            if l < nb {
+                let ri = order[k0 + l].1 as usize;
+                let (o0, o1) = (q_off[ri], q_off[ri + 1]);
+                let q = &qs[o0..o1];
+                for (a0, &qa) in q.iter().enumerate() {
+                    let hr = hinv.row(qa);
+                    for (b0, &qb) in q.iter().enumerate() {
+                        a[(a0 * smax + b0) * LANES + l] = hr[qb];
+                    }
+                }
+                for (t, &uv) in us[o0..o1].iter().enumerate() {
+                    ub[t * LANES + l] = uv;
+                }
+            }
+            // identity-pad the wedge beyond this lane's live block
+            for i in 0..smax {
+                let lo = if i < sz { sz } else { 0 };
+                for j in lo..smax {
+                    a[(i * smax + j) * LANES + l] = if i == j { 1.0 } else { 0.0 };
+                }
+                if i >= sz {
+                    ub[i * LANES + l] = 0.0;
+                }
+            }
+        }
+        batch_factor_solve(a, ub, &mut iy[..ulen], &mut ix[..ulen], smax)?;
+        for (l, &(szu, riu)) in order[k0..k0 + nb].iter().enumerate() {
+            let (sz, ri) = (szu as usize, riu as usize);
+            let q = &qs[q_off[ri]..q_off[ri] + sz];
+            let lrow = &mut lam[ri * width..(ri + 1) * width];
+            for (t, &qt) in q.iter().enumerate() {
+                lrow[qt] = ix[t * LANES + l];
+            }
+        }
+        k0 += nb;
     }
     Ok(())
 }

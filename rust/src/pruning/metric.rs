@@ -18,6 +18,22 @@ pub fn smallest_r_mask(metric: &[f64], r: usize) -> Vec<bool> {
 /// resized in place) — the hot-loop variant the block-wise walks use so
 /// the `c×rest` mask is not reallocated per block.
 pub fn smallest_r_mask_into(metric: &[f64], r: usize, mask: &mut Vec<bool>) {
+    let mut idx = Vec::new();
+    smallest_r_mask_into_with_idx(metric, r, mask, &mut idx);
+}
+
+/// [`smallest_r_mask_into`] with a caller-provided index scratch: the
+/// `(0..n)` index array used to cost an `O(c·rest)` allocation per
+/// block on the oracle/reference walks — threading a per-call buffer
+/// through (like the mask buffer itself) removes it. Identical
+/// selection arithmetic; this remains the oracle the §Perf-L5
+/// threshold engine ([`crate::pruning::select`]) is pinned against.
+pub fn smallest_r_mask_into_with_idx(
+    metric: &[f64],
+    r: usize,
+    mask: &mut Vec<bool>,
+    idx: &mut Vec<u32>,
+) {
     let n = metric.len();
     let r = r.min(n);
     mask.clear();
@@ -29,7 +45,8 @@ pub fn smallest_r_mask_into(metric: &[f64], r: usize, mask: &mut Vec<bool>) {
         mask.iter_mut().for_each(|m| *m = true);
         return;
     }
-    let mut idx: Vec<u32> = (0..n as u32).collect();
+    idx.clear();
+    idx.extend(0..n as u32);
     idx.select_nth_unstable_by(r - 1, |&a, &b| {
         metric[a as usize]
             .partial_cmp(&metric[b as usize])
@@ -66,6 +83,11 @@ pub fn wanda_metric_window_into(
 /// Same, restricted to the first `rows` rows of `w` (the n:m walk
 /// scores only non-outlier rows; passing `rows` here avoids cloning a
 /// row-slice of `W` per block).
+///
+/// Row-banded on the shared engine (§Perf-L5): every output cell is a
+/// pure per-cell function of `w` and the hoisted column norms, so the
+/// fill is bit-identical for any thread count — and the metric stage
+/// stops being a serial fraction of the engine-parallel walk.
 pub fn wanda_metric_window_rows_into(
     w: &Mat,
     rows: usize,
@@ -79,15 +101,22 @@ pub fn wanda_metric_window_rows_into(
     let width = c1 - c0;
     out.clear();
     out.resize(rows * width, 0.0);
+    if rows == 0 || width == 0 {
+        return;
+    }
     // hoist the per-column ‖X_j‖ terms out of the row loop
     let col_norm: Vec<f64> = (c0..c1).map(|j| stats.xnorm_sq[j].sqrt()).collect();
-    for i in 0..rows {
-        let row = w.row(i);
-        let dst = &mut out[i * width..(i + 1) * width];
-        for (k, j) in (c0..c1).enumerate() {
-            dst[k] = (row[j].abs() as f64) * col_norm[k];
+    let eng = crate::engine::global();
+    let rows_per = eng.chunk(rows);
+    eng.for_each_band(&mut out[..], rows_per * width, |bi, band| {
+        let row0 = bi * rows_per;
+        for (ri, dst) in band.chunks_mut(width).enumerate() {
+            let row = w.row(row0 + ri);
+            for (k, j) in (c0..c1).enumerate() {
+                dst[k] = (row[j].abs() as f64) * col_norm[k];
+            }
         }
-    }
+    });
 }
 
 /// `ψ_X(W_window, r)` — the global-residual-mask construction of

@@ -23,6 +23,7 @@ pub mod magnitude;
 pub mod metric;
 pub mod nm;
 pub mod obs;
+pub mod select;
 pub mod sparsegpt;
 pub mod thanos;
 pub mod wanda;

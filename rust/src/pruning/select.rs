@@ -1,0 +1,420 @@
+//! §Perf-L5 threshold-select selection engine (DESIGN.md §Perf-L5).
+//!
+//! [`metric::smallest_r_mask_into`](crate::pruning::metric) — the
+//! oracle the block walks used on their hot path — materializes an
+//! index array and runs an index-pair `select_nth_unstable_by` whose
+//! every comparison chases two random `metric` loads. At c=3072,
+//! b=1024 that selection is ~40% of the unstructured walk's wall time
+//! and is a *serial* stage in the otherwise engine-parallel walk (the
+//! Amdahl cap called out in ROADMAP).
+//!
+//! This module replaces it with a **values-only threshold select**:
+//!
+//! 1. **Band-parallel key histogram** — each engine band histograms the
+//!    top 16 bits of a monotone `f64 → u64` key ([`sel_key`]) into its
+//!    own bucket table (4-way split counters inside a band break the
+//!    store-forward chains of same-bucket runs). Counts are integers,
+//!    so the merged histogram is independent of banding.
+//! 2. **Candidate window** — the bucket where the cumulative count
+//!    crosses `r` contains the threshold; each band gathers its bucket
+//!    members (value + flat index) into a compact per-band segment.
+//! 3. **Refinement + θ** — the concatenated window is narrowed by
+//!    range histograms until small, then a values-only
+//!    `select_nth_unstable` pins θ, the r-th smallest value. θ is a
+//!    rank statistic: it does not depend on banding or on the
+//!    selection algorithm.
+//! 4. **Deterministic scatter** — bands count `value < θ` and
+//!    `value == θ` (ties) exactly; a serial prefix over the ascending
+//!    bands turns the global tie budget `r − #less` into per-band
+//!    quotas; the mark pass then writes `metric < θ` as a pure
+//!    vectorizable compare and tops up ties **in ascending index
+//!    order** from the compact segments.
+//!
+//! The produced mask is **bitwise identical** to the oracle's
+//! (value, index) total order — all cells `< θ`, plus the
+//! lowest-indexed cells `== θ` up to `r` — for every `r` and any
+//! thread count, including heavy ties and mixed ±0.0 (the key map
+//! sends −0.0 to +0.0, exactly the `partial_cmp == Equal` class the
+//! oracle ties by index). Pinned by `tests/selection.rs`. NaN metrics
+//! are not supported (the oracle's `unwrap_or(Equal)` order is not a
+//! total order there either); the Wanda/OBS metrics are NaN-free by
+//! construction.
+
+use crate::engine;
+use crate::pruning::metric::smallest_r_mask_into_with_idx;
+
+/// Number of top-level histogram buckets: the top 16 bits of the key
+/// (sign ⊕ exponent ⊕ 4 mantissa bits — 16 buckets per binade, so the
+/// candidate window is a ~0.4% slice of a smooth metric distribution).
+const TOP_BUCKETS: usize = 1 << 16;
+const TOP_SHIFT: u32 = 48;
+/// Range-histogram refinement buckets (narrowing works on a compact
+/// window buffer, so a smaller table suffices).
+const REF_BUCKETS: usize = 4096;
+/// Below this window size the values-only `select_nth_unstable` is
+/// cheaper than another refinement pass.
+const WINDOW_MAX: usize = 4096;
+/// Band-length floor (elements). Each band owns a `4 × TOP_BUCKETS`
+/// u32 table (1 MiB) that is zeroed, filled and folded per call, so
+/// bands must stay at least as large as the table or the fixed
+/// per-band cost would grow with the thread count (`eng.chunk` alone
+/// makes `threads × 4` bands): 2¹⁷ elements = 1 MiB of metric per
+/// band caps histogram overhead at ~data size on any machine. The
+/// floor only binds on many-core hosts — at the ≤2-thread C-mirror
+/// provenance shapes `eng.chunk` already exceeds it.
+const MIN_BAND: usize = 1 << 17;
+
+/// Monotone `f64 → u64` key: `a < b  ⇔  sel_key(a) < sel_key(b)` for
+/// all non-NaN values, with `-0.0` normalized onto `+0.0` so the tie
+/// class at zero is a single key (the oracle's `partial_cmp` treats
+/// them as equal and falls back to the index).
+#[inline]
+pub fn sel_key(v: f64) -> u64 {
+    let b = (v + 0.0).to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1u64 << 63)
+    }
+}
+
+/// One band's gather segment plus its exact selection counts.
+#[derive(Default)]
+struct Seg {
+    /// candidate values (bucket members), in ascending index order
+    v: Vec<f64>,
+    /// their flat metric indices (`u32`: selection inputs are layer
+    /// windows, far below 2³² cells)
+    i: Vec<u32>,
+    /// cells in buckets strictly below the candidate bucket
+    below: usize,
+    /// cells with `value == θ` in this band
+    tie: usize,
+    /// how many of this band's ties the scatter marks (set serially)
+    quota: usize,
+}
+
+/// Reusable workspace for [`smallest_r_mask_threshold_into`], carried
+/// across the block walk like the metric/mask buffers (the engine's
+/// no-hot-path-allocations convention). Also hosts the `idx` scratch
+/// the *oracle* path threads through
+/// [`smallest_r_mask_into_with_idx`](crate::pruning::metric::smallest_r_mask_into_with_idx),
+/// so reference walks stop allocating `O(c·rest)` per block too.
+pub struct SelectScratch {
+    /// per-band histograms, `4 × TOP_BUCKETS` each (4-way split
+    /// counters, folded into the leading quarter after the pass)
+    hists: Vec<Vec<u32>>,
+    segs: Vec<Seg>,
+    window: Vec<f64>,
+    refhist: Vec<u32>,
+    /// index scratch for the oracle (`select_nth`) path
+    pub idx: Vec<u32>,
+}
+
+impl SelectScratch {
+    pub fn new() -> SelectScratch {
+        SelectScratch {
+            hists: Vec::new(),
+            segs: Vec::new(),
+            window: Vec::new(),
+            refhist: Vec::new(),
+            idx: Vec::new(),
+        }
+    }
+}
+
+impl Default for SelectScratch {
+    fn default() -> SelectScratch {
+        SelectScratch::new()
+    }
+}
+
+/// Mask of the `r` smallest `(value, index)` cells of `metric` —
+/// bitwise identical to
+/// [`metric::smallest_r_mask_into`](crate::pruning::metric::smallest_r_mask_into)
+/// for NaN-free input, for any `r` and any engine thread count, at
+/// values-only streaming cost. The mask buffer is cleared and resized
+/// in place; `scratch` persists across calls.
+///
+/// Windows below the band floor dispatch to the oracle directly: the
+/// engine's fixed per-band table (a 1 MiB zero + fold) would outweigh
+/// the data there, and the selected mask is identical by contract —
+/// only the crossover changes, never a bit. (The engine body keeps its
+/// own small-`n` correctness via the in-module unit tests, which call
+/// it directly.)
+pub fn smallest_r_mask_threshold_into(
+    metric: &[f64],
+    r: usize,
+    mask: &mut Vec<bool>,
+    scratch: &mut SelectScratch,
+) {
+    if metric.len() < MIN_BAND {
+        smallest_r_mask_into_with_idx(metric, r, mask, &mut scratch.idx);
+        return;
+    }
+    threshold_select_engine(metric, r, mask, scratch);
+}
+
+/// The engine proper (public entry above dispatches here for windows
+/// at or over the band floor).
+fn threshold_select_engine(
+    metric: &[f64],
+    r: usize,
+    mask: &mut Vec<bool>,
+    scratch: &mut SelectScratch,
+) {
+    let n = metric.len();
+    let r = r.min(n);
+    mask.clear();
+    mask.resize(n, false);
+    if r == 0 {
+        return;
+    }
+    if r == n {
+        mask.iter_mut().for_each(|m| *m = true);
+        return;
+    }
+
+    let eng = engine::global();
+    let band_len = eng.chunk(n).max(MIN_BAND.min(n));
+    let n_bands = n.div_ceil(band_len);
+    // grow-only: keep band buffers allocated across calls of any size
+    if scratch.hists.len() < n_bands {
+        scratch.hists.resize_with(n_bands, Vec::new);
+    }
+    if scratch.segs.len() < n_bands {
+        scratch.segs.resize_with(n_bands, Seg::default);
+    }
+    let hists = &mut scratch.hists[..n_bands];
+    let segs = &mut scratch.segs[..n_bands];
+
+    // 1. band-parallel histogram over the key's top bits
+    eng.for_each_band(hists, 1, |bi, slot| {
+        let h = &mut slot[0];
+        h.clear();
+        h.resize(4 * TOP_BUCKETS, 0);
+        let k0 = bi * band_len;
+        let k1 = (k0 + band_len).min(n);
+        let mut chunks = metric[k0..k1].chunks_exact(4);
+        for c in &mut chunks {
+            // 4-way split counters: same-bucket runs would serialize a
+            // single table on store-forward latency
+            h[(sel_key(c[0]) >> TOP_SHIFT) as usize] += 1;
+            h[TOP_BUCKETS + (sel_key(c[1]) >> TOP_SHIFT) as usize] += 1;
+            h[2 * TOP_BUCKETS + (sel_key(c[2]) >> TOP_SHIFT) as usize] += 1;
+            h[3 * TOP_BUCKETS + (sel_key(c[3]) >> TOP_SHIFT) as usize] += 1;
+        }
+        for &v in chunks.remainder() {
+            h[(sel_key(v) >> TOP_SHIFT) as usize] += 1;
+        }
+        for bkt in 0..TOP_BUCKETS {
+            let ways = h[TOP_BUCKETS + bkt] + h[2 * TOP_BUCKETS + bkt] + h[3 * TOP_BUCKETS + bkt];
+            h[bkt] += ways;
+        }
+    });
+
+    // 2. the bucket where the cumulative count crosses r
+    let mut cum = 0usize;
+    let mut bucket = TOP_BUCKETS - 1;
+    for bkt in 0..TOP_BUCKETS {
+        let mut tot = 0usize;
+        for h in hists.iter() {
+            tot += h[bkt] as usize;
+        }
+        if cum + tot >= r {
+            bucket = bkt;
+            break;
+        }
+        cum += tot;
+    }
+
+    // band-parallel gather of the bucket members (value + index), plus
+    // each band's exact below-bucket count
+    {
+        let hists_ref = &hists[..];
+        eng.for_each_band(segs, 1, |bi, slot| {
+            let seg = &mut slot[0];
+            let k0 = bi * band_len;
+            let k1 = (k0 + band_len).min(n);
+            seg.v.clear();
+            seg.i.clear();
+            let cnt = hists_ref[bi][bucket] as usize;
+            seg.v.reserve(cnt);
+            seg.i.reserve(cnt);
+            for (k, &v) in metric[k0..k1].iter().enumerate() {
+                if (sel_key(v) >> TOP_SHIFT) as usize == bucket {
+                    seg.v.push(v);
+                    seg.i.push((k0 + k) as u32);
+                }
+            }
+            seg.below = hists_ref[bi][..bucket].iter().map(|&c| c as usize).sum();
+        });
+    }
+
+    // 3. refine the compact window, then select θ by value
+    let window = &mut scratch.window;
+    window.clear();
+    for seg in segs.iter() {
+        window.extend_from_slice(&seg.v);
+    }
+    let mut rloc = r - cum; // 1-based rank of θ inside the window
+    while window.len() > WINDOW_MAX {
+        let mut kmin = u64::MAX;
+        let mut kmax = 0u64;
+        for &v in window.iter() {
+            let key = sel_key(v);
+            kmin = kmin.min(key);
+            kmax = kmax.max(key);
+        }
+        if kmin == kmax {
+            break;
+        }
+        let span = (kmax - kmin) as u128 + 1;
+        let rh = &mut scratch.refhist;
+        rh.clear();
+        rh.resize(REF_BUCKETS, 0);
+        let rbucket =
+            |v: f64| ((sel_key(v) - kmin) as u128 * REF_BUCKETS as u128 / span) as usize;
+        for &v in window.iter() {
+            rh[rbucket(v)] += 1;
+        }
+        let mut rcum = 0usize;
+        let mut rb = REF_BUCKETS - 1;
+        for (bkt, &cnt) in rh.iter().enumerate() {
+            if rcum + cnt as usize >= rloc {
+                rb = bkt;
+                break;
+            }
+            rcum += cnt as usize;
+        }
+        window.retain(|&v| rbucket(v) == rb);
+        rloc -= rcum;
+    }
+    let pos = rloc - 1;
+    window.select_nth_unstable_by(pos, |a, b| sel_key(*a).cmp(&sel_key(*b)));
+    let theta = window[pos];
+
+    // 4. exact per-band (less, tie) counts from the segments, then the
+    // serial quota prefix over ascending bands
+    eng.for_each_band(segs, 1, |_bi, slot| {
+        let seg = &mut slot[0];
+        let mut less = seg.below;
+        let mut tie = 0usize;
+        for &v in &seg.v {
+            if v < theta {
+                less += 1;
+            } else if v == theta {
+                tie += 1;
+            }
+        }
+        seg.below = less; // reuse the field: now "cells < θ" in-band
+        seg.tie = tie;
+    });
+    let less_total: usize = segs.iter().map(|s| s.below).sum();
+    let mut need = r - less_total;
+    for seg in segs.iter_mut() {
+        let q = need.min(seg.tie);
+        seg.quota = q;
+        need -= q;
+    }
+    debug_assert_eq!(need, 0, "tie budget must be coverable by θ cells");
+
+    // band-parallel mark: a pure `< θ` compare per cell, then the tie
+    // top-up walks this band's segment (indices ascending, so the
+    // (value, index) order is free)
+    {
+        let segs_ref = &segs[..];
+        eng.for_each_band(&mut mask[..], band_len, |bi, band| {
+            let k0 = bi * band_len;
+            for (m, &v) in band.iter_mut().zip(&metric[k0..k0 + band.len()]) {
+                *m = v < theta;
+            }
+            let seg = &segs_ref[bi];
+            let mut q = seg.quota;
+            for (&v, &si) in seg.v.iter().zip(&seg.i) {
+                if q == 0 {
+                    break;
+                }
+                if v == theta {
+                    band[si as usize - k0] = true;
+                    q -= 1;
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::metric::smallest_r_mask_into;
+    use crate::rng::Rng;
+
+    // drive the ENGINE body directly (not the public small-n oracle
+    // dispatch), so these sizes pin the engine's own arithmetic
+    fn check(metric: &[f64], r: usize, scratch: &mut SelectScratch) {
+        let mut oracle = Vec::new();
+        smallest_r_mask_into(metric, r, &mut oracle);
+        let mut got = Vec::new();
+        threshold_select_engine(metric, r, &mut got, scratch);
+        assert_eq!(oracle, got, "r={r} n={}", metric.len());
+        let mut via_public = Vec::new();
+        smallest_r_mask_threshold_into(metric, r, &mut via_public, scratch);
+        assert_eq!(oracle, via_public, "public dispatch r={r}");
+    }
+
+    #[test]
+    fn matches_oracle_on_random_metrics() {
+        let mut rng = Rng::new(0x5E1);
+        let mut scratch = SelectScratch::new();
+        for _ in 0..20 {
+            let n = 1 + rng.below(5000);
+            let metric: Vec<f64> = (0..n).map(|_| rng.normal().abs()).collect();
+            for r in [0, 1, n / 3, n.saturating_sub(1), n, n + 7] {
+                check(&metric, r, &mut scratch);
+            }
+        }
+    }
+
+    #[test]
+    fn matches_oracle_with_heavy_ties_and_signed_zero() {
+        let mut rng = Rng::new(0x5E2);
+        let mut scratch = SelectScratch::new();
+        for _ in 0..20 {
+            let n = 1 + rng.below(4000);
+            let metric: Vec<f64> = (0..n)
+                .map(|_| match rng.below(5) {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => 1.5,
+                    3 => (rng.below(4) as f64) * 0.25,
+                    _ => -((rng.below(3) + 1) as f64),
+                })
+                .collect();
+            for r in [0, 1, n / 2, n.saturating_sub(1), n] {
+                check(&metric, r, &mut scratch);
+            }
+        }
+    }
+
+    #[test]
+    fn all_equal_selects_lowest_indices() {
+        let metric = vec![3.25f64; 100];
+        let mut scratch = SelectScratch::new();
+        let mut mask = Vec::new();
+        threshold_select_engine(&metric, 37, &mut mask, &mut scratch);
+        for (i, &m) in mask.iter().enumerate() {
+            assert_eq!(m, i < 37, "index {i}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_disparate_sizes() {
+        let mut rng = Rng::new(0x5E3);
+        let mut scratch = SelectScratch::new();
+        for &n in &[10usize, 5000, 3, 900, 1] {
+            let metric: Vec<f64> = (0..n).map(|_| rng.normal().abs()).collect();
+            check(&metric, n / 2, &mut scratch);
+        }
+    }
+}

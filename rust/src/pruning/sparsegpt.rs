@@ -15,7 +15,8 @@ use crate::linalg::batched::{forward_subst_upper_gather, with_panel_scratch};
 use crate::linalg::chol::inverse_factor_upper;
 use crate::linalg::kernel::{self, kf64, kmix, View};
 use crate::linalg::{Mat, MatF64};
-use crate::pruning::metric::{smallest_r_mask, smallest_r_mask_into};
+use crate::pruning::metric::{smallest_r_mask, smallest_r_mask_into_with_idx};
+use crate::pruning::select::{smallest_r_mask_threshold_into, SelectScratch};
 use crate::pruning::{CalibStats, PruneOpts, Pruned};
 use anyhow::Result;
 
@@ -45,12 +46,22 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
     let bs = opts.block_size.clamp(1, b);
     let mut wk = w.clone();
     let mut mask = vec![false; c * b];
+    // per-call selection scratch (§Perf-L5): the panel walk routes the
+    // block mask through the engine-parallel threshold select (bitwise
+    // identical to the oracle); reference walks keep the select_nth
+    // oracle with the shared index scratch. Metric/mask buffers are
+    // reused across blocks like the Thanos walk's.
+    let mut sel = SelectScratch::new();
+    let mut metric: Vec<f64> = Vec::new();
+    let mut bm: Vec<bool> = Vec::new();
+    let threshold_select = opts.panel_apply && !kernel::naive_mode();
     let mut j1 = 0;
     while j1 < b {
         let j2 = (j1 + bs).min(b);
         let width = j2 - j1;
         // block mask: r smallest of w²/U_jj² within the c×width block
-        let mut metric = vec![0.0f64; c * width];
+        metric.clear();
+        metric.resize(c * width, 0.0);
         for i in 0..c {
             let row = wk.row(i);
             for (k, j) in (j1..j2).enumerate() {
@@ -59,7 +70,11 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
             }
         }
         let r = (p * (c * width) as f64).floor() as usize;
-        let bm = smallest_r_mask(&metric, r);
+        if threshold_select {
+            smallest_r_mask_threshold_into(&metric, r, &mut bm, &mut sel);
+        } else {
+            smallest_r_mask_into_with_idx(&metric, r, &mut bm, &mut sel.idx);
+        }
         for i in 0..c {
             for k in 0..width {
                 mask[i * b + j1 + k] = bm[i * width + k];
@@ -74,6 +89,19 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
 /// n:m SparseGPT: the mask for each group of `m` columns is chosen when
 /// the column walk reaches the group (metric uses current weights), so
 /// the adaptive-mask property is preserved (`Bs = m` in Alg. 5).
+///
+/// Panel path (§Perf-L5): groups are tiny (`m ≤ 8`), so the per-column
+/// OBS chain is replaced by a **per-group fused micro-kernel** — the
+/// group's `n` errors come from one forward substitution through the
+/// gathered `U[q][:, q]` ([`forward_subst_upper_gather`], the same
+/// collapse the Λ-panel paths use), and the row suffix is updated in
+/// ONE register-blocked pass with f64 accumulation
+/// ([`fused_group_apply`]) instead of `n` separate f32 axpy sweeps.
+/// Groups stay column-sequential per row (the adaptive-mask property),
+/// rows stay band-parallel; per-row chains are row-local, so results
+/// are bit-identical for any thread count. The seed per-column chain
+/// remains the reference (`panel_apply = false` or
+/// `THANOS_LINALG_NAIVE=1`).
 pub fn semi_structured(
     w: &Mat,
     stats: &CalibStats,
@@ -89,6 +117,7 @@ pub fn semi_structured(
     let mut mask = vec![false; c * b];
     // per-row independent: row bands on the shared engine pool
     let u_ref = &u;
+    let panel = opts.panel_apply && !kernel::naive_mode();
     let eng = crate::engine::global();
     let rows_per = eng.chunk(c);
     let band = rows_per * b;
@@ -97,6 +126,10 @@ pub fn semi_structured(
         // group-metric scratch reused across this band's rows
         let mut metric = vec![0.0f64; m];
         let mut gm = Vec::new();
+        let mut gidx: Vec<u32> = Vec::new();
+        let mut q: Vec<usize> = Vec::new();
+        let mut rhs: Vec<f64> = Vec::new();
+        let mut e: Vec<f64> = Vec::new();
         for ri in 0..rows_here {
             let row = &mut whead[ri * b..(ri + 1) * b];
             let rmask = &mut mhead[ri * b..(ri + 1) * b];
@@ -106,25 +139,78 @@ pub fn semi_structured(
                     let d = u_ref.at(j, j);
                     metric[k] = (row[j] as f64).powi(2) / (d * d);
                 }
-                smallest_r_mask_into(&metric, n, &mut gm);
-                // apply OBS updates column by column inside the group
-                for (k, j) in (g..g + m).enumerate() {
-                    if !gm[k] {
+                smallest_r_mask_into_with_idx(&metric, n, &mut gm, &mut gidx);
+                if panel {
+                    // fused micro-kernel: batch the group's solves,
+                    // apply the suffix once
+                    q.clear();
+                    rhs.clear();
+                    for (k, j) in (g..g + m).enumerate() {
+                        if gm[k] {
+                            rmask[j] = true;
+                            q.push(j);
+                            rhs.push(row[j] as f64);
+                        }
+                    }
+                    if q.is_empty() {
                         continue;
                     }
-                    rmask[j] = true;
-                    let d = u_ref.at(j, j);
-                    let err = row[j] as f64 / d;
-                    let urow = u_ref.row(j);
-                    for t in j..b {
-                        row[t] -= (err * urow[t]) as f32;
+                    forward_subst_upper_gather(u_ref, &q, &rhs, &mut e);
+                    fused_group_apply(row, g, u_ref, &q, &e);
+                    for &j in &q {
+                        row[j] = 0.0;
                     }
-                    row[j] = 0.0;
+                } else {
+                    // reference: OBS updates column by column
+                    for (k, j) in (g..g + m).enumerate() {
+                        if !gm[k] {
+                            continue;
+                        }
+                        rmask[j] = true;
+                        let d = u_ref.at(j, j);
+                        let err = row[j] as f64 / d;
+                        let urow = u_ref.row(j);
+                        for t in j..b {
+                            row[t] -= (err * urow[t]) as f32;
+                        }
+                        row[j] = 0.0;
+                    }
                 }
             }
         }
     });
     Ok(Pruned { w: wk, mask })
+}
+
+/// Register-blocked width of [`fused_group_apply`]'s suffix pass (f64
+/// accumulator lanes held across the group's support).
+const GROUP_BLOCK: usize = 32;
+
+/// §Perf-L5 per-group fused apply: `row[g..] -= Σ_t e_t · U[q_t, g..]`
+/// in ONE pass over the row suffix — a `GROUP_BLOCK`-wide f64
+/// accumulator walks the suffix, the `n ≤ m ≤ 8` support rows of `U`
+/// stream through it (ascending `t` per element, a fixed row-local
+/// chain), and each output cell rounds to f32 exactly once. Columns
+/// left of a support index contribute exact zeros (`U` is upper
+/// triangular), matching the per-column reference's no-touch there.
+fn fused_group_apply(row: &mut [f32], g: usize, u: &MatF64, q: &[usize], e: &[f64]) {
+    debug_assert_eq!(q.len(), e.len());
+    let b = row.len();
+    let mut j0 = g;
+    while j0 < b {
+        let wlen = GROUP_BLOCK.min(b - j0);
+        let mut acc = [0.0f64; GROUP_BLOCK];
+        for (&qt, &et) in q.iter().zip(e) {
+            let urow = &u.row(qt)[j0..j0 + wlen];
+            for (a, &uv) in acc[..wlen].iter_mut().zip(urow) {
+                *a = kf64::fmadd(et, uv, *a);
+            }
+        }
+        for (dst, &a) in row[j0..j0 + wlen].iter_mut().zip(&acc[..wlen]) {
+            *dst -= a as f32;
+        }
+        j0 += wlen;
+    }
 }
 
 /// Structured SparseGPT baseline: the ⌈p·b⌉ columns with the smallest

@@ -26,8 +26,10 @@ use crate::linalg::kernel::{self, kf64, kmix, View};
 use crate::linalg::perm::Perm;
 use crate::linalg::{Mat, MatF64};
 use crate::pruning::metric::{
-    nm_mask, smallest_r_mask_into, wanda_metric_window_into, wanda_metric_window_rows_into,
+    nm_mask, smallest_r_mask_into_with_idx, wanda_metric_window_into,
+    wanda_metric_window_rows_into,
 };
+use crate::pruning::select::{smallest_r_mask_threshold_into, SelectScratch};
 use crate::pruning::{CalibStats, PruneOpts, Pruned};
 use anyhow::{Context, Result};
 
@@ -117,6 +119,12 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
     let mut metric: Vec<f64> = Vec::new();
     let mut res_mask: Vec<bool> = Vec::new();
     let mut local: Vec<bool> = Vec::new();
+    let mut sel = SelectScratch::new();
+    // §Perf-L5: the panel walk routes the global-residual selection
+    // through the engine-parallel threshold select (bitwise-identical
+    // masks — pinned by tests/selection.rs); the reference walks keep
+    // the select_nth oracle, now fed a per-call index scratch.
+    let threshold_select = opts.panel_apply && !kernel::naive_mode();
 
     let mut j1 = 0;
     while j1 < b && r_left > 0 {
@@ -129,7 +137,12 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
         // ψ_X over the residual window (global residual mask, line 6),
         // local part = first `width` columns (line 7)
         wanda_metric_window_into(&wk, stats, j1, b, &mut metric);
-        smallest_r_mask_into(&metric, r_left.min(c * rest), &mut res_mask);
+        let r_block = r_left.min(c * rest);
+        if threshold_select {
+            smallest_r_mask_threshold_into(&metric, r_block, &mut res_mask, &mut sel);
+        } else {
+            smallest_r_mask_into_with_idx(&metric, r_block, &mut res_mask, &mut sel.idx);
+        }
         local.clear();
         local.resize(c * width, false);
         for i in 0..c {

@@ -1,0 +1,251 @@
+//! §Perf-L5 property tests: the threshold-select engine pinned bitwise
+//! against the `(value, index)` select_nth oracle (heavy ties at θ,
+//! ±0.0, boundary ranks, serial == parallel), and the interleaved
+//! batched Cholesky pinned bitwise against the per-row solve on
+//! gathered systems across the interleave/per-row crossover.
+
+use thanos::linalg::batched::{
+    solve_band_padded_into_panel, solve_row_in_scratch, PanelSolveScratch, RowSolveScratch,
+};
+use thanos::linalg::chol::{chol_inverse, damp_hessian};
+use thanos::linalg::gemm::xxt_f64;
+use thanos::linalg::Mat;
+use thanos::pruning::metric::smallest_r_mask_into;
+use thanos::pruning::select::{smallest_r_mask_threshold_into, SelectScratch};
+use thanos::rng::Rng;
+
+fn assert_matches_oracle(metric: &[f64], r: usize, scratch: &mut SelectScratch, tag: &str) {
+    let mut oracle = Vec::new();
+    smallest_r_mask_into(metric, r, &mut oracle);
+    let mut got = Vec::new();
+    smallest_r_mask_threshold_into(metric, r, &mut got, scratch);
+    assert_eq!(oracle, got, "{tag}: r={r} n={}", metric.len());
+    let serial = thanos::engine::with_serial(|| {
+        let mut m = Vec::new();
+        smallest_r_mask_threshold_into(metric, r, &mut m, scratch);
+        m
+    });
+    assert_eq!(oracle, serial, "{tag} serial: r={r} n={}", metric.len());
+}
+
+#[test]
+fn threshold_select_matches_oracle_random() {
+    let mut rng = Rng::new(0xA11);
+    let mut scratch = SelectScratch::new();
+    for trial in 0..25 {
+        let n = 1 + rng.below(30_000);
+        let metric: Vec<f64> = (0..n).map(|_| rng.normal().abs() * 3.0).collect();
+        for r in [0, 1, n / 2, n.saturating_sub(1), n, rng.below(n + 1)] {
+            assert_matches_oracle(&metric, r, &mut scratch, &format!("random t{trial}"));
+        }
+    }
+}
+
+#[test]
+fn threshold_select_matches_oracle_heavy_ties() {
+    // duplicated values, mixed ±0.0 (one partial_cmp tie class — the
+    // oracle breaks both by index), tiny alphabet, all-equal
+    let mut rng = Rng::new(0xA12);
+    let mut scratch = SelectScratch::new();
+    for trial in 0..25 {
+        let n = 1 + rng.below(10_000);
+        let metric: Vec<f64> = (0..n)
+            .map(|_| match rng.below(6) {
+                0 => 0.0,
+                1 => -0.0,
+                2 => 0.5,
+                3 => (rng.below(4) as f64) * 0.125,
+                4 => 1e-300,
+                _ => -((rng.below(3) + 1) as f64) * 0.75,
+            })
+            .collect();
+        for r in [0, 1, n / 3, n / 2, n.saturating_sub(1), n] {
+            assert_matches_oracle(&metric, r, &mut scratch, &format!("ties t{trial}"));
+        }
+    }
+}
+
+#[test]
+fn threshold_select_wanda_shaped_metric_multi_band() {
+    // the actual hot-path shape: |W| · ‖X‖ over a c×rest window, sized
+    // past the 2¹⁷-cell band floor so the engine splits into several
+    // bands (the cross-band below/tie accounting is live, not the
+    // single-band collapse)
+    let mut rng = Rng::new(0xA13);
+    let mut scratch = SelectScratch::new();
+    let (c, rest) = (1200, 256); // 307_200 cells ≥ 2 bands
+    let norms: Vec<f64> = (0..rest).map(|_| rng.normal().abs() + 0.1).collect();
+    let metric: Vec<f64> = (0..c * rest)
+        .map(|k| (rng.normal_f32(0.0, 1.0).abs() as f64) * norms[k % rest])
+        .collect();
+    for r in [0, 1, c * rest / 2, c * rest - 1, c * rest] {
+        assert_matches_oracle(&metric, r, &mut scratch, "wanda");
+    }
+}
+
+#[test]
+fn threshold_select_multi_band_boundary_ties() {
+    // tie runs straddling the band boundaries: a tiny value alphabet
+    // over 300k cells forces every band to carry ties of θ, so the
+    // ascending quota prefix (and the per-band tie top-up) is what
+    // produces the mask — any cross-band accounting slip diverges from
+    // the oracle immediately
+    let mut rng = Rng::new(0xA15);
+    let mut scratch = SelectScratch::new();
+    let n = 300_000;
+    let metric: Vec<f64> = (0..n)
+        .map(|_| match rng.below(4) {
+            0 => 1.0,
+            1 => 2.0,
+            2 => 0.0,
+            _ => rng.normal().abs(),
+        })
+        .collect();
+    for r in [0, 1, n / 4, n / 2, 123_457, n - 1, n] {
+        assert_matches_oracle(&metric, r, &mut scratch, "boundary-ties");
+    }
+    // one tie class across every band: the quota spans band boundaries
+    let flat = vec![4.5f64; n];
+    let mut mask = Vec::new();
+    smallest_r_mask_threshold_into(&flat, 200_000, &mut mask, &mut scratch);
+    for (i, &m) in mask.iter().enumerate() {
+        assert_eq!(m, i < 200_000, "flat index {i}");
+    }
+}
+
+#[test]
+fn threshold_select_dense_single_bucket_window() {
+    // 200k distinct-ish values inside ONE top-level bucket (same
+    // exponent, same leading mantissa bits): the candidate window is
+    // essentially the whole input, so the range-histogram refinement
+    // loop (retain + rank adjustment) is what narrows to θ
+    let mut rng = Rng::new(0xA16);
+    let mut scratch = SelectScratch::new();
+    let n = 200_000;
+    let metric: Vec<f64> = (0..n).map(|_| 1.0 + rng.uniform() * 1e-5).collect();
+    for r in [1, n / 2, n - 1] {
+        assert_matches_oracle(&metric, r, &mut scratch, "dense-bucket");
+    }
+}
+
+#[test]
+fn threshold_select_extreme_ranges_and_tiny_inputs() {
+    let mut scratch = SelectScratch::new();
+    assert_matches_oracle(&[2.5], 0, &mut scratch, "single0");
+    assert_matches_oracle(&[2.5], 1, &mut scratch, "single1");
+    let metric = vec![f64::MAX, f64::MIN_POSITIVE, 0.0, 1e308, 5e-324, -f64::MAX];
+    for r in 0..=metric.len() {
+        assert_matches_oracle(&metric, r, &mut scratch, "extreme");
+    }
+    // a window larger than the refinement threshold with one tie class
+    let big = vec![7.0f64; 70_000];
+    assert_matches_oracle(&big, 12_345, &mut scratch, "bigtie");
+}
+
+fn gathered_hinv(b: usize, seed: u64) -> thanos::linalg::MatF64 {
+    let mut r = Rng::new(seed);
+    let x = Mat::from_fn(b, b + 7, |_, _| r.normal_f32(0.0, 1.0));
+    let mut h = xxt_f64(&x);
+    for v in h.data.iter_mut() {
+        *v *= 2.0;
+    }
+    damp_hessian(&mut h, 0.01);
+    chol_inverse(&h).unwrap()
+}
+
+#[test]
+fn interleaved_batch_bitwise_equals_per_row_solves() {
+    // random support sets spanning the interleave/per-row crossover
+    // (sizes 1..=40 with the dispatch boundary at 24), batched through
+    // the band solver and pinned bit-for-bit against the per-row sweep
+    let hinv = gathered_hinv(64, 0xB01);
+    let mut rng = Rng::new(0xB02);
+    for trial in 0..12 {
+        let rows = 1 + rng.below(40);
+        let width = 64;
+        let mut qs: Vec<Vec<usize>> = Vec::new();
+        for _ in 0..rows {
+            if rng.below(8) == 0 {
+                qs.push(Vec::new()); // empty supports must stay zero rows
+                continue;
+            }
+            let sz = 1 + rng.below(40);
+            let mut q = rng.choose_k(width, sz.min(width));
+            q.sort_unstable();
+            qs.push(q);
+        }
+        let us: Vec<Vec<f64>> =
+            qs.iter().map(|q| q.iter().map(|_| rng.normal()).collect()).collect();
+        let mut ps = PanelSolveScratch::new();
+        ps.begin(qs.len(), width);
+        for (q, u) in qs.iter().zip(&us) {
+            for (&k, &v) in q.iter().zip(u) {
+                ps.push(k, v);
+            }
+            ps.end_row();
+        }
+        solve_band_padded_into_panel(&hinv, &mut ps).unwrap();
+        for (ri, (q, u)) in qs.iter().zip(&us).enumerate() {
+            let mut s = RowSolveScratch::new();
+            s.q.extend_from_slice(q);
+            s.u.extend_from_slice(u);
+            solve_row_in_scratch(&hinv, &mut s).unwrap();
+            let lrow = &ps.lam[ri * width..(ri + 1) * width];
+            let mut expect = vec![0.0f64; width];
+            for (t, &qt) in q.iter().enumerate() {
+                expect[qt] = s.lam[t];
+            }
+            for (k, (&got, &want)) in lrow.iter().zip(&expect).enumerate() {
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "trial {trial} row {ri} slot {k}: batched {got} vs per-row {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn interleaved_batch_serial_parallel_bit_identical() {
+    // the whole band solve (sorting, batching, padding included) must
+    // be independent of the engine mode
+    let hinv = gathered_hinv(48, 0xB03);
+    let mut rng = Rng::new(0xB04);
+    let width = 48;
+    let mut ps = PanelSolveScratch::new();
+    ps.begin(30, width);
+    let mut qs: Vec<Vec<usize>> = Vec::new();
+    for _ in 0..30 {
+        let sz = 1 + rng.below(20);
+        let mut q = rng.choose_k(width, sz);
+        q.sort_unstable();
+        for &k in &q {
+            ps.push(k, rng.normal());
+        }
+        ps.end_row();
+        qs.push(q);
+    }
+    solve_band_padded_into_panel(&hinv, &mut ps).unwrap();
+    let lam_par = ps.lam.clone();
+    // re-record (begin clears) and solve under forced-serial execution
+    let lam_ser = thanos::engine::with_serial(|| {
+        let mut ps2 = PanelSolveScratch::new();
+        ps2.begin(30, width);
+        let mut rng2 = Rng::new(0xB04);
+        for _ in 0..30 {
+            let sz = 1 + rng2.below(20);
+            let mut q = rng2.choose_k(width, sz);
+            q.sort_unstable();
+            for &k in &q {
+                ps2.push(k, rng2.normal());
+            }
+            ps2.end_row();
+        }
+        solve_band_padded_into_panel(&hinv, &mut ps2).unwrap();
+        ps2.lam.clone()
+    });
+    let a: Vec<u64> = lam_par.iter().map(|v| v.to_bits()).collect();
+    let b: Vec<u64> = lam_ser.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(a, b, "band solve must not depend on engine mode");
+}
