@@ -1,0 +1,286 @@
+//! The checked-in allowlist (`audit.toml` at the repo root).
+//!
+//! The file carries the *justified* exceptions to the determinism
+//! rules, each with a reason, and the list of files allowed to contain
+//! `unsafe` at all (rule D4). The parser is a deliberately small TOML
+//! subset (no registry TOML crate in the offline vendor set): comments,
+//! `[section]` / `[[array-of-tables]]` headers, `key = "string"`,
+//! `key = integer` and `key = ["a", "b"]` on one line — exactly the
+//! shapes `audit.toml` uses, rejected loudly otherwise.
+//!
+//! Matching is content-based (`contains` against the finding's trimmed
+//! line text) rather than line-number-based, so entries survive
+//! unrelated edits; the `count` field pins the expected number of
+//! matches so silently *growing* a rounding point past its audit is
+//! still caught. Every entry must keep matching (stale entries fail
+//! the audit) — the allowlist can only shrink by editing it.
+
+use crate::rules::Finding;
+
+/// One `[[allow]]` entry.
+#[derive(Clone, Debug, Default)]
+pub struct AllowEntry {
+    /// rule id the entry suppresses (`"D3"`, …)
+    pub rule: String,
+    /// exact repo-relative file the findings live in
+    pub file: String,
+    /// substring of the finding's trimmed source line
+    pub contains: String,
+    /// expected number of matched findings (entry is stale otherwise);
+    /// `None` means "at least one"
+    pub count: Option<usize>,
+    /// why the exception is sound — required, it is the documentation
+    pub reason: String,
+}
+
+/// Parsed `audit.toml`.
+#[derive(Clone, Debug, Default)]
+pub struct Allowlist {
+    /// `[d4] files = [...]` — files allowed to contain `unsafe`
+    pub d4_files: Vec<String>,
+    /// `[[allow]]` entries
+    pub entries: Vec<AllowEntry>,
+}
+
+/// Result of applying the allowlist to a finding set.
+#[derive(Clone, Debug, Default)]
+pub struct Applied {
+    /// findings no entry matched — these fail the audit
+    pub unallowed: Vec<Finding>,
+    /// number of findings suppressed by entries
+    pub suppressed: usize,
+    /// human-readable descriptions of stale entries — these fail too
+    pub stale: Vec<String>,
+}
+
+fn unquote(v: &str, where_: &str) -> Result<String, String> {
+    let v = v.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        Ok(v[1..v.len() - 1].to_string())
+    } else {
+        Err(format!("audit.toml: expected a quoted string in {where_}, got `{v}`"))
+    }
+}
+
+/// Strip a `#` comment that is not inside a quoted string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse `audit.toml` text.
+pub fn parse(text: &str) -> Result<Allowlist, String> {
+    let mut out = Allowlist::default();
+    // section: 0 = none/top, 1 = [d4], 2 = current [[allow]] entry
+    let mut section = 0u8;
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "[[allow]]" {
+            out.entries.push(AllowEntry::default());
+            section = 2;
+            continue;
+        }
+        if line == "[d4]" {
+            section = 1;
+            continue;
+        }
+        if line.starts_with('[') {
+            return Err(format!("audit.toml:{lineno}: unknown section `{line}`"));
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("audit.toml:{lineno}: expected `key = value`, got `{line}`"))?;
+        let key = key.trim();
+        let value = value.trim();
+        match (section, key) {
+            (1, "files") => {
+                let inner = value
+                    .strip_prefix('[')
+                    .and_then(|v| v.strip_suffix(']'))
+                    .ok_or_else(|| {
+                        format!("audit.toml:{lineno}: [d4] files must be a one-line array")
+                    })?;
+                for part in inner.split(',') {
+                    let part = part.trim();
+                    if part.is_empty() {
+                        continue;
+                    }
+                    out.d4_files.push(unquote(part, "[d4] files")?);
+                }
+            }
+            (2, _) => {
+                let entry = out
+                    .entries
+                    .last_mut()
+                    .expect("section 2 implies at least one entry");
+                match key {
+                    "rule" => entry.rule = unquote(value, "allow.rule")?,
+                    "file" => entry.file = unquote(value, "allow.file")?,
+                    "contains" => entry.contains = unquote(value, "allow.contains")?,
+                    "reason" => entry.reason = unquote(value, "allow.reason")?,
+                    "count" => {
+                        let c: usize = value.parse().map_err(|_| {
+                            format!("audit.toml:{lineno}: count must be an integer, got `{value}`")
+                        })?;
+                        entry.count = Some(c);
+                    }
+                    _ => {
+                        return Err(format!(
+                            "audit.toml:{lineno}: unknown [[allow]] key `{key}`"
+                        ));
+                    }
+                }
+            }
+            _ => {
+                return Err(format!(
+                    "audit.toml:{lineno}: key `{key}` outside a known section"
+                ));
+            }
+        }
+    }
+    for (i, e) in out.entries.iter().enumerate() {
+        if e.rule.is_empty() || e.file.is_empty() || e.contains.is_empty() {
+            return Err(format!(
+                "audit.toml: [[allow]] entry #{} needs rule, file and contains",
+                i + 1
+            ));
+        }
+        if e.reason.is_empty() {
+            return Err(format!(
+                "audit.toml: [[allow]] entry #{} ({} {}): a reason is required",
+                i + 1,
+                e.rule,
+                e.file
+            ));
+        }
+    }
+    Ok(out)
+}
+
+impl AllowEntry {
+    fn matches(&self, f: &Finding) -> bool {
+        self.rule == f.rule && self.file == f.file && f.text.contains(&self.contains)
+    }
+
+    fn describe(&self) -> String {
+        format!("[[allow]] {} {} contains=\"{}\"", self.rule, self.file, self.contains)
+    }
+}
+
+impl Allowlist {
+    /// Split `findings` into suppressed and unallowed, and detect stale
+    /// entries (zero matches, or a match count different from `count`).
+    pub fn apply(&self, findings: Vec<Finding>) -> Applied {
+        let mut matched = vec![0usize; self.entries.len()];
+        let mut applied = Applied::default();
+        for f in findings {
+            let mut hit = false;
+            for (ei, e) in self.entries.iter().enumerate() {
+                if e.matches(&f) {
+                    matched[ei] += 1;
+                    hit = true;
+                }
+            }
+            if hit {
+                applied.suppressed += 1;
+            } else {
+                applied.unallowed.push(f);
+            }
+        }
+        for (e, &got) in self.entries.iter().zip(&matched) {
+            let stale = match e.count {
+                Some(want) => got != want,
+                None => got == 0,
+            };
+            if stale {
+                let want = e.count.map_or("≥1".to_string(), |c| c.to_string());
+                applied.stale.push(format!(
+                    "{} matched {got} finding(s), expected {want} — update or remove it",
+                    e.describe()
+                ));
+            }
+        }
+        applied
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# exceptions with reasons
+[d4]
+files = ["rust/src/engine/mod.rs"]
+
+[[allow]]
+rule = "D3"
+file = "rust/src/pruning/thanos.rs"
+contains = "delta[jj] as f32"
+count = 1
+reason = "seed-arithmetic rounding point"
+"#;
+
+    #[test]
+    fn parses_sections_entries_and_arrays() {
+        let a = parse(SAMPLE).unwrap();
+        assert_eq!(a.d4_files, vec!["rust/src/engine/mod.rs"]);
+        assert_eq!(a.entries.len(), 1);
+        let e = &a.entries[0];
+        assert_eq!(e.rule, "D3");
+        assert_eq!(e.count, Some(1));
+        assert_eq!(e.reason, "seed-arithmetic rounding point");
+    }
+
+    #[test]
+    fn missing_reason_is_rejected() {
+        let bad = "[[allow]]\nrule = \"D3\"\nfile = \"x.rs\"\ncontains = \"y\"\n";
+        let err = parse(bad).unwrap_err();
+        assert!(err.contains("reason"), "{err}");
+    }
+
+    #[test]
+    fn unknown_keys_and_sections_are_rejected() {
+        assert!(parse("[mystery]\n").is_err());
+        assert!(parse("[[allow]]\nrule = \"D3\"\nbogus = \"x\"\n").is_err());
+    }
+
+    fn finding(rule: &'static str, file: &str, text: &str) -> Finding {
+        Finding {
+            rule,
+            file: file.to_string(),
+            line: 1,
+            msg: String::new(),
+            text: text.to_string(),
+        }
+    }
+
+    #[test]
+    fn apply_suppresses_matches_and_reports_stale() {
+        let a = parse(SAMPLE).unwrap();
+        let hit = finding("D3", "rust/src/pruning/thanos.rs", "row[jj] -= delta[jj] as f32;");
+        let miss = finding("D3", "rust/src/pruning/thanos.rs", "other as f32");
+        let r = a.apply(vec![hit.clone(), miss]);
+        assert_eq!(r.suppressed, 1);
+        assert_eq!(r.unallowed.len(), 1);
+        assert!(r.stale.is_empty(), "{:?}", r.stale);
+        // same entry with nothing to match → stale
+        let r2 = a.apply(Vec::new());
+        assert_eq!(r2.stale.len(), 1);
+        // count mismatch (two matches for count = 1) → stale
+        let r3 = a.apply(vec![hit.clone(), hit]);
+        assert_eq!(r3.suppressed, 2);
+        assert_eq!(r3.stale.len(), 1);
+    }
+}

@@ -1,0 +1,430 @@
+//! A small purpose-built Rust lexer.
+//!
+//! `syn` (the obvious choice) is a registry dependency the offline
+//! vendor set does not carry, and the determinism rules (DESIGN.md
+//! §Determinism-contract) only need token-level structure: identifiers,
+//! punctuation, literals and comments with exact line numbers, plus
+//! enough bracket matching to delimit `#[cfg(test)]` items and call
+//! argument spans. So the lexer is written from scratch, like the
+//! crate's linear algebra.
+//!
+//! It understands the token shapes that would otherwise break a naive
+//! scanner: nested block comments, string escapes including the
+//! backslash-newline line continuation, raw strings (`r"…"`,
+//! `r#"…"#`, `br"…"`), byte strings, char literals vs lifetimes, and
+//! float literals (`1.5e-3` does not end at the dot). Everything else
+//! is a single-character punctuation token.
+
+/// Token class. `Comment` tokens are kept (rule D4 reads `// SAFETY:`
+/// markers); rules that only care about code filter them out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Lit,
+    Comment,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+fn is_id_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_id_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens. Never fails: unrecognized bytes become
+/// punctuation tokens, unterminated literals run to end-of-file.
+pub fn lex(src: &str) -> Vec<Token> {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let text = |a: usize, b: usize| -> String { s[a..b].iter().collect() };
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            toks.push(Token { kind: Kind::Comment, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        // block comment (nesting)
+        if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let start = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if s[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if s[j] == '/' && j + 1 < n && s[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if s[j] == '*' && j + 1 < n && s[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            toks.push(Token { kind: Kind::Comment, text: text(i, j), line: start });
+            i = j;
+            continue;
+        }
+        // raw (byte) strings: r"…", r#"…"#, br"…", br#"…"#
+        if c == 'r' || c == 'b' {
+            let mut k = i;
+            let mut pref = 0usize;
+            while k < n && (s[k] == 'r' || s[k] == 'b') && pref < 2 {
+                pref += 1;
+                k += 1;
+            }
+            let has_r = s[i..k].contains(&'r');
+            if has_r && k < n && (s[k] == '#' || s[k] == '"') {
+                let mut hashes = 0usize;
+                while k < n && s[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+                if k < n && s[k] == '"' {
+                    let start = line;
+                    let mut j = k + 1;
+                    'scan: while j < n {
+                        if s[j] == '\n' {
+                            line += 1;
+                        } else if s[j] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && j + 1 + h < n && s[j + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                j += 1 + hashes;
+                                break 'scan;
+                            }
+                        }
+                        j += 1;
+                    }
+                    toks.push(Token { kind: Kind::Lit, text: text(i, j), line: start });
+                    i = j;
+                    continue;
+                }
+                // `r#ident` raw identifiers fall through to ident lexing
+            }
+        }
+        // plain (byte) strings
+        if c == '"' || (c == 'b' && i + 1 < n && s[i + 1] == '"') {
+            let start = line;
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            while j < n {
+                if s[j] == '\\' {
+                    // escapes, including the backslash-newline
+                    // continuation (which must still count the line)
+                    if j + 1 < n && s[j + 1] == '\n' {
+                        line += 1;
+                    }
+                    j += 2;
+                    continue;
+                }
+                if s[j] == '\n' {
+                    line += 1;
+                }
+                if s[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Token { kind: Kind::Lit, text: text(i, j), line: start });
+            i = j;
+            continue;
+        }
+        // char literal vs lifetime
+        if c == '\'' {
+            let mut j = i + 1;
+            if j < n && is_id_start(s[j]) {
+                let mut k = j;
+                while k < n && is_id_cont(s[k]) {
+                    k += 1;
+                }
+                if k == j + 1 && k < n && s[k] == '\'' {
+                    // 'x' — a one-character char literal
+                    toks.push(Token { kind: Kind::Lit, text: text(i, k + 1), line });
+                    i = k + 1;
+                } else {
+                    // 'ident — a lifetime
+                    toks.push(Token { kind: Kind::Lit, text: text(i, k), line });
+                    i = k;
+                }
+                continue;
+            }
+            if j < n && s[j] == '\\' {
+                j += 2;
+                while j < n && s[j] != '\'' {
+                    j += 1;
+                }
+                j += 1;
+            } else {
+                j += 1;
+                if j < n && s[j] == '\'' {
+                    j += 1;
+                }
+            }
+            let j = j.min(n);
+            toks.push(Token { kind: Kind::Lit, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        if is_id_start(c) {
+            let mut j = i;
+            while j < n && is_id_cont(s[j]) {
+                j += 1;
+            }
+            toks.push(Token { kind: Kind::Ident, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && is_id_cont(s[j]) {
+                j += 1;
+            }
+            if j < n && s[j] == '.' && j + 1 < n && s[j + 1].is_ascii_digit() {
+                j += 1;
+                while j < n && is_id_cont(s[j]) {
+                    j += 1;
+                }
+            }
+            toks.push(Token { kind: Kind::Lit, text: text(i, j), line });
+            i = j;
+            continue;
+        }
+        toks.push(Token { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+/// Mark tokens belonging to `#[cfg(test)]` items (and the attribute
+/// itself) as masked. Returns one bool per token: `true` = keep.
+///
+/// The determinism contract governs production compute paths; test
+/// modules legitimately use timing, hash containers and ad-hoc
+/// reductions, so every rule runs on the unmasked stream only.
+pub fn mask_test_code(toks: &[Token]) -> Vec<bool> {
+    let mut keep = vec![true; toks.len()];
+    // indices of non-comment tokens (attributes and items are matched
+    // on code tokens; interleaved comments are masked by range)
+    let idxs: Vec<usize> = (0..toks.len())
+        .filter(|&i| toks[i].kind != Kind::Comment)
+        .collect();
+    let m = idxs.len();
+    let tk = |p: usize| -> (&Kind, &str) { (&toks[idxs[p]].kind, toks[idxs[p]].text.as_str()) };
+    let is_p = |p: usize, ch: &str| -> bool {
+        let (k, t) = tk(p);
+        *k == Kind::Punct && t == ch
+    };
+    let mut p = 0usize;
+    while p < m {
+        if is_p(p, "#") && p + 1 < m && is_p(p + 1, "[") {
+            // scan the attribute for `cfg` … `test`
+            let mut q = p + 2;
+            let mut depth = 1usize;
+            let mut saw_cfg = false;
+            let mut is_test = false;
+            while q < m && depth > 0 {
+                let (k, t) = tk(q);
+                if *k == Kind::Punct && t == "[" {
+                    depth += 1;
+                } else if *k == Kind::Punct && t == "]" {
+                    depth -= 1;
+                } else if *k == Kind::Ident && t == "cfg" {
+                    saw_cfg = true;
+                } else if *k == Kind::Ident && t == "test" && saw_cfg {
+                    is_test = true;
+                }
+                q += 1;
+            }
+            if is_test {
+                // skip any further attributes on the same item
+                while q + 1 < m && is_p(q, "#") && is_p(q + 1, "[") {
+                    q += 2;
+                    let mut d = 1usize;
+                    while q < m && d > 0 {
+                        if is_p(q, "[") {
+                            d += 1;
+                        } else if is_p(q, "]") {
+                            d -= 1;
+                        }
+                        q += 1;
+                    }
+                }
+                // mask through the end of the item: the matching `}` of
+                // its first top-level brace, or a top-level `;`
+                let start = p;
+                let mut d = 0isize;
+                while q < m {
+                    let (k, t) = tk(q);
+                    if *k == Kind::Punct && (t == "(" || t == "[") {
+                        d += 1;
+                    } else if *k == Kind::Punct && (t == ")" || t == "]") {
+                        d -= 1;
+                    } else if *k == Kind::Punct && t == "{" && d == 0 {
+                        let mut bd = 1usize;
+                        q += 1;
+                        while q < m && bd > 0 {
+                            if is_p(q, "{") {
+                                bd += 1;
+                            } else if is_p(q, "}") {
+                                bd -= 1;
+                            }
+                            q += 1;
+                        }
+                        break;
+                    } else if *k == Kind::Punct && t == ";" && d == 0 {
+                        q += 1;
+                        break;
+                    }
+                    q += 1;
+                }
+                // mask the token range, comments included
+                let lo = idxs[start];
+                let hi = if q < m { idxs[q] } else { toks.len() };
+                for slot in keep.iter_mut().take(hi).skip(lo) {
+                    *slot = false;
+                }
+                p = q;
+                continue;
+            }
+        }
+        p += 1;
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<(String, u32)> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| (t.text, t.line))
+            .collect()
+    }
+
+    #[test]
+    fn lines_survive_comments_strings_and_continuations() {
+        let src = "/* a\nb */ one\n\"x\\\ny\" two\nr#\"raw\nstill\"# three\n";
+        let ids = idents(src);
+        assert_eq!(
+            ids,
+            vec![
+                ("one".to_string(), 2),
+                ("two".to_string(), 4),
+                ("three".to_string(), 6)
+            ]
+        );
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) { let c = 'x'; }");
+        let lits: Vec<String> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Lit)
+            .map(|t| t.text.clone())
+            .collect();
+        assert_eq!(lits, vec!["'a", "'a", "'x'"]);
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let ids = idents("/* x /* y */ z */ after");
+        assert_eq!(ids, vec![("after".to_string(), 1)]);
+    }
+
+    #[test]
+    fn float_literals_do_not_split_at_the_dot() {
+        let toks = lex("let x = 1.5e-3 + 0.0;");
+        let lits: Vec<String> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Lit)
+            .map(|t| t.text.clone())
+            .collect();
+        // `e-3` exponent sign splits (harmless for the rules): the key
+        // property is that `1.5` and `0.0` stay single tokens
+        assert!(lits.contains(&"1.5e".to_string()) || lits.contains(&"1.5e-3".to_string()));
+        assert!(lits.contains(&"0.0".to_string()));
+    }
+
+    #[test]
+    fn cfg_test_mod_is_masked_entirely() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn dead() { HashMap::new(); }\n}\nfn live2() {}\n";
+        let toks = lex(src);
+        let keep = mask_test_code(&toks);
+        let kept: Vec<&str> = toks
+            .iter()
+            .zip(&keep)
+            .filter(|(t, &k)| k && t.kind == Kind::Ident)
+            .map(|(t, _)| t.text.as_str())
+            .collect();
+        assert!(kept.contains(&"live"));
+        assert!(kept.contains(&"live2"));
+        assert!(!kept.contains(&"dead"));
+        assert!(!kept.contains(&"HashMap"));
+    }
+
+    #[test]
+    fn cfg_test_use_item_is_masked_to_the_semicolon() {
+        let src = "#[cfg(test)]\nuse std::collections::HashSet;\nfn live() {}\n";
+        let toks = lex(src);
+        let keep = mask_test_code(&toks);
+        let kept: Vec<&str> = toks
+            .iter()
+            .zip(&keep)
+            .filter(|(t, &k)| k && t.kind == Kind::Ident)
+            .map(|(t, _)| t.text.as_str())
+            .collect();
+        assert!(!kept.contains(&"HashSet"));
+        assert!(kept.contains(&"live"));
+    }
+
+    #[test]
+    fn cfg_all_test_counts_as_test() {
+        let src = "#[cfg(all(test, feature = \"x\"))]\nmod t { fn dead() {} }\nfn live() {}\n";
+        let toks = lex(src);
+        let keep = mask_test_code(&toks);
+        let kept: Vec<&str> = toks
+            .iter()
+            .zip(&keep)
+            .filter(|(t, &k)| k && t.kind == Kind::Ident)
+            .map(|(t, _)| t.text.as_str())
+            .collect();
+        assert!(!kept.contains(&"dead"));
+        assert!(kept.contains(&"live"));
+    }
+}

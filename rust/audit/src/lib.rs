@@ -1,0 +1,93 @@
+//! `thanos-audit` — the determinism-contract static analyzer.
+//!
+//! The whole performance story of the `thanos` crate rests on one
+//! contract: serial == parallel **bitwise**, and arithmetic faithful to
+//! the seed chains (DESIGN.md §Perf-L3/L4/L5). Runtime bit-identity
+//! tests sample a handful of shapes; this crate checks the contract at
+//! the *source* level, as named, explainable rules over the full
+//! `rust/src` tree:
+//!
+//! | rule | contract |
+//! |---|---|
+//! | D1 | no shared-state sync primitives inside engine-submission closures — cross-thread accumulation goes through per-band slots reduced in ascending order |
+//! | D2 | no `HashMap`/`HashSet` in compute modules — order-stable containers only |
+//! | D3 | FMA (`mul_add`) and `as f32` narrowing only at the designated rounding points in `linalg/kernel.rs`; deliberate exceptions allowlisted |
+//! | D4 | `unsafe` only in allowlisted files, each occurrence with a `// SAFETY:` comment |
+//! | D5 | no `std::thread::{spawn,scope,Builder}` outside `engine/` |
+//! | D6 | no wall-clock or ambient RNG in compute paths |
+//!
+//! `cargo run -p thanos-audit` scans the tree against the checked-in
+//! `audit.toml` and exits nonzero on any unallowlisted finding or stale
+//! allowlist entry. The test suite (`tests/rules.rs`) pins every rule
+//! with positive/negative fixtures *and* asserts the real tree is
+//! clean, so `cargo test` carries the gate too.
+
+#![deny(unsafe_code)]
+
+pub mod allowlist;
+pub mod lexer;
+pub mod rules;
+
+pub use allowlist::{Allowlist, Applied};
+pub use rules::{analyze_source, Finding, RuleConfig};
+
+use std::path::{Path, PathBuf};
+
+/// Collect every `.rs` file under `root/rust/src`, sorted by path so
+/// reports (and finding order) are stable across filesystems.
+pub fn source_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.join("rust").join("src")];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Repo-relative path with forward slashes (rule scoping + reports).
+pub fn rel_path(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    let parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    parts.join("/")
+}
+
+/// Scan the tree under `root` with the given D4 file list. Returns
+/// `(files_scanned, findings)`.
+pub fn scan_tree(root: &Path, cfg: &RuleConfig) -> std::io::Result<(usize, Vec<Finding>)> {
+    let files = source_files(root)?;
+    let mut findings = Vec::new();
+    for file in &files {
+        let src = std::fs::read_to_string(file)?;
+        let rel = rel_path(root, file);
+        findings.extend(analyze_source(&rel, &src, cfg));
+    }
+    Ok((files.len(), findings))
+}
+
+/// Locate the repo root: the nearest ancestor of `start` containing
+/// `audit.toml`, falling back to the workspace root this crate was
+/// compiled in (two levels above its manifest).
+pub fn find_root(start: &Path) -> PathBuf {
+    let mut cur = Some(start);
+    while let Some(dir) = cur {
+        if dir.join("audit.toml").is_file() {
+            return dir.to_path_buf();
+        }
+        cur = dir.parent();
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("..")
+        .to_path_buf()
+}

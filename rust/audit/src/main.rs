@@ -1,0 +1,75 @@
+//! CLI: `cargo run -p thanos-audit [-- --root <repo-root>]`
+//!
+//! Scans `rust/src` against the checked-in `audit.toml` and prints one
+//! `file:line · rule · explanation` row per finding. Exit codes:
+//! `0` clean, `1` unallowlisted findings, `2` stale allowlist entries
+//! or configuration errors — all nonzero so CI and pre-push hooks can
+//! gate on it directly.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use thanos_audit::{scan_tree, Allowlist, RuleConfig};
+
+fn run() -> Result<u8, String> {
+    let mut args = std::env::args().skip(1);
+    let mut root: Option<PathBuf> = None;
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => {
+                let v = args.next().ok_or_else(|| "--root needs a path".to_string())?;
+                root = Some(PathBuf::from(v));
+            }
+            "--help" | "-h" => {
+                println!("usage: thanos-audit [--root <repo-root>]");
+                return Ok(0);
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        thanos_audit::find_root(&cwd)
+    });
+    let toml_path = root.join("audit.toml");
+    let toml_text = std::fs::read_to_string(&toml_path)
+        .map_err(|e| format!("cannot read {}: {e}", toml_path.display()))?;
+    let allow: Allowlist = thanos_audit::allowlist::parse(&toml_text)?;
+    let cfg = RuleConfig { d4_files: allow.d4_files.clone() };
+    let (n_files, findings) =
+        scan_tree(&root, &cfg).map_err(|e| format!("scanning {}: {e}", root.display()))?;
+    let applied = allow.apply(findings);
+    for f in &applied.unallowed {
+        println!("{}", f.render());
+        println!("    {}", f.text);
+    }
+    for s in &applied.stale {
+        println!("stale allowlist entry: {s}");
+    }
+    let clean = applied.unallowed.is_empty() && applied.stale.is_empty();
+    println!(
+        "thanos-audit: {n_files} files scanned, {} finding(s) suppressed by audit.toml, \
+         {} unallowlisted, {} stale {}",
+        applied.suppressed,
+        applied.unallowed.len(),
+        applied.stale.len(),
+        if clean { "— clean" } else { "— FAIL" },
+    );
+    if !applied.unallowed.is_empty() {
+        Ok(1)
+    } else if !applied.stale.is_empty() {
+        Ok(2)
+    } else {
+        Ok(0)
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => ExitCode::from(code),
+        Err(e) => {
+            eprintln!("thanos-audit: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

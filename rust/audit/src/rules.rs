@@ -1,0 +1,353 @@
+//! The determinism-contract rules D1–D6 (DESIGN.md
+//! §Determinism-contract).
+//!
+//! Every rule is a token-level pass over one source file, scoped by the
+//! file's repo-relative path. Findings carry the source line text so
+//! the allowlist can match on content (stable under line drift) and so
+//! reports are explainable without opening the file.
+
+use crate::lexer::{self, Kind};
+
+/// Module prefixes whose code is "compute": the paths the
+/// serial==parallel bitwise contract and the seed-arithmetic contract
+/// govern. Everything else (config, IO, metrics, CLI, eval) may use
+/// timing, hashing and ad-hoc iteration freely.
+pub const COMPUTE_PREFIXES: [&str; 4] = [
+    "rust/src/linalg",
+    "rust/src/pruning",
+    "rust/src/sparse",
+    "rust/src/engine",
+];
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// rule id: `"D1"` … `"D6"`
+    pub rule: &'static str,
+    /// repo-relative path with forward slashes
+    pub file: String,
+    /// 1-based line
+    pub line: u32,
+    /// human explanation of the contract the site breaks
+    pub msg: String,
+    /// trimmed source line text (allowlist matching + reports)
+    pub text: String,
+}
+
+impl Finding {
+    /// `file:line · rule · explanation` — the report line format.
+    pub fn render(&self) -> String {
+        format!("{}:{} · {} · {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Static rule configuration (the D4 file allowlist comes from
+/// `audit.toml`, not from code).
+#[derive(Clone, Debug, Default)]
+pub struct RuleConfig {
+    /// Files allowed to contain `unsafe` at all (rule D4). Every
+    /// occurrence still needs a `// SAFETY:` comment.
+    pub d4_files: Vec<String>,
+}
+
+/// Sync primitives banned inside engine-submission closures (rule D1).
+const D1_BANNED: [&str; 8] = [
+    "Mutex",
+    "RwLock",
+    "lock",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_max",
+    "fetch_min",
+    "compare_exchange",
+];
+
+/// `std::thread` constructors banned outside `engine/` (rule D5).
+const D5_BANNED: [&str; 3] = ["spawn", "scope", "Builder"];
+
+/// Path heads that mean wall-clock / ambient entropy (rule D6) when
+/// followed by `::`.
+const D6_PATH: [&str; 3] = ["Instant", "SystemTime", "rand"];
+
+/// Bare calls that mean ambient entropy (rule D6).
+const D6_BARE: [&str; 2] = ["thread_rng", "from_entropy"];
+
+fn is_compute(path: &str) -> bool {
+    COMPUTE_PREFIXES.iter().any(|p| path.starts_with(p))
+}
+
+/// Analyze one source file. `path` is the repo-relative path (forward
+/// slashes) deciding which rules apply; `#[cfg(test)]` items are
+/// excluded before any rule runs.
+pub fn analyze_source(path: &str, src: &str, cfg: &RuleConfig) -> Vec<Finding> {
+    let lines: Vec<&str> = src.split('\n').collect();
+    let toks = lexer::lex(src);
+    let keep = lexer::mask_test_code(&toks);
+    let code: Vec<(Kind, &str, u32)> = toks
+        .iter()
+        .zip(&keep)
+        .filter(|(t, &k)| k && t.kind != Kind::Comment)
+        .map(|(t, _)| (t.kind, t.text.as_str(), t.line))
+        .collect();
+    let n = code.len();
+    let compute = is_compute(path);
+    let in_engine = path.starts_with("rust/src/engine");
+    let is_kernel = path == "rust/src/linalg/kernel.rs";
+    let mut out: Vec<Finding> = Vec::new();
+    let line_text = |ln: u32| -> String {
+        lines
+            .get(ln as usize - 1)
+            .map(|l| l.trim().to_string())
+            .unwrap_or_default()
+    };
+    let is_punct = |i: usize, ch: &str| -> bool { code[i].0 == Kind::Punct && code[i].1 == ch };
+    let is_path_sep = |i: usize| -> bool {
+        i + 1 < n && is_punct(i, ":") && is_punct(i + 1, ":")
+    };
+
+    // D1 — ordered reductions: no shared-state sync primitives inside
+    // closures submitted to the engine. Cross-thread float accumulation
+    // must land in disjoint per-band slots reduced in ascending order
+    // on the submitter (`gemm::recon_loss` is the exemplar). The
+    // engine module itself implements the machinery and is exempt.
+    if compute && !in_engine {
+        let mut p = 0usize;
+        while p < n {
+            let (k, t, _) = code[p];
+            let submit =
+                k == Kind::Ident && matches!(t, "run" | "for_each_band" | "for_each_band2");
+            if submit && p > 0 && is_punct(p - 1, ".") && p + 1 < n && is_punct(p + 1, "(") {
+                let mut q = p + 2;
+                let mut depth = 1usize;
+                while q < n && depth > 0 {
+                    let (kk, tt, ll) = code[q];
+                    if kk == Kind::Punct && tt == "(" {
+                        depth += 1;
+                    } else if kk == Kind::Punct && tt == ")" {
+                        depth -= 1;
+                    } else if kk == Kind::Ident
+                        && (D1_BANNED.contains(&tt) || tt.starts_with("Atomic"))
+                    {
+                        out.push(Finding {
+                            rule: "D1",
+                            file: path.to_string(),
+                            line: ll,
+                            msg: format!(
+                                "`{tt}` inside an engine-submission closure: cross-thread \
+                                 accumulation must land in disjoint slot vectors reduced in \
+                                 ascending band order on the submitter (see gemm::recon_loss)"
+                            ),
+                            text: line_text(ll),
+                        });
+                    }
+                    q += 1;
+                }
+                p = q;
+                continue;
+            }
+            p += 1;
+        }
+    }
+
+    // D2 — order-stable containers only in compute modules: HashMap /
+    // HashSet iteration order varies run-to-run (RandomState), which is
+    // exactly the nondeterminism class the bitwise contract forbids.
+    if compute {
+        for &(k, t, ln) in &code {
+            if k == Kind::Ident && (t == "HashMap" || t == "HashSet") {
+                out.push(Finding {
+                    rule: "D2",
+                    file: path.to_string(),
+                    line: ln,
+                    msg: format!(
+                        "`{t}` in a compute module: iteration order is seed-dependent; use a \
+                         sorted Vec or BTreeMap/BTreeSet (order-stable) instead"
+                    ),
+                    text: line_text(ln),
+                });
+            }
+        }
+    }
+
+    // D3 — rounding points are fixed: FMA contraction and f64→f32
+    // narrowing change accumulation chains, so they are confined to
+    // linalg/kernel.rs (the kmix/kf32/kf64 cores own the designated
+    // rounding points); deliberate seed-arithmetic rounding elsewhere
+    // must be allowlisted with a reason.
+    if compute && !is_kernel {
+        for i in 0..n {
+            let (k, t, ln) = code[i];
+            if k != Kind::Ident {
+                continue;
+            }
+            if t == "mul_add" {
+                out.push(Finding {
+                    rule: "D3",
+                    file: path.to_string(),
+                    line: ln,
+                    msg: "`mul_add` outside linalg/kernel.rs: FMA contraction changes the \
+                          rounding chain; route through the kernel fmadd helpers"
+                        .to_string(),
+                    text: line_text(ln),
+                });
+            }
+            if t == "as" && i + 1 < n && code[i + 1].0 == Kind::Ident && code[i + 1].1 == "f32" {
+                out.push(Finding {
+                    rule: "D3",
+                    file: path.to_string(),
+                    line: ln,
+                    msg: "`as f32` narrowing outside linalg/kernel.rs: rounding points are \
+                          fixed by the seed-arithmetic contract; allowlist deliberate ones \
+                          in audit.toml"
+                        .to_string(),
+                    text: line_text(ln),
+                });
+            }
+        }
+    }
+
+    // D4 — `unsafe` only in allowlisted files, and every occurrence
+    // carries a `// SAFETY:` comment within the 4 preceding lines.
+    for &(k, t, ln) in &code {
+        if k == Kind::Ident && t == "unsafe" {
+            if !cfg.d4_files.iter().any(|f| f.as_str() == path) {
+                out.push(Finding {
+                    rule: "D4",
+                    file: path.to_string(),
+                    line: ln,
+                    msg: "`unsafe` outside the audited file list (audit.toml [d4] files)"
+                        .to_string(),
+                    text: line_text(ln),
+                });
+            } else {
+                // window = the finding's own line plus the 4 above
+                let hi = (ln as usize).min(lines.len());
+                let lo = (ln as usize).saturating_sub(5).min(hi);
+                let documented = lines[lo..hi].iter().any(|l| l.contains("SAFETY:"));
+                if !documented {
+                    out.push(Finding {
+                        rule: "D4",
+                        file: path.to_string(),
+                        line: ln,
+                        msg: "`unsafe` without a `// SAFETY:` comment within the 4 preceding \
+                              lines stating the invariant"
+                            .to_string(),
+                        text: line_text(ln),
+                    });
+                }
+            }
+        }
+    }
+
+    // D5 — no direct thread spawning outside engine/: every parallel
+    // path shares the PruneEngine pool (thread budget + determinism).
+    if !in_engine {
+        for i in 0..n {
+            let (k, t, ln) = code[i];
+            if k == Kind::Ident
+                && t == "thread"
+                && i + 3 < n
+                && is_path_sep(i + 1)
+                && code[i + 3].0 == Kind::Ident
+                && D5_BANNED.contains(&code[i + 3].1)
+            {
+                out.push(Finding {
+                    rule: "D5",
+                    file: path.to_string(),
+                    line: ln,
+                    msg: format!(
+                        "`thread::{}` outside engine/: all parallelism routes through the \
+                         PruneEngine pool",
+                        code[i + 3].1
+                    ),
+                    text: line_text(ln),
+                });
+            }
+        }
+    }
+
+    // D6 — no wall-clock or ambient RNG in compute paths: timing and
+    // entropy are observability concerns (metrics/benches), never
+    // inputs to seed-faithful kernels.
+    if compute {
+        for i in 0..n {
+            let (k, t, ln) = code[i];
+            if k != Kind::Ident {
+                continue;
+            }
+            if D6_BARE.contains(&t) {
+                out.push(Finding {
+                    rule: "D6",
+                    file: path.to_string(),
+                    line: ln,
+                    msg: format!("ambient RNG `{t}` in a compute path"),
+                    text: line_text(ln),
+                });
+            }
+            if D6_PATH.contains(&t) && i + 2 < n && is_path_sep(i + 1) {
+                let what = if t == "rand" { "ambient RNG" } else { "wall-clock" };
+                out.push(Finding {
+                    rule: "D6",
+                    file: path.to_string(),
+                    line: ln,
+                    msg: format!(
+                        "{what} `{t}::` in a compute path: timing and entropy stay out of \
+                         seed-faithful kernels (observability lives in metrics/benches)"
+                    ),
+                    text: line_text(ln),
+                });
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_with(files: &[&str]) -> RuleConfig {
+        RuleConfig { d4_files: files.iter().map(|s| s.to_string()).collect() }
+    }
+
+    #[test]
+    fn non_compute_paths_skip_compute_rules() {
+        let src = "use std::collections::HashMap;\nfn f() { let t = Instant::now(); }\n";
+        let f = analyze_source("rust/src/metrics.rs", src, &RuleConfig::default());
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn d5_applies_outside_compute_modules_too() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        let f = analyze_source("rust/src/metrics.rs", src, &RuleConfig::default());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "D5");
+    }
+
+    #[test]
+    fn render_format_is_file_line_rule() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        let f = analyze_source("rust/src/linalg/x.rs", src, &RuleConfig::default());
+        assert_eq!(f.len(), 1);
+        let r = f[0].render();
+        assert!(r.starts_with("rust/src/linalg/x.rs:1 · D6 · "), "{r}");
+    }
+
+    #[test]
+    fn d4_requires_both_file_listing_and_comment() {
+        let with_comment = "fn f() {\n    // SAFETY: disjoint bands\n    unsafe { g() }\n}\n";
+        let bare = "fn f() {\n    unsafe { g() }\n}\n";
+        let listed = cfg_with(&["rust/src/engine/mod.rs"]);
+        // listed + commented → clean
+        assert!(analyze_source("rust/src/engine/mod.rs", with_comment, &listed).is_empty());
+        // listed, no comment → 1 finding
+        assert_eq!(analyze_source("rust/src/engine/mod.rs", bare, &listed).len(), 1);
+        // unlisted, commented → 1 finding
+        assert_eq!(
+            analyze_source("rust/src/model/mod.rs", with_comment, &listed).len(),
+            1
+        );
+    }
+}

@@ -1,0 +1,9 @@
+// D1 negative: the blessed shape — disjoint per-band slots, reduced in
+// ascending order on the submitter after the job completes.
+fn good(eng: &Engine, rows: usize) -> f64 {
+    let mut slots = vec![0.0f64; rows];
+    eng.for_each_band(&mut slots, 1, |i, slot| {
+        slot[0] = work(i);
+    });
+    slots.iter().sum()
+}

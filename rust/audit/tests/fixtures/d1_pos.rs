@@ -1,0 +1,8 @@
+// D1 positive: shared-state sync primitives inside engine-submission
+// closures. Expected findings: 2 (`lock`, `fetch_add`).
+fn bad(eng: &Engine, out: &mut [f32], total: &std::sync::Mutex<f32>, n: &AtomicUsize) {
+    eng.run(4, |i| {
+        *total.lock().unwrap() += out[i];
+        n.fetch_add(1, Ordering::Relaxed);
+    });
+}

@@ -1,0 +1,10 @@
+// D2 negative: order-stable containers are the blessed replacements.
+use std::collections::BTreeMap;
+
+fn counts(keys: &[u32]) -> BTreeMap<u32, usize> {
+    let mut m = BTreeMap::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0) += 1;
+    }
+    m
+}

@@ -1,0 +1,16 @@
+// D2 positive: hash containers in a compute module. Expected findings:
+// 3 (the `use` plus two mentions); the cfg(test) HashSet is exempt.
+use std::collections::HashMap;
+
+fn counts() -> HashMap<u32, f32> {
+    HashMap::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+
+    fn fine_in_tests() {
+        let _ = HashSet::<u32>::new();
+    }
+}

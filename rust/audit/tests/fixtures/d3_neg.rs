@@ -1,0 +1,5 @@
+// D3 negative: f64 accumulation with the rounding left to the caller's
+// designated point; widening casts are always fine.
+fn f(a: f32, b: f32, c: f64) -> f64 {
+    c + (a as f64) * (b as f64)
+}

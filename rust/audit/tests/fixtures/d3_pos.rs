@@ -1,0 +1,10 @@
+// D3 positive outside kernel.rs: one FMA, one narrowing cast. Expected
+// findings: 2 (the widening `as f64` is never flagged). The same file
+// analyzed under the path rust/src/linalg/kernel.rs is clean — the
+// kernel owns the designated rounding points.
+fn f(a: f32, b: f32, c: f32, d: f64) -> f32 {
+    let x = a.mul_add(b, c);
+    let y = d as f32;
+    let z = (a as f64 + d) as f32;
+    x + y + z
+}

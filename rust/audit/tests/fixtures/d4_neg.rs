@@ -1,0 +1,6 @@
+// D4 negative: allowlisted file + a SAFETY comment within 4 lines.
+fn read(p: *const u32, q: *const u32) -> u32 {
+    // SAFETY: caller guarantees both pointers are valid and aligned
+    // (they come from a live, bounds-checked slice).
+    unsafe { *p + *q }
+}

@@ -1,0 +1,6 @@
+// D4 positive: an `unsafe` block with no safety comment in reach.
+// Expected: 1 finding when the file is on the [d4] list (missing
+// comment), and 1 finding when it is not (file not allowed at all).
+fn read(p: *const u32) -> u32 {
+    unsafe { *p }
+}

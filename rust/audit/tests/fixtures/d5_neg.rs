@@ -1,0 +1,5 @@
+// D5 negative: querying parallelism is fine anywhere; spawning is what
+// the rule forbids (and engine/ itself is exempt — it IS the pool).
+fn f() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}

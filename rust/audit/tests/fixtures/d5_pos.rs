@@ -1,0 +1,7 @@
+// D5 positive: raw thread spawning outside engine/. Expected: 2.
+fn f() {
+    std::thread::spawn(|| {});
+    std::thread::scope(|s| {
+        let _ = s;
+    });
+}

@@ -1,0 +1,6 @@
+// D6 negative: seeded, explicit randomness and no timing — the only
+// entropy a compute path may consume is a caller-provided seed.
+fn f(seed: u64) -> f64 {
+    let mut rng = crate::rng::Rng::new(seed);
+    rng.uniform()
+}

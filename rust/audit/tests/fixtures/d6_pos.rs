@@ -1,0 +1,8 @@
+// D6 positive: wall-clock and ambient RNG in a compute path. Expected
+// findings: 3 (Instant, SystemTime, rand::).
+fn f() -> f64 {
+    let t0 = std::time::Instant::now();
+    let _ = std::time::SystemTime::now();
+    let r: f64 = rand::random();
+    t0.elapsed().as_secs_f64() + r
+}

@@ -1,0 +1,243 @@
+//! Fixture tests for rules D1–D6, allowlist behaviour, and — the one
+//! that matters — a scan of the real tree against the real checked-in
+//! `audit.toml`, asserting it is clean. Every expected count below was
+//! pinned against the fixture by hand; a rule change that shifts any of
+//! them must update the fixture and the justification together.
+
+use thanos_audit::{allowlist, analyze_source, Finding, RuleConfig};
+
+fn fixture(name: &str) -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+fn analyze(name: &str, virtual_path: &str, d4_files: &[&str]) -> Vec<Finding> {
+    let cfg = RuleConfig {
+        d4_files: d4_files.iter().map(|s| s.to_string()).collect(),
+    };
+    analyze_source(virtual_path, &fixture(name), &cfg)
+}
+
+fn rules(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------- D1
+
+#[test]
+fn d1_flags_sync_primitives_inside_submission_closures() {
+    let f = analyze("d1_pos.rs", "rust/src/pruning/fake.rs", &[]);
+    assert_eq!(rules(&f), ["D1", "D1"], "{f:#?}");
+    assert!(f[0].text.contains("lock"), "{:?}", f[0]);
+    assert!(f[1].text.contains("fetch_add"), "{:?}", f[1]);
+}
+
+#[test]
+fn d1_accepts_the_per_band_slot_shape() {
+    let f = analyze("d1_neg.rs", "rust/src/pruning/fake.rs", &[]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn d1_does_not_apply_inside_engine_itself() {
+    // engine/ implements the primitives; the rule scopes to its users.
+    let f = analyze("d1_pos.rs", "rust/src/engine/fake.rs", &[]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+// ---------------------------------------------------------------- D2
+
+#[test]
+fn d2_flags_hash_containers_but_not_in_tests() {
+    let f = analyze("d2_pos.rs", "rust/src/sparse/fake.rs", &[]);
+    // the `use` plus two call-site mentions; the cfg(test) HashSet is
+    // masked out entirely.
+    assert_eq!(rules(&f), ["D2", "D2", "D2"], "{f:#?}");
+    assert!(f.iter().all(|x| x.text.contains("HashMap")), "{f:#?}");
+}
+
+#[test]
+fn d2_accepts_btree_containers() {
+    let f = analyze("d2_neg.rs", "rust/src/sparse/fake.rs", &[]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn d2_ignores_non_compute_modules() {
+    let f = analyze("d2_pos.rs", "rust/src/model/fake.rs", &[]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+// ---------------------------------------------------------------- D3
+
+#[test]
+fn d3_flags_fma_and_narrowing_outside_kernel() {
+    let f = analyze("d3_pos.rs", "rust/src/linalg/fake.rs", &[]);
+    // mul_add, `d as f32`, and the `(…) as f32` on the widened sum;
+    // the `a as f64` widening inside it is never flagged.
+    assert_eq!(rules(&f), ["D3", "D3", "D3"], "{f:#?}");
+    assert!(f[0].text.contains("mul_add"), "{:?}", f[0]);
+}
+
+#[test]
+fn d3_kernel_is_the_designated_rounding_point() {
+    let f = analyze("d3_pos.rs", "rust/src/linalg/kernel.rs", &[]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn d3_accepts_widening_only_arithmetic() {
+    let f = analyze("d3_neg.rs", "rust/src/linalg/fake.rs", &[]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+// ---------------------------------------------------------------- D4
+
+#[test]
+fn d4_flags_unsafe_without_safety_comment() {
+    let f = analyze("d4_pos.rs", "rust/src/engine/mod.rs", &["rust/src/engine/mod.rs"]);
+    assert_eq!(rules(&f), ["D4"], "{f:#?}");
+    assert!(f[0].msg.contains("SAFETY"), "{:?}", f[0]);
+}
+
+#[test]
+fn d4_flags_unsafe_outside_the_file_allowlist() {
+    let f = analyze("d4_pos.rs", "rust/src/model/mod.rs", &["rust/src/engine/mod.rs"]);
+    assert_eq!(rules(&f), ["D4"], "{f:#?}");
+    assert!(f[0].msg.contains("allowlist"), "{:?}", f[0]);
+}
+
+#[test]
+fn d4_accepts_commented_unsafe_in_allowed_files() {
+    let f = analyze("d4_neg.rs", "rust/src/engine/mod.rs", &["rust/src/engine/mod.rs"]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+// ---------------------------------------------------------------- D5
+
+#[test]
+fn d5_flags_thread_spawning_outside_engine() {
+    let f = analyze("d5_pos.rs", "rust/src/pruning/fake.rs", &[]);
+    assert_eq!(rules(&f), ["D5", "D5"], "{f:#?}");
+}
+
+#[test]
+fn d5_engine_is_allowed_to_spawn() {
+    let f = analyze("d5_pos.rs", "rust/src/engine/fake.rs", &[]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn d5_accepts_parallelism_queries() {
+    let f = analyze("d5_neg.rs", "rust/src/pruning/fake.rs", &[]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+// ---------------------------------------------------------------- D6
+
+#[test]
+fn d6_flags_wall_clock_and_ambient_rng() {
+    let f = analyze("d6_pos.rs", "rust/src/linalg/fake.rs", &[]);
+    assert_eq!(rules(&f), ["D6", "D6", "D6"], "{f:#?}");
+    assert!(f[0].text.contains("Instant"), "{:?}", f[0]);
+    assert!(f[2].text.contains("rand::"), "{:?}", f[2]);
+}
+
+#[test]
+fn d6_accepts_seeded_rng() {
+    let f = analyze("d6_neg.rs", "rust/src/linalg/fake.rs", &[]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+// ------------------------------------------------------- allowlist
+
+#[test]
+fn allowlist_suppresses_exact_counts_and_reports_stale() {
+    let toml = r#"
+[d4]
+files = []
+
+[[allow]]
+rule = "D6"
+file = "rust/src/linalg/fake.rs"
+contains = "Instant::now"
+count = 1
+reason = "fixture: timing is observability here"
+"#;
+    let allow = allowlist::parse(toml).unwrap();
+    let f = analyze("d6_pos.rs", "rust/src/linalg/fake.rs", &[]);
+    let applied = allow.apply(f);
+    assert_eq!(applied.suppressed, 1);
+    assert_eq!(applied.unallowed.len(), 2, "{:#?}", applied.unallowed);
+    assert!(applied.stale.is_empty(), "{:?}", applied.stale);
+}
+
+#[test]
+fn allowlist_entry_matching_nothing_is_stale() {
+    let toml = r#"
+[[allow]]
+rule = "D6"
+file = "rust/src/linalg/fake.rs"
+contains = "no_such_call"
+reason = "fixture: deliberately stale"
+"#;
+    let allow = allowlist::parse(toml).unwrap();
+    let f = analyze("d6_neg.rs", "rust/src/linalg/fake.rs", &[]);
+    let applied = allow.apply(f);
+    assert_eq!(applied.stale.len(), 1, "{:?}", applied.stale);
+    assert!(applied.stale[0].contains("no_such_call"), "{:?}", applied.stale);
+}
+
+#[test]
+fn allowlist_count_mismatch_is_stale() {
+    let toml = r#"
+[[allow]]
+rule = "D6"
+file = "rust/src/linalg/fake.rs"
+contains = "::now"
+count = 1
+reason = "fixture: pinned too tightly on purpose"
+"#;
+    let allow = allowlist::parse(toml).unwrap();
+    // d6_pos has two `::now` call sites → count = 1 is a mismatch.
+    let f = analyze("d6_pos.rs", "rust/src/linalg/fake.rs", &[]);
+    let applied = allow.apply(f);
+    assert_eq!(applied.suppressed, 2);
+    assert_eq!(applied.stale.len(), 1, "{:?}", applied.stale);
+}
+
+// ------------------------------------------------- the real gate
+
+/// The whole point: the shipped tree, scanned with the shipped
+/// `audit.toml`, has zero unallowlisted findings and zero stale
+/// entries. This runs under plain `cargo test`, so tier-1 CI carries
+/// the determinism-contract gate even without the CLI invocation.
+#[test]
+fn real_tree_is_clean_under_the_checked_in_allowlist() {
+    let root = thanos_audit::find_root(std::path::Path::new(env!("CARGO_MANIFEST_DIR")));
+    let toml_path = root.join("audit.toml");
+    let toml_text = std::fs::read_to_string(&toml_path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", toml_path.display()));
+    let allow = allowlist::parse(&toml_text).unwrap();
+    let cfg = RuleConfig {
+        d4_files: allow.d4_files.clone(),
+    };
+    let (n_files, findings) = thanos_audit::scan_tree(&root, &cfg).unwrap();
+    assert!(n_files >= 10, "expected the full tree, scanned only {n_files} files");
+    let applied = allow.apply(findings);
+    let rendered: Vec<String> = applied.unallowed.iter().map(Finding::render).collect();
+    assert!(
+        rendered.is_empty(),
+        "unallowlisted findings in the tree:\n{}",
+        rendered.join("\n")
+    );
+    assert!(
+        applied.stale.is_empty(),
+        "stale audit.toml entries:\n{}",
+        applied.stale.join("\n")
+    );
+    assert!(applied.suppressed > 0, "allowlist should be exercising real exceptions");
+}

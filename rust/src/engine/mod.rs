@@ -29,6 +29,8 @@
 //!   through [`EngineStats`] and surfaced in the coordinator report and
 //!   the `fig9_pruning_time` bench.
 
+pub mod model;
+
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -134,7 +136,19 @@ impl EngineStats {
 struct Shared {
     queue: Mutex<VecDeque<Arc<Job>>>,
     work_cv: Condvar,
+    /// Read with `Relaxed` everywhere: the flag itself carries no data —
+    /// the queue mutex orders it. It is only stored while holding
+    /// `queue` (see `Drop`) and only read by workers holding `queue`, so
+    /// mutex release/acquire provides the happens-before edge; the
+    /// atomic type just keeps it out of the `VecDeque` payload.
     shutdown: AtomicBool,
+    // The counters below are monotone observability gauges: written with
+    // `Relaxed` RMWs (atomicity without ordering) and read only through
+    // `stats()` snapshots for reports and benches. No control flow or
+    // weight arithmetic ever depends on them, and cross-thread *data*
+    // visibility is carried by the queue mutex and each job's completion
+    // latch — so stronger orderings here would buy nothing but fences.
+    // The audited exception ledger (audit.toml, rule D1/D6) points here.
     jobs_submitted: AtomicU64,
     jobs_inline: AtomicU64,
     tasks_executed: AtomicU64,
@@ -203,6 +217,11 @@ unsafe impl Send for Job {}
 unsafe impl Sync for Job {}
 
 impl Job {
+    /// `Relaxed` is sufficient: `fetch_add` is atomic regardless of
+    /// ordering, so indices are handed out exactly once; visibility of
+    /// the closure and its captures is established by the queue mutex
+    /// (push/pop) before any claim, and completion is published through
+    /// the `remaining` mutex — the claim counter orders nothing itself.
     fn claim(&self) -> Option<usize> {
         let i = self.next.fetch_add(1, Ordering::Relaxed);
         if i < self.n_tasks {
@@ -313,9 +332,9 @@ impl PruneEngine {
             return;
         }
 
-        // Erase the closure's lifetime so workers can hold it through
-        // the shared queue. Sound because this frame blocks on the
-        // completion latch below: the closure outlives every call.
+        // SAFETY: erase the closure's lifetime so workers can hold it
+        // through the shared queue. Sound because this frame blocks on
+        // the completion latch below: the closure outlives every call.
         let f_erased: *const (dyn Fn(usize) + Sync) = unsafe {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
         };
@@ -427,7 +446,20 @@ impl PruneEngine {
 
 impl Drop for PruneEngine {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::Relaxed);
+        // The store MUST happen while holding the queue mutex. A worker
+        // that has checked `shutdown` (false) and found the queue empty
+        // holds the mutex until `wait()` releases it; an unlocked store
+        // plus notify in that window would be consumed before the worker
+        // sleeps — a lost wakeup, and `join` below hangs forever. With
+        // the store under the lock, the worker either sees the flag at
+        // its check or is already parked when the notify lands. The
+        // exhaustive interleaving model in `engine::model` checks both
+        // protocols: the unlocked variant reaches the stuck state, this
+        // one cannot (`tests/engine_model.rs`).
+        {
+            let _queue = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Relaxed);
+        }
         self.shared.work_cv.notify_all();
         for handle in self.handles.lock().unwrap().drain(..) {
             let _ = handle.join();
@@ -483,6 +515,19 @@ mod tests {
             hits[i].fetch_add(1, Ordering::Relaxed);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn drop_joins_idle_workers_repeatedly() {
+        // Regression smoke test for the shutdown lost-wakeup fix: drop
+        // engines whose workers are idle-parked many times in a row.
+        // The exhaustive proof is `engine::model` (tests/engine_model.rs);
+        // this catches a reintroduced hang quickly (test harness timeout)
+        // rather than deterministically.
+        for _ in 0..64 {
+            let eng = PruneEngine::with_threads(4);
+            eng.run(8, |_| {});
+        }
     }
 
     #[test]

@@ -1,0 +1,304 @@
+//! Exhaustive-interleaving model of the engine's push / claim /
+//! terminate protocol — a loom-style checker over a hand-written
+//! abstraction, built in-tree because the offline vendor set has no
+//! model-checking crate.
+//!
+//! Each thread is a small program-counter machine over the shared state
+//! that matters to the protocol: the queue mutex, the `shutdown` flag,
+//! the queued job's claim counter and completion latch, and the
+//! `work_cv` wait set. [`explore`] runs a depth-first search over every
+//! interleaving of enabled transitions, memoizing visited states in a
+//! `BTreeSet` (order-stable — determinism rule D2 holds here too).
+//!
+//! Two modeling choices make the check *conservative*:
+//!
+//! - **No spurious wakeups.** A parked thread is enabled only after a
+//!   `notify`. Real condvars may wake spuriously and would eventually
+//!   paper over a lost wakeup, but `std` guarantees nothing — a
+//!   protocol that deadlocks here is wrong even if it usually limps
+//!   through in practice.
+//! - **Coarse atomic steps.** Lock-acquire+update+release sequences
+//!   whose intermediate states no other thread can observe are fused
+//!   into one transition; the shutdown-store step is the exception and
+//!   is split exactly as the code under test splits it, because that
+//!   window *is* the bug.
+//!
+//! Checked properties:
+//!
+//! 1. **No stuck state**: every non-final state has an enabled
+//!    transition (deadlock-freedom).
+//! 2. **Exactly-once execution**: every terminal state has all tasks
+//!    claimed and the completion latch at zero.
+//!
+//! [`Config::locked_shutdown`] selects between the shipped `Drop`
+//! protocol (store under the queue mutex) and the pre-fix variant
+//! (unlocked store). The checker finds the lost-wakeup deadlock in the
+//! latter — a worker that passed its shutdown check but has not yet
+//! parked consumes no notify, then sleeps forever — and proves the
+//! former clean; `tests/engine_model.rs` pins both outcomes as the
+//! regression test for `PruneEngine::drop`.
+
+use std::collections::BTreeSet;
+
+/// Worker program counter values.
+const W_ACQ: u8 = 0; // wants the queue lock
+const W_CHK: u8 = 1; // holds lock, about to check `shutdown`
+const W_SCAN: u8 = 2; // holds lock, scanning/retaining the queue
+const W_WAITING: u8 = 3; // holds lock, committed to waiting
+const W_EXEC: u8 = 4; // lock released, claim-executing the job
+const W_WAKE: u8 = 5; // notified, wants the lock back
+const W_PARKED: u8 = 8; // parked on `work_cv` (lock released)
+const W_DONE: u8 = 9; // exited the worker loop
+
+/// Submitter program counter values (the thread that runs `run_dyn`
+/// once and then drops the engine).
+const S_PUSH: u8 = 0;
+const S_NOTIFY: u8 = 1;
+const S_HELP: u8 = 2;
+const S_LATCH: u8 = 3;
+const S_STORE: u8 = 4;
+const S_NOTIFY2: u8 = 5;
+const S_JOIN: u8 = 6;
+const S_DONE: u8 = 7;
+
+/// No thread holds the queue mutex (holders are worker ids; submitter
+/// lock sections are fused into single transitions, so it never holds
+/// the lock across a visible state).
+const LOCK_FREE: i8 = -1;
+
+/// Model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// number of pool workers (the submitter is modeled separately)
+    pub workers: usize,
+    /// tasks in the single submitted job
+    pub tasks: u8,
+    /// `true` models the shipped `Drop` (shutdown stored under the
+    /// queue mutex); `false` models the pre-fix unlocked store
+    pub locked_shutdown: bool,
+}
+
+/// One interleaving state. `Ord` so the visited set can be a `BTreeSet`.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct State {
+    shutdown: bool,
+    job_present: bool,
+    next: u8,
+    remaining: u8,
+    lock: i8,
+    wpcs: Vec<u8>,
+    spc: u8,
+}
+
+impl State {
+    fn initial(cfg: &Config) -> State {
+        State {
+            shutdown: false,
+            job_present: false,
+            next: 0,
+            remaining: cfg.tasks,
+            lock: LOCK_FREE,
+            wpcs: vec![W_ACQ; cfg.workers],
+            spc: S_PUSH,
+        }
+    }
+
+    fn is_final(&self) -> bool {
+        self.spc == S_DONE && self.wpcs.iter().all(|&p| p == W_DONE)
+    }
+
+    /// `notify_all(work_cv)`: every parked thread becomes runnable (it
+    /// still has to reacquire the lock before rechecking).
+    fn notify_all(&mut self) {
+        for p in &mut self.wpcs {
+            if *p == W_PARKED {
+                *p = W_WAKE;
+            }
+        }
+    }
+}
+
+/// Result of exploring the full interleaving space.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// no deadlock, and every terminal state executed all tasks
+    Clean { states: usize, terminals: usize },
+    /// a reachable non-final state with no enabled transition
+    Stuck { states: usize, trace: Vec<String> },
+    /// a terminal state with unexecuted tasks or a nonzero latch
+    BadTerminal { states: usize, trace: Vec<String> },
+}
+
+fn worker_steps(cfg: &Config, st: &State, succ: &mut Vec<(String, State)>) {
+    for (i, &pc) in st.wpcs.iter().enumerate() {
+        let mut push = |label: String, f: &dyn Fn(&mut State)| {
+            let mut n = st.clone();
+            f(&mut n);
+            succ.push((label, n));
+        };
+        match pc {
+            W_ACQ if st.lock == LOCK_FREE => push(format!("w{i} acquires queue lock"), &|n| {
+                n.lock = i as i8;
+                n.wpcs[i] = W_CHK;
+            }),
+            W_CHK if st.shutdown => push(format!("w{i} sees shutdown, exits"), &|n| {
+                n.lock = LOCK_FREE;
+                n.wpcs[i] = W_DONE;
+            }),
+            W_CHK => push(format!("w{i} shutdown clear"), &|n| n.wpcs[i] = W_SCAN),
+            W_SCAN if st.job_present && st.next < cfg.tasks => {
+                push(format!("w{i} takes job, releases lock"), &|n| {
+                    n.lock = LOCK_FREE;
+                    n.wpcs[i] = W_EXEC;
+                })
+            }
+            W_SCAN => push(format!("w{i} retains: queue empty, will wait"), &|n| {
+                n.job_present = false; // fully-claimed job dropped
+                n.wpcs[i] = W_WAITING;
+            }),
+            W_WAITING => push(format!("w{i} parks on work_cv"), &|n| {
+                n.lock = LOCK_FREE;
+                n.wpcs[i] = W_PARKED;
+            }),
+            W_WAKE if st.lock == LOCK_FREE => {
+                push(format!("w{i} reacquires lock after wake"), &|n| {
+                    n.lock = i as i8;
+                    n.wpcs[i] = W_CHK;
+                })
+            }
+            W_EXEC if st.next < cfg.tasks => {
+                push(format!("w{i} claims+runs task {}", st.next), &|n| {
+                    n.next += 1;
+                    n.remaining -= 1;
+                })
+            }
+            W_EXEC => push(format!("w{i} job drained, rechecks queue"), &|n| {
+                n.wpcs[i] = W_ACQ;
+            }),
+            _ => {}
+        }
+    }
+}
+
+fn submitter_steps(cfg: &Config, st: &State, succ: &mut Vec<(String, State)>) {
+    let mut push = |label: &str, f: &dyn Fn(&mut State)| {
+        let mut n = st.clone();
+        f(&mut n);
+        succ.push((label.to_string(), n));
+    };
+    match st.spc {
+        S_PUSH if st.lock == LOCK_FREE => push("sub pushes job (under lock)", &|n| {
+            n.job_present = true;
+            n.spc = S_NOTIFY;
+        }),
+        S_NOTIFY => push("sub notifies work_cv", &|n| {
+            n.notify_all();
+            n.spc = S_HELP;
+        }),
+        S_HELP if st.next < cfg.tasks => push("sub claims+runs a task", &|n| {
+            n.next += 1;
+            n.remaining -= 1;
+        }),
+        S_HELP => push("sub drained its job", &|n| n.spc = S_LATCH),
+        S_LATCH if st.remaining == 0 => push("sub latch open (remaining==0)", &|n| {
+            n.spc = S_STORE;
+        }),
+        S_STORE if cfg.locked_shutdown => {
+            if st.lock == LOCK_FREE {
+                push("sub stores shutdown under queue lock", &|n| {
+                    n.shutdown = true;
+                    n.spc = S_NOTIFY2;
+                });
+            }
+        }
+        S_STORE => push("sub stores shutdown (no lock)", &|n| {
+            n.shutdown = true;
+            n.spc = S_NOTIFY2;
+        }),
+        S_NOTIFY2 => push("sub notifies work_cv for shutdown", &|n| {
+            n.notify_all();
+            n.spc = S_JOIN;
+        }),
+        S_JOIN if st.wpcs.iter().all(|&p| p == W_DONE) => push("sub joins workers", &|n| {
+            n.spc = S_DONE;
+        }),
+        _ => {}
+    }
+}
+
+/// DFS over every interleaving reachable from the initial state.
+pub fn explore(cfg: &Config) -> Outcome {
+    let mut seen: BTreeSet<State> = BTreeSet::new();
+    let mut stack: Vec<(State, Vec<String>)> = vec![(State::initial(cfg), Vec::new())];
+    let mut terminals = 0usize;
+    let mut stuck: Option<Vec<String>> = None;
+    let mut bad: Option<Vec<String>> = None;
+    while let Some((st, path)) = stack.pop() {
+        if !seen.insert(st.clone()) {
+            continue;
+        }
+        let mut succ: Vec<(String, State)> = Vec::new();
+        worker_steps(cfg, &st, &mut succ);
+        submitter_steps(cfg, &st, &mut succ);
+        if succ.is_empty() {
+            if st.is_final() {
+                terminals += 1;
+                if (st.next != cfg.tasks || st.remaining != 0) && bad.is_none() {
+                    let mut t = path.clone();
+                    t.push(format!("terminal with next={} remaining={}", st.next, st.remaining));
+                    bad = Some(t);
+                }
+            } else if stuck.is_none() {
+                let mut t = path.clone();
+                t.push(format!("STUCK: {st:?}"));
+                stuck = Some(t);
+            }
+            continue;
+        }
+        for (label, nst) in succ {
+            if !seen.contains(&nst) {
+                let mut npath = path.clone();
+                npath.push(label);
+                stack.push((nst, npath));
+            }
+        }
+    }
+    let states = seen.len();
+    if let Some(trace) = stuck {
+        Outcome::Stuck { states, trace }
+    } else if let Some(trace) = bad {
+        Outcome::BadTerminal { states, trace }
+    } else {
+        Outcome::Clean { states, terminals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unlocked_shutdown_store_has_a_lost_wakeup_deadlock() {
+        let out = explore(&Config { workers: 2, tasks: 2, locked_shutdown: false });
+        match out {
+            Outcome::Stuck { trace, .. } => {
+                let joined = trace.join("\n");
+                assert!(joined.contains("parks on work_cv"), "{joined}");
+                assert!(joined.contains("no lock"), "{joined}");
+            }
+            other => panic!("expected a deadlock, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn locked_shutdown_store_is_deadlock_free_and_exactly_once() {
+        let out = explore(&Config { workers: 2, tasks: 2, locked_shutdown: true });
+        match out {
+            Outcome::Clean { states, terminals } => {
+                assert!(states > 100, "suspiciously small space: {states}");
+                assert!(terminals > 0);
+            }
+            other => panic!("expected clean, got {other:?}"),
+        }
+    }
+}

@@ -38,6 +38,12 @@
 //! | [`metrics`] | lightweight counters/timers used across the pipeline |
 //! | [`harness`] | experiment harness shared by examples and paper-table benches |
 
+// The workspace lint table ([workspace.lints] in the root Cargo.toml)
+// already denies this; the attribute keeps the guarantee visible at the
+// crate root and effective even under a bare `rustc` invocation. Unsafe
+// itself is confined to the files audited by rule D4 (audit.toml).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod config;
 pub mod coordinator;
 pub mod engine;

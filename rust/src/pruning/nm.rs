@@ -10,12 +10,57 @@
 //! (DESIGN.md §Substitutions — no sparse tensor cores on this testbed).
 
 use crate::linalg::Mat;
-use std::collections::HashSet;
 
 /// Pre-built row set for [`validate`]'s `skip_rows` argument. Callers
 /// validating many layers against the same outlier set build it once
-/// instead of paying a `HashSet` construction per call.
-pub type RowSet = HashSet<usize>;
+/// instead of paying a set construction per call.
+///
+/// Backed by a sorted, deduplicated `Vec` rather than a `HashSet`:
+/// iteration order is deterministic (determinism contract rule D2 — no
+/// hash containers in compute modules), membership is `binary_search`,
+/// and for the few-dozen outlier rows a layer carries the flat layout
+/// is also the faster one.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RowSet {
+    rows: Vec<usize>,
+}
+
+impl RowSet {
+    /// Empty set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Membership test. Takes `&usize` to match the `HashSet` call
+    /// shape this type replaced.
+    pub fn contains(&self, row: &usize) -> bool {
+        self.rows.binary_search(row).is_ok()
+    }
+
+    /// Number of rows in the set.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether the set is empty.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Rows in ascending order.
+    pub fn iter(&self) -> std::slice::Iter<'_, usize> {
+        self.rows.iter()
+    }
+}
+
+impl FromIterator<usize> for RowSet {
+    fn from_iter<I: IntoIterator<Item = usize>>(it: I) -> Self {
+        let mut rows: Vec<usize> = it.into_iter().collect();
+        rows.sort_unstable();
+        rows.dedup();
+        Self { rows }
+    }
+}
 
 /// Build a [`RowSet`] from a slice of row indices.
 pub fn row_set(rows: &[usize]) -> RowSet {
@@ -135,6 +180,19 @@ mod tests {
         }
         assert!(validate(&wp, 2, 4, &RowSet::new()).is_err());
         assert!(validate(&wp, 2, 4, &row_set(&[0])).is_ok());
+    }
+
+    #[test]
+    fn row_set_sorts_dedups_and_answers_membership() {
+        let s = row_set(&[7, 3, 3, 11, 7]);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.iter().copied().collect::<Vec<_>>(), [3, 7, 11]);
+        assert!(s.contains(&7) && s.contains(&3) && s.contains(&11));
+        assert!(!s.contains(&5));
+        assert!(RowSet::new().is_empty());
+        // deterministic iteration order regardless of insertion order
+        let t: RowSet = [11usize, 7, 3].into_iter().collect();
+        assert_eq!(s, t);
     }
 
     #[test]

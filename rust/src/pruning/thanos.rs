@@ -543,75 +543,92 @@ fn update_rows_blocked_subset(
         return Ok(());
     }
     let panel = opts.panel_apply && !kernel::naive_mode();
-    let errors: std::sync::Mutex<Vec<anyhow::Error>> = std::sync::Mutex::new(Vec::new());
     let eng = crate::engine::global();
     let rows_per = eng.chunk(c_limit);
+    // One error slot per band, reduced in ascending band order after the
+    // job: the reported error is a function of the data, not of which
+    // worker lost the race to a shared error bag (determinism contract
+    // rule D1 — no sync primitives inside submission closures).
+    let n_bands = (c_limit * b).div_ceil(rows_per * b);
+    let mut band_err: Vec<Option<anyhow::Error>> = (0..n_bands).map(|_| None).collect();
     // Λ-panel path only: hinv_rows packed once per block, shared by all
     // bands (à la the GEMM core's PackedB contract).
     let hinv_packed =
         panel.then(|| kf64::pack_b(View::row_major(&hinv_rows.data, rest), width, rest));
-    eng.for_each_band(&mut wk.data[..c_limit * b], rows_per * b, |bi, whead| {
-        let row0 = bi * rows_per;
-        let rows_here = whead.len() / b;
-        let local_ref = &local[row0 * width..(row0 + rows_here) * width];
-        if let Some(bp) = &hinv_packed {
-            // gather supports + rhs, batch-solve into the Λ panel,
-            // apply the band as one mixed-precision GEMM, clamp.
-            with_panel_scratch(|ps| {
-                ps.begin(rows_here, width);
-                for ri in 0..rows_here {
-                    let lmask = &local_ref[ri * width..(ri + 1) * width];
-                    let row = &whead[ri * b + j1..(ri + 1) * b];
-                    for (k, &selected) in lmask.iter().enumerate() {
-                        if selected {
-                            ps.push(k, row[k] as f64);
+    eng.for_each_band2(
+        &mut wk.data[..c_limit * b],
+        &mut band_err,
+        rows_per * b,
+        1,
+        |bi, whead, err_slot| {
+            let row0 = bi * rows_per;
+            let rows_here = whead.len() / b;
+            let local_ref = &local[row0 * width..(row0 + rows_here) * width];
+            if let Some(bp) = &hinv_packed {
+                // gather supports + rhs, batch-solve into the Λ panel,
+                // apply the band as one mixed-precision GEMM, clamp.
+                with_panel_scratch(|ps| {
+                    ps.begin(rows_here, width);
+                    for ri in 0..rows_here {
+                        let lmask = &local_ref[ri * width..(ri + 1) * width];
+                        let row = &whead[ri * b + j1..(ri + 1) * b];
+                        for (k, &selected) in lmask.iter().enumerate() {
+                            if selected {
+                                ps.push(k, row[k] as f64);
+                            }
+                        }
+                        ps.end_row();
+                    }
+                    if let Err(e) = solve_band_padded_into_panel(hinv_rows, ps) {
+                        err_slot[0] = Some(e);
+                        return;
+                    }
+                    let lam_view = View::row_major(&ps.lam, width);
+                    kmix::gemm_core(whead, b, j1, lam_view, 0, rows_here, bp, rest, true);
+                    for ri in 0..rows_here {
+                        for &k in ps.row_support(ri) {
+                            whead[ri * b + j1 + k] = 0.0;
                         }
                     }
-                    ps.end_row();
-                }
-                if let Err(e) = solve_band_padded_into_panel(hinv_rows, ps) {
-                    errors.lock().unwrap().push(e);
-                    return;
-                }
-                let lam_view = View::row_major(&ps.lam, width);
-                kmix::gemm_core(whead, b, j1, lam_view, 0, rows_here, bp, rest, true);
+                });
+                return;
+            }
+            // q / u / R̂ / λ buffers live in this worker's pooled scratch —
+            // no per-row (or even per-block) allocations on the hot path
+            with_row_solve_scratch(|s| {
                 for ri in 0..rows_here {
-                    for &k in ps.row_support(ri) {
-                        whead[ri * b + j1 + k] = 0.0;
+                    let lmask = &local_ref[ri * width..(ri + 1) * width];
+                    s.q.clear();
+                    for (k, &selected) in lmask.iter().enumerate() {
+                        if selected {
+                            s.q.push(k);
+                        }
+                    }
+                    if s.q.is_empty() {
+                        continue;
+                    }
+                    let row = &mut whead[ri * b + j1..(ri + 1) * b];
+                    debug_assert_eq!(row.len(), rest);
+                    s.u.clear();
+                    for &t in &s.q {
+                        s.u.push(row[t] as f64);
+                    }
+                    match solve_row_in_scratch(hinv_rows, s) {
+                        Ok(()) => apply_row_update(row, hinv_rows, &s.q, &s.lam),
+                        // first error in the band wins; later rows still
+                        // run so the band's weight state stays the same
+                        // as the shared-bag version it replaced
+                        Err(e) => {
+                            if err_slot[0].is_none() {
+                                err_slot[0] = Some(e);
+                            }
+                        }
                     }
                 }
             });
-            return;
-        }
-        // q / u / R̂ / λ buffers live in this worker's pooled scratch —
-        // no per-row (or even per-block) allocations on the hot path
-        with_row_solve_scratch(|s| {
-            for ri in 0..rows_here {
-                let lmask = &local_ref[ri * width..(ri + 1) * width];
-                s.q.clear();
-                for (k, &selected) in lmask.iter().enumerate() {
-                    if selected {
-                        s.q.push(k);
-                    }
-                }
-                if s.q.is_empty() {
-                    continue;
-                }
-                let row = &mut whead[ri * b + j1..(ri + 1) * b];
-                debug_assert_eq!(row.len(), rest);
-                s.u.clear();
-                for &t in &s.q {
-                    s.u.push(row[t] as f64);
-                }
-                match solve_row_in_scratch(hinv_rows, s) {
-                    Ok(()) => apply_row_update(row, hinv_rows, &s.q, &s.lam),
-                    Err(e) => errors.lock().unwrap().push(e),
-                }
-            }
-        });
-    });
-    let errs = errors.into_inner().unwrap();
-    if let Some(e) = errs.into_iter().next() {
+        },
+    );
+    if let Some(e) = band_err.into_iter().flatten().next() {
         return Err(e.context("thanos row solve failed"));
     }
     Ok(())

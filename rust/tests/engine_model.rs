@@ -1,0 +1,57 @@
+//! Model-checked regression test for `PruneEngine`'s termination
+//! protocol (see `thanos::engine::model` for the model itself).
+//!
+//! The pre-fix `Drop` stored the `shutdown` flag without holding the
+//! queue mutex; a worker that had already checked the flag and found
+//! the queue empty — but had not yet parked on `work_cv` — consumed no
+//! notify and slept forever, hanging the `join`. The checker exhausts
+//! every interleaving of both protocol variants, so this test fails if
+//! either the fix regresses (locked variant deadlocks) or the model
+//! rots (buggy variant stops witnessing the race it exists to pin).
+
+use thanos::engine::model::{explore, Config, Outcome};
+
+#[test]
+fn shipped_drop_protocol_is_deadlock_free_across_pool_shapes() {
+    for (workers, tasks) in [(1, 1), (1, 3), (2, 2), (2, 4), (3, 2)] {
+        let out = explore(&Config { workers, tasks, locked_shutdown: true });
+        match out {
+            Outcome::Clean { states, terminals } => {
+                assert!(states > 0 && terminals > 0, "{workers}w/{tasks}t: empty exploration");
+            }
+            other => panic!("{workers} workers / {tasks} tasks: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn prefix_drop_protocol_deadlocks_and_the_trace_shows_the_lost_wakeup() {
+    let out = explore(&Config { workers: 2, tasks: 2, locked_shutdown: false });
+    let (states, trace) = match out {
+        Outcome::Stuck { states, trace } => (states, trace),
+        other => panic!("the unlocked shutdown store should deadlock, got {other:?}"),
+    };
+    assert!(states > 0);
+    let joined = trace.join("\n");
+    // the witness: the store lands while a worker is between its
+    // shutdown check and parking, so the final notify precedes the park
+    let store = trace.iter().position(|s| s.contains("no lock"));
+    // the fatal park is the last one — nothing can wake it afterwards
+    let park = trace.iter().rposition(|s| s.contains("parks on work_cv"));
+    assert!(store.is_some() && park.is_some(), "{joined}");
+    assert!(store < park, "store should precede the fatal park:\n{joined}");
+    assert!(joined.contains("STUCK"), "{joined}");
+}
+
+#[test]
+fn every_terminal_state_executes_each_task_exactly_once() {
+    // BadTerminal (a terminal state with unclaimed tasks or a nonzero
+    // completion latch) must be unreachable under the shipped protocol.
+    for tasks in 1..=4 {
+        let out = explore(&Config { workers: 2, tasks, locked_shutdown: true });
+        assert!(
+            matches!(out, Outcome::Clean { .. }),
+            "tasks={tasks}: {out:?}"
+        );
+    }
+}
