@@ -11,12 +11,16 @@ use crate::lexer::{self, Kind};
 /// Module prefixes whose code is "compute": the paths the
 /// serial==parallel bitwise contract and the seed-arithmetic contract
 /// govern. Everything else (config, IO, metrics, CLI, eval) may use
-/// timing, hashing and ad-hoc iteration freely.
-pub const COMPUTE_PREFIXES: [&str; 4] = [
+/// timing, hashing and ad-hoc iteration freely. `trace/` is scanned
+/// because it is the crate's single wall-clock authority: every timer
+/// in the compute paths reads through `trace::clock`, so D6 pins the
+/// one `Instant::now` site there instead of a scatter of exceptions.
+pub const COMPUTE_PREFIXES: [&str; 5] = [
     "rust/src/linalg",
     "rust/src/pruning",
     "rust/src/sparse",
     "rust/src/engine",
+    "rust/src/trace",
 ];
 
 /// One rule violation at a source location.

@@ -92,6 +92,9 @@ fn masked(p: &Pruned) -> usize {
 }
 
 fn main() {
+    // THANOS_TRACE=out.json traces the whole sweep (Chrome trace +
+    // per-stage histogram rows in the bench JSON)
+    thanos::trace::init_from_env();
     let quick = quick_mode();
     let reps = if quick { 1 } else { 2 };
     // (c, b, a): out-features, in-features, calibration width.
@@ -264,6 +267,28 @@ fn main() {
             );
         }
     }
+    // traced stage breakdown: spans paired per worker, folded into
+    // count/total plus latency quantiles from the log-bucket histogram
+    if thanos::trace::enabled() {
+        for st in thanos::trace::aggregate() {
+            let q = |p: f64| st.hist.quantile(p).unwrap_or(0) as f64 / 1e3;
+            bj.record(
+                &format!("prune_e2e/stages/{}/t{threads}", st.name),
+                vec![
+                    ("count", BenchJson::num(st.count as f64)),
+                    ("total_secs", BenchJson::num(st.total_secs())),
+                    ("p50_us", BenchJson::num(q(0.5))),
+                    ("p90_us", BenchJson::num(q(0.9))),
+                    ("p99_us", BenchJson::num(q(0.99))),
+                ],
+            );
+        }
+    }
     bj.save();
+    match thanos::trace::export() {
+        Ok(Some(path)) => println!("trace written to {}", path.display()),
+        Ok(None) => {}
+        Err(e) => panic!("trace export failed: {e:#}"),
+    }
     println!("\nnaive-path cross-check: OK");
 }

@@ -133,6 +133,9 @@ pub struct RunConfig {
     // pruning
     pub block_size: usize,
     pub alpha: f64,
+    /// Chrome-trace output path (`--trace=out.json`); `None` falls back
+    /// to the `THANOS_TRACE` environment variable.
+    pub trace: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -150,6 +153,7 @@ impl Default for RunConfig {
             eval_seqs: 64,
             block_size: 128,
             alpha: 0.1,
+            trace: None,
         }
     }
 }
@@ -170,6 +174,7 @@ impl RunConfig {
             "eval_seqs" => self.eval_seqs = value.parse().context("eval_seqs")?,
             "block_size" => self.block_size = value.parse().context("block_size")?,
             "alpha" => self.alpha = value.parse().context("alpha")?,
+            "trace" => self.trace = Some(value.into()),
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -233,7 +238,7 @@ mod tests {
         let mut rc = RunConfig::default();
         let rest = rc
             .parse_args(
-                ["prune", "--model=tiny", "--train_steps", "7", "--alpha=0.2"]
+                ["prune", "--model=tiny", "--train_steps", "7", "--alpha=0.2", "--trace=t.json"]
                     .iter()
                     .map(|s| s.to_string()),
             )
@@ -242,6 +247,7 @@ mod tests {
         assert_eq!(rc.model.name, "tiny");
         assert_eq!(rc.train_steps, 7);
         assert_eq!(rc.alpha, 0.2);
+        assert_eq!(rc.trace.as_deref(), Some("t.json"));
         assert!(rc
             .parse_args(["--bogus=1".to_string()].into_iter())
             .is_err());

@@ -24,8 +24,8 @@ use crate::pruning::{self, CalibStats, Method, Pattern, PruneOpts};
 use crate::runtime::{
     lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, mat_lit, to_mat, to_vec_f32, Runtime,
 };
+use crate::trace::{self, clock};
 use anyhow::{ensure, Context, Result};
-use std::time::Instant;
 
 /// Which engine performs calibration statistics + pruning math.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,7 +67,14 @@ pub struct PruneReport {
     /// wall time of the pruning stage (layers overlap under the
     /// layer-parallel engine path; per-layer times are in [`LayerReport`])
     pub prune_secs: f64,
+    /// wall time re-forwarding calibration activations through each
+    /// pruned block (its own stage — previously misfiled under capture)
+    pub reforward_secs: f64,
     pub total_secs: f64,
+    /// traced per-stage breakdown of this run (span name → count /
+    /// summed seconds); empty unless tracing was enabled
+    /// (`--trace` / `THANOS_TRACE`, see [`crate::trace`])
+    pub stages: Vec<trace::StageLine>,
     /// [`crate::engine`] activity during this run (queue/occupancy)
     pub engine: crate::engine::EngineStats,
     /// the pattern this run pruned to — lets [`Self::sparse_model`]
@@ -87,23 +94,34 @@ impl PruneReport {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "pruned {} layers to {:.1}% sparsity in {:.1}s (capture {:.1}s, hessian {:.1}s, \
-             prune {:.1}s) | engine: {} threads, {} jobs ({} inline), {} tasks, \
-             queue peak {}, {:.0}% occupancy",
+             prune {:.1}s, re-forward {:.1}s) | engine: {} threads, {} jobs ({} inline), \
+             {} tasks, queue peak {}, {:.0}% occupancy",
             self.layers.len(),
             self.overall_sparsity() * 100.0,
             self.total_secs,
             self.capture_secs,
             self.hessian_secs,
             self.prune_secs,
+            self.reforward_secs,
             self.engine.threads,
             self.engine.jobs_submitted,
             self.engine.jobs_inline,
             self.engine.tasks_executed,
             self.engine.queue_peak,
             self.engine.occupancy(self.total_secs) * 100.0,
-        )
+        );
+        if !self.stages.is_empty() {
+            s.push_str("\n  traced stages (summed span time; workers overlap):");
+            for line in &self.stages {
+                s.push_str(&format!(
+                    "\n    {:<24} x{:<7} {:.3}s",
+                    line.name, line.count, line.secs
+                ));
+            }
+        }
+        s
     }
 
     /// Emit the compressed form of the pruned model: every prunable
@@ -195,7 +213,8 @@ impl<'a> Coordinator<'a> {
         calib: &Sequences,
         spec: &PruneSpec,
     ) -> Result<PruneReport> {
-        let t_total = Instant::now();
+        let t_total = clock::now_nanos();
+        let stages0 = trace::stage_totals();
         let engine_stats0 = crate::engine::global().stats();
         let cfg = state.config.clone();
         let rt = self.rt;
@@ -210,21 +229,24 @@ impl<'a> Coordinator<'a> {
         let mut report = PruneReport { pattern: Some(spec.pattern), ..Default::default() };
 
         // embed calibration chunks → x literals
-        let t_cap = Instant::now();
-        let flat_lit = lit_f32(&state.flat, &[state.flat.len()])?;
-        let mut xs: Vec<xla::Literal> = Vec::with_capacity(n_chunks);
-        for ch in 0..n_chunks {
-            let mut toks: Vec<i32> = Vec::with_capacity(a);
-            for s in 0..nbc {
-                toks.extend(calib.seq(ch * nbc + s).iter().map(|&t| t as i32));
+        let (xs_res, cap_secs) = trace::timed("coordinator.capture", || -> Result<Vec<_>> {
+            let flat_lit = lit_f32(&state.flat, &[state.flat.len()])?;
+            let mut xs: Vec<xla::Literal> = Vec::with_capacity(n_chunks);
+            for ch in 0..n_chunks {
+                let mut toks: Vec<i32> = Vec::with_capacity(a);
+                for s in 0..nbc {
+                    toks.extend(calib.seq(ch * nbc + s).iter().map(|&t| t as i32));
+                }
+                let out = rt.exec(
+                    &format!("embed_{}", cfg.name),
+                    &[flat_lit.clone(), lit_i32(&toks, &[nbc, seq])?],
+                )?;
+                xs.push(out.into_iter().next().unwrap());
             }
-            let out = rt.exec(
-                &format!("embed_{}", cfg.name),
-                &[flat_lit.clone(), lit_i32(&toks, &[nbc, seq])?],
-            )?;
-            xs.push(out.into_iter().next().unwrap());
-        }
-        report.capture_secs += t_cap.elapsed().as_secs_f64();
+            Ok(xs)
+        });
+        report.capture_secs += cap_secs;
+        let mut xs = xs_res?;
 
         // layer name → capture-output index (1-based in the exe outputs)
         // outputs: (y, x_attn, x_o, x_ff1, x_ff2)
@@ -239,141 +261,155 @@ impl<'a> Coordinator<'a> {
 
         for l in 0..cfg.n_layers {
             // -- capture pass ---------------------------------------------
-            let t_cap = Instant::now();
-            let block_lit = lit_f32(state.block_slice(l)?, &[state.block_flat_size])?;
-            let mut captures: Vec<Vec<xla::Literal>> = Vec::with_capacity(n_chunks);
-            for x in &xs {
-                let out = rt.exec(
-                    &format!("block_capture_{}", cfg.name),
-                    &[block_lit.clone(), x.clone()],
-                )?;
-                captures.push(out);
-            }
-            report.capture_secs += t_cap.elapsed().as_secs_f64();
+            let (captures_res, cap_secs) =
+                trace::timed("coordinator.capture", || -> Result<Vec<_>> {
+                    let block_lit = lit_f32(state.block_slice(l)?, &[state.block_flat_size])?;
+                    let mut captures: Vec<Vec<xla::Literal>> = Vec::with_capacity(n_chunks);
+                    for x in &xs {
+                        let out = rt.exec(
+                            &format!("block_capture_{}", cfg.name),
+                            &[block_lit.clone(), x.clone()],
+                        )?;
+                        captures.push(out);
+                    }
+                    Ok(captures)
+                });
+            report.capture_secs += cap_secs;
+            let captures = captures_res?;
 
             // -- calibration statistics per site --------------------------
-            let t_h = Instant::now();
-            let mut accums: Vec<Accum> = (0..4)
-                .map(|s| Accum::new(spec.backend, site_b(s)))
-                .collect();
-            match spec.backend {
-                Backend::Rust => {
-                    // decode the capture outputs to plain buffers up
-                    // front (the literal layer stays on this thread),
-                    // then fan the four independent per-site Hessian
-                    // accumulations out on the engine (chunk order
-                    // within a site is fixed, so sums are bit-identical
-                    // for any thread count)
-                    let mut site_chunks: Vec<Vec<Vec<f32>>> =
-                        (0..4).map(|_| Vec::with_capacity(captures.len())).collect();
-                    for cap in &captures {
-                        for (site, chunks) in site_chunks.iter_mut().enumerate() {
-                            chunks.push(to_vec_f32(&cap[1 + site])?);
-                        }
-                    }
-                    let errors: std::sync::Mutex<Vec<anyhow::Error>> =
-                        std::sync::Mutex::new(Vec::new());
-                    crate::engine::global().for_each_band(&mut accums, 1, |site, slot| {
-                        for xt in &site_chunks[site] {
-                            if let Err(e) = slot[0].add_chunk_rust(xt, a) {
-                                errors.lock().unwrap().push(e);
-                                break;
+            let (accums_res, h_secs) = trace::timed("coordinator.hessian", || -> Result<Vec<_>> {
+                let mut accums: Vec<Accum> = (0..4)
+                    .map(|s| Accum::new(spec.backend, site_b(s)))
+                    .collect();
+                match spec.backend {
+                    Backend::Rust => {
+                        // decode the capture outputs to plain buffers up
+                        // front (the literal layer stays on this thread),
+                        // then fan the four independent per-site Hessian
+                        // accumulations out on the engine (chunk order
+                        // within a site is fixed, so sums are bit-identical
+                        // for any thread count)
+                        let mut site_chunks: Vec<Vec<Vec<f32>>> =
+                            (0..4).map(|_| Vec::with_capacity(captures.len())).collect();
+                        for cap in &captures {
+                            for (site, chunks) in site_chunks.iter_mut().enumerate() {
+                                chunks.push(to_vec_f32(&cap[1 + site])?);
                             }
                         }
-                    });
-                    if let Some(e) = errors.into_inner().unwrap().into_iter().next() {
-                        return Err(e.context("accumulating calibration statistics"));
+                        let errors: std::sync::Mutex<Vec<anyhow::Error>> =
+                            std::sync::Mutex::new(Vec::new());
+                        crate::engine::global().for_each_band(&mut accums, 1, |site, slot| {
+                            for xt in &site_chunks[site] {
+                                if let Err(e) = slot[0].add_chunk_rust(xt, a) {
+                                    errors.lock().unwrap().push(e);
+                                    break;
+                                }
+                            }
+                        });
+                        if let Some(e) = errors.into_inner().unwrap().into_iter().next() {
+                            return Err(e.context("accumulating calibration statistics"));
+                        }
                     }
-                }
-                Backend::Aot => {
-                    // strictly sequential (needs the runtime): decode
-                    // one chunk at a time so peak memory stays at one
-                    // decoded chunk, as before
-                    for cap in &captures {
-                        for (site, accum) in accums.iter_mut().enumerate() {
-                            let xt = to_vec_f32(&cap[1 + site])?;
-                            accum.add_chunk(rt, &xt, a)?;
+                    Backend::Aot => {
+                        // strictly sequential (needs the runtime): decode
+                        // one chunk at a time so peak memory stays at one
+                        // decoded chunk, as before
+                        for cap in &captures {
+                            for (site, accum) in accums.iter_mut().enumerate() {
+                                let xt = to_vec_f32(&cap[1 + site])?;
+                                accum.add_chunk(rt, &xt, a)?;
+                            }
                         }
                     }
                 }
-            }
-            report.hessian_secs += t_h.elapsed().as_secs_f64();
+                Ok(accums)
+            });
+            report.hessian_secs += h_secs;
+            let accums = accums_res?;
 
             // -- prune the six layers --------------------------------------
             let lnames = ["wq", "wk", "wv", "wo", "w1", "w2"];
-            let t_p = Instant::now();
-            if spec.backend == Backend::Rust {
-                // layer-parallel: the six layers of a block are
-                // independent given the per-site statistics, so they are
-                // captured once and pruned concurrently on the engine
-                // (layer tasks × row-parallel inner kernels share the
-                // same pool — no oversubscription)
-                let ws: Vec<(String, Mat, usize)> = lnames
-                    .iter()
-                    .map(|lname| {
+            let (prune_res, p_secs) = trace::timed("coordinator.prune", || -> Result<()> {
+                if spec.backend == Backend::Rust {
+                    // layer-parallel: the six layers of a block are
+                    // independent given the per-site statistics, so they are
+                    // captured once and pruned concurrently on the engine
+                    // (layer tasks × row-parallel inner kernels share the
+                    // same pool — no oversubscription)
+                    let ws: Vec<(String, Mat, usize)> = lnames
+                        .iter()
+                        .map(|lname| {
+                            let full = format!("blocks.{l}.{lname}");
+                            let w = state.get_mat(&full)?;
+                            Ok((full, w, site_of(lname)))
+                        })
+                        .collect::<Result<_>>()?;
+                    let layer_inputs: Vec<(&Mat, &CalibStats)> = ws
+                        .iter()
+                        .map(|(_, w, site)| match &accums[*site] {
+                            Accum::Rust(stats) => (w, stats),
+                            Accum::Aot { .. } => unreachable!("Rust backend built Rust accums"),
+                        })
+                        .collect();
+                    let results =
+                        pruning::prune_many(&layer_inputs, spec.method, spec.pattern, &spec.opts);
+                    for ((full, w, _site), res) in ws.iter().zip(results) {
+                        let (pruned, secs) = res.with_context(|| full.clone())?;
+                        report.layers.push(LayerReport {
+                            name: full.clone(),
+                            c: w.rows,
+                            b: w.cols,
+                            sparsity: pruned.w.sparsity(),
+                            secs,
+                            aot: false,
+                        });
+                        state.set_mat(full, &pruned.w)?;
+                    }
+                } else {
+                    for lname in lnames {
                         let full = format!("blocks.{l}.{lname}");
                         let w = state.get_mat(&full)?;
-                        Ok((full, w, site_of(lname)))
-                    })
-                    .collect::<Result<_>>()?;
-                let layer_inputs: Vec<(&Mat, &CalibStats)> = ws
-                    .iter()
-                    .map(|(_, w, site)| match &accums[*site] {
-                        Accum::Rust(stats) => (w, stats),
-                        Accum::Aot { .. } => unreachable!("Rust backend built Rust accums"),
-                    })
-                    .collect();
-                let results =
-                    pruning::prune_many(&layer_inputs, spec.method, spec.pattern, &spec.opts);
-                for ((full, w, _site), res) in ws.iter().zip(results) {
-                    let (pruned, secs) = res.with_context(|| full.clone())?;
-                    report.layers.push(LayerReport {
-                        name: full.clone(),
-                        c: w.rows,
-                        b: w.cols,
-                        sparsity: pruned.w.sparsity(),
-                        secs,
-                        aot: false,
-                    });
-                    state.set_mat(full, &pruned.w)?;
+                        let site = site_of(lname);
+                        let t_layer = clock::now_nanos();
+                        let (w_new, used_aot) = self
+                            .prune_layer(&w, &accums[site], spec)
+                            .with_context(|| full.clone())?;
+                        report.layers.push(LayerReport {
+                            name: full.clone(),
+                            c: w.rows,
+                            b: w.cols,
+                            sparsity: w_new.sparsity(),
+                            secs: clock::secs_since(t_layer),
+                            aot: used_aot,
+                        });
+                        state.set_mat(&full, &w_new)?;
+                    }
                 }
-            } else {
-                for lname in lnames {
-                    let full = format!("blocks.{l}.{lname}");
-                    let w = state.get_mat(&full)?;
-                    let site = site_of(lname);
-                    let t_layer = Instant::now();
-                    let (w_new, used_aot) = self
-                        .prune_layer(&w, &accums[site], spec)
-                        .with_context(|| full.clone())?;
-                    report.layers.push(LayerReport {
-                        name: full.clone(),
-                        c: w.rows,
-                        b: w.cols,
-                        sparsity: w_new.sparsity(),
-                        secs: t_layer.elapsed().as_secs_f64(),
-                        aot: used_aot,
-                    });
-                    state.set_mat(&full, &w_new)?;
-                }
-            }
-            report.prune_secs += t_p.elapsed().as_secs_f64();
+                Ok(())
+            });
+            report.prune_secs += p_secs;
+            prune_res?;
 
             // -- re-forward through the pruned block -----------------------
-            let t_rf = Instant::now();
-            let block_lit = lit_f32(state.block_slice(l)?, &[state.block_flat_size])?;
-            for x in xs.iter_mut() {
-                let out = rt.exec(
-                    &format!("block_capture_{}", cfg.name),
-                    &[block_lit.clone(), x.clone()],
-                )?;
-                *x = out.into_iter().next().unwrap();
-            }
-            report.capture_secs += t_rf.elapsed().as_secs_f64();
+            let (rf_res, rf_secs) = trace::timed("coordinator.reforward", || -> Result<()> {
+                let block_lit = lit_f32(state.block_slice(l)?, &[state.block_flat_size])?;
+                for x in xs.iter_mut() {
+                    let out = rt.exec(
+                        &format!("block_capture_{}", cfg.name),
+                        &[block_lit.clone(), x.clone()],
+                    )?;
+                    *x = out.into_iter().next().unwrap();
+                }
+                Ok(())
+            });
+            report.reforward_secs += rf_secs;
+            rf_res?;
         }
 
-        report.total_secs = t_total.elapsed().as_secs_f64();
+        report.total_secs = clock::secs_since(t_total);
         report.engine = crate::engine::global().stats().delta_since(&engine_stats0);
+        report.stages = trace::stage_delta(&stages0);
         rt.metrics
             .record_engine("engine.prune_model", &report.engine, report.total_secs);
         Ok(report)
@@ -564,5 +600,12 @@ mod tests {
         });
         assert!((r.overall_sparsity() - 0.75).abs() < 1e-12);
         assert!(r.summary().contains("2 layers"));
+        // re-forward is its own summary stage (not folded into capture)
+        assert!(r.summary().contains("re-forward"));
+        // traced stage lines appear only when a run recorded spans
+        assert!(!r.summary().contains("traced stages"));
+        r.stages.push(trace::StageLine { name: "walk.solve", count: 3, secs: 0.5 });
+        let s = r.summary();
+        assert!(s.contains("traced stages") && s.contains("walk.solve"));
     }
 }

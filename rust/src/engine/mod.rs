@@ -34,7 +34,8 @@ pub mod model;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::time::Instant;
+
+use crate::trace::{self, clock};
 
 /// Environment variable fixing the pool size (`>= 1`). Unset or invalid
 /// values fall back to `std::thread::available_parallelism()`.
@@ -173,7 +174,8 @@ impl Shared {
     /// Claim-and-execute tasks of `job` until its counter is exhausted.
     fn execute(&self, job: &Job) {
         while let Some(i) = job.claim() {
-            let t0 = Instant::now();
+            let task_span = trace::span("engine.task");
+            let t0 = clock::now_nanos();
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 // SAFETY: `run_dyn` keeps the closure alive until every
                 // claimed task has completed (it blocks on the latch),
@@ -181,8 +183,9 @@ impl Shared {
                 let f = unsafe { &*job.f };
                 f(i);
             }));
-            self.busy_nanos
-                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let dt = clock::now_nanos().saturating_sub(t0);
+            drop(task_span);
+            self.busy_nanos.fetch_add(dt, Ordering::Relaxed);
             self.tasks_executed.fetch_add(1, Ordering::Relaxed);
             if let Err(payload) = result {
                 let mut slot = job.panic.lock().unwrap();
@@ -319,16 +322,18 @@ impl PruneEngine {
         let serial = SERIAL.with(|s| s.get());
         if serial || self.threads == 1 || n_tasks == 1 {
             self.shared.jobs_inline.fetch_add(1, Ordering::Relaxed);
-            let t0 = Instant::now();
+            let t0 = clock::now_nanos();
             for i in 0..n_tasks {
+                let _task_span = trace::span("engine.task");
                 f(i);
             }
             self.shared
                 .busy_nanos
-                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                .fetch_add(clock::now_nanos().saturating_sub(t0), Ordering::Relaxed);
             self.shared
                 .tasks_executed
                 .fetch_add(n_tasks as u64, Ordering::Relaxed);
+            trace::flush_local();
             return;
         }
 
@@ -364,6 +369,9 @@ impl PruneEngine {
                 remaining = job.done_cv.wait(remaining).unwrap();
             }
         }
+        // Job boundary: publish this thread's span events so a drain
+        // right after `run` returns sees the whole batch.
+        trace::flush_local();
         if let Some(payload) = job.panic.lock().unwrap().take() {
             std::panic::resume_unwind(payload);
         }
@@ -483,6 +491,9 @@ unsafe impl<T> Sync for SendPtr<T> {}
 
 fn worker_loop(shared: &Shared) {
     loop {
+        // span covers queue wait + wakeup; it closes on the shutdown
+        // return too (guard drop), keeping every shard stream balanced
+        let wait_span = trace::span("engine.wait");
         let job = {
             let mut queue = shared.queue.lock().unwrap();
             loop {
@@ -498,7 +509,10 @@ fn worker_loop(shared: &Shared) {
                 queue = shared.work_cv.wait(queue).unwrap();
             }
         };
+        drop(wait_span);
         shared.execute(&job);
+        // job boundary: publish this worker's events while it idles
+        trace::flush_local();
     }
 }
 

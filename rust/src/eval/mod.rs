@@ -216,9 +216,9 @@ pub fn measured_sparse_speedup(
         matmul_into(w, &x, out);
         (0..3)
             .map(|_| {
-                let t = std::time::Instant::now();
+                let t = crate::trace::clock::now_nanos();
                 matmul_into(w, &x, out);
-                t.elapsed().as_secs_f64()
+                crate::trace::clock::secs_since(t)
             })
             .fold(f64::INFINITY, f64::min)
     };

@@ -35,7 +35,8 @@
 //! | [`sparse`] | compressed weight formats (n:m packed, CSR, dense-compact) + real sparse×dense kernels + checkpoint-v2 tensors |
 //! | [`eval`] | perplexity + synthetic zero-shot harness + measured/modeled compression report |
 //! | [`proptest`] | mini property-testing framework used by the test suite |
-//! | [`metrics`] | lightweight counters/timers used across the pipeline |
+//! | [`metrics`] | sharded counters/timers with interned `&'static str` keys |
+//! | [`trace`] | per-worker span tracer: thread-local event shards, latency histograms, Chrome-trace export, and the crate's single wall-clock read point ([`trace::clock`]) |
 //! | [`harness`] | experiment harness shared by examples and paper-table benches |
 
 // The workspace lint table ([workspace.lints] in the root Cargo.toml)
@@ -59,6 +60,7 @@ pub mod pruning;
 pub mod rng;
 pub mod runtime;
 pub mod sparse;
+pub mod trace;
 pub mod train;
 
 /// Crate-wide result alias.

@@ -17,6 +17,11 @@
 //!
 //! `compress` and `sparse-bench` are artifact-free: they run entirely
 //! on the Rust `sparse/` subsystem (no AOT executables needed).
+//!
+//! Tracing: `--trace=out.json` (any subcommand) or `THANOS_TRACE=out.json`
+//! enables the per-worker span tracer and writes a Chrome trace-event
+//! file on successful exit — load it in `chrome://tracing` or Perfetto.
+//! The CLI flag wins when both are set. See DESIGN.md §Observability.
 
 use anyhow::{bail, Context, Result};
 use thanos::config::RunConfig;
@@ -82,8 +87,9 @@ fn run() -> Result<()> {
     let mut rc = RunConfig::default();
     let args = rc.parse_args(std::env::args().skip(1))?;
     let cmd = args.first().map(String::as_str).unwrap_or("info");
+    thanos::trace::init(rc.trace.as_deref());
 
-    match cmd {
+    let result = match cmd {
         "info" => {
             let rt = Runtime::load(&rc.artifacts_dir)?;
             println!("artifacts: {} executables", rt.manifest.executables.len());
@@ -274,21 +280,30 @@ fn run() -> Result<()> {
                     }
                 })
                 .collect::<Result<_>>()?;
-            let t0 = std::time::Instant::now();
+            let t0 = thanos::trace::clock::now_nanos();
             rt.exec(name, &inputs)?; // includes compile
-            println!("first call (incl. compile): {:.3}s", t0.elapsed().as_secs_f64());
-            let t1 = std::time::Instant::now();
+            println!(
+                "first call (incl. compile): {:.3}s",
+                thanos::trace::clock::secs_since(t0)
+            );
+            let t1 = thanos::trace::clock::now_nanos();
             for _ in 0..reps {
                 rt.exec(name, &inputs)?;
             }
             println!(
                 "steady-state: {:.4}s/exec over {reps} reps",
-                t1.elapsed().as_secs_f64() / reps as f64
+                thanos::trace::clock::secs_since(t1) / reps as f64
             );
             Ok(())
         }
         other => bail!(
-            "unknown command '{other}' (info|train|prune|eval|e2e|compress|sparse-bench)"
+            "unknown command '{other}' (info|train|prune|eval|e2e|compress|sparse-bench|exec-bench)"
         ),
+    };
+    if result.is_ok() {
+        if let Some(path) = thanos::trace::export()? {
+            println!("trace written to {}", path.display());
+        }
     }
+    result
 }

@@ -5,56 +5,129 @@
 //! that pipeline-stage timing (capture / hessian / prune / re-forward)
 //! and the [`crate::engine`] pool's queue/occupancy counters are
 //! visible without external tracing crates.
+//!
+//! Keys are interned `&'static str`s and the counter/timer stores are
+//! sharded by thread: the hot-path entry points ([`Metrics::incr_static`],
+//! [`Metrics::add_time_static`], [`Metrics::time_static`]) take one
+//! uncontended per-shard lock and allocate nothing. The `&str`
+//! convenience API is unchanged — it interns (allocating only the
+//! first time a key is ever seen process-wide) and forwards to the
+//! static path. Hot callers (the runtime's per-executable `exec.*`
+//! keys, the engine gauges) pre-intern their keys once and stay
+//! allocation-free per call. Reads sum across shards, so totals are
+//! exact regardless of which threads recorded.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-/// A set of named counters + gauges + accumulated stage durations.
-/// Thread-safe.
-#[derive(Default)]
-pub struct Metrics {
-    inner: Mutex<Inner>,
+use crate::trace::clock;
+
+/// Global leaky key interner: each distinct metric name is boxed and
+/// leaked exactly once, so the set of live allocations is bounded by
+/// the set of distinct keys (dozens in practice). Interning makes keys
+/// `Copy` and lets the sharded stores use pointer-sized map keys.
+pub fn intern(name: &str) -> &'static str {
+    static INTERNED: Mutex<BTreeSet<&'static str>> = Mutex::new(BTreeSet::new());
+    let mut set = INTERNED.lock().unwrap();
+    if let Some(&s) = set.get(name) {
+        return s;
+    }
+    let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+    set.insert(leaked);
+    leaked
+}
+
+const N_SHARDS: usize = 8;
+
+/// The calling thread's shard index — assigned round-robin on first
+/// use, so concurrent recorders spread across the shard locks.
+fn shard_index() -> usize {
+    static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static SHARD: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+    }
+    SHARD.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            return v;
+        }
+        let v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % N_SHARDS;
+        s.set(v);
+        v
+    })
 }
 
 #[derive(Default)]
-struct Inner {
-    counters: BTreeMap<String, u64>,
-    gauges: BTreeMap<String, f64>,
-    timers: BTreeMap<String, Duration>,
+struct Shard {
+    counters: Mutex<BTreeMap<&'static str, u64>>,
+    timer_nanos: Mutex<BTreeMap<&'static str, u64>>,
+}
+
+/// A set of named counters + gauges + accumulated stage durations.
+/// Thread-safe; counters and timers are sharded by recording thread.
+pub struct Metrics {
+    shards: Vec<Shard>,
+    gauges: Mutex<BTreeMap<&'static str, f64>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        Metrics {
+            shards: (0..N_SHARDS).map(|_| Shard::default()).collect(),
+            gauges: Mutex::new(BTreeMap::new()),
+        }
     }
 
     pub fn incr(&self, name: &str, by: u64) {
-        let mut g = self.inner.lock().unwrap();
-        *g.counters.entry(name.to_string()).or_insert(0) += by;
+        self.incr_static(intern(name), by);
+    }
+
+    /// Allocation-free counter increment for a pre-interned key.
+    pub fn incr_static(&self, name: &'static str, by: u64) {
+        let mut c = self.shards[shard_index()].counters.lock().unwrap();
+        *c.entry(name).or_insert(0) += by;
     }
 
     pub fn add_time(&self, name: &str, d: Duration) {
-        let mut g = self.inner.lock().unwrap();
-        *g.timers.entry(name.to_string()).or_insert(Duration::ZERO) += d;
+        self.add_time_static(intern(name), d);
+    }
+
+    /// Allocation-free timer accumulation for a pre-interned key.
+    pub fn add_time_static(&self, name: &'static str, d: Duration) {
+        let mut t = self.shards[shard_index()].timer_nanos.lock().unwrap();
+        *t.entry(name).or_insert(0) += d.as_nanos() as u64;
     }
 
     /// Time a closure under a named stage.
     pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
-        let t0 = Instant::now();
+        self.time_static(intern(name), f)
+    }
+
+    /// [`Metrics::time`] for a pre-interned key: no lock or allocation
+    /// beyond the single per-shard timer update.
+    pub fn time_static<T>(&self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = clock::now_nanos();
         let out = f();
-        self.add_time(name, t0.elapsed());
+        let dt = clock::now_nanos().saturating_sub(t0);
+        self.add_time_static(name, Duration::from_nanos(dt));
         out
     }
 
     /// Set a point-in-time gauge (last write wins).
     pub fn set_gauge(&self, name: &str, value: f64) {
-        let mut g = self.inner.lock().unwrap();
-        g.gauges.insert(name.to_string(), value);
+        self.gauges.lock().unwrap().insert(intern(name), value);
     }
 
     pub fn gauge(&self, name: &str) -> Option<f64> {
-        self.inner.lock().unwrap().gauges.get(name).copied()
+        self.gauges.lock().unwrap().get(name).copied()
     }
 
     /// Record a [`crate::engine::EngineStats`] snapshot as gauges under
@@ -89,54 +162,61 @@ impl Metrics {
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.inner
-            .lock()
-            .unwrap()
-            .counters
-            .get(name)
-            .copied()
-            .unwrap_or(0)
+        self.shards
+            .iter()
+            .map(|s| s.counters.lock().unwrap().get(name).copied().unwrap_or(0))
+            .sum()
     }
 
     pub fn timer_secs(&self, name: &str) -> f64 {
-        self.inner
-            .lock()
-            .unwrap()
-            .timers
-            .get(name)
-            .map(|d| d.as_secs_f64())
-            .unwrap_or(0.0)
+        let nanos: u64 = self
+            .shards
+            .iter()
+            .map(|s| s.timer_nanos.lock().unwrap().get(name).copied().unwrap_or(0))
+            .sum();
+        nanos as f64 * 1e-9
     }
 
-    /// Human-readable multi-line report.
+    /// Human-readable multi-line report (counters, gauges, timers —
+    /// each merged across shards, sorted by key).
     pub fn report(&self) -> String {
-        let g = self.inner.lock().unwrap();
+        let mut counters: BTreeMap<&'static str, u64> = BTreeMap::new();
+        let mut timers: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for s in &self.shards {
+            for (&k, &v) in s.counters.lock().unwrap().iter() {
+                *counters.entry(k).or_insert(0) += v;
+            }
+            for (&k, &v) in s.timer_nanos.lock().unwrap().iter() {
+                *timers.entry(k).or_insert(0) += v;
+            }
+        }
         let mut out = String::new();
-        for (k, v) in &g.counters {
+        for (k, v) in &counters {
             out.push_str(&format!("  {k:<40} {v}\n"));
         }
-        for (k, v) in &g.gauges {
+        for (k, v) in self.gauges.lock().unwrap().iter() {
             out.push_str(&format!("  {k:<40} {v:.3}\n"));
         }
-        for (k, d) in &g.timers {
-            out.push_str(&format!("  {k:<40} {:.3}s\n", d.as_secs_f64()));
+        for (k, nanos) in &timers {
+            out.push_str(&format!("  {k:<40} {:.3}s\n", *nanos as f64 * 1e-9));
         }
         out
     }
 }
 
-/// Simple stopwatch for benches.
-pub struct Stopwatch(Instant);
+/// Simple stopwatch for benches (reads [`crate::trace::clock`], the
+/// crate's single wall-clock source).
+pub struct Stopwatch(u64);
 
 impl Stopwatch {
     pub fn start() -> Self {
-        Stopwatch(Instant::now())
+        Stopwatch(clock::now_nanos())
     }
     pub fn secs(&self) -> f64 {
-        self.0.elapsed().as_secs_f64()
+        clock::secs_since(self.0)
     }
     pub fn millis(&self) -> f64 {
-        self.0.elapsed().as_secs_f64() * 1e3
+        clock::secs_since(self.0) * 1e3
     }
 }
 
@@ -210,5 +290,27 @@ mod tests {
         assert_eq!(m.gauge("engine.jobs_submitted"), Some(10.0));
         assert_eq!(m.gauge("engine.queue_peak"), Some(3.0));
         assert_eq!(m.gauge("engine.occupancy"), Some(0.5));
+    }
+
+    #[test]
+    fn interned_keys_are_stable_and_shared() {
+        let a = intern("metrics.test.key");
+        let b = intern("metrics.test.key");
+        assert!(std::ptr::eq(a, b), "same key must intern to one allocation");
+        assert_eq!(a, "metrics.test.key");
+    }
+
+    #[test]
+    fn static_and_interned_paths_share_totals() {
+        let m = Metrics::new();
+        let k = intern("metrics.test.static");
+        m.incr_static(k, 2);
+        m.incr("metrics.test.static", 3);
+        assert_eq!(m.counter("metrics.test.static"), 5);
+        m.add_time_static(k, Duration::from_millis(10));
+        m.add_time("metrics.test.static", Duration::from_millis(5));
+        assert!((m.timer_secs("metrics.test.static") - 0.015).abs() < 1e-9);
+        let v = m.time_static(k, || 11);
+        assert_eq!(v, 11);
     }
 }

@@ -226,10 +226,11 @@ pub fn prune_many(
     let mut slots: Vec<Option<anyhow::Result<(Pruned, f64)>>> = Vec::with_capacity(layers.len());
     slots.resize_with(layers.len(), || None);
     crate::engine::global().for_each_band(&mut slots, 1, |i, slot| {
+        let _layer_span = crate::trace::span("prune.layer");
         let (w, stats) = layers[i];
-        let t0 = std::time::Instant::now();
+        let t0 = crate::trace::clock::now_nanos();
         let res = prune(method, w, stats, pattern, opts);
-        slot[0] = Some(res.map(|p| (p, t0.elapsed().as_secs_f64())));
+        slot[0] = Some(res.map(|p| (p, crate::trace::clock::secs_since(t0))));
     });
     slots
         .into_iter()

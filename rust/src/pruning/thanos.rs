@@ -52,6 +52,7 @@ impl SuffixInverse {
             Ok(SuffixInverse::Faithful { h_full })
         } else {
             // reversal-trick factorization: no full inverse formed
+            let _span = crate::trace::span("walk.factor");
             let u = crate::linalg::chol::inverse_factor_upper(&h_full)
                 .context("factorizing layer Hessian")?;
             Ok(SuffixInverse::Fast { u })
@@ -64,6 +65,7 @@ impl SuffixInverse {
     /// source (the old separate `hinv_bb` was element-for-element a
     /// copy of those columns, so one matrix now serves both roles).
     fn block_rows(&self, j1: usize, width: usize, b: usize, panel: bool) -> Result<MatF64> {
+        let _span = crate::trace::span("walk.factor");
         let rest = b - j1;
         match self {
             SuffixInverse::Faithful { h_full } => {
@@ -136,8 +138,12 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
 
         // ψ_X over the residual window (global residual mask, line 6),
         // local part = first `width` columns (line 7)
-        wanda_metric_window_into(&wk, stats, j1, b, &mut metric);
+        {
+            let _metric_span = crate::trace::span("walk.metric");
+            wanda_metric_window_into(&wk, stats, j1, b, &mut metric);
+        }
         let r_block = r_left.min(c * rest);
+        let select_span = crate::trace::span("walk.select");
         if threshold_select {
             smallest_r_mask_threshold_into(&metric, r_block, &mut res_mask, &mut sel);
         } else {
@@ -180,6 +186,7 @@ pub fn unstructured(w: &Mat, stats: &CalibStats, p: f64, opts: &PruneOpts) -> Re
             }
             count += need;
         }
+        drop(select_span);
         r_left -= count;
         for i in 0..c {
             for k in 0..width {
@@ -218,7 +225,10 @@ pub fn semi_structured(
 
     // rows sorted ascending by loss; the ⌈αc⌉ largest (outliers) land at
     // the end and are excluded from pruning (Alg. 8 lines 3–5, 12)
-    let hrow = row_losses_gated(w, &h_full, opts);
+    let hrow = {
+        let _metric_span = crate::trace::span("walk.metric");
+        row_losses_gated(w, &h_full, opts)
+    };
     let q = Perm::sorting(&hrow);
     let mut wq = q.apply_rows(w);
     let c_prune = c - ((alpha * c as f64).ceil() as usize).min(c);
@@ -235,8 +245,14 @@ pub fn semi_structured(
         debug_assert_eq!(width % m, 0);
         let hinv_rows = suffix.block_rows(j1, width, b, opts.panel_apply)?;
         // n:m mask over the block, pruned rows only
-        wanda_metric_window_rows_into(&wq, c_prune, stats, j1, j2, &mut block_metric);
-        let local = nm_mask(&block_metric, c_prune, width, n, m);
+        {
+            let _metric_span = crate::trace::span("walk.metric");
+            wanda_metric_window_rows_into(&wq, c_prune, stats, j1, j2, &mut block_metric);
+        }
+        let local = {
+            let _select_span = crate::trace::span("walk.select");
+            nm_mask(&block_metric, c_prune, width, n, m)
+        };
         for i in 0..c_prune {
             for k in 0..width {
                 mask_q[i * b + j1 + k] = local[i * width + k];
@@ -272,7 +288,10 @@ pub fn structured(
     let h = stats.hessian(opts.percdamp);
 
     // 1. row permutation: ascending loss, outliers (largest h_i) last
-    let hrow = row_losses_gated(w, &h, opts);
+    let hrow = {
+        let _metric_span = crate::trace::span("walk.metric");
+        row_losses_gated(w, &h, opts)
+    };
     let q = Perm::sorting(&hrow);
     let wq = q.apply_rows(w);
     let c_prune = c - ((alpha * c as f64).ceil() as usize).min(c);
@@ -288,6 +307,7 @@ pub fn structured(
     //    walks (per-row / naive) keep the seed per-column chain so the
     //    bench oracle stays independent of the new pass.
     let eng = crate::engine::global();
+    let v_span = crate::trace::span("walk.metric");
     let v: Vec<f64> = if opts.panel_apply && !kernel::naive_mode() {
         const V_ROWS_PER_BAND: usize = 64;
         let n_vbands = c_prune.div_ceil(V_ROWS_PER_BAND).max(1);
@@ -323,6 +343,7 @@ pub fn structured(
             })
             .collect()
     };
+    drop(v_span);
     let pperm = Perm::sorting(&v);
     let mut wp = pperm.apply_cols(&wq);
     let hp = pperm.conjugate_sym(&h);
@@ -333,13 +354,20 @@ pub fn structured(
     //    Uₛᵀ·U[0:s,:], so Z = (UₛᵀUₛ)⁻¹·Uₛᵀ·U[0:s,:] = Uₛ⁻¹·U[0:s,:] —
     //    ONE triangular solve instead of inverse+Cholesky+solves
     //    (§Perf-L3; numerics pinned against the direct form in tests).
-    let u = crate::linalg::chol::inverse_factor_upper(&hp)?;
+    let u = {
+        let _factor_span = crate::trace::span("walk.factor");
+        crate::linalg::chol::inverse_factor_upper(&hp)?
+    };
     let us = u.block(0, s, 0, s);
     let u_top = u.block(0, s, 0, b);
-    let z = crate::linalg::chol::upper_tri_solve_many(&us, &u_top);
+    let z = {
+        let _solve_span = crate::trace::span("walk.solve");
+        crate::linalg::chol::upper_tri_solve_many(&us, &u_top)
+    };
     // W[0..c_prune] += Δ = −W[:,0..s]·Z, row bands on the shared engine
     let z_ref = &z;
     let rows_per = eng.chunk(c_prune);
+    let apply_span = crate::trace::span("walk.apply");
     if opts.panel_apply && !kernel::naive_mode() {
         // §Perf-L4: the eq. 13 Δ is a rank-s update — one
         // mixed-precision packed GEMM per band against Z packed once
@@ -393,6 +421,7 @@ pub fn structured(
             }
         });
     }
+    drop(apply_span);
 
     // 4. mask in permuted coordinates, then undo both permutations
     let mut mask_p = vec![false; c * b];
@@ -568,21 +597,25 @@ fn update_rows_blocked_subset(
                 // gather supports + rhs, batch-solve into the Λ panel,
                 // apply the band as one mixed-precision GEMM, clamp.
                 with_panel_scratch(|ps| {
-                    ps.begin(rows_here, width);
-                    for ri in 0..rows_here {
-                        let lmask = &local_ref[ri * width..(ri + 1) * width];
-                        let row = &whead[ri * b + j1..(ri + 1) * b];
-                        for (k, &selected) in lmask.iter().enumerate() {
-                            if selected {
-                                ps.push(k, row[k] as f64);
+                    {
+                        let _solve_span = crate::trace::span("walk.solve");
+                        ps.begin(rows_here, width);
+                        for ri in 0..rows_here {
+                            let lmask = &local_ref[ri * width..(ri + 1) * width];
+                            let row = &whead[ri * b + j1..(ri + 1) * b];
+                            for (k, &selected) in lmask.iter().enumerate() {
+                                if selected {
+                                    ps.push(k, row[k] as f64);
+                                }
                             }
+                            ps.end_row();
                         }
-                        ps.end_row();
+                        if let Err(e) = solve_band_padded_into_panel(hinv_rows, ps) {
+                            err_slot[0] = Some(e);
+                            return;
+                        }
                     }
-                    if let Err(e) = solve_band_padded_into_panel(hinv_rows, ps) {
-                        err_slot[0] = Some(e);
-                        return;
-                    }
+                    let _apply_span = crate::trace::span("walk.apply");
                     let lam_view = View::row_major(&ps.lam, width);
                     kmix::gemm_core(whead, b, j1, lam_view, 0, rows_here, bp, rest, true);
                     for ri in 0..rows_here {
@@ -595,6 +628,7 @@ fn update_rows_blocked_subset(
             }
             // q / u / R̂ / λ buffers live in this worker's pooled scratch —
             // no per-row (or even per-block) allocations on the hot path
+            let _solve_span = crate::trace::span("walk.solve");
             with_row_solve_scratch(|s| {
                 for ri in 0..rows_here {
                     let lmask = &local_ref[ri * width..(ri + 1) * width];

@@ -10,10 +10,12 @@
 
 use crate::jsonutil::Json;
 use crate::linalg::Mat;
+use crate::trace::{self, clock};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
+use std::time::Duration;
 
 /// Element type of an executable argument.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -169,12 +171,22 @@ impl Manifest {
     }
 }
 
+/// Cache row: the compiled executable plus its pre-interned metric
+/// keys, so the steady-state `exec` path records timing without
+/// formatting or allocating a key per call.
+#[derive(Clone)]
+struct CachedExe {
+    exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    k_time: &'static str,
+    k_count: &'static str,
+}
+
 /// The runtime: PJRT CPU client + lazily-compiled executable cache.
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     dir: PathBuf,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    cache: Mutex<HashMap<String, CachedExe>>,
     pub metrics: crate::metrics::Metrics,
 }
 
@@ -206,7 +218,7 @@ impl Runtime {
         self.manifest.executables.contains_key(name)
     }
 
-    fn compile(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+    fn compile(&self, name: &str) -> Result<CachedExe> {
         if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
@@ -216,7 +228,8 @@ impl Runtime {
             .get(name)
             .with_context(|| format!("unknown executable '{name}'"))?;
         let path = self.dir.join(&entry.file);
-        let t0 = std::time::Instant::now();
+        let _span = trace::span("runtime.compile");
+        let t0 = clock::now_nanos();
         let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
             .with_context(|| format!("parsing {}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
@@ -224,11 +237,18 @@ impl Runtime {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {name}"))?;
-        self.metrics.add_time("runtime.compile", t0.elapsed());
-        self.metrics.incr("runtime.compiled_executables", 1);
-        let arc = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
-        Ok(arc)
+        let dt = clock::now_nanos().saturating_sub(t0);
+        self.metrics
+            .add_time_static(crate::metrics::intern("runtime.compile"), Duration::from_nanos(dt));
+        self.metrics
+            .incr_static(crate::metrics::intern("runtime.compiled_executables"), 1);
+        let cached = CachedExe {
+            exe: std::sync::Arc::new(exe),
+            k_time: crate::metrics::intern(&format!("exec.{name}")),
+            k_count: crate::metrics::intern(&format!("exec_count.{name}")),
+        };
+        self.cache.lock().unwrap().insert(name.to_string(), cached.clone());
+        Ok(cached)
     }
 
     /// Execute `name` with the given inputs; returns the decomposed
@@ -255,11 +275,13 @@ impl Runtime {
                 );
             }
         }
-        let exe = self.compile(name)?;
-        let t0 = std::time::Instant::now();
-        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        self.metrics.add_time(&format!("exec.{name}"), t0.elapsed());
-        self.metrics.incr(&format!("exec_count.{name}"), 1);
+        let cached = self.compile(name)?;
+        let _span = trace::span("runtime.exec");
+        let t0 = clock::now_nanos();
+        let result = cached.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let dt = clock::now_nanos().saturating_sub(t0);
+        self.metrics.add_time_static(cached.k_time, Duration::from_nanos(dt));
+        self.metrics.incr_static(cached.k_count, 1);
         result.to_tuple().map_err(Into::into)
     }
 }

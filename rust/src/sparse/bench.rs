@@ -103,9 +103,9 @@ pub fn best_of(reps: usize, mut f: impl FnMut()) -> f64 {
     f();
     (0..reps)
         .map(|_| {
-            let t0 = std::time::Instant::now();
+            let t0 = crate::trace::clock::now_nanos();
             f();
-            t0.elapsed().as_secs_f64()
+            crate::trace::clock::secs_since(t0)
         })
         .fold(f64::INFINITY, f64::min)
 }

@@ -1,0 +1,53 @@
+//! The crate's single wall-clock read point.
+//!
+//! Every timing in the tree — engine busy gauges, coordinator stage
+//! seconds, per-layer prune times, bench harness reps, span ticks —
+//! derives from [`now_nanos`], which reads one process-wide monotonic
+//! epoch lazily pinned at the first call. Confining the `Instant::`
+//! access to this module is what lets the determinism audit (rule D6,
+//! DESIGN.md §Determinism-contract) carry exactly ONE wall-clock
+//! ledger entry instead of one per instrumented subsystem: the
+//! analyzer treats `rust/src/trace` as a compute path, flags the
+//! single site below, and `audit.toml` pins it at count 1.
+//!
+//! Ticks are epoch-relative `u64` nanoseconds, so they are `Copy`,
+//! totally ordered across threads (the epoch is shared), directly
+//! usable as Chrome trace-event timestamps, and cheap to stash in the
+//! tracer's thread-local event buffers without carrying an `Instant`
+//! around.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Nanoseconds elapsed since the process trace epoch (pinned at the
+/// first call from any thread). Monotone non-decreasing per thread and
+/// comparable across threads.
+#[inline]
+pub fn now_nanos() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Seconds elapsed since a tick previously obtained from
+/// [`now_nanos`]. Saturates at zero if `t0_nanos` is in the future
+/// (cannot happen for ticks taken on the same thread).
+#[inline]
+pub fn secs_since(t0_nanos: u64) -> f64 {
+    now_nanos().saturating_sub(t0_nanos) as f64 * 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ticks_are_monotone_and_secs_nonneg() {
+        let a = now_nanos();
+        let b = now_nanos();
+        assert!(b >= a);
+        assert!(secs_since(a) >= 0.0);
+        // a tick "from the future" saturates instead of wrapping
+        assert_eq!(secs_since(u64::MAX), 0.0);
+    }
+}

@@ -1,0 +1,487 @@
+//! Per-worker span tracer with Chrome trace-event export.
+//!
+//! The observability layer the perf PRs (L3–L5) hand-rolled with
+//! scattered `Instant` pairs, rebuilt as a subsystem with the same
+//! determinism discipline the audit enforces:
+//!
+//! - **Recording** is per-thread and lock-free: each thread owns a
+//!   thread-local event buffer (a shard, keyed by a lazily-assigned
+//!   worker id), and [`span`] pushes a begin/end event pair of raw
+//!   [`clock`] ticks into it. The hot path takes no lock, performs no
+//!   atomic RMW, allocates no `String` — D1-clean inside engine
+//!   closures — and when tracing is disabled it is a single relaxed
+//!   flag load plus a branch.
+//! - **Draining** happens at engine job boundaries: workers flush
+//!   their local buffer into a global registry after each job (and on
+//!   thread exit), so the submitter can snapshot a consistent,
+//!   per-shard-ordered event stream without ever stopping the pool.
+//! - **Export** turns the registry into Chrome trace-event JSON
+//!   (`chrome://tracing` / Perfetto `B`/`E` phase events, one `tid`
+//!   per shard) via `THANOS_TRACE=out.json` or the `--trace` CLI
+//!   flag, and [`aggregate`] folds the same stream into per-stage
+//!   counts, totals and latency [`Histogram`]s for
+//!   `PruneReport::summary()` and the BENCH JSON stage rows.
+//!
+//! Spans never perturb results: they carry no data into the compute
+//! chain, and the serial==parallel bitwise-identity tests run with
+//! tracing enabled (`rust/tests/trace_observability.rs`). All
+//! wall-clock reads live in [`clock`], the audit's single D6 ledger
+//! entry.
+//!
+//! Balance guarantee: an `End` is recorded iff its `Begin` was (the
+//! span guard arms only on a successful `Begin`, and capacity limits
+//! gate `Begin` only), and guards record their `End` on `Drop` — so
+//! every flushed shard stream is balanced and properly nested even
+//! across panics propagated out of engine tasks.
+
+pub mod clock;
+pub mod hist;
+
+pub use hist::Histogram;
+
+use crate::jsonutil::{obj, Json};
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Environment variable naming the Chrome-trace output path; the
+/// `--trace` CLI flag takes precedence. Setting either enables
+/// tracing for the whole run.
+pub const TRACE_ENV: &str = "THANOS_TRACE";
+
+/// Per-thread event budget between flushes. Begins beyond the cap are
+/// dropped (and counted); ends always land so streams stay balanced.
+const LOCAL_CAP: usize = 1 << 16;
+/// Global registry budget across all shards (~96 MB worst case).
+const REGISTRY_CAP: usize = 1 << 22;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_SHARD: AtomicU32 = AtomicU32::new(0);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static REGISTRY: Mutex<BTreeMap<u32, Vec<Event>>> = Mutex::new(BTreeMap::new());
+static OUT_PATH: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+/// Begin/end marker of one span event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Begin,
+    End,
+}
+
+/// One recorded event: phase, interned stage name, epoch-relative
+/// tick. 24 bytes, `Copy` — the unit of the thread-local buffers.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub phase: Phase,
+    pub name: &'static str,
+    pub t_nanos: u64,
+}
+
+struct LocalBuf {
+    shard: Option<u32>,
+    events: Vec<Event>,
+}
+
+impl LocalBuf {
+    const fn new() -> LocalBuf {
+        LocalBuf { shard: None, events: Vec::new() }
+    }
+
+    fn shard_id(&mut self) -> u32 {
+        *self.shard.get_or_insert_with(|| NEXT_SHARD.fetch_add(1, Ordering::Relaxed))
+    }
+
+    /// Move the buffered events into the global registry (order
+    /// preserved per shard). Whole batches beyond [`REGISTRY_CAP`]
+    /// are dropped and counted rather than silently truncated.
+    fn spill(&mut self) {
+        if self.events.is_empty() {
+            return;
+        }
+        let id = self.shard_id();
+        let mut reg = registry();
+        let held: usize = reg.values().map(Vec::len).sum();
+        if held + self.events.len() > REGISTRY_CAP {
+            DROPPED.fetch_add(self.events.len() as u64, Ordering::Relaxed);
+            self.events.clear();
+            return;
+        }
+        reg.entry(id).or_default().append(&mut self.events);
+    }
+}
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        // thread exit: whatever the last flush missed lands here
+        self.spill();
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = const { RefCell::new(LocalBuf::new()) };
+}
+
+fn registry() -> MutexGuard<'static, BTreeMap<u32, Vec<Event>>> {
+    // tolerate poisoning: the registry holds plain event data and a
+    // panicking engine task must still be able to flush on unwind
+    REGISTRY.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Whether span recording is on (relaxed load — the disabled hot-path
+/// cost of [`span`]).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on or off (tests and [`init`]).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Count of events dropped at capacity limits so far.
+pub fn dropped_events() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Record one event into the calling thread's shard. Returns whether
+/// the event landed; `Begin` respects [`LOCAL_CAP`], `End` always
+/// lands (its `Begin` did, so balance requires it).
+fn record(phase: Phase, name: &'static str) -> bool {
+    let t_nanos = clock::now_nanos();
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        if phase == Phase::Begin && l.events.len() >= LOCAL_CAP {
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        l.events.push(Event { phase, name, t_nanos });
+        true
+    })
+}
+
+/// RAII span guard returned by [`span`]: records `End` on drop, so
+/// spans close on every exit path — early `return`, `?`, and panic
+/// unwinding through engine tasks alike.
+pub struct Span {
+    name: &'static str,
+    armed: bool,
+}
+
+impl Drop for Span {
+    #[inline]
+    fn drop(&mut self) {
+        if self.armed {
+            record(Phase::End, self.name);
+        }
+    }
+}
+
+/// Open a named span over the enclosing scope. Inert (one relaxed
+/// load) when tracing is disabled; otherwise pushes a `Begin` into
+/// the thread-local shard and an `End` when the guard drops. `name`
+/// must be a `'static` literal — the interning that keeps events at
+/// 24 bytes with no allocation.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span { name, armed: false };
+    }
+    let armed = record(Phase::Begin, name);
+    Span { name, armed }
+}
+
+/// Run `f` under a span and return `(result, wall_secs)`. The seconds
+/// are always measured (coordinator stage accounting must survive
+/// tracing being off); only the span events are gated on [`enabled`].
+#[inline]
+pub fn timed<T>(name: &'static str, f: impl FnOnce() -> T) -> (T, f64) {
+    let _span = span(name);
+    let t0 = clock::now_nanos();
+    let out = f();
+    (out, clock::secs_since(t0))
+}
+
+/// Flush the calling thread's buffered events into the global
+/// registry. The engine calls this at job boundaries (after each
+/// worker job, and when a submitter's `run` returns); long-lived
+/// non-engine threads may call it whenever a consistent snapshot is
+/// wanted. Cheap no-op when the buffer is empty.
+pub fn flush_local() {
+    LOCAL.with(|l| l.borrow_mut().spill());
+}
+
+/// Enable tracing and set the export path from the `--trace` CLI flag
+/// (preferred) or the [`TRACE_ENV`] environment variable. No-op when
+/// neither is set.
+pub fn init(cli_path: Option<&str>) {
+    let path = cli_path
+        .map(str::to_string)
+        .or_else(|| std::env::var(TRACE_ENV).ok())
+        .filter(|p| !p.is_empty());
+    if let Some(p) = path {
+        *OUT_PATH.lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
+            Some(PathBuf::from(p));
+        set_enabled(true);
+    }
+}
+
+/// [`init`] from the environment only (benches, which have no CLI).
+pub fn init_from_env() {
+    init(None);
+}
+
+/// The configured export path, if tracing was initialized with one.
+pub fn output_path() -> Option<PathBuf> {
+    OUT_PATH.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone()
+}
+
+/// Snapshot all shards: flush the calling thread, then clone the
+/// registry. Non-destructive — export and aggregation can both run,
+/// in any order, and partial snapshots mid-run are valid (balanced
+/// per shard up to any still-open spans on other threads).
+fn snapshot() -> BTreeMap<u32, Vec<Event>> {
+    flush_local();
+    registry().clone()
+}
+
+/// Export the recorded spans as Chrome trace-event JSON to the path
+/// from [`init`]. Returns `Ok(None)` when tracing is off or no path
+/// is configured.
+pub fn export() -> Result<Option<PathBuf>> {
+    if !enabled() {
+        return Ok(None);
+    }
+    match output_path() {
+        Some(path) => {
+            export_to(&path)?;
+            Ok(Some(path))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Export the recorded spans as Chrome trace-event JSON to `path`.
+pub fn export_to(path: &Path) -> Result<()> {
+    let shards = snapshot();
+    let doc = chrome_trace_json(&shards);
+    let mut text = doc.to_string_compact();
+    text.push('\n');
+    std::fs::write(path, text)
+        .with_context(|| format!("writing Chrome trace to {}", path.display()))
+}
+
+/// Build the Chrome trace-event document: `B`/`E` duration events
+/// with microsecond `ts`, `pid` 1, one `tid` per shard, plus
+/// `thread_name` metadata rows and a `dropped_events` side channel.
+fn chrome_trace_json(shards: &BTreeMap<u32, Vec<Event>>) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for (&tid, evs) in shards {
+        events.push(obj(vec![
+            ("name", Json::Str("thread_name".to_string())),
+            ("ph", Json::Str("M".to_string())),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Num(f64::from(tid))),
+            ("args", obj(vec![("name", Json::Str(format!("shard-{tid}")))])),
+        ]));
+        for ev in evs {
+            let ph = match ev.phase {
+                Phase::Begin => "B",
+                Phase::End => "E",
+            };
+            events.push(obj(vec![
+                ("name", Json::Str(ev.name.to_string())),
+                ("ph", Json::Str(ph.to_string())),
+                ("ts", Json::Num(ev.t_nanos as f64 / 1e3)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(f64::from(tid))),
+            ]));
+        }
+    }
+    obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("otherData", obj(vec![("dropped_events", Json::Num(dropped_events() as f64))])),
+    ])
+}
+
+/// Per-stage aggregate over all recorded spans of one name.
+#[derive(Clone, Debug)]
+pub struct StageAgg {
+    pub name: &'static str,
+    /// completed spans
+    pub count: u64,
+    /// summed span durations (overlapping spans on different workers
+    /// each count fully, so totals can exceed wall time)
+    pub total_nanos: u64,
+    /// span-duration distribution in nanoseconds
+    pub hist: Histogram,
+}
+
+impl StageAgg {
+    pub fn total_secs(&self) -> f64 {
+        self.total_nanos as f64 * 1e-9
+    }
+}
+
+/// Pair begin/end events per shard and fold the resulting durations
+/// by stage name. Non-destructive; spans still open on other threads
+/// are skipped (their `End` has not been flushed yet).
+pub fn aggregate() -> Vec<StageAgg> {
+    aggregate_shards(&snapshot())
+}
+
+fn aggregate_shards(shards: &BTreeMap<u32, Vec<Event>>) -> Vec<StageAgg> {
+    let mut by_name: BTreeMap<&'static str, StageAgg> = BTreeMap::new();
+    for evs in shards.values() {
+        let mut open: Vec<(&'static str, u64)> = Vec::new();
+        for ev in evs {
+            match ev.phase {
+                Phase::Begin => open.push((ev.name, ev.t_nanos)),
+                Phase::End => {
+                    // spans are LIFO per thread, but a capped Begin
+                    // drops its End too, so match by name from the top
+                    if let Some(pos) = open.iter().rposition(|&(n, _)| n == ev.name) {
+                        let (_, t0) = open.remove(pos);
+                        let dur = ev.t_nanos.saturating_sub(t0);
+                        let agg = by_name.entry(ev.name).or_insert_with(|| StageAgg {
+                            name: ev.name,
+                            count: 0,
+                            total_nanos: 0,
+                            hist: Histogram::new(),
+                        });
+                        agg.count += 1;
+                        agg.total_nanos += dur;
+                        agg.hist.record(dur);
+                    }
+                }
+            }
+        }
+    }
+    by_name.into_values().collect()
+}
+
+/// One row of a per-run stage breakdown (`PruneReport::stages`).
+#[derive(Clone, Debug)]
+pub struct StageLine {
+    pub name: &'static str,
+    pub count: u64,
+    pub secs: f64,
+}
+
+/// Current per-stage `(count, total_nanos)` totals — take one before
+/// a run and feed it to [`stage_delta`] after to scope the breakdown
+/// to that run.
+pub fn stage_totals() -> BTreeMap<&'static str, (u64, u64)> {
+    aggregate().into_iter().map(|a| (a.name, (a.count, a.total_nanos))).collect()
+}
+
+/// Stage breakdown since an earlier [`stage_totals`] snapshot.
+pub fn stage_delta(before: &BTreeMap<&'static str, (u64, u64)>) -> Vec<StageLine> {
+    stage_totals()
+        .into_iter()
+        .map(|(name, (count, nanos))| {
+            let (c0, n0) = before.get(name).copied().unwrap_or((0, 0));
+            StageLine {
+                name,
+                count: count.saturating_sub(c0),
+                secs: nanos.saturating_sub(n0) as f64 * 1e-9,
+            }
+        })
+        .filter(|l| l.count > 0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Pure-function tests only: the global enable flag and registry
+    // are process-wide, and the lib test binary runs tests in
+    // parallel — every scenario that toggles or drains global state
+    // lives in rust/tests/trace_observability.rs (its own process).
+
+    fn ev(phase: Phase, name: &'static str, t_nanos: u64) -> Event {
+        Event { phase, name, t_nanos }
+    }
+
+    #[test]
+    fn aggregation_pairs_nested_and_skips_open_spans() {
+        let mut shards: BTreeMap<u32, Vec<Event>> = BTreeMap::new();
+        shards.insert(
+            0,
+            vec![
+                ev(Phase::Begin, "outer", 100),
+                ev(Phase::Begin, "inner", 200),
+                ev(Phase::End, "inner", 350),
+                ev(Phase::End, "outer", 600),
+                ev(Phase::Begin, "open", 700), // never closed: skipped
+            ],
+        );
+        shards.insert(
+            1,
+            vec![ev(Phase::Begin, "inner", 1000), ev(Phase::End, "inner", 1400)],
+        );
+        let aggs = aggregate_shards(&shards);
+        let get = |n: &str| aggs.iter().find(|a| a.name == n);
+        let inner = get("inner").unwrap();
+        assert_eq!(inner.count, 2);
+        assert_eq!(inner.total_nanos, 150 + 400);
+        assert_eq!(inner.hist.count(), 2);
+        assert_eq!(inner.hist.max(), Some(400));
+        let outer = get("outer").unwrap();
+        assert_eq!((outer.count, outer.total_nanos), (1, 500));
+        assert!(get("open").is_none());
+    }
+
+    #[test]
+    fn chrome_json_is_valid_and_balanced() {
+        let mut shards: BTreeMap<u32, Vec<Event>> = BTreeMap::new();
+        shards.insert(
+            3,
+            vec![
+                ev(Phase::Begin, "walk.solve", 1_000),
+                ev(Phase::End, "walk.solve", 2_500),
+            ],
+        );
+        let doc = chrome_trace_json(&shards);
+        // round-trips through the parser
+        let parsed = Json::parse(&doc.to_string_compact()).unwrap();
+        let evs = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 3); // metadata + B + E
+        let meta = &evs[0];
+        assert_eq!(meta.get("ph").unwrap().as_str().unwrap(), "M");
+        let b = &evs[1];
+        assert_eq!(b.get("ph").unwrap().as_str().unwrap(), "B");
+        assert_eq!(b.get("name").unwrap().as_str().unwrap(), "walk.solve");
+        assert_eq!(b.get("tid").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(b.get("ts").unwrap().as_f64().unwrap(), 1.0); // µs
+        let e = &evs[2];
+        assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "E");
+        assert_eq!(e.get("ts").unwrap().as_f64().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn stage_delta_subtracts_prior_totals() {
+        let mut before: BTreeMap<&'static str, (u64, u64)> = BTreeMap::new();
+        before.insert("walk.solve", (5, 1_000_000_000));
+        // synthesize "after" by going through the public math directly
+        let after: Vec<StageLine> = [("walk.solve", (7u64, 1_500_000_000u64))]
+            .into_iter()
+            .map(|(name, (count, nanos))| {
+                let (c0, n0) = before.get(name).copied().unwrap_or((0, 0));
+                StageLine {
+                    name,
+                    count: count - c0,
+                    secs: (nanos - n0) as f64 * 1e-9,
+                }
+            })
+            .collect();
+        assert_eq!(after.len(), 1);
+        assert_eq!(after[0].count, 2);
+        assert!((after[0].secs - 0.5).abs() < 1e-12);
+    }
+}

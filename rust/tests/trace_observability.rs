@@ -1,0 +1,169 @@
+//! Tracer lifecycle tests (DESIGN.md §Observability).
+//!
+//! The tracer's enable flag, shard registry and output path are
+//! PROCESS-GLOBAL, and `cargo test` runs a binary's tests in parallel
+//! threads — so every scenario that toggles or drains that state runs
+//! inside ONE test function here, in a fixed order, in its own test
+//! binary. The pure span/histogram math is unit-tested in
+//! `rust/src/trace/` instead.
+
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use thanos::engine::{self, PruneEngine};
+use thanos::jsonutil::Json;
+use thanos::linalg::gemm::matmul;
+use thanos::linalg::Mat;
+use thanos::pruning::{prune, CalibStats, Method, Pattern, PruneOpts};
+use thanos::rng::Rng;
+use thanos::trace;
+
+/// Parse an exported Chrome trace and check well-formedness: every
+/// `tid`'s B/E stream is strictly LIFO-balanced with monotone
+/// non-decreasing timestamps, and no stream is left open.
+fn check_chrome_trace(path: &std::path::Path) -> usize {
+    let doc = Json::parse_file(path).expect("trace file parses as JSON");
+    let events = doc
+        .get("traceEvents")
+        .expect("traceEvents key")
+        .as_arr()
+        .expect("traceEvents is an array");
+    let mut stacks: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+    let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut n_spans = 0usize;
+    for ev in events {
+        let ph = ev.get("ph").expect("ph").as_str().expect("ph str").to_string();
+        if ph == "M" {
+            continue; // thread_name metadata
+        }
+        let tid = ev.get("tid").expect("tid").as_f64().expect("tid num") as u64;
+        let ts = ev.get("ts").expect("ts").as_f64().expect("ts num");
+        let name = ev.get("name").expect("name").as_str().expect("name str").to_string();
+        let prev = last_ts.insert(tid, ts).unwrap_or(f64::NEG_INFINITY);
+        assert!(ts >= prev, "tid {tid}: ts went backwards ({prev} -> {ts})");
+        let stack = stacks.entry(tid).or_default();
+        match ph.as_str() {
+            "B" => stack.push(name),
+            "E" => {
+                let open = stack.pop().unwrap_or_else(|| {
+                    panic!("tid {tid}: E '{name}' with empty stack")
+                });
+                assert_eq!(open, name, "tid {tid}: spans not LIFO");
+                n_spans += 1;
+            }
+            other => panic!("unexpected phase '{other}'"),
+        }
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "tid {tid}: {} span(s) left open", stack.len());
+    }
+    n_spans
+}
+
+/// Synthetic calibrated layer, same shape recipe as the bench harness.
+fn layer(c: usize, b: usize, a: usize, seed: u64) -> (Mat, CalibStats) {
+    let mut r = Rng::new(seed);
+    let w = Mat::from_fn(c, b, |_, _| r.normal_f32(0.0, 1.0));
+    let k = (b / 4).max(2);
+    let factors = Mat::from_fn(k, a, |_, _| r.normal_f32(0.0, 1.0));
+    let loading = Mat::from_fn(b, k, |_, _| r.normal_f32(0.0, 1.0));
+    let mut x = matmul(&loading, &factors);
+    for v in x.data.iter_mut() {
+        *v += r.normal_f32(0.0, 0.3);
+    }
+    (w, CalibStats::from_x(&x))
+}
+
+fn tmp_trace_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("thanos_trace_test_{}_{tag}.json", std::process::id()))
+}
+
+#[test]
+fn tracer_lifecycle_end_to_end() {
+    // --- 1. disabled by default, and disabled spans are cheap -------
+    assert!(!trace::enabled(), "tracing must be off unless opted into");
+    let t0 = trace::clock::now_nanos();
+    for _ in 0..1_000_000 {
+        let _s = trace::span("noop");
+    }
+    let disabled_secs = trace::clock::secs_since(t0);
+    // one relaxed load + branch per span; bound is deliberately loose
+    // (CI machines vary) while still catching accidental locking
+    assert!(
+        disabled_secs < 2.0,
+        "1M disabled spans took {disabled_secs:.3}s — hot path regressed"
+    );
+
+    // --- 2. spans from engine workers land balanced in the export ---
+    trace::set_enabled(true);
+    {
+        let eng = PruneEngine::with_threads(4);
+        eng.run(64, |_i| {
+            let _outer = trace::span("suite.task");
+            let _inner = trace::span("suite.inner");
+            std::hint::black_box(0u64);
+        });
+        // dropping the engine joins its workers; their thread-local
+        // buffers spill to the registry on thread exit
+    }
+    trace::flush_local();
+    let path = tmp_trace_path("engine");
+    trace::export_to(&path).expect("export succeeds");
+    let n_spans = check_chrome_trace(&path);
+    assert!(
+        n_spans >= 128,
+        "expected >=128 closed spans (64 tasks x 2), got {n_spans}"
+    );
+    let aggs = trace::aggregate();
+    let task = aggs
+        .iter()
+        .find(|a| a.name == "suite.task")
+        .expect("suite.task aggregated");
+    assert_eq!(task.count, 64);
+    assert_eq!(task.hist.count(), 64);
+    assert!(task.hist.quantile(0.5).is_some());
+    std::fs::remove_file(&path).ok();
+
+    // --- 3. spans stay balanced across a panicking task -------------
+    {
+        let eng = PruneEngine::with_threads(2);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            eng.run(16, |i| {
+                let _s = trace::span("suite.panicky");
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "panic must propagate out of run()");
+    }
+    trace::flush_local();
+    let path = tmp_trace_path("panic");
+    trace::export_to(&path).expect("export after panic succeeds");
+    check_chrome_trace(&path); // balance is the assertion
+    std::fs::remove_file(&path).ok();
+
+    // --- 4. tracing on does not perturb the prune walk --------------
+    let (w, stats) = layer(48, 64, 96, 0x7A11);
+    let opts = PruneOpts { block_size: 16, ..Default::default() };
+    let pat = Pattern::Unstructured { p: 0.5 };
+    let ser = engine::with_serial(|| prune(Method::Thanos, &w, &stats, pat, &opts)).unwrap();
+    let par = prune(Method::Thanos, &w, &stats, pat, &opts).unwrap();
+    assert_eq!(ser.mask, par.mask, "mask differs serial vs parallel with tracing on");
+    let ser_bits: Vec<u32> = ser.w.data.iter().map(|v| v.to_bits()).collect();
+    let par_bits: Vec<u32> = par.w.data.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(ser_bits, par_bits, "weights differ serial vs parallel with tracing on");
+
+    // the walk recorded its stage spans
+    let stages = trace::stage_totals();
+    for name in ["walk.metric", "walk.select", "walk.solve", "walk.apply"] {
+        assert!(
+            stages.contains_key(name),
+            "expected stage '{name}' in {:?}",
+            stages.keys().collect::<Vec<_>>()
+        );
+    }
+
+    trace::set_enabled(false);
+    assert!(!trace::enabled());
+}
