@@ -15,6 +15,7 @@
 //! | D4 | `unsafe` only in allowlisted files, each occurrence with a `// SAFETY:` comment |
 //! | D5 | no `std::thread::{spawn,scope,Builder}` outside `engine/` |
 //! | D6 | no wall-clock or ambient RNG in compute paths |
+//! | D7 | no raw `fs::write` / `File::create` / `OpenOptions` outside `robust/` — production writes go through the atomic fsync-rename writer |
 //!
 //! `cargo run -p thanos-audit` scans the tree against the checked-in
 //! `audit.toml` and exits nonzero on any unallowlisted finding or stale

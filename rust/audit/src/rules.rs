@@ -1,5 +1,5 @@
-//! The determinism-contract rules D1–D6 (DESIGN.md
-//! §Determinism-contract).
+//! The determinism-contract rules D1–D6 and the crash-safety rule D7
+//! (DESIGN.md §Determinism-contract, §Robustness).
 //!
 //! Every rule is a token-level pass over one source file, scoped by the
 //! file's repo-relative path. Findings carry the source line text so
@@ -15,18 +15,22 @@ use crate::lexer::{self, Kind};
 /// because it is the crate's single wall-clock authority: every timer
 /// in the compute paths reads through `trace::clock`, so D6 pins the
 /// one `Instant::now` site there instead of a scatter of exceptions.
-pub const COMPUTE_PREFIXES: [&str; 5] = [
+/// `robust/` is scanned for the same reason trace/ is: it is the
+/// crate's single file-write authority (rule D7), and the fault-replay
+/// story only holds if the module itself stays D1–D6 deterministic.
+pub const COMPUTE_PREFIXES: [&str; 6] = [
     "rust/src/linalg",
     "rust/src/pruning",
     "rust/src/sparse",
     "rust/src/engine",
     "rust/src/trace",
+    "rust/src/robust",
 ];
 
 /// One rule violation at a source location.
 #[derive(Clone, Debug)]
 pub struct Finding {
-    /// rule id: `"D1"` … `"D6"`
+    /// rule id: `"D1"` … `"D7"`
     pub rule: &'static str,
     /// repo-relative path with forward slashes
     pub file: String,
@@ -297,6 +301,49 @@ pub fn analyze_source(path: &str, src: &str, cfg: &RuleConfig) -> Vec<Finding> {
                     msg: format!(
                         "{what} `{t}::` in a compute path: timing and entropy stay out of \
                          seed-faithful kernels (observability lives in metrics/benches)"
+                    ),
+                    text: line_text(ln),
+                });
+            }
+        }
+    }
+
+    // D7 — production file writes go through `robust::atomic`: a raw
+    // `fs::write` / `File::create` / `OpenOptions` site can leave a
+    // torn file behind on crash, and bypasses both the checksum framing
+    // and the fault-injection points. Reads (`fs::read`, `File::open`)
+    // are unrestricted. `robust/` implements the machinery and is the
+    // single exempt tree; test code is masked like everywhere else.
+    if !path.starts_with("rust/src/robust") {
+        for i in 0..n {
+            let (k, t, ln) = code[i];
+            if k != Kind::Ident {
+                continue;
+            }
+            let follows = |want: &str| -> bool {
+                i + 3 < n
+                    && is_path_sep(i + 1)
+                    && code[i + 3].0 == Kind::Ident
+                    && code[i + 3].1 == want
+            };
+            let what = if t == "fs" && follows("write") {
+                Some("fs::write")
+            } else if t == "File" && follows("create") {
+                Some("File::create")
+            } else if t == "OpenOptions" {
+                Some("OpenOptions")
+            } else {
+                None
+            };
+            if let Some(what) = what {
+                out.push(Finding {
+                    rule: "D7",
+                    file: path.to_string(),
+                    line: ln,
+                    msg: format!(
+                        "raw `{what}` outside robust/: production writes route through \
+                         `robust::atomic` (temp file + fsync + rename) so a crash never \
+                         publishes a torn file and fault injection covers the site"
                     ),
                     text: line_text(ln),
                 });

@@ -1,0 +1,13 @@
+// D7 negative: reads are unrestricted, and writes that route through
+// the robust atomic writer are the sanctioned shape. Expected
+// findings: 0.
+use std::io::Write;
+
+fn save_report(path: &std::path::Path, text: &str) -> anyhow::Result<()> {
+    let previous = std::fs::read(path)?;
+    crate::robust::write_atomic(path, text.as_bytes())?;
+    let mut f = crate::robust::AtomicFile::create(path)?;
+    f.write_all(&previous)?;
+    f.commit()?;
+    Ok(())
+}

@@ -1,0 +1,20 @@
+// D7 positive: raw file-write sites outside robust/. Expected
+// findings: 3 (fs::write, File::create, OpenOptions); the cfg(test)
+// scratch write is exempt.
+use std::fs::File;
+
+fn save_report(path: &str, text: &str) -> std::io::Result<()> {
+    std::fs::write(path, text)?;
+    let f = File::create(path)?;
+    drop(f);
+    let o = std::fs::OpenOptions::new().write(true).truncate(true).open(path)?;
+    drop(o);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    fn scratch_files_are_fine() {
+        std::fs::write("/tmp/scratch", b"x").unwrap();
+    }
+}

@@ -1,4 +1,4 @@
-//! Fixture tests for rules D1–D6, allowlist behaviour, and — the one
+//! Fixture tests for rules D1–D7, allowlist behaviour, and — the one
 //! that matters — a scan of the real tree against the real checked-in
 //! `audit.toml`, asserting it is clean. Every expected count below was
 //! pinned against the fixture by hand; a rule change that shifts any of
@@ -149,6 +149,29 @@ fn d6_flags_wall_clock_and_ambient_rng() {
 #[test]
 fn d6_accepts_seeded_rng() {
     let f = analyze("d6_neg.rs", "rust/src/linalg/fake.rs", &[]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+// ---------------------------------------------------------------- D7
+
+#[test]
+fn d7_flags_raw_write_sites_outside_robust() {
+    let f = analyze("d7_pos.rs", "rust/src/model/fake.rs", &[]);
+    assert_eq!(rules(&f), ["D7", "D7", "D7"], "{f:#?}");
+    assert!(f[0].text.contains("fs::write"), "{:?}", f[0]);
+    assert!(f[1].text.contains("File::create"), "{:?}", f[1]);
+    assert!(f[2].text.contains("OpenOptions"), "{:?}", f[2]);
+}
+
+#[test]
+fn d7_robust_implements_the_machinery_and_is_exempt() {
+    let f = analyze("d7_pos.rs", "rust/src/robust/fake.rs", &[]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn d7_accepts_atomic_writers_and_reads() {
+    let f = analyze("d7_neg.rs", "rust/src/model/fake.rs", &[]);
     assert!(f.is_empty(), "{f:#?}");
 }
 

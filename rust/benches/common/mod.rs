@@ -176,6 +176,8 @@ impl BenchJson {
     }
 
     /// Write the merged document (pretty-printed, stable key order).
+    /// Atomic temp-file + rename, so an interrupted bench run never
+    /// clobbers the previous results file with a torn one.
     pub fn save(&self) {
         let mut fields = vec![("schema", Json::Str(self.schema.clone()))];
         if let Some(p) = &self.provenance {
@@ -185,7 +187,7 @@ impl BenchJson {
         let doc = obj(fields);
         let mut text = doc.to_string_pretty();
         text.push('\n');
-        std::fs::write(&self.path, text).expect("write bench json");
+        thanos::robust::write_atomic(&self.path, text.as_bytes()).expect("write bench json");
         println!("merged results into {}", self.path.display());
     }
 }

@@ -133,9 +133,21 @@ pub struct RunConfig {
     // pruning
     pub block_size: usize,
     pub alpha: f64,
+    /// Pruning backend (`--backend=aot|rust`); the journaled crash-safe
+    /// path requires `rust`.
+    pub backend: String,
     /// Chrome-trace output path (`--trace=out.json`); `None` falls back
     /// to the `THANOS_TRACE` environment variable.
     pub trace: Option<String>,
+    // robustness (DESIGN.md §Robustness)
+    /// Prune-journal path (`--journal=path`); defaults to
+    /// `{ckpt_dir}/{model}-prune.journal` when `--resume` is set.
+    pub journal: Option<String>,
+    /// Resume an interrupted prune run from its journal (`--resume=1`).
+    pub resume: bool,
+    /// Deterministic fault-injection schedule (`--faults=site:n=action;…`);
+    /// `None` falls back to the `THANOS_FAULTS` environment variable.
+    pub faults: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -153,7 +165,11 @@ impl Default for RunConfig {
             eval_seqs: 64,
             block_size: 128,
             alpha: 0.1,
+            backend: "aot".into(),
             trace: None,
+            journal: None,
+            resume: false,
+            faults: None,
         }
     }
 }
@@ -174,7 +190,20 @@ impl RunConfig {
             "eval_seqs" => self.eval_seqs = value.parse().context("eval_seqs")?,
             "block_size" => self.block_size = value.parse().context("block_size")?,
             "alpha" => self.alpha = value.parse().context("alpha")?,
+            "backend" => match value {
+                "aot" | "rust" => self.backend = value.into(),
+                other => bail!("unknown backend '{other}' (aot|rust)"),
+            },
             "trace" => self.trace = Some(value.into()),
+            "journal" => self.journal = Some(value.into()),
+            "resume" => {
+                self.resume = match value {
+                    "1" | "true" => true,
+                    "0" | "false" => false,
+                    other => bail!("resume takes 1|0|true|false, got '{other}'"),
+                }
+            }
+            "faults" => self.faults = Some(value.into()),
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -238,9 +267,20 @@ mod tests {
         let mut rc = RunConfig::default();
         let rest = rc
             .parse_args(
-                ["prune", "--model=tiny", "--train_steps", "7", "--alpha=0.2", "--trace=t.json"]
-                    .iter()
-                    .map(|s| s.to_string()),
+                [
+                    "prune",
+                    "--model=tiny",
+                    "--train_steps",
+                    "7",
+                    "--alpha=0.2",
+                    "--trace=t.json",
+                    "--backend=rust",
+                    "--resume=1",
+                    "--journal=j.jnl",
+                    "--faults=atomic.sync:1=err",
+                ]
+                .iter()
+                .map(|s| s.to_string()),
             )
             .unwrap();
         assert_eq!(rest, vec!["prune"]);
@@ -248,6 +288,12 @@ mod tests {
         assert_eq!(rc.train_steps, 7);
         assert_eq!(rc.alpha, 0.2);
         assert_eq!(rc.trace.as_deref(), Some("t.json"));
+        assert_eq!(rc.backend, "rust");
+        assert!(rc.resume);
+        assert_eq!(rc.journal.as_deref(), Some("j.jnl"));
+        assert_eq!(rc.faults.as_deref(), Some("atomic.sync:1=err"));
+        assert!(rc.parse_args(["--backend=cuda".to_string()].into_iter()).is_err());
+        assert!(rc.parse_args(["--resume=maybe".to_string()].into_iter()).is_err());
         assert!(rc
             .parse_args(["--bogus=1".to_string()].into_iter())
             .is_err());

@@ -16,16 +16,26 @@
 //!
 //! The coordinator owns no Python: every compute step is a compiled
 //! HLO executable or native Rust.
+//!
+//! The Rust-backend walk is factored behind the [`BlockPipeline`] trait
+//! and driven by [`run_pruning`], which optionally journals progress
+//! (one fsynced record per completed layer, one per saved block) so an
+//! interrupted run can `--resume`, skip the completed blocks, and — by
+//! the determinism contract — finish with a checkpoint **bitwise
+//! identical** to an uninterrupted run (DESIGN.md §Robustness).
 
 use crate::data::Sequences;
+use crate::jsonutil::{obj, Json};
 use crate::linalg::Mat;
 use crate::model::ModelState;
-use crate::pruning::{self, CalibStats, Method, Pattern, PruneOpts};
+use crate::pruning::{self, CalibStats, Method, Pattern, PruneOpts, Pruned};
+use crate::robust::{crc64, crc64_f32s, Journal};
 use crate::runtime::{
     lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, mat_lit, to_mat, to_vec_f32, Runtime,
 };
 use crate::trace::{self, clock};
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
 
 /// Which engine performs calibration statistics + pruning math.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -80,6 +90,12 @@ pub struct PruneReport {
     /// the pattern this run pruned to — lets [`Self::sparse_model`]
     /// pick the matching compressed format per layer
     pub pattern: Option<Pattern>,
+    /// layers skipped because a `--resume` journal already recorded them
+    pub resumed_layers: u64,
+    /// transient-IO retries taken by the robust write paths during this run
+    pub retries: u64,
+    /// faults injected by an active `THANOS_FAULTS` schedule during this run
+    pub faults_injected: u64,
 }
 
 impl PruneReport {
@@ -112,6 +128,12 @@ impl PruneReport {
             self.engine.queue_peak,
             self.engine.occupancy(self.total_secs) * 100.0,
         );
+        if self.resumed_layers > 0 || self.retries > 0 || self.faults_injected > 0 {
+            s.push_str(&format!(
+                "\n  robust: {} resumed layer(s), {} IO retry(ies), {} injected fault(s)",
+                self.resumed_layers, self.retries, self.faults_injected
+            ));
+        }
         if !self.stages.is_empty() {
             s.push_str("\n  traced stages (summed span time; workers overlap):");
             for line in &self.stages {
@@ -195,6 +217,524 @@ impl Accum {
     }
 }
 
+/// Capture-output site index feeding prunable layer `lname` (within the
+/// 4-site statistics vector: attn-in, wo-in, w1-in, w2-in).
+pub fn site_of_layer(lname: &str) -> usize {
+    match lname {
+        "wq" | "wk" | "wv" => 0,
+        "wo" => 1,
+        "w1" => 2,
+        "w2" => 3,
+        other => unreachable!("'{other}' is not a prunable layer"),
+    }
+}
+
+/// The forward-pass half of the block-sequential walk (Alg. 3 lines
+/// 3–7), abstracted so [`run_pruning`] can drive either the real AOT
+/// runtime ([`RuntimePipeline`]) or a synthetic pipeline in tests.
+///
+/// A pipeline is stateful: it owns the calibration activations. `begin`
+/// initializes them from `state` (the embedding pass) and `reforward(l)`
+/// advances them through block `l`'s **current** weights — so replaying
+/// `begin` + `reforward(0..k)` after a resume restore reproduces the
+/// activations of an uninterrupted run bit-for-bit.
+pub trait BlockPipeline {
+    /// Number of transformer blocks to walk.
+    fn n_blocks(&self) -> usize;
+    /// Initialize the calibration activations from `state`. Called once
+    /// per [`run_pruning`] call, after any resume restore.
+    fn begin(&mut self, state: &ModelState) -> Result<()>;
+    /// Run block `l` forward and return the per-site calibration
+    /// statistics (site order: attn-in, wo-in, w1-in, w2-in).
+    fn capture(&mut self, state: &ModelState, l: usize) -> Result<Vec<CalibStats>>;
+    /// Re-run block `l` (now pruned), replacing the activations with its
+    /// outputs — the inputs of block `l + 1`.
+    fn reforward(&mut self, state: &ModelState, l: usize) -> Result<()>;
+    /// Drain the (capture, hessian, reforward) stage seconds accumulated
+    /// since the previous call.
+    fn take_stage_secs(&mut self) -> (f64, f64, f64);
+}
+
+/// Journaling/resume options for [`run_pruning`].
+#[derive(Clone, Debug, Default)]
+pub struct RobustOpts {
+    /// Append one fsynced record per completed layer/block to this file.
+    pub journal: Option<PathBuf>,
+    /// Replay the journal, skip completed blocks, continue from there.
+    pub resume: bool,
+}
+
+/// The progress checkpoint that rides beside a journal file.
+pub fn progress_ckpt_path(journal: &Path) -> PathBuf {
+    PathBuf::from(format!("{}.ckpt", journal.display()))
+}
+
+fn parse_hex(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16).with_context(|| format!("bad hex digest '{s}'"))
+}
+
+/// Everything [`run_pruning`] pins about a run so a journal can refuse
+/// to resume a different one.
+fn run_descriptor(spec: &PruneSpec, n_blocks: usize, state: &ModelState) -> String {
+    format!(
+        "{:?}|{}|{:?}|{n_blocks}|{}",
+        spec.method,
+        spec.pattern.label(),
+        spec.opts,
+        state.config.to_json().to_string_compact()
+    )
+}
+
+fn run_record(desc: &str, n_blocks: usize, spec: &PruneSpec) -> String {
+    obj(vec![
+        ("kind", Json::Str("run".into())),
+        ("desc_crc", Json::Str(format!("{:016x}", crc64(desc.as_bytes())))),
+        ("n_blocks", Json::Num(n_blocks as f64)),
+        ("method", Json::Str(format!("{:?}", spec.method))),
+        ("pattern", Json::Str(spec.pattern.label())),
+    ])
+    .to_string_compact()
+}
+
+fn layer_record(block: usize, lr: &LayerReport, pruned: &Pruned) -> String {
+    let mask_bytes: Vec<u8> = pruned.mask.iter().map(|&m| m as u8).collect();
+    obj(vec![
+        ("kind", Json::Str("layer".into())),
+        ("block", Json::Num(block as f64)),
+        ("name", Json::Str(lr.name.clone())),
+        ("c", Json::Num(lr.c as f64)),
+        ("b", Json::Num(lr.b as f64)),
+        ("sparsity", Json::Num(lr.sparsity)),
+        ("secs", Json::Num(lr.secs)),
+        // u64 digests do not fit a JSON f64 losslessly → hex strings
+        ("weight_crc", Json::Str(format!("{:016x}", crc64_f32s(&pruned.w.data)))),
+        ("mask_crc", Json::Str(format!("{:016x}", crc64(&mask_bytes)))),
+    ])
+    .to_string_compact()
+}
+
+fn block_record(block: usize, ckpt_len: u64, ckpt_crc: u64) -> String {
+    obj(vec![
+        ("kind", Json::Str("block".into())),
+        ("block", Json::Num(block as f64)),
+        ("ckpt_len", Json::Num(ckpt_len as f64)),
+        ("ckpt_crc", Json::Str(format!("{ckpt_crc:016x}"))),
+    ])
+    .to_string_compact()
+}
+
+/// A resumed layer as replayed from the journal.
+struct ResumedLayer {
+    report: LayerReport,
+    weight_crc: u64,
+}
+
+/// What a journal replay yields when at least one block completed.
+struct ResumePoint {
+    next_block: usize,
+    ckpt_len: u64,
+    ckpt_crc: u64,
+    layers: Vec<ResumedLayer>,
+    /// journal byte length through the last block record — the tail
+    /// beyond it (layers of an incomplete block) is truncated away
+    keep_len: u64,
+}
+
+fn journal_frame_len(payload: &str) -> u64 {
+    12 + payload.len() as u64
+}
+
+/// Replay journal records: validate the run header against `desc` and
+/// find the last completed block. `Ok(None)` = no block completed (or
+/// an empty journal) — start fresh.
+fn parse_resume(records: &[String], desc: &str) -> Result<Option<ResumePoint>> {
+    let Some(head_rec) = records.first() else {
+        return Ok(None);
+    };
+    let head = Json::parse(head_rec).context("journal run header")?;
+    ensure!(
+        head.get("kind")?.as_str()? == "run",
+        "journal does not start with a run header"
+    );
+    let desc_crc = parse_hex(head.get("desc_crc")?.as_str()?)?;
+    ensure!(
+        desc_crc == crc64(desc.as_bytes()),
+        "journal belongs to a different run (method, pattern, options or model config \
+         changed); delete it or drop --resume"
+    );
+    let mut scanned_len = journal_frame_len(head_rec);
+    let mut pending: Vec<ResumedLayer> = Vec::new();
+    let mut kept: Vec<ResumedLayer> = Vec::new();
+    let mut point: Option<ResumePoint> = None;
+    for rec in &records[1..] {
+        let j = Json::parse(rec)?;
+        scanned_len += journal_frame_len(rec);
+        match j.get("kind")?.as_str()? {
+            "layer" => {
+                let report = LayerReport {
+                    name: j.get("name")?.as_str()?.to_string(),
+                    c: j.get("c")?.as_usize()?,
+                    b: j.get("b")?.as_usize()?,
+                    sparsity: j.get("sparsity")?.as_f64()?,
+                    secs: j.get("secs")?.as_f64()?,
+                    aot: false,
+                };
+                pending.push(ResumedLayer {
+                    report,
+                    weight_crc: parse_hex(j.get("weight_crc")?.as_str()?)?,
+                });
+            }
+            "block" => {
+                kept.append(&mut pending);
+                point = Some(ResumePoint {
+                    next_block: j.get("block")?.as_usize()? + 1,
+                    ckpt_len: j.get("ckpt_len")?.as_usize()? as u64,
+                    ckpt_crc: parse_hex(j.get("ckpt_crc")?.as_str()?)?,
+                    layers: Vec::new(),
+                    keep_len: scanned_len,
+                });
+            }
+            k => bail!("unknown journal record kind '{k}'"),
+        }
+    }
+    Ok(point.map(|mut p| {
+        p.layers = kept;
+        p
+    }))
+}
+
+/// The block-sequential pruning walk over any [`BlockPipeline`], with
+/// optional journaling + resume.
+///
+/// With a journal: after each completed layer an fsynced layer record
+/// (weight + mask digests) is appended; after each completed block the
+/// whole state is saved atomically to the progress checkpoint and an
+/// fsynced block record (checkpoint length + CRC) follows. Progress is
+/// therefore **block-granular**: a kill at any point leaves either a
+/// fully-pruned-and-recorded block or one that resume re-prunes from
+/// scratch (mid-block resume cannot be bitwise-faithful because capture
+/// reads the pre-prune block weights).
+///
+/// A panicking/failing layer does not abort its block's batch: the
+/// surviving layers are applied and journaled, then the run stops at
+/// that block with an error naming every failed layer — a subsequent
+/// `--resume` re-prunes exactly that block.
+pub fn run_pruning(
+    state: &mut ModelState,
+    pipe: &mut dyn BlockPipeline,
+    spec: &PruneSpec,
+    robust: &RobustOpts,
+) -> Result<PruneReport> {
+    ensure!(
+        robust.journal.is_some() || !robust.resume,
+        "resume requires a journal path"
+    );
+    let t_total = clock::now_nanos();
+    let stages0 = trace::stage_totals();
+    let engine0 = crate::engine::global().stats();
+    let faults0 = crate::robust::faults::stats();
+    let n_blocks = pipe.n_blocks();
+    let mut report = PruneReport { pattern: Some(spec.pattern), ..Default::default() };
+
+    let desc = run_descriptor(spec, n_blocks, state);
+    let ckpt_path = robust.journal.as_deref().map(progress_ckpt_path);
+    let mut journal: Option<Journal> = None;
+    let mut start_block = 0usize;
+    if let Some(jpath) = robust.journal.as_deref() {
+        let mut resume_point = None;
+        if robust.resume && jpath.exists() {
+            let (j, records) = Journal::open_resume(jpath)?;
+            resume_point = parse_resume(&records, &desc)?.map(|p| (j, p));
+        }
+        journal = Some(match resume_point {
+            Some((mut j, p)) => {
+                let cp = ckpt_path.as_ref().expect("journal implies ckpt path");
+                let bytes = std::fs::read(cp).with_context(|| {
+                    format!("reading progress checkpoint {}", cp.display())
+                })?;
+                ensure!(
+                    bytes.len() as u64 == p.ckpt_len && crc64(&bytes) == p.ckpt_crc,
+                    "progress checkpoint {} does not match the journal's block record",
+                    cp.display()
+                );
+                let (loaded, _) = ModelState::from_bytes(&bytes)
+                    .with_context(|| format!("loading progress checkpoint {}", cp.display()))?;
+                *state = loaded;
+                for lr in &p.layers {
+                    let w = state.get_mat(&lr.report.name)?;
+                    ensure!(
+                        crc64_f32s(&w.data) == lr.weight_crc,
+                        "resumed layer '{}' does not match its journaled weight digest",
+                        lr.report.name
+                    );
+                    report.layers.push(lr.report.clone());
+                }
+                report.resumed_layers = report.layers.len() as u64;
+                start_block = p.next_block;
+                j.truncate_to(p.keep_len)?;
+                j
+            }
+            None => {
+                let mut j = Journal::create(jpath)?;
+                j.append(&run_record(&desc, n_blocks, spec))?;
+                j
+            }
+        });
+    }
+
+    pipe.begin(state)?;
+    for l in 0..start_block {
+        pipe.reforward(state, l)?;
+    }
+
+    let lnames = ["wq", "wk", "wv", "wo", "w1", "w2"];
+    let mut failed: Vec<String> = Vec::new();
+    for l in start_block..n_blocks {
+        let stats = pipe.capture(state, l)?;
+        ensure!(
+            stats.len() == 4,
+            "pipeline returned {} stat sites (expected 4)",
+            stats.len()
+        );
+        let ws: Vec<(String, Mat, usize)> = lnames
+            .iter()
+            .map(|lname| {
+                let full = format!("blocks.{l}.{lname}");
+                let w = state.get_mat(&full)?;
+                Ok((full, w, site_of_layer(lname)))
+            })
+            .collect::<Result<_>>()?;
+        let layer_inputs: Vec<(&Mat, &CalibStats)> =
+            ws.iter().map(|(_, w, site)| (w, &stats[*site])).collect();
+        let (results, p_secs) = trace::timed("coordinator.prune", || {
+            pruning::prune_many(&layer_inputs, spec.method, spec.pattern, &spec.opts)
+        });
+        report.prune_secs += p_secs;
+        let mut block_ok = true;
+        for ((full, w, _site), res) in ws.iter().zip(results) {
+            match res {
+                Ok((pruned, secs)) => {
+                    state.set_mat(full, &pruned.w)?;
+                    let lr = LayerReport {
+                        name: full.clone(),
+                        c: w.rows,
+                        b: w.cols,
+                        sparsity: pruned.w.sparsity(),
+                        secs,
+                        aot: false,
+                    };
+                    if let Some(j) = journal.as_mut() {
+                        j.append(&layer_record(l, &lr, &pruned))?;
+                    }
+                    report.layers.push(lr);
+                }
+                Err(e) => {
+                    block_ok = false;
+                    failed.push(format!("{full}: {e:#}"));
+                }
+            }
+        }
+        if !block_ok {
+            // Survivors were applied and journaled, but no block record
+            // exists: a resume re-prunes this block from scratch.
+            break;
+        }
+        pipe.reforward(state, l)?;
+        if let (Some(j), Some(cp)) = (journal.as_mut(), ckpt_path.as_ref()) {
+            let (saved, _) = trace::timed("robust.progress_ckpt", || -> Result<(u64, u64)> {
+                state.save(cp)?;
+                let bytes = std::fs::read(cp)?;
+                Ok((bytes.len() as u64, crc64(&bytes)))
+            });
+            let (len, crc) = saved?;
+            j.append(&block_record(l, len, crc))?;
+        }
+    }
+
+    let (cap, hes, rf) = pipe.take_stage_secs();
+    report.capture_secs += cap;
+    report.hessian_secs += hes;
+    report.reforward_secs += rf;
+    let fstats = crate::robust::faults::stats();
+    report.retries = fstats.retries.saturating_sub(faults0.retries);
+    report.faults_injected = fstats.injected.saturating_sub(faults0.injected);
+    report.total_secs = clock::secs_since(t_total);
+    report.engine = crate::engine::global().stats().delta_since(&engine0);
+    report.stages = trace::stage_delta(&stages0);
+    if !failed.is_empty() {
+        bail!(
+            "{} layer(s) failed to prune; surviving layers were applied{}: {}",
+            failed.len(),
+            if robust.journal.is_some() { " and journaled" } else { "" },
+            failed.join("; ")
+        );
+    }
+    Ok(report)
+}
+
+/// [`BlockPipeline`] over the AOT runtime executables — the embed /
+/// block-capture / re-forward passes of the original `prune_model`
+/// loop, with the Rust-side Hessian fan-out (per-slot errors, fixed
+/// chunk order per site, so sums are bit-identical for any thread
+/// count).
+pub struct RuntimePipeline<'a> {
+    rt: &'a Runtime,
+    cfg: crate::config::ModelConfig,
+    nbc: usize,
+    a: usize,
+    tok_chunks: Vec<Vec<i32>>,
+    xs: Vec<xla::Literal>,
+    capture_secs: f64,
+    hessian_secs: f64,
+    reforward_secs: f64,
+}
+
+impl<'a> RuntimePipeline<'a> {
+    pub fn new(rt: &'a Runtime, state: &ModelState, calib: &Sequences) -> Result<Self> {
+        let cfg = state.config.clone();
+        let nbc = rt.manifest.nb_calib;
+        let seq = cfg.seq_len;
+        ensure!(calib.seq_len == seq, "calibration seq_len mismatch");
+        ensure!(calib.n_seqs() >= nbc, "need at least {nbc} calibration sequences");
+        let n_chunks = (calib.n_seqs() / nbc).max(1);
+        let a = nbc * seq; // tokens per chunk
+        let mut tok_chunks = Vec::with_capacity(n_chunks);
+        for ch in 0..n_chunks {
+            let mut toks: Vec<i32> = Vec::with_capacity(a);
+            for s in 0..nbc {
+                toks.extend(calib.seq(ch * nbc + s).iter().map(|&t| t as i32));
+            }
+            tok_chunks.push(toks);
+        }
+        Ok(Self {
+            rt,
+            cfg,
+            nbc,
+            a,
+            tok_chunks,
+            xs: Vec::new(),
+            capture_secs: 0.0,
+            hessian_secs: 0.0,
+            reforward_secs: 0.0,
+        })
+    }
+}
+
+impl BlockPipeline for RuntimePipeline<'_> {
+    fn n_blocks(&self) -> usize {
+        self.cfg.n_layers
+    }
+
+    fn begin(&mut self, state: &ModelState) -> Result<()> {
+        let (res, secs) = trace::timed("coordinator.capture", || -> Result<Vec<xla::Literal>> {
+            let flat_lit = lit_f32(&state.flat, &[state.flat.len()])?;
+            let mut xs = Vec::with_capacity(self.tok_chunks.len());
+            for toks in &self.tok_chunks {
+                let out = self.rt.exec(
+                    &format!("embed_{}", self.cfg.name),
+                    &[flat_lit.clone(), lit_i32(toks, &[self.nbc, self.cfg.seq_len])?],
+                )?;
+                xs.push(out.into_iter().next().unwrap());
+            }
+            Ok(xs)
+        });
+        self.capture_secs += secs;
+        self.xs = res?;
+        Ok(())
+    }
+
+    fn capture(&mut self, state: &ModelState, l: usize) -> Result<Vec<CalibStats>> {
+        let (caps_res, secs) =
+            trace::timed("coordinator.capture", || -> Result<Vec<Vec<xla::Literal>>> {
+                let block_lit = lit_f32(state.block_slice(l)?, &[state.block_flat_size])?;
+                let mut captures = Vec::with_capacity(self.xs.len());
+                for x in &self.xs {
+                    captures.push(self.rt.exec(
+                        &format!("block_capture_{}", self.cfg.name),
+                        &[block_lit.clone(), x.clone()],
+                    )?);
+                }
+                Ok(captures)
+            });
+        self.capture_secs += secs;
+        let captures = caps_res?;
+
+        let (d, d_ff, a) = (self.cfg.d_model, self.cfg.d_ff, self.a);
+        let (stats_res, h_secs) =
+            trace::timed("coordinator.hessian", || -> Result<Vec<CalibStats>> {
+                // decode the capture outputs to plain buffers up front
+                // (the literal layer stays on this thread), then fan the
+                // four independent per-site accumulations out on the
+                // engine; errors land in schedule-independent per-slot
+                // options, chunk order within a site is fixed, so sums
+                // are bit-identical for any thread count
+                let mut site_chunks: Vec<Vec<Vec<f32>>> =
+                    (0..4).map(|_| Vec::with_capacity(captures.len())).collect();
+                for cap in &captures {
+                    for (site, chunks) in site_chunks.iter_mut().enumerate() {
+                        chunks.push(to_vec_f32(&cap[1 + site])?);
+                    }
+                }
+                let mut slots: Vec<(CalibStats, Option<anyhow::Error>)> = (0..4)
+                    .map(|s| (CalibStats::new(if s == 3 { d_ff } else { d }), None))
+                    .collect();
+                crate::engine::global().for_each_band(&mut slots, 1, |site, slot| {
+                    let (stats, err) = &mut slot[0];
+                    let b = stats.b();
+                    for xt in &site_chunks[site] {
+                        if xt.len() != a * b {
+                            *err = Some(anyhow::anyhow!(
+                                "capture chunk for site {site}: {} values, expected {}",
+                                xt.len(),
+                                a * b
+                            ));
+                            break;
+                        }
+                        // CalibStats expects X as [b, a] (features × tokens)
+                        let xmat = Mat::from_vec(a, b, xt.to_vec()).transpose();
+                        stats.accumulate(&xmat);
+                    }
+                });
+                let mut out = Vec::with_capacity(4);
+                for (site, (stats, err)) in slots.into_iter().enumerate() {
+                    if let Some(e) = err {
+                        return Err(e.context(format!(
+                            "accumulating calibration statistics for site {site}"
+                        )));
+                    }
+                    out.push(stats);
+                }
+                Ok(out)
+            });
+        self.hessian_secs += h_secs;
+        stats_res
+    }
+
+    fn reforward(&mut self, state: &ModelState, l: usize) -> Result<()> {
+        let (res, secs) = trace::timed("coordinator.reforward", || -> Result<()> {
+            let block_lit = lit_f32(state.block_slice(l)?, &[state.block_flat_size])?;
+            for x in self.xs.iter_mut() {
+                let out = self.rt.exec(
+                    &format!("block_capture_{}", self.cfg.name),
+                    &[block_lit.clone(), x.clone()],
+                )?;
+                *x = out.into_iter().next().unwrap();
+            }
+            Ok(())
+        });
+        self.reforward_secs += secs;
+        res
+    }
+
+    fn take_stage_secs(&mut self) -> (f64, f64, f64) {
+        let out = (self.capture_secs, self.hessian_secs, self.reforward_secs);
+        self.capture_secs = 0.0;
+        self.hessian_secs = 0.0;
+        self.reforward_secs = 0.0;
+        out
+    }
+}
+
 /// The coordinator itself.
 pub struct Coordinator<'a> {
     pub rt: &'a Runtime,
@@ -208,6 +748,52 @@ impl<'a> Coordinator<'a> {
     /// Prune every linear layer of `state` per `spec`, using `calib`
     /// sequences as the calibration set (paper: 128 C4 sequences).
     pub fn prune_model(
+        &self,
+        state: &mut ModelState,
+        calib: &Sequences,
+        spec: &PruneSpec,
+    ) -> Result<PruneReport> {
+        self.prune_model_robust(state, calib, spec, &RobustOpts::default())
+    }
+
+    /// [`Self::prune_model`] with journaling/resume. The Rust backend
+    /// routes through [`run_pruning`] over a [`RuntimePipeline`]; the
+    /// AOT backend keeps the legacy sequential loop (device-side layer
+    /// pruning has no per-block progress checkpoint, so journaling
+    /// requires `--backend=rust`).
+    pub fn prune_model_robust(
+        &self,
+        state: &mut ModelState,
+        calib: &Sequences,
+        spec: &PruneSpec,
+        robust: &RobustOpts,
+    ) -> Result<PruneReport> {
+        if spec.backend == Backend::Rust {
+            let mut pipe = RuntimePipeline::new(self.rt, state, calib)?;
+            let report = run_pruning(state, &mut pipe, spec, robust)?;
+            self.rt
+                .metrics
+                .record_engine("engine.prune_model", &report.engine, report.total_secs);
+            self.rt
+                .metrics
+                .set_gauge("robust.resumed_layers", report.resumed_layers as f64);
+            self.rt.metrics.set_gauge("robust.retries", report.retries as f64);
+            self.rt
+                .metrics
+                .set_gauge("robust.faults_injected", report.faults_injected as f64);
+            return Ok(report);
+        }
+        ensure!(
+            robust.journal.is_none() && !robust.resume,
+            "journaled pruning requires the Rust backend (--backend=rust): the AOT path \
+             prunes through device executables and keeps no per-block progress checkpoint"
+        );
+        self.prune_model_aot(state, calib, spec)
+    }
+
+    /// The legacy sequential loop (AOT backend): per-layer device
+    /// executables, no journaling.
+    fn prune_model_aot(
         &self,
         state: &mut ModelState,
         calib: &Sequences,
@@ -282,45 +868,14 @@ impl<'a> Coordinator<'a> {
                 let mut accums: Vec<Accum> = (0..4)
                     .map(|s| Accum::new(spec.backend, site_b(s)))
                     .collect();
-                match spec.backend {
-                    Backend::Rust => {
-                        // decode the capture outputs to plain buffers up
-                        // front (the literal layer stays on this thread),
-                        // then fan the four independent per-site Hessian
-                        // accumulations out on the engine (chunk order
-                        // within a site is fixed, so sums are bit-identical
-                        // for any thread count)
-                        let mut site_chunks: Vec<Vec<Vec<f32>>> =
-                            (0..4).map(|_| Vec::with_capacity(captures.len())).collect();
-                        for cap in &captures {
-                            for (site, chunks) in site_chunks.iter_mut().enumerate() {
-                                chunks.push(to_vec_f32(&cap[1 + site])?);
-                            }
-                        }
-                        let errors: std::sync::Mutex<Vec<anyhow::Error>> =
-                            std::sync::Mutex::new(Vec::new());
-                        crate::engine::global().for_each_band(&mut accums, 1, |site, slot| {
-                            for xt in &site_chunks[site] {
-                                if let Err(e) = slot[0].add_chunk_rust(xt, a) {
-                                    errors.lock().unwrap().push(e);
-                                    break;
-                                }
-                            }
-                        });
-                        if let Some(e) = errors.into_inner().unwrap().into_iter().next() {
-                            return Err(e.context("accumulating calibration statistics"));
-                        }
-                    }
-                    Backend::Aot => {
-                        // strictly sequential (needs the runtime): decode
-                        // one chunk at a time so peak memory stays at one
-                        // decoded chunk, as before
-                        for cap in &captures {
-                            for (site, accum) in accums.iter_mut().enumerate() {
-                                let xt = to_vec_f32(&cap[1 + site])?;
-                                accum.add_chunk(rt, &xt, a)?;
-                            }
-                        }
+                // strictly sequential (needs the runtime): decode one
+                // chunk at a time so peak memory stays at one decoded
+                // chunk (the Rust backend's engine fan-out lives in
+                // `RuntimePipeline::capture`)
+                for cap in &captures {
+                    for (site, accum) in accums.iter_mut().enumerate() {
+                        let xt = to_vec_f32(&cap[1 + site])?;
+                        accum.add_chunk(rt, &xt, a)?;
                     }
                 }
                 Ok(accums)
@@ -331,60 +886,23 @@ impl<'a> Coordinator<'a> {
             // -- prune the six layers --------------------------------------
             let lnames = ["wq", "wk", "wv", "wo", "w1", "w2"];
             let (prune_res, p_secs) = trace::timed("coordinator.prune", || -> Result<()> {
-                if spec.backend == Backend::Rust {
-                    // layer-parallel: the six layers of a block are
-                    // independent given the per-site statistics, so they are
-                    // captured once and pruned concurrently on the engine
-                    // (layer tasks × row-parallel inner kernels share the
-                    // same pool — no oversubscription)
-                    let ws: Vec<(String, Mat, usize)> = lnames
-                        .iter()
-                        .map(|lname| {
-                            let full = format!("blocks.{l}.{lname}");
-                            let w = state.get_mat(&full)?;
-                            Ok((full, w, site_of(lname)))
-                        })
-                        .collect::<Result<_>>()?;
-                    let layer_inputs: Vec<(&Mat, &CalibStats)> = ws
-                        .iter()
-                        .map(|(_, w, site)| match &accums[*site] {
-                            Accum::Rust(stats) => (w, stats),
-                            Accum::Aot { .. } => unreachable!("Rust backend built Rust accums"),
-                        })
-                        .collect();
-                    let results =
-                        pruning::prune_many(&layer_inputs, spec.method, spec.pattern, &spec.opts);
-                    for ((full, w, _site), res) in ws.iter().zip(results) {
-                        let (pruned, secs) = res.with_context(|| full.clone())?;
-                        report.layers.push(LayerReport {
-                            name: full.clone(),
-                            c: w.rows,
-                            b: w.cols,
-                            sparsity: pruned.w.sparsity(),
-                            secs,
-                            aot: false,
-                        });
-                        state.set_mat(full, &pruned.w)?;
-                    }
-                } else {
-                    for lname in lnames {
-                        let full = format!("blocks.{l}.{lname}");
-                        let w = state.get_mat(&full)?;
-                        let site = site_of(lname);
-                        let t_layer = clock::now_nanos();
-                        let (w_new, used_aot) = self
-                            .prune_layer(&w, &accums[site], spec)
-                            .with_context(|| full.clone())?;
-                        report.layers.push(LayerReport {
-                            name: full.clone(),
-                            c: w.rows,
-                            b: w.cols,
-                            sparsity: w_new.sparsity(),
-                            secs: clock::secs_since(t_layer),
-                            aot: used_aot,
-                        });
-                        state.set_mat(&full, &w_new)?;
-                    }
+                for lname in lnames {
+                    let full = format!("blocks.{l}.{lname}");
+                    let w = state.get_mat(&full)?;
+                    let site = site_of(lname);
+                    let t_layer = clock::now_nanos();
+                    let (w_new, used_aot) = self
+                        .prune_layer(&w, &accums[site], spec)
+                        .with_context(|| full.clone())?;
+                    report.layers.push(LayerReport {
+                        name: full.clone(),
+                        c: w.rows,
+                        b: w.cols,
+                        sparsity: w_new.sparsity(),
+                        secs: clock::secs_since(t_layer),
+                        aot: used_aot,
+                    });
+                    state.set_mat(&full, &w_new)?;
                 }
                 Ok(())
             });
@@ -580,6 +1098,58 @@ mod tests {
     }
 
     #[test]
+    fn journal_records_roundtrip_through_parse_resume() {
+        let spec = PruneSpec {
+            method: Method::Thanos,
+            pattern: Pattern::Unstructured { p: 0.5 },
+            opts: PruneOpts::default(),
+            backend: Backend::Rust,
+        };
+        let cfg = crate::config::ModelConfig {
+            name: "t".into(),
+            vocab: 4,
+            d_model: 2,
+            n_layers: 2,
+            n_heads: 1,
+            d_ff: 4,
+            seq_len: 2,
+        };
+        let state = ModelState { config: cfg, layout: vec![], block_flat_size: 0, flat: vec![] };
+        let desc = run_descriptor(&spec, 2, &state);
+        let w = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 2.0]);
+        let orig = Mat::from_vec(2, 2, vec![1.0, 3.0, 4.0, 2.0]);
+        let pruned = Pruned::from_w(w, &orig);
+        let lr = LayerReport {
+            name: "blocks.0.wq".into(),
+            c: 2,
+            b: 2,
+            sparsity: 0.5,
+            secs: 0.01,
+            aot: false,
+        };
+        let records = vec![
+            run_record(&desc, 2, &spec),
+            layer_record(0, &lr, &pruned),
+            block_record(0, 123, 0xABCD_EF00_1122_3344),
+            layer_record(1, &lr, &pruned), // incomplete block 1: dropped
+        ];
+        let p = parse_resume(&records, &desc).unwrap().unwrap();
+        assert_eq!(p.next_block, 1);
+        assert_eq!(p.ckpt_len, 123);
+        assert_eq!(p.ckpt_crc, 0xABCD_EF00_1122_3344);
+        assert_eq!(p.layers.len(), 1);
+        assert_eq!(p.layers[0].report.name, "blocks.0.wq");
+        assert_eq!(p.layers[0].weight_crc, crc64_f32s(&pruned.w.data));
+        let keep: u64 = records[..3].iter().map(|r| journal_frame_len(r)).sum();
+        assert_eq!(p.keep_len, keep);
+        // a journal from a different run is refused
+        assert!(parse_resume(&records, "other-desc").is_err());
+        // no completed block → fresh start
+        assert!(parse_resume(&records[..2], &desc).unwrap().is_none());
+        assert!(parse_resume(&[], &desc).unwrap().is_none());
+    }
+
+    #[test]
     fn report_aggregation() {
         let mut r = PruneReport::default();
         r.layers.push(LayerReport {
@@ -607,5 +1177,9 @@ mod tests {
         r.stages.push(trace::StageLine { name: "walk.solve", count: 3, secs: 0.5 });
         let s = r.summary();
         assert!(s.contains("traced stages") && s.contains("walk.solve"));
+        // robust line appears only when the run resumed/retried/faulted
+        assert!(!s.contains("robust:"));
+        r.resumed_layers = 6;
+        assert!(r.summary().contains("6 resumed layer(s)"));
     }
 }

@@ -37,6 +37,7 @@
 //! | [`proptest`] | mini property-testing framework used by the test suite |
 //! | [`metrics`] | sharded counters/timers with interned `&'static str` keys |
 //! | [`trace`] | per-worker span tracer: thread-local event shards, latency histograms, Chrome-trace export, and the crate's single wall-clock read point ([`trace::clock`]) |
+//! | [`robust`] | crash-safety layer: atomic fsync-rename writes, CRC-64/XZ checksums, the prune journal, and deterministic site-keyed fault injection (`THANOS_FAULTS`) |
 //! | [`harness`] | experiment harness shared by examples and paper-table benches |
 
 // The workspace lint table ([workspace.lints] in the root Cargo.toml)
@@ -58,6 +59,7 @@ pub mod model;
 pub mod proptest;
 pub mod pruning;
 pub mod rng;
+pub mod robust;
 pub mod runtime;
 pub mod sparse;
 pub mod trace;

@@ -6,6 +6,7 @@
 //! thanos info   [--model small]                    # manifest + config summary
 //! thanos train  [--model small --train_steps 400]  # train + save checkpoint
 //! thanos prune  <method> <pattern> [--model ...]   # prune a checkpoint
+//!               [--backend=rust --journal=p --resume=1 --faults=spec]
 //! thanos eval   [--model ...]                      # ppl + zero-shot of a checkpoint
 //! thanos e2e    [--model ...]                      # train → prune-all-methods → eval
 //! thanos compress <pattern> [--model ...]          # pack a pruned checkpoint (v2)
@@ -22,10 +23,17 @@
 //! enables the per-worker span tracer and writes a Chrome trace-event
 //! file on successful exit — load it in `chrome://tracing` or Perfetto.
 //! The CLI flag wins when both are set. See DESIGN.md §Observability.
+//!
+//! Crash safety: `--backend=rust` routes `prune` through the journaled
+//! pipeline; `--journal=path` (default `{ckpt_dir}/{model}-prune.journal`
+//! when `--resume=1` is set) records per-layer progress, and `--resume=1`
+//! replays it after a crash, skipping completed blocks. `--faults=spec`
+//! (or `THANOS_FAULTS`) installs a deterministic fault-injection schedule
+//! — see DESIGN.md §Robustness.
 
 use anyhow::{bail, Context, Result};
 use thanos::config::RunConfig;
-use thanos::coordinator::{Backend, Coordinator, PruneSpec};
+use thanos::coordinator::{Backend, Coordinator, PruneSpec, RobustOpts};
 use thanos::data::{Corpus, CorpusConfig};
 use thanos::eval;
 use thanos::model::ModelState;
@@ -122,6 +130,13 @@ fn run() -> Result<()> {
             let method = parse_method(args.get(1).context("prune <method> <pattern>")?)?;
             let pattern =
                 parse_pattern(args.get(2).context("prune <method> <pattern>")?, rc.alpha)?;
+            // Fault schedule: CLI flag wins over THANOS_FAULTS.
+            match &rc.faults {
+                Some(spec) => thanos::robust::faults::install(
+                    thanos::robust::faults::parse_schedule(spec)?,
+                ),
+                None => thanos::robust::faults::init_from_env()?,
+            }
             let rt = Runtime::load(&rc.artifacts_dir)?;
             let corpus = corpus_for(&rc);
             let mut state =
@@ -131,9 +146,21 @@ fn run() -> Result<()> {
                 method,
                 pattern,
                 opts: PruneOpts { block_size: rc.block_size, ..Default::default() },
-                backend: Backend::Aot,
+                backend: if rc.backend == "rust" { Backend::Rust } else { Backend::Aot },
             };
-            let report = Coordinator::new(&rt).prune_model(&mut state, &corpus.calib, &spec)?;
+            // `--resume` without an explicit journal uses the default
+            // per-model path, so crash + rerun needs no extra flags.
+            let journal = rc.journal.clone().map(std::path::PathBuf::from).or_else(|| {
+                rc.resume.then(|| {
+                    std::path::PathBuf::from(format!(
+                        "{}/{}-prune.journal",
+                        rc.ckpt_dir, rc.model.name
+                    ))
+                })
+            });
+            let robust = RobustOpts { journal, resume: rc.resume };
+            let coord = Coordinator::new(&rt);
+            let report = coord.prune_model_robust(&mut state, &corpus.calib, &spec, &robust)?;
             println!("{}", report.summary());
             let ppl1 = eval::perplexity(&rt, &state, &corpus.eval)?;
             println!(

@@ -8,13 +8,23 @@
 //! v2 (compressed): magic "THNS" | u32 2 | u64 json_len | json header
 //!                  | f32 data of the non-compressed params (layout order, LE)
 //!                  | serialized sparse tensors (header `sparse` order)
+//! v3 (sectioned):  magic "THNS" | u32 3 | u32 n_sections
+//!                  | n_sections x (u64 len | u64 crc64)   -- section table
+//!                  | section bytes, concatenated
+//!                  section 0 = json header, section 1 = dense f32 payload,
+//!                  sections 2.. = sparse tensor blobs (header `sparse` order)
 //! ```
 //! The JSON header carries the model config and the parameter layout so
 //! a checkpoint is self-describing (loadable without the manifest); a
-//! v2 header additionally lists `sparse: [{name, len}]` — the layers
-//! stored as [`crate::sparse::SparseTensor`] blobs instead of dense
-//! f32. [`ModelState::load`] reads both versions; compressed layers
-//! reconstruct **bit-identically** (pinned by the round-trip tests).
+//! compressed header additionally lists `sparse: [{name, len}]` — the
+//! layers stored as [`crate::sparse::SparseTensor`] blobs instead of
+//! dense f32. [`ModelState::load`] reads all three versions; compressed
+//! layers reconstruct **bit-identically** (pinned by the round-trip
+//! tests). Writers emit v3 through [`crate::robust::atomic`] (temp file
+//! + fsync + rename, CRC-64/XZ per section), so a crash never leaves a
+//! torn checkpoint and every truncation or bit-flip of a v3 file is
+//! detected at load with a descriptive error. `save_v1`/`save_v2` keep
+//! the legacy formats writable for back-compat tests and tooling.
 
 use crate::config::ModelConfig;
 use crate::jsonutil::{obj, Json};
@@ -23,7 +33,8 @@ use crate::rng::Rng;
 use crate::runtime::{ModelManifest, ParamEntry};
 use crate::sparse::{SparseLayer, SparseModel, SparseTensor};
 use anyhow::{bail, ensure, Context, Result};
-use std::io::{Read, Write};
+use std::collections::HashSet;
+use std::io::Write;
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"THNS";
@@ -31,6 +42,10 @@ const MAGIC: &[u8; 4] = b"THNS";
 const VERSION_DENSE: u32 = 1;
 /// v2: compressed prunable layers + dense remainder.
 const VERSION_SPARSE: u32 = 2;
+/// v3: CRC-64 checksummed sections (header | dense | sparse blobs).
+const VERSION_SECTIONED: u32 = 3;
+/// Sanity cap on the v3 section count (header + dense + sparse layers).
+const MAX_SECTIONS: usize = 4096;
 
 /// Transformer parameter state over a single flat f32 vector.
 #[derive(Clone)]
@@ -175,44 +190,32 @@ impl ModelState {
         obj(pairs).to_string_compact()
     }
 
-    fn open_writer(path: impl AsRef<Path>) -> Result<std::io::BufWriter<std::fs::File>> {
-        if let Some(parent) = path.as_ref().parent() {
-            std::fs::create_dir_all(parent)?;
+    /// The dense f32 payload (little-endian, layout order), skipping the
+    /// layers in `skip`.
+    fn dense_payload(&self, skip: &HashSet<&str>) -> Vec<u8> {
+        let mut out = Vec::new();
+        for e in &self.layout {
+            if skip.contains(e.name.as_str()) {
+                continue;
+            }
+            for v in &self.flat[e.offset..e.offset + e.numel()] {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
         }
-        Ok(std::io::BufWriter::new(std::fs::File::create(&path)?))
+        out
     }
 
-    /// Save a v1 (fully dense) checkpoint.
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let header = self.header_json(None);
-        let mut f = Self::open_writer(path)?;
-        f.write_all(MAGIC)?;
-        f.write_all(&VERSION_DENSE.to_le_bytes())?;
-        f.write_all(&(header.len() as u64).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
-        for v in &self.flat {
-            f.write_all(&v.to_le_bytes())?;
-        }
-        Ok(())
-    }
-
-    /// Save a v2 checkpoint: the layers covered by `sparse` are stored
-    /// as compressed tensors, everything else as dense f32. Verifies
-    /// first that every compressed layer reproduces the current weights
-    /// bitwise, so a reload is guaranteed bit-identical.
-    pub fn save_compressed(&self, path: impl AsRef<Path>, sparse: &SparseModel) -> Result<()> {
+    /// Serialize (and verify) the compressed layers: the header `sparse`
+    /// list plus the tensor blobs, in a stable order.
+    fn sparse_segments(&self, sparse: &SparseModel) -> Result<(Json, Vec<(String, Vec<u8>)>)> {
         sparse.verify_roundtrip(self)?;
         let segs: Vec<(String, Vec<u8>)> = sparse
             .layers
             .iter()
             .map(|l| (l.name.clone(), l.tensor.to_bytes()))
             .collect();
-        let compressed: std::collections::HashSet<&str> =
-            segs.iter().map(|(n, _)| n.as_str()).collect();
-        ensure!(
-            compressed.len() == segs.len(),
-            "duplicate layer in sparse model"
-        );
+        let names: HashSet<&str> = segs.iter().map(|(n, _)| n.as_str()).collect();
+        ensure!(names.len() == segs.len(), "duplicate layer in sparse model");
         let sparse_json = Json::Arr(
             segs.iter()
                 .map(|(name, bytes)| {
@@ -223,109 +226,146 @@ impl ModelState {
                 })
                 .collect(),
         );
-        let header = self.header_json(Some(sparse_json));
-        let mut f = Self::open_writer(path)?;
+        Ok((sparse_json, segs))
+    }
+
+    /// Write a v3 file: section table (lengths + CRC-64s) then sections,
+    /// through the atomic temp-file + fsync + rename path.
+    fn write_sectioned(path: &Path, sections: &[&[u8]]) -> Result<()> {
+        let mut f = crate::robust::AtomicFile::create(path)?;
         f.write_all(MAGIC)?;
-        f.write_all(&VERSION_SPARSE.to_le_bytes())?;
-        f.write_all(&(header.len() as u64).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
-        for e in &self.layout {
-            if compressed.contains(e.name.as_str()) {
-                continue;
-            }
-            for v in &self.flat[e.offset..e.offset + e.numel()] {
-                f.write_all(&v.to_le_bytes())?;
-            }
+        f.write_all(&VERSION_SECTIONED.to_le_bytes())?;
+        f.write_all(&(sections.len() as u32).to_le_bytes())?;
+        for s in sections {
+            f.write_all(&(s.len() as u64).to_le_bytes())?;
+            f.write_all(&crate::robust::crc64(s).to_le_bytes())?;
         }
-        for (_, bytes) in &segs {
-            f.write_all(bytes)?;
+        for s in sections {
+            f.write_all(s)?;
         }
+        f.commit()?;
         Ok(())
     }
 
-    /// Load a checkpoint of either version (the sparse tensors of a v2
-    /// file are decompressed and dropped; use [`Self::load_with_sparse`]
-    /// to keep them).
+    /// Save a dense checkpoint (v3: checksummed sections, atomic write).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let header = self.header_json(None);
+        let dense = self.dense_payload(&HashSet::new());
+        Self::write_sectioned(path.as_ref(), &[header.as_bytes(), &dense])
+    }
+
+    /// Save a compressed checkpoint (v3): the layers covered by `sparse`
+    /// are stored as one tensor-blob section each, everything else in
+    /// the dense section. Verifies first that every compressed layer
+    /// reproduces the current weights bitwise, so a reload is guaranteed
+    /// bit-identical.
+    pub fn save_compressed(&self, path: impl AsRef<Path>, sparse: &SparseModel) -> Result<()> {
+        let (sparse_json, segs) = self.sparse_segments(sparse)?;
+        let skip: HashSet<&str> = segs.iter().map(|(n, _)| n.as_str()).collect();
+        let header = self.header_json(Some(sparse_json));
+        let dense = self.dense_payload(&skip);
+        let mut sections: Vec<&[u8]> = vec![header.as_bytes(), &dense];
+        sections.extend(segs.iter().map(|(_, b)| b.as_slice()));
+        Self::write_sectioned(path.as_ref(), &sections)
+    }
+
+    /// Save a legacy v1 (fully dense, unchecksummed) checkpoint. Kept
+    /// for back-compat coverage and tooling; still written atomically.
+    pub fn save_v1(&self, path: impl AsRef<Path>) -> Result<()> {
+        let header = self.header_json(None);
+        let mut out = Vec::with_capacity(16 + header.len() + self.flat.len() * 4);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION_DENSE.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.append(&mut self.dense_payload(&HashSet::new()));
+        crate::robust::write_atomic(path, &out)?;
+        Ok(())
+    }
+
+    /// Save a legacy v2 (compressed, unchecksummed) checkpoint.
+    pub fn save_v2(&self, path: impl AsRef<Path>, sparse: &SparseModel) -> Result<()> {
+        let (sparse_json, segs) = self.sparse_segments(sparse)?;
+        let skip: HashSet<&str> = segs.iter().map(|(n, _)| n.as_str()).collect();
+        let header = self.header_json(Some(sparse_json));
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION_SPARSE.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.append(&mut self.dense_payload(&skip));
+        for (_, bytes) in &segs {
+            out.extend_from_slice(bytes);
+        }
+        crate::robust::write_atomic(path, &out)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint of any supported version (the sparse tensors of
+    /// a compressed file are decompressed and dropped; use
+    /// [`Self::load_with_sparse`] to keep them).
     pub fn load(path: impl AsRef<Path>) -> Result<ModelState> {
         Ok(Self::load_with_sparse(path)?.0)
     }
 
-    /// Load a checkpoint; for v2 files additionally returns the
-    /// compressed tensors ready for [`crate::sparse::kernels`].
+    /// Load a checkpoint; for compressed files additionally returns the
+    /// tensors ready for [`crate::sparse::kernels`].
     pub fn load_with_sparse(
         path: impl AsRef<Path>,
     ) -> Result<(ModelState, Option<SparseModel>)> {
-        let mut f = std::io::BufReader::new(
-            std::fs::File::open(&path)
-                .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?,
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("opening checkpoint {}", path.as_ref().display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("loading checkpoint {}", path.as_ref().display()))
+    }
+
+    /// Decode a checkpoint image of any supported version. Every length,
+    /// offset and (for v3) checksum is validated with overflow-safe
+    /// arithmetic: corrupt input yields a descriptive `Err`, never a
+    /// panic.
+    pub fn from_bytes(bytes: &[u8]) -> Result<(ModelState, Option<SparseModel>)> {
+        ensure!(bytes.len() >= 8, "checkpoint too short: {} bytes", bytes.len());
+        ensure!(&bytes[..4] == MAGIC, "not a thanos checkpoint (bad magic)");
+        let version = u32::from_le_bytes(bytes[4..8].try_into().expect("4-byte slice"));
+        match version {
+            VERSION_DENSE | VERSION_SPARSE => Self::decode_v12(version, &bytes[8..]),
+            VERSION_SECTIONED => Self::decode_v3(&bytes[8..]),
+            v => bail!("unsupported checkpoint version {v}"),
+        }
+    }
+
+    /// Decode the legacy v1/v2 body (everything after magic + version).
+    fn decode_v12(version: u32, rest: &[u8]) -> Result<(ModelState, Option<SparseModel>)> {
+        ensure!(rest.len() >= 8, "truncated checkpoint: missing header length");
+        let hlen = u64::from_le_bytes(rest[..8].try_into().expect("8-byte slice"));
+        ensure!(
+            hlen <= (rest.len() - 8) as u64,
+            "header length {hlen} exceeds the file's remaining {} bytes",
+            rest.len() - 8
         );
-        let mut magic = [0u8; 4];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("not a thanos checkpoint (bad magic)");
-        }
-        let mut v4 = [0u8; 4];
-        f.read_exact(&mut v4)?;
-        let version = u32::from_le_bytes(v4);
-        if version != VERSION_DENSE && version != VERSION_SPARSE {
-            bail!("unsupported checkpoint version {version}");
-        }
-        let mut l8 = [0u8; 8];
-        f.read_exact(&mut l8)?;
-        let hlen = u64::from_le_bytes(l8) as usize;
-        let mut hbuf = vec![0u8; hlen];
-        f.read_exact(&mut hbuf)?;
-        let header = Json::parse(std::str::from_utf8(&hbuf)?)?;
-        let config = ModelConfig::from_json(header.get("config")?)?;
-        let layout: Vec<ParamEntry> = header
-            .get("layout")?
-            .as_arr()?
-            .iter()
-            .map(|e| {
-                Ok(ParamEntry {
-                    name: e.get("name")?.as_str()?.to_string(),
-                    offset: e.get("offset")?.as_usize()?,
-                    shape: e
-                        .get("shape")?
-                        .as_arr()?
-                        .iter()
-                        .map(|d| d.as_usize())
-                        .collect::<Result<_>>()?,
-                })
-            })
-            .collect::<Result<_>>()?;
-        let flat_size: usize = layout.iter().map(|e| e.numel()).sum();
-        let block_flat_size = header.get("block_flat_size")?.as_usize()?;
-        let mut data = Vec::new();
-        f.read_to_end(&mut data)?;
+        let hlen = hlen as usize;
+        let mut hdr = Header::parse(&rest[8..8 + hlen], version == VERSION_SPARSE)?;
+        let data = &rest[8 + hlen..];
 
         if version == VERSION_DENSE {
-            if data.len() != flat_size * 4 {
-                bail!(
-                    "checkpoint data length {} != expected {}",
-                    data.len(),
-                    flat_size * 4
-                );
-            }
-            let flat: Vec<f32> = data
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            return Ok((ModelState { config, layout, block_flat_size, flat }, None));
+            let flat = decode_dense_exact(data, &hdr.layout, &HashSet::new(), hdr.flat_size)?;
+            return Ok((
+                ModelState {
+                    config: hdr.config,
+                    layout: hdr.layout,
+                    block_flat_size: hdr.block_flat_size,
+                    flat,
+                },
+                None,
+            ));
         }
 
         // v2: dense remainder in layout order, then the sparse segments
-        let sparse_list: Vec<(String, usize)> = header
-            .get("sparse")?
-            .as_arr()?
-            .iter()
-            .map(|e| Ok((e.get("name")?.as_str()?.to_string(), e.get("len")?.as_usize()?)))
-            .collect::<Result<_>>()?;
-        let compressed: std::collections::HashSet<&str> =
-            sparse_list.iter().map(|(n, _)| n.as_str()).collect();
-        let mut flat = vec![0.0f32; flat_size];
+        let sparse_list = hdr.sparse.take().expect("v2 header carries a sparse list");
+        let compressed: HashSet<&str> = sparse_list.iter().map(|(n, _)| n.as_str()).collect();
+        let mut flat = vec![0.0f32; hdr.flat_size];
         let mut off = 0usize;
-        for e in &layout {
+        for e in &hdr.layout {
             if compressed.contains(e.name.as_str()) {
                 continue;
             }
@@ -346,35 +386,268 @@ impl ModelState {
             off += nbytes;
         }
         let mut layers = Vec::with_capacity(sparse_list.len());
-        for (name, len) in sparse_list {
-            ensure!(
-                len <= data.len() - off,
-                "truncated sparse segment '{name}'"
-            );
-            let tensor = SparseTensor::from_bytes(&data[off..off + len])
-                .with_context(|| format!("decoding compressed layer '{name}'"))?;
+        for (name, len) in &sparse_list {
+            ensure!(*len <= data.len() - off, "truncated sparse segment '{name}'");
+            layers.push(decode_sparse_layer(
+                &hdr.layout,
+                &mut flat,
+                name,
+                &data[off..off + len],
+            )?);
             off += len;
-            let e = layout
-                .iter()
-                .find(|e| e.name == name)
-                .with_context(|| format!("compressed layer '{name}' not in layout"))?;
-            ensure!(
-                e.shape == [tensor.rows(), tensor.cols()],
-                "compressed layer '{name}': shape {:?} vs {}x{}",
-                e.shape,
-                tensor.rows(),
-                tensor.cols()
-            );
-            let dense = tensor.to_dense();
-            flat[e.offset..e.offset + e.numel()].copy_from_slice(&dense.data);
-            layers.push(SparseLayer { name, tensor });
         }
         ensure!(off == data.len(), "trailing bytes in v2 checkpoint");
         Ok((
-            ModelState { config, layout, block_flat_size, flat },
+            ModelState {
+                config: hdr.config,
+                layout: hdr.layout,
+                block_flat_size: hdr.block_flat_size,
+                flat,
+            },
             Some(SparseModel { layers }),
         ))
     }
+
+    /// Decode the v3 sectioned body (everything after magic + version).
+    fn decode_v3(rest: &[u8]) -> Result<(ModelState, Option<SparseModel>)> {
+        ensure!(rest.len() >= 4, "truncated v3 checkpoint: missing section count");
+        let n = u32::from_le_bytes(rest[..4].try_into().expect("4-byte slice")) as usize;
+        ensure!(
+            (2..=MAX_SECTIONS).contains(&n),
+            "v3 checkpoint declares {n} sections (expected 2..={MAX_SECTIONS})"
+        );
+        let table_len = n * 16;
+        ensure!(table_len <= rest.len() - 4, "truncated v3 section table");
+        let body = &rest[4 + table_len..];
+        let mut table = Vec::with_capacity(n);
+        let mut total: u64 = 0;
+        for i in 0..n {
+            let base = 4 + i * 16;
+            let len = u64::from_le_bytes(rest[base..base + 8].try_into().expect("8-byte slice"));
+            let crc = u64::from_le_bytes(
+                rest[base + 8..base + 16].try_into().expect("8-byte slice"),
+            );
+            total = total
+                .checked_add(len)
+                .context("v3 section lengths overflow")?;
+            table.push((len, crc));
+        }
+        ensure!(
+            total == body.len() as u64,
+            "v3 sections total {total} bytes but {} payload bytes are present \
+             (truncated or corrupt section table)",
+            body.len()
+        );
+        let mut sections: Vec<&[u8]> = Vec::with_capacity(n);
+        let mut off = 0usize;
+        for (i, (len, crc)) in table.iter().enumerate() {
+            let len = *len as usize;
+            let sec = &body[off..off + len];
+            let got = crate::robust::crc64(sec);
+            ensure!(
+                got == *crc,
+                "checkpoint section {i} fails its CRC-64 \
+                 (stored {crc:016x}, computed {got:016x}): the file is corrupt"
+            );
+            sections.push(sec);
+            off += len;
+        }
+        let mut hdr = Header::parse(sections[0], false)?;
+        match hdr.sparse.take() {
+            None => {
+                ensure!(
+                    n == 2,
+                    "v3 checkpoint has {n} sections but no sparse list in its header"
+                );
+                let flat =
+                    decode_dense_exact(sections[1], &hdr.layout, &HashSet::new(), hdr.flat_size)?;
+                Ok((
+                    ModelState {
+                        config: hdr.config,
+                        layout: hdr.layout,
+                        block_flat_size: hdr.block_flat_size,
+                        flat,
+                    },
+                    None,
+                ))
+            }
+            Some(list) => {
+                ensure!(
+                    list.len() == n - 2,
+                    "v3 header lists {} sparse layers but the file has {} blob sections",
+                    list.len(),
+                    n - 2
+                );
+                let compressed: HashSet<&str> = list.iter().map(|(nm, _)| nm.as_str()).collect();
+                ensure!(compressed.len() == list.len(), "duplicate layer in sparse list");
+                let mut flat =
+                    decode_dense_exact(sections[1], &hdr.layout, &compressed, hdr.flat_size)?;
+                let mut layers = Vec::with_capacity(list.len());
+                for (i, (name, len)) in list.iter().enumerate() {
+                    let blob = sections[2 + i];
+                    ensure!(
+                        *len == blob.len(),
+                        "sparse layer '{name}': header says {len} bytes, \
+                         section {} carries {}",
+                        2 + i,
+                        blob.len()
+                    );
+                    layers.push(decode_sparse_layer(&hdr.layout, &mut flat, name, blob)?);
+                }
+                Ok((
+                    ModelState {
+                        config: hdr.config,
+                        layout: hdr.layout,
+                        block_flat_size: hdr.block_flat_size,
+                        flat,
+                    },
+                    Some(SparseModel { layers }),
+                ))
+            }
+        }
+    }
+}
+
+/// Parsed and validated checkpoint header.
+struct Header {
+    config: ModelConfig,
+    layout: Vec<ParamEntry>,
+    block_flat_size: usize,
+    flat_size: usize,
+    sparse: Option<Vec<(String, usize)>>,
+}
+
+impl Header {
+    /// Parse and validate a checkpoint header. Offsets and shapes are
+    /// checked against the derived flat size with overflow-safe
+    /// arithmetic, so a corrupt header produces an error rather than a
+    /// panic or an absurd allocation downstream.
+    fn parse(bytes: &[u8], require_sparse: bool) -> Result<Header> {
+        let text = std::str::from_utf8(bytes).context("checkpoint header is not UTF-8")?;
+        let header = Json::parse(text)?;
+        let config = ModelConfig::from_json(header.get("config")?)?;
+        let mut layout: Vec<ParamEntry> = Vec::new();
+        let mut flat_size = 0usize;
+        for e in header.get("layout")?.as_arr()? {
+            let name = e.get("name")?.as_str()?.to_string();
+            let offset = e.get("offset")?.as_usize()?;
+            let shape: Vec<usize> = e
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?;
+            let numel = shape
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .with_context(|| format!("param '{name}': shape {shape:?} overflows"))?;
+            flat_size = flat_size
+                .checked_add(numel)
+                .with_context(|| format!("layout sizes overflow at param '{name}'"))?;
+            layout.push(ParamEntry { name, offset, shape });
+        }
+        ensure!(
+            flat_size.checked_mul(4).is_some(),
+            "flat size {flat_size} is implausibly large"
+        );
+        for e in &layout {
+            let numel = e.numel(); // safe: checked-multiplied above
+            ensure!(
+                numel <= flat_size && e.offset <= flat_size - numel,
+                "param '{}' at offset {} with {} elements exceeds the flat size {}",
+                e.name,
+                e.offset,
+                numel,
+                flat_size
+            );
+        }
+        let block_flat_size = header.get("block_flat_size")?.as_usize()?;
+        ensure!(
+            block_flat_size <= flat_size,
+            "block_flat_size {block_flat_size} exceeds flat size {flat_size}"
+        );
+        let sparse = match header.get_opt("sparse") {
+            Some(s) => Some(
+                s.as_arr()?
+                    .iter()
+                    .map(|e| {
+                        Ok((
+                            e.get("name")?.as_str()?.to_string(),
+                            e.get("len")?.as_usize()?,
+                        ))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            ),
+            None => None,
+        };
+        ensure!(
+            !require_sparse || sparse.is_some(),
+            "v2 checkpoint header lacks a `sparse` list"
+        );
+        Ok(Header { config, layout, block_flat_size, flat_size, sparse })
+    }
+}
+
+/// Decode a dense f32 payload (layout order, skipping `skip`) that must
+/// account for every byte of `data`.
+fn decode_dense_exact(
+    data: &[u8],
+    layout: &[ParamEntry],
+    skip: &HashSet<&str>,
+    flat_size: usize,
+) -> Result<Vec<f32>> {
+    let mut flat = vec![0.0f32; flat_size];
+    let mut off = 0usize;
+    for e in layout {
+        if skip.contains(e.name.as_str()) {
+            continue;
+        }
+        let nbytes = e.numel() * 4;
+        ensure!(
+            nbytes <= data.len() - off,
+            "truncated dense payload at param '{}'",
+            e.name
+        );
+        for (dst, c) in flat[e.offset..e.offset + e.numel()]
+            .iter_mut()
+            .zip(data[off..off + nbytes].chunks_exact(4))
+        {
+            *dst = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        off += nbytes;
+    }
+    ensure!(
+        off == data.len(),
+        "dense payload carries {} unexpected trailing bytes",
+        data.len() - off
+    );
+    Ok(flat)
+}
+
+/// Decode one compressed layer blob, write it densely into `flat`, and
+/// return the kept tensor.
+fn decode_sparse_layer(
+    layout: &[ParamEntry],
+    flat: &mut [f32],
+    name: &str,
+    blob: &[u8],
+) -> Result<SparseLayer> {
+    let tensor = SparseTensor::from_bytes(blob)
+        .with_context(|| format!("decoding compressed layer '{name}'"))?;
+    let e = layout
+        .iter()
+        .find(|e| e.name == name)
+        .with_context(|| format!("compressed layer '{name}' not in layout"))?;
+    ensure!(
+        e.shape == [tensor.rows(), tensor.cols()],
+        "compressed layer '{name}': shape {:?} vs {}x{}",
+        e.shape,
+        tensor.rows(),
+        tensor.cols()
+    );
+    let dense = tensor.to_dense();
+    flat[e.offset..e.offset + e.numel()].copy_from_slice(&dense.data);
+    Ok(SparseLayer { name: name.to_string(), tensor })
 }
 
 #[cfg(test)]
@@ -471,7 +744,7 @@ mod tests {
     }
 
     #[test]
-    fn checkpoint_v2_roundtrip_and_v1_back_compat() {
+    fn checkpoint_roundtrips_across_versions() {
         let mm = fake_manifest();
         let mut st = ModelState::init(&mm, 7);
         // prune every prunable layer to 2:4, then compress
@@ -486,22 +759,48 @@ mod tests {
         let sm = SparseModel::compress_state(&st, &pattern).unwrap();
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         let dir = std::env::temp_dir().join("thanos_test_ckpt_v2");
-        let p2 = dir.join("m2.thnck");
-        st.save_compressed(&p2, &sm).unwrap();
-        let (back, sparse) = ModelState::load_with_sparse(&p2).unwrap();
-        assert_eq!(bits(&back.flat), bits(&st.flat), "v2 reload must be bit-identical");
+        // v3 sectioned (what the writers emit today)
+        let p3 = dir.join("m3.thnck");
+        st.save_compressed(&p3, &sm).unwrap();
+        let (back, sparse) = ModelState::load_with_sparse(&p3).unwrap();
+        assert_eq!(bits(&back.flat), bits(&st.flat), "v3 reload must be bit-identical");
         assert_eq!(sparse.unwrap().layers.len(), 12);
-        // v1 files still load through the same entry points
+        // legacy v2 still loads through the same entry points
+        let p2 = dir.join("m2.thnck");
+        st.save_v2(&p2, &sm).unwrap();
+        let (back2, sparse2) = ModelState::load_with_sparse(&p2).unwrap();
+        assert_eq!(bits(&back2.flat), bits(&st.flat), "v2 reload must be bit-identical");
+        assert_eq!(sparse2.unwrap().layers.len(), 12);
+        // legacy v1 too
         let p1 = dir.join("m1.thnck");
-        st.save(&p1).unwrap();
+        st.save_v1(&p1).unwrap();
         let (b1, none) = ModelState::load_with_sparse(&p1).unwrap();
         assert!(none.is_none());
         assert_eq!(bits(&b1.flat), bits(&st.flat));
-        assert_eq!(bits(&ModelState::load(&p2).unwrap().flat), bits(&st.flat));
-        // compressed layers shrink the file despite the longer header
+        assert_eq!(bits(&ModelState::load(&p3).unwrap().flat), bits(&st.flat));
+        // compressed layers shrink the file despite header + section table
         let s1 = std::fs::metadata(&p1).unwrap().len();
-        let s2 = std::fs::metadata(&p2).unwrap().len();
-        assert!(s2 < s1, "v2 {s2} bytes !< v1 {s1} bytes");
+        let s3 = std::fs::metadata(&p3).unwrap().len();
+        assert!(s3 < s1, "v3 {s3} bytes !< v1 {s1} bytes");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v3_detects_corruption() {
+        let mm = fake_manifest();
+        let st = ModelState::init(&mm, 9);
+        let dir = std::env::temp_dir().join("thanos_test_ckpt_v3corrupt");
+        let p = dir.join("m.thnck");
+        st.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // a single payload bit-flip fails the section CRC
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 3;
+        flipped[last] ^= 0x10;
+        let err = ModelState::from_bytes(&flipped).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC-64"), "unexpected error: {err:#}");
+        // any truncation is caught by the section-table total
+        assert!(ModelState::from_bytes(&bytes[..bytes.len() - 1]).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

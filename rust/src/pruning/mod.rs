@@ -217,6 +217,14 @@ impl Pruned {
 /// `secs` is that layer's own wall time (layers overlap, so the sum can
 /// exceed the batch wall time). Results are bit-identical to calling
 /// [`prune`] sequentially — pinned by the determinism tests.
+///
+/// A panicking layer does **not** abort the batch: the panic is caught
+/// inside the layer's own task and surfaces as that slot's `Err`, so
+/// the surviving layers' results are still returned (the coordinator
+/// applies them before failing the run with every error). Each layer
+/// also probes the fault site `prune.layer.<i>` — keyed by slot index,
+/// not by a shared hit counter, so which layer faults under a
+/// `THANOS_FAULTS` schedule never depends on thread scheduling.
 pub fn prune_many(
     layers: &[(&Mat, &CalibStats)],
     method: Method,
@@ -229,13 +237,33 @@ pub fn prune_many(
         let _layer_span = crate::trace::span("prune.layer");
         let (w, stats) = layers[i];
         let t0 = crate::trace::clock::now_nanos();
-        let res = prune(method, w, stats, pattern, opts);
-        slot[0] = Some(res.map(|p| (p, crate::trace::clock::secs_since(t0))));
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            crate::robust::faults::point(&format!("prune.layer.{i}"))?;
+            prune(method, w, stats, pattern, opts)
+        }));
+        slot[0] = Some(match res {
+            Ok(r) => r.map(|p| (p, crate::trace::clock::secs_since(t0))),
+            Err(payload) => Err(anyhow::anyhow!(
+                "layer task {i} panicked: {}",
+                panic_message(&payload)
+            )),
+        });
     });
     slots
         .into_iter()
         .map(|s| s.expect("prune_many: every layer slot is filled"))
         .collect()
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
 }
 
 /// Dispatch: prune `w` with `method` under `pattern`.

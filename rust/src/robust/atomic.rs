@@ -1,0 +1,167 @@
+//! Atomic file writes: stage into a temp file in the target directory,
+//! fsync, then rename over the destination. A crash at any point leaves
+//! either the old file intact or a stray `.tmp` — never a torn target.
+//!
+//! Every step probes a fault site (`atomic.create` / `atomic.write` /
+//! `atomic.sync` / `atomic.rename`) so the chaos harness can kill the
+//! writer mid-commit, and the sync/rename steps retry transient errors
+//! through [`super::faults::with_retry`].
+
+use std::fs::{self, File};
+use std::io::{self, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::faults::{self, RetryPolicy};
+
+/// Process-wide temp-name counter: no wall clock, no RNG (D6-clean), and
+/// concurrent writers in one process never collide.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A file being written atomically. Write through the [`Write`] impl,
+/// then call [`AtomicFile::commit`]; dropping without committing removes
+/// the temp file and leaves the destination untouched.
+pub struct AtomicFile {
+    dest: PathBuf,
+    tmp: PathBuf,
+    writer: Option<BufWriter<File>>,
+}
+
+impl AtomicFile {
+    /// Start an atomic write targeting `dest`. Parent directories are
+    /// created; the temp file lives beside `dest` so the final rename
+    /// stays within one filesystem.
+    pub fn create(dest: impl AsRef<Path>) -> io::Result<Self> {
+        let dest = dest.as_ref().to_path_buf();
+        if let Some(parent) = dest.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)?;
+            }
+        }
+        let name = dest
+            .file_name()
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "atomic write needs a file name"))?
+            .to_string_lossy()
+            .into_owned();
+        let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = dest.with_file_name(format!(".{name}.tmp.{}.{seq}", std::process::id()));
+        faults::point("atomic.create")?;
+        let file = File::create(&tmp)?;
+        Ok(Self { dest, tmp, writer: Some(BufWriter::new(file)) })
+    }
+
+    fn writer(&mut self) -> &mut BufWriter<File> {
+        self.writer.as_mut().expect("AtomicFile used after commit")
+    }
+
+    /// Flush, fsync the temp file, rename it over the destination, and
+    /// fsync the parent directory so the rename itself is durable.
+    pub fn commit(mut self) -> io::Result<()> {
+        let mut writer = self.writer.take().expect("AtomicFile committed twice");
+        writer.flush()?;
+        let file = writer
+            .into_inner()
+            .map_err(|e| io::Error::other(e.to_string()))?;
+        let policy = RetryPolicy::default();
+        faults::with_retry(&policy, || {
+            faults::point("atomic.sync")?;
+            file.sync_all()
+        })?;
+        faults::with_retry(&policy, || {
+            faults::point("atomic.rename")?;
+            fs::rename(&self.tmp, &self.dest)
+        })?;
+        if let Some(parent) = self.dest.parent() {
+            if !parent.as_os_str().is_empty() {
+                // Directory fsync makes the rename durable; best-effort on
+                // filesystems that refuse to open directories.
+                if let Ok(dir) = File::open(parent) {
+                    let _ = dir.sync_all();
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Write for AtomicFile {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match faults::write_action("atomic.write")? {
+            Some(n) => {
+                let n = n.min(buf.len());
+                self.writer().write_all(&buf[..n])?;
+                // Report full consumption so the caller's write_all moves
+                // on: the truncation models bytes lost below the API.
+                Ok(buf.len())
+            }
+            None => {
+                self.writer().write_all(buf)?;
+                Ok(buf.len())
+            }
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.writer().flush()
+    }
+}
+
+impl Drop for AtomicFile {
+    fn drop(&mut self) {
+        if self.writer.take().is_some() {
+            let _ = fs::remove_file(&self.tmp);
+        }
+    }
+}
+
+/// Write `bytes` to `path` atomically in one call.
+pub fn write_atomic(path: impl AsRef<Path>, bytes: &[u8]) -> io::Result<()> {
+    let mut f = AtomicFile::create(path)?;
+    f.write_all(bytes)?;
+    f.commit()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("thanos-atomic-{tag}-{}", std::process::id()));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn commit_replaces_and_abort_preserves() {
+        let dir = tmpdir("basic");
+        let path = dir.join("out.bin");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"first");
+
+        // Dropping without commit leaves the old contents and no temp file.
+        {
+            let mut f = AtomicFile::create(&path).unwrap();
+            f.write_all(b"torn").unwrap();
+        }
+        assert_eq!(fs::read(&path).unwrap(), b"first");
+        let stray: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(stray.is_empty(), "uncommitted temp file left behind");
+
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"second");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn creates_missing_parents() {
+        let dir = tmpdir("parents");
+        let path = dir.join("a/b/c.bin");
+        write_atomic(&path, b"x").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"x");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

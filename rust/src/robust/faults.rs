@@ -1,0 +1,339 @@
+//! Deterministic fault injection for the crash-safety harness.
+//!
+//! Production IO paths call [`point`] (and the write path calls
+//! [`write_action`]) at named sites. With no schedule installed both are
+//! a single relaxed atomic load — effectively free. A schedule, installed
+//! from the `THANOS_FAULTS` env var or `--faults`, maps `(site, nth hit)`
+//! to an action: return a transient IO error, truncate a write, panic, or
+//! exit the process. Everything is keyed by site name and hit count — no
+//! wall clock, no RNG — so a given schedule reproduces the same failure
+//! on every run (D6-clean).
+//!
+//! Schedule grammar (semicolon-separated, `nth` is 1-based):
+//!
+//! ```text
+//! THANOS_FAULTS="atomic.sync:1=err;journal.append:2=panic;atomic.write:1=trunc(8);ckpt:1=exit(17)"
+//! ```
+//!
+//! Sites that run inside the parallel engine (`prune.layer.<i>`) embed the
+//! slot index in the site name, so which layer faults never depends on
+//! thread scheduling; file-IO sites run serially on the submitter thread
+//! and use plain per-site hit counters.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Fault sites registered by the robust IO layer itself. Per-layer prune
+/// sites (`prune.layer.<i>`) are registered dynamically and are not listed
+/// here. The chaos harness iterates this list to kill at every site.
+pub const SITES: [&str; 6] = [
+    "atomic.create",
+    "atomic.write",
+    "atomic.sync",
+    "atomic.rename",
+    "journal.append",
+    "journal.sync",
+];
+
+/// What an armed fault site does when its scheduled hit arrives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Return `io::ErrorKind::Interrupted` — the transient class the retry
+    /// wrapper is allowed to absorb.
+    Err,
+    /// Panic with a site-naming message (in-process kill; unwind-safe
+    /// callers catch it, tests kill-and-resume through it).
+    Panic,
+    /// `std::process::exit(code)` — a true kill that skips every `Drop`.
+    Exit(i32),
+    /// Truncate the write to the first `n` bytes (write sites only; at
+    /// non-write sites it degrades to `Err`).
+    Trunc(usize),
+}
+
+struct State {
+    /// `(site, nth-hit)` → action. Each armed entry fires at most once.
+    schedule: BTreeMap<(String, u64), Action>,
+    /// Hits observed so far per site.
+    hits: BTreeMap<String, u64>,
+    injected: u64,
+    retries: u64,
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<State>> = Mutex::new(None);
+
+/// Counters accumulated since the schedule was installed (or since
+/// process start when no schedule is active — then always zero injected).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub injected: u64,
+    pub retries: u64,
+}
+
+/// Parse a `THANOS_FAULTS` schedule string. Empty input yields an empty
+/// schedule (which [`install`] treats as "clear").
+pub fn parse_schedule(spec: &str) -> crate::Result<BTreeMap<(String, u64), Action>> {
+    let mut out = BTreeMap::new();
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (site_nth, action) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("fault entry `{part}`: expected site:n=action"))?;
+        let (site, nth) = site_nth
+            .rsplit_once(':')
+            .ok_or_else(|| anyhow::anyhow!("fault entry `{part}`: expected site:n=action"))?;
+        let nth: u64 = nth
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fault entry `{part}`: hit index `{nth}` is not a number"))?;
+        anyhow::ensure!(nth >= 1, "fault entry `{part}`: hit index is 1-based");
+        anyhow::ensure!(!site.is_empty(), "fault entry `{part}`: empty site name");
+        let action = parse_action(action)
+            .ok_or_else(|| anyhow::anyhow!("fault entry `{part}`: unknown action `{action}`"))?;
+        out.insert((site.to_string(), nth), action);
+    }
+    Ok(out)
+}
+
+fn parse_action(s: &str) -> Option<Action> {
+    match s {
+        "err" => Some(Action::Err),
+        "panic" => Some(Action::Panic),
+        "exit" => Some(Action::Exit(101)),
+        _ => {
+            if let Some(inner) = s.strip_prefix("exit(").and_then(|r| r.strip_suffix(')')) {
+                inner.parse().ok().map(Action::Exit)
+            } else if let Some(inner) = s.strip_prefix("trunc(").and_then(|r| r.strip_suffix(')')) {
+                inner.parse().ok().map(Action::Trunc)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Install a schedule, replacing any previous one and zeroing counters.
+/// An empty schedule deactivates injection entirely.
+pub fn install(schedule: BTreeMap<(String, u64), Action>) {
+    let mut guard = STATE.lock().expect("faults state poisoned");
+    if schedule.is_empty() {
+        *guard = None;
+        ACTIVE.store(false, Ordering::Release);
+    } else {
+        *guard = Some(State { schedule, hits: BTreeMap::new(), injected: 0, retries: 0 });
+        ACTIVE.store(true, Ordering::Release);
+    }
+}
+
+/// Remove any installed schedule and reset counters.
+pub fn clear() {
+    install(BTreeMap::new());
+}
+
+/// Install the schedule from `THANOS_FAULTS` if the variable is set.
+pub fn init_from_env() -> crate::Result<()> {
+    if let Ok(spec) = std::env::var("THANOS_FAULTS") {
+        install(parse_schedule(&spec)?);
+    }
+    Ok(())
+}
+
+/// Snapshot of injected/retry counters.
+pub fn stats() -> FaultStats {
+    let guard = STATE.lock().expect("faults state poisoned");
+    match guard.as_ref() {
+        Some(s) => FaultStats { injected: s.injected, retries: s.retries },
+        None => FaultStats::default(),
+    }
+}
+
+/// Record one retry attempt taken by [`with_retry`].
+pub(crate) fn note_retry() {
+    if !ACTIVE.load(Ordering::Acquire) {
+        return;
+    }
+    if let Some(s) = STATE.lock().expect("faults state poisoned").as_mut() {
+        s.retries += 1;
+    }
+}
+
+fn trip(site: &str) -> Option<Action> {
+    if !ACTIVE.load(Ordering::Acquire) {
+        return None;
+    }
+    let mut guard = STATE.lock().expect("faults state poisoned");
+    let state = guard.as_mut()?;
+    let hit = state.hits.entry(site.to_string()).or_insert(0);
+    *hit += 1;
+    let action = state.schedule.remove(&(site.to_string(), *hit))?;
+    state.injected += 1;
+    Some(action)
+}
+
+fn fire_terminal(site: &str, action: Action) -> io::Error {
+    match action {
+        Action::Panic => panic!("injected fault: panic at `{site}`"),
+        Action::Exit(code) => std::process::exit(code),
+        Action::Err | Action::Trunc(_) => io::Error::new(
+            io::ErrorKind::Interrupted,
+            format!("injected fault: transient error at `{site}`"),
+        ),
+    }
+}
+
+/// Probe a fault site. Returns `Err` for the transient class, panics or
+/// exits for the kill class, `Ok(())` when unarmed.
+pub fn point(site: &str) -> io::Result<()> {
+    match trip(site) {
+        None => Ok(()),
+        Some(action) => Err(fire_terminal(site, action)),
+    }
+}
+
+/// Probe a write-path fault site. `Ok(None)` when unarmed, `Ok(Some(n))`
+/// to truncate this write to `n` bytes, `Err` for a transient error;
+/// panics/exits for the kill class.
+pub fn write_action(site: &str) -> io::Result<Option<usize>> {
+    match trip(site) {
+        None => Ok(None),
+        Some(Action::Trunc(n)) => Ok(Some(n)),
+        Some(action) => Err(fire_terminal(site, action)),
+    }
+}
+
+/// Deterministic bounded exponential backoff for the transient-error
+/// class. The default schedule is 1, 4, 16, 50, 50, … milliseconds.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    pub max_attempts: u32,
+    pub base_millis: u64,
+    pub factor: u64,
+    pub cap_millis: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_attempts: 3, base_millis: 1, factor: 4, cap_millis: 50 }
+    }
+}
+
+impl RetryPolicy {
+    /// Sleep before retry number `retry` (0-based): `base * factor^retry`,
+    /// saturating, capped at `cap_millis`.
+    pub fn backoff_millis(&self, retry: u32) -> u64 {
+        let mut ms = self.base_millis;
+        for _ in 0..retry {
+            ms = ms.saturating_mul(self.factor);
+            if ms >= self.cap_millis {
+                return self.cap_millis;
+            }
+        }
+        ms.min(self.cap_millis)
+    }
+}
+
+/// Run `op`, retrying transient IO errors (`Interrupted`/`WouldBlock`)
+/// up to `policy.max_attempts` extra times with deterministic backoff.
+/// Non-transient errors and exhaustion return the last error.
+pub fn with_retry<T>(
+    policy: &RetryPolicy,
+    mut op: impl FnMut() -> io::Result<T>,
+) -> io::Result<T> {
+    let mut attempt = 0u32;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if is_transient(&e) && attempt < policy.max_attempts => {
+                note_retry();
+                std::thread::sleep(std::time::Duration::from_millis(
+                    policy.backoff_millis(attempt),
+                ));
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn is_transient(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::Interrupted | io::ErrorKind::WouldBlock)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The schedule is process-global; tests that install one take this
+    /// lock so the parallel test runner cannot interleave them.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn schedule_grammar() {
+        let s = parse_schedule("atomic.sync:1=err; journal.append:2=panic;a.b:3=trunc(8);x:1=exit(7);y:2=exit")
+            .unwrap();
+        assert_eq!(s[&("atomic.sync".to_string(), 1)], Action::Err);
+        assert_eq!(s[&("journal.append".to_string(), 2)], Action::Panic);
+        assert_eq!(s[&("a.b".to_string(), 3)], Action::Trunc(8));
+        assert_eq!(s[&("x".to_string(), 1)], Action::Exit(7));
+        assert_eq!(s[&("y".to_string(), 2)], Action::Exit(101));
+        assert!(parse_schedule("").unwrap().is_empty());
+        assert!(parse_schedule("nonsense").is_err());
+        assert!(parse_schedule("site:0=err").is_err());
+        assert!(parse_schedule("site:1=boom").is_err());
+    }
+
+    #[test]
+    fn nth_hit_fires_once() {
+        let _g = TEST_LOCK.lock().unwrap();
+        install(parse_schedule("t.site:2=err").unwrap());
+        assert!(point("t.site").is_ok());
+        assert!(point("t.site").is_err());
+        assert!(point("t.site").is_ok());
+        assert_eq!(stats().injected, 1);
+        clear();
+        assert!(point("t.site").is_ok());
+    }
+
+    #[test]
+    fn write_action_truncates() {
+        let _g = TEST_LOCK.lock().unwrap();
+        install(parse_schedule("t.write:1=trunc(3)").unwrap());
+        assert_eq!(write_action("t.write").unwrap(), Some(3));
+        assert_eq!(write_action("t.write").unwrap(), None);
+        clear();
+    }
+
+    #[test]
+    fn backoff_schedule_is_pinned() {
+        let p = RetryPolicy::default();
+        let seq: Vec<u64> = (0..5).map(|i| p.backoff_millis(i)).collect();
+        assert_eq!(seq, vec![1, 4, 16, 50, 50]);
+    }
+
+    #[test]
+    fn retry_absorbs_transients() {
+        let policy = RetryPolicy { max_attempts: 3, base_millis: 0, factor: 1, cap_millis: 0 };
+        let mut left = 2;
+        let out = with_retry(&policy, || {
+            if left > 0 {
+                left -= 1;
+                Err(io::Error::new(io::ErrorKind::Interrupted, "transient"))
+            } else {
+                Ok(42)
+            }
+        })
+        .unwrap();
+        assert_eq!(out, 42);
+
+        let err = with_retry(&policy, || -> io::Result<()> {
+            Err(io::Error::other("permanent"))
+        })
+        .unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Other);
+    }
+}

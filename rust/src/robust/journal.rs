@@ -1,0 +1,232 @@
+//! Append-only, fsynced prune journal.
+//!
+//! Record framing on disk: `u32 LE payload length | u64 LE CRC-64/XZ of
+//! payload | payload` (UTF-8 JSON). Appends are fsynced and wrapped in
+//! the deterministic retry policy; a failed append rolls the file back
+//! to its pre-record length first, so a retried write never leaves a
+//! torn record in the middle of the stream. Replay tolerates a torn
+//! tail — the suffix after the last complete, checksum-valid record —
+//! by truncating it away, which is exactly the state a crash mid-append
+//! leaves behind.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::crc::crc64;
+use super::faults::{self, RetryPolicy};
+
+const MAX_RECORD_LEN: u32 = 64 * 1024 * 1024;
+
+/// An open journal file positioned at its end, ready to append.
+pub struct Journal {
+    path: PathBuf,
+    file: File,
+    len: u64,
+}
+
+impl Journal {
+    /// Create a fresh journal, truncating any existing file.
+    pub fn create(path: impl AsRef<Path>) -> crate::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let file = OpenOptions::new().create(true).write(true).truncate(true).open(&path)?;
+        file.sync_all()?;
+        Ok(Self { path, file, len: 0 })
+    }
+
+    /// Open an existing journal for resumption: replay every complete
+    /// record, truncate any torn tail, and return the journal positioned
+    /// to append plus the replayed payloads in order.
+    pub fn open_resume(path: impl AsRef<Path>) -> crate::Result<(Self, Vec<String>)> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = OpenOptions::new().read(true).write(true).open(&path)?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes)?;
+        let (records, valid_len) = replay(&bytes)?;
+        if valid_len as u64 != bytes.len() as u64 {
+            file.set_len(valid_len as u64)?;
+            file.sync_all()?;
+        }
+        file.seek(SeekFrom::Start(valid_len as u64))?;
+        Ok((Self { path, file, len: valid_len as u64 }, records))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Roll the journal back to `len` bytes (a record boundary computed
+    /// by the caller) — used on resume to drop the records of a block
+    /// that never completed.
+    pub fn truncate_to(&mut self, len: u64) -> crate::Result<()> {
+        anyhow::ensure!(
+            len <= self.len,
+            "cannot truncate journal forward ({} -> {len} bytes)",
+            self.len
+        );
+        self.file.set_len(len)?;
+        self.file.sync_all()?;
+        self.file.seek(SeekFrom::Start(len))?;
+        self.len = len;
+        Ok(())
+    }
+
+    /// Append one record and fsync it. Transient faults are retried with
+    /// the default deterministic backoff; before each retry the file is
+    /// rolled back to its pre-record length, so the stream never carries
+    /// a torn interior record.
+    pub fn append(&mut self, payload: &str) -> crate::Result<()> {
+        let body = payload.as_bytes();
+        anyhow::ensure!(
+            body.len() <= MAX_RECORD_LEN as usize,
+            "journal record of {} bytes exceeds the {MAX_RECORD_LEN}-byte cap",
+            body.len()
+        );
+        let mut frame = Vec::with_capacity(12 + body.len());
+        frame.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc64(body).to_le_bytes());
+        frame.extend_from_slice(body);
+
+        let pre_len = self.len;
+        let policy = RetryPolicy::default();
+        let res = faults::with_retry(&policy, || {
+            // Roll back any torn partial record from a previous attempt.
+            self.file.set_len(pre_len)?;
+            self.file.seek(SeekFrom::Start(pre_len))?;
+            let wrote = match faults::write_action("journal.append")? {
+                Some(n) => {
+                    let n = n.min(frame.len());
+                    self.file.write_all(&frame[..n])?;
+                    // A truncated append is a torn record: surface it as a
+                    // transient error so the retry path rolls it back.
+                    return Err(io::Error::new(
+                        io::ErrorKind::Interrupted,
+                        "injected fault: truncated journal append",
+                    ));
+                }
+                None => {
+                    self.file.write_all(&frame)?;
+                    frame.len()
+                }
+            };
+            faults::point("journal.sync")?;
+            self.file.sync_all()?;
+            Ok(wrote)
+        });
+        match res {
+            Ok(wrote) => {
+                self.len = pre_len + wrote as u64;
+                Ok(())
+            }
+            Err(e) => {
+                // Best-effort rollback so a later append starts clean.
+                let _ = self.file.set_len(pre_len);
+                Err(anyhow::anyhow!("journal append to {} failed: {e}", self.path.display()))
+            }
+        }
+    }
+}
+
+/// Decode `(records, valid_prefix_len)` from raw journal bytes. A torn
+/// tail (incomplete frame, or a final frame whose CRC fails) is not an
+/// error — it marks the end of the valid prefix. A CRC failure *followed
+/// by more complete records* is corruption and errors out.
+pub fn replay(bytes: &[u8]) -> crate::Result<(Vec<String>, usize)> {
+    let mut records = Vec::new();
+    let mut off = 0usize;
+    while bytes.len() - off >= 12 {
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().expect("4-byte slice")) as usize;
+        if len > MAX_RECORD_LEN as usize || len > bytes.len() - off - 12 {
+            // Header or body incomplete / implausible: torn tail.
+            break;
+        }
+        let crc = u64::from_le_bytes(bytes[off + 4..off + 12].try_into().expect("8-byte slice"));
+        let body = &bytes[off + 12..off + 12 + len];
+        if crc64(body) != crc {
+            anyhow::ensure!(
+                off + 12 + len == bytes.len(),
+                "journal record at offset {off} fails its checksum but is not the final record: \
+                 the journal is corrupt, not merely torn"
+            );
+            break;
+        }
+        let text = std::str::from_utf8(body)
+            .map_err(|_| anyhow::anyhow!("journal record at offset {off} is not UTF-8"))?
+            .to_string();
+        records.push(text);
+        off += 12 + len;
+    }
+    Ok((records, off))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmppath(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("thanos-journal-{tag}-{}.jnl", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_and_torn_tail() {
+        let p = tmppath("roundtrip");
+        let mut j = Journal::create(&p).unwrap();
+        j.append("{\"layer\":0}").unwrap();
+        j.append("{\"layer\":1}").unwrap();
+        drop(j);
+
+        // Simulate a crash mid-append: garbage tail after valid records.
+        let mut bytes = std::fs::read(&p).unwrap();
+        let clean_len = bytes.len();
+        bytes.extend_from_slice(&[7u8; 5]);
+        std::fs::write(&p, &bytes).unwrap();
+
+        let (j, records) = Journal::open_resume(&p).unwrap();
+        assert_eq!(records, vec!["{\"layer\":0}", "{\"layer\":1}"]);
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), clean_len as u64);
+        drop(j);
+
+        // Appending after resume continues the stream.
+        let (mut j, _) = Journal::open_resume(&p).unwrap();
+        j.append("{\"layer\":2}").unwrap();
+        drop(j);
+        let (_, records) = Journal::open_resume(&p).unwrap();
+        assert_eq!(records.len(), 3);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn interior_corruption_is_an_error() {
+        let p = tmppath("interior");
+        let mut j = Journal::create(&p).unwrap();
+        j.append("{\"layer\":0}").unwrap();
+        j.append("{\"layer\":1}").unwrap();
+        drop(j);
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[13] ^= 0x40; // flip a bit inside the first record's payload
+        assert!(replay(&bytes).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn torn_final_record_is_tolerated() {
+        let p = tmppath("tornfinal");
+        let mut j = Journal::create(&p).unwrap();
+        j.append("{\"layer\":0}").unwrap();
+        let clean_len = std::fs::metadata(&p).unwrap().len() as usize;
+        j.append("{\"layer\":1}").unwrap();
+        drop(j);
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01; // corrupt the final record's payload
+        let (records, valid) = replay(&bytes).unwrap();
+        assert_eq!(records, vec!["{\"layer\":0}"]);
+        assert_eq!(valid, clean_len);
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,26 @@
+//! Crash-safety layer: atomic checksummed file IO, the prune journal,
+//! and deterministic fault injection.
+//!
+//! - [`atomic`] — temp-file + fsync + rename writes; a kill at any point
+//!   leaves the destination either old or new, never torn.
+//! - [`crc`] — hand-rolled CRC-64/XZ used by checkpoint v3 section
+//!   framing and journal records.
+//! - [`journal`] — append-only fsynced record stream with torn-tail
+//!   tolerant replay; the coordinator logs one record per completed
+//!   layer and per saved block so `--resume` can skip finished work.
+//! - [`faults`] — site-keyed, schedule-driven fault injection
+//!   (`THANOS_FAULTS`) plus the deterministic retry/backoff wrapper.
+//!   No wall clock and no RNG anywhere in this tree: the module lives
+//!   under the determinism contract's compute prefixes (D1–D6) and is
+//!   the one tree exempt from D7 (raw file-write ban) because it *is*
+//!   the sanctioned write path.
+
+pub mod atomic;
+pub mod crc;
+pub mod faults;
+pub mod journal;
+
+pub use atomic::{write_atomic, AtomicFile};
+pub use crc::{crc64, crc64_f32s, Crc64};
+pub use faults::{FaultStats, RetryPolicy};
+pub use journal::Journal;

@@ -265,12 +265,14 @@ pub fn export() -> Result<Option<PathBuf>> {
 }
 
 /// Export the recorded spans as Chrome trace-event JSON to `path`.
+/// The write is atomic (temp file + fsync + rename), so a crash during
+/// export never leaves a truncated trace behind (audit rule D7).
 pub fn export_to(path: &Path) -> Result<()> {
     let shards = snapshot();
     let doc = chrome_trace_json(&shards);
     let mut text = doc.to_string_compact();
     text.push('\n');
-    std::fs::write(path, text)
+    crate::robust::write_atomic(path, text.as_bytes())
         .with_context(|| format!("writing Chrome trace to {}", path.display()))
 }
 

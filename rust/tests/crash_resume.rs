@@ -1,0 +1,501 @@
+//! Chaos harness for the journaled pruning pipeline (DESIGN.md
+//! §Robustness): kill the run at every fault site — in-process panics,
+//! injected transient IO errors, torn writes, and a real
+//! `process::exit` in a subprocess — then `--resume` and assert the
+//! final weights and the progress-checkpoint **bytes** are identical
+//! to an uninterrupted run, across patterns and serial/parallel
+//! execution.
+//!
+//! The walk is driven through a synthetic [`BlockPipeline`] so no AOT
+//! artifacts are needed: activations evolve from a digest of each
+//! (pruned) block's weights, so later blocks genuinely depend on
+//! earlier pruning decisions — a resume that restored the wrong bytes
+//! would diverge.
+//!
+//! Fault schedules are process-global, so every test serializes on one
+//! lock. `THANOS_CHAOS_ARTIFACTS=<dir>` exports a journal + progress
+//! checkpoint for CI artifact upload.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::Result;
+use thanos::config::ModelConfig;
+use thanos::coordinator::{
+    progress_ckpt_path, run_pruning, Backend, BlockPipeline, PruneReport, PruneSpec, RobustOpts,
+};
+use thanos::linalg::Mat;
+use thanos::model::ModelState;
+use thanos::pruning::{CalibStats, Method, Pattern, PruneOpts};
+use thanos::robust::faults;
+use thanos::robust::{crc64_f32s, RetryPolicy};
+use thanos::runtime::{ModelManifest, ParamEntry};
+
+/// Fault schedules are process-global state: every test takes this.
+static LOCK: Mutex<()> = Mutex::new(());
+
+const SEED: u64 = 0xC4A5;
+const CHILD_ENV: &str = "THANOS_CHAOS_CHILD";
+
+// ------------------------------------------------------------------
+// synthetic model + pipeline
+
+/// Micro 3-block manifest mirroring the python param_specs layout.
+fn micro_manifest() -> ModelManifest {
+    let cfg = ModelConfig {
+        name: "micro3".into(),
+        vocab: 16,
+        d_model: 8,
+        n_layers: 3,
+        n_heads: 2,
+        d_ff: 16,
+        seq_len: 4,
+    };
+    let mut layout = Vec::new();
+    let mut off = 0usize;
+    let push = |layout: &mut Vec<ParamEntry>, name: &str, shape: Vec<usize>, off: &mut usize| {
+        let numel: usize = shape.iter().product();
+        layout.push(ParamEntry { name: name.into(), offset: *off, shape });
+        *off += numel;
+    };
+    push(&mut layout, "emb", vec![16, 8], &mut off);
+    push(&mut layout, "pos", vec![4, 8], &mut off);
+    let mut block_flat = 0;
+    for l in 0..cfg.n_layers {
+        let before = off;
+        push(&mut layout, &format!("blocks.{l}.ln1"), vec![8], &mut off);
+        for w in ["wq", "wk", "wv", "wo"] {
+            push(&mut layout, &format!("blocks.{l}.{w}"), vec![8, 8], &mut off);
+        }
+        push(&mut layout, &format!("blocks.{l}.ln2"), vec![8], &mut off);
+        push(&mut layout, &format!("blocks.{l}.w1"), vec![16, 8], &mut off);
+        push(&mut layout, &format!("blocks.{l}.w2"), vec![8, 16], &mut off);
+        block_flat = off - before;
+    }
+    push(&mut layout, "ln_f", vec![8], &mut off);
+    ModelManifest { config: cfg, flat_size: off, block_flat_size: block_flat, layout }
+}
+
+/// Deterministic calibration statistics derived from the activation
+/// vector: distinct per site (`salt`), diagonally seeded so the Hessian
+/// is comfortably positive definite for the solver-based methods.
+fn synth_stats(x: &[f32], b: usize, a: usize, salt: usize) -> CalibStats {
+    let mut data = vec![0.0f32; b * a];
+    for i in 0..b {
+        for j in 0..a {
+            let v = x[(i * 31 + j * 7 + salt) % x.len()];
+            let texture = ((i * 13 + j * 5 + salt) % 17) as f32 * 0.07;
+            let diag = if j % b == i { 1.0 } else { 0.0 };
+            data[i * a + j] = v + texture + diag;
+        }
+    }
+    let mut s = CalibStats::new(b);
+    s.accumulate(&Mat::from_vec(b, a, data));
+    s
+}
+
+/// Artifact-free [`BlockPipeline`]: `begin` reads only unpruned params
+/// (the embedding, like the real embed pass), `reforward` folds a
+/// digest of the block's **current** weights into the activations — so
+/// `begin` + `reforward(0..k)` replayed over a restored state
+/// reproduces the activations of an uninterrupted run bit-for-bit, and
+/// any restore mismatch propagates into every later block's statistics.
+struct SynthPipe {
+    n_blocks: usize,
+    d: usize,
+    d_ff: usize,
+    a: usize,
+    x: Vec<f32>,
+}
+
+impl SynthPipe {
+    fn new(cfg: &ModelConfig) -> Self {
+        SynthPipe { n_blocks: cfg.n_layers, d: cfg.d_model, d_ff: cfg.d_ff, a: 32, x: Vec::new() }
+    }
+}
+
+impl BlockPipeline for SynthPipe {
+    fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    fn begin(&mut self, state: &ModelState) -> Result<()> {
+        let emb = state.get_mat("emb")?;
+        self.x = (0..64).map(|i| emb.data[i % emb.data.len()]).collect();
+        Ok(())
+    }
+
+    fn capture(&mut self, state: &ModelState, l: usize) -> Result<Vec<CalibStats>> {
+        state.block_slice(l)?; // same existence check as the real pipeline
+        Ok(vec![
+            synth_stats(&self.x, self.d, self.a, 1),
+            synth_stats(&self.x, self.d, self.a, 2),
+            synth_stats(&self.x, self.d, self.a, 3),
+            synth_stats(&self.x, self.d_ff, self.a, 4),
+        ])
+    }
+
+    fn reforward(&mut self, state: &ModelState, l: usize) -> Result<()> {
+        let digest = crc64_f32s(state.block_slice(l)?);
+        for (i, v) in self.x.iter_mut().enumerate() {
+            let k = ((digest >> (8 * (i % 8))) & 0xFF) as f32 / 255.0;
+            *v = 0.5 * *v + 0.25 * k + 0.01;
+        }
+        Ok(())
+    }
+
+    fn take_stage_secs(&mut self) -> (f64, f64, f64) {
+        (0.0, 0.0, 0.0)
+    }
+}
+
+// ------------------------------------------------------------------
+// harness helpers
+
+fn spec(pattern: Pattern) -> PruneSpec {
+    PruneSpec {
+        method: Method::Thanos,
+        pattern,
+        opts: PruneOpts { block_size: 4, ..Default::default() },
+        backend: Backend::Rust,
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("thanos-chaos-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// Uninterrupted journaled run: final weight bits + the bytes of the
+/// progress checkpoint it leaves behind.
+fn reference(mm: &ModelManifest, sp: &PruneSpec, jpath: &Path) -> (Vec<u32>, Vec<u8>) {
+    faults::clear();
+    let mut state = ModelState::init(mm, SEED);
+    let mut pipe = SynthPipe::new(&mm.config);
+    let robust = RobustOpts { journal: Some(jpath.to_path_buf()), resume: false };
+    run_pruning(&mut state, &mut pipe, sp, &robust).expect("uninterrupted reference run");
+    let ckpt = std::fs::read(progress_ckpt_path(jpath)).unwrap();
+    (bits(&state.flat), ckpt)
+}
+
+/// Install `schedule`, run until it kills the walk (panic or error),
+/// clear faults, resume from the journal, and return the resumed final
+/// bits + checkpoint bytes + resume report.
+fn kill_then_resume(
+    mm: &ModelManifest,
+    sp: &PruneSpec,
+    jpath: &Path,
+    schedule: &str,
+) -> (Vec<u32>, Vec<u8>, PruneReport) {
+    let _ = std::fs::remove_file(jpath);
+    let _ = std::fs::remove_file(progress_ckpt_path(jpath));
+    faults::install(faults::parse_schedule(schedule).unwrap());
+    let robust = RobustOpts { journal: Some(jpath.to_path_buf()), resume: false };
+    let crashed = catch_unwind(AssertUnwindSafe(|| {
+        let mut state = ModelState::init(mm, SEED);
+        let mut pipe = SynthPipe::new(&mm.config);
+        run_pruning(&mut state, &mut pipe, sp, &robust).map(|_| ())
+    }));
+    assert!(
+        !matches!(crashed, Ok(Ok(()))),
+        "schedule '{schedule}' did not interrupt the run"
+    );
+    faults::clear();
+    let mut state = ModelState::init(mm, SEED);
+    let mut pipe = SynthPipe::new(&mm.config);
+    let robust = RobustOpts { journal: Some(jpath.to_path_buf()), resume: true };
+    let report = run_pruning(&mut state, &mut pipe, sp, &robust)
+        .unwrap_or_else(|e| panic!("resume after '{schedule}' failed: {e:#}"));
+    let ckpt = std::fs::read(progress_ckpt_path(jpath)).unwrap();
+    (bits(&state.flat), ckpt, report)
+}
+
+// ------------------------------------------------------------------
+// the kill-at-site matrix
+
+#[test]
+fn kill_at_every_fault_site_then_resume_is_bitwise_identical() {
+    let _g = LOCK.lock().unwrap();
+    // under THANOS_CHAOS_ARTIFACTS (CI), also record a Chrome trace of
+    // the whole matrix so the robust.* spans land in the artifacts
+    let artifacts = std::env::var("THANOS_CHAOS_ARTIFACTS").ok();
+    if artifacts.is_some() {
+        thanos::trace::set_enabled(true);
+    }
+    let mm = micro_manifest();
+    let sp = spec(Pattern::Unstructured { p: 0.5 });
+    let dir = tmpdir("matrix");
+    let (ref_bits, ref_ckpt) = reference(&mm, &sp, &dir.join("ref.journal"));
+    let jpath = dir.join("kill.journal");
+
+    let mut schedules: Vec<String> = Vec::new();
+    for site in faults::SITES {
+        // first hit (before any block commits) and a later hit (after
+        // at least one block record exists → a real mid-run resume)
+        schedules.push(format!("{site}:1=panic"));
+        schedules.push(format!("{site}:2=panic"));
+    }
+    // layer-task kills: contained by prune_many, surface as errors
+    schedules.push("prune.layer.0:1=panic".into());
+    schedules.push("prune.layer.4:2=panic".into());
+
+    let mut total_resumed = 0u64;
+    for schedule in &schedules {
+        let (got_bits, got_ckpt, report) = kill_then_resume(&mm, &sp, &jpath, schedule);
+        assert_eq!(got_bits, ref_bits, "final weights diverge after '{schedule}'");
+        assert_eq!(got_ckpt, ref_ckpt, "checkpoint bytes diverge after '{schedule}'");
+        total_resumed += report.resumed_layers;
+    }
+    assert!(
+        total_resumed > 0,
+        "no schedule exercised a true resume (all restarted from scratch)"
+    );
+
+    if let Some(out) = artifacts {
+        let out = PathBuf::from(out);
+        std::fs::create_dir_all(&out).unwrap();
+        std::fs::copy(&jpath, out.join("chaos.journal")).unwrap();
+        std::fs::copy(progress_ckpt_path(&jpath), out.join("chaos.journal.ckpt")).unwrap();
+        thanos::trace::export_to(&out.join("chaos-trace.json")).unwrap();
+        thanos::trace::set_enabled(false);
+    }
+}
+
+#[test]
+fn resume_matrix_across_patterns_and_threading() {
+    let _g = LOCK.lock().unwrap();
+    let mm = micro_manifest();
+    let dir = tmpdir("patterns");
+    let patterns = [
+        Pattern::Unstructured { p: 0.5 },
+        Pattern::SemiStructured { n: 2, m: 4, alpha: 0.1 },
+        Pattern::Structured { p: 0.5, alpha: 0.1 },
+    ];
+    for (pi, pattern) in patterns.into_iter().enumerate() {
+        let sp = spec(pattern);
+        let (ref_bits, ref_ckpt) = reference(&mm, &sp, &dir.join(format!("ref{pi}.journal")));
+        for serial in [false, true] {
+            for schedule in
+                ["atomic.rename:2=panic", "journal.sync:3=panic", "prune.layer.0:2=panic"]
+            {
+                let jpath = dir.join(format!("p{pi}-s{serial}.journal"));
+                let run = || kill_then_resume(&mm, &sp, &jpath, schedule);
+                let (got_bits, got_ckpt, _) =
+                    if serial { thanos::engine::with_serial(run) } else { run() };
+                assert_eq!(
+                    got_bits, ref_bits,
+                    "{pattern:?} serial={serial} '{schedule}': weights diverge"
+                );
+                assert_eq!(
+                    got_ckpt, ref_ckpt,
+                    "{pattern:?} serial={serial} '{schedule}': checkpoint bytes diverge"
+                );
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// a true process kill (skips every Drop), via subprocess re-exec
+
+/// Runs only in the spawned child: prune with an `exit` fault armed, so
+/// the process dies mid-run with no unwinding and no `Drop` cleanup.
+#[test]
+fn chaos_child_worker() {
+    let Ok(jpath) = std::env::var(CHILD_ENV) else { return };
+    let schedule = std::env::var("THANOS_CHAOS_CHILD_FAULTS").unwrap();
+    faults::install(faults::parse_schedule(&schedule).unwrap());
+    let mm = micro_manifest();
+    let mut state = ModelState::init(&mm, SEED);
+    let mut pipe = SynthPipe::new(&mm.config);
+    let robust = RobustOpts { journal: Some(PathBuf::from(jpath)), resume: false };
+    let _ = run_pruning(&mut state, &mut pipe, &spec(Pattern::Unstructured { p: 0.5 }), &robust);
+    // the armed exit should have killed the process before this line
+    std::process::exit(0);
+}
+
+#[test]
+fn a_real_process_kill_resumes_bitwise_identical() {
+    let _g = LOCK.lock().unwrap();
+    let mm = micro_manifest();
+    let sp = spec(Pattern::Unstructured { p: 0.5 });
+    let dir = tmpdir("kill");
+    let (ref_bits, ref_ckpt) = reference(&mm, &sp, &dir.join("ref.journal"));
+    let jpath = dir.join("child.journal");
+    let _ = std::fs::remove_file(&jpath);
+    let _ = std::fs::remove_file(progress_ckpt_path(&jpath));
+
+    let exe = std::env::current_exe().unwrap();
+    let status = std::process::Command::new(&exe)
+        .args(["chaos_child_worker", "--exact", "--nocapture", "--test-threads=1"])
+        .env(CHILD_ENV, &jpath)
+        .env("THANOS_CHAOS_CHILD_FAULTS", "atomic.rename:2=exit(41)")
+        .status()
+        .unwrap();
+    assert_eq!(status.code(), Some(41), "child should die at the injected exit");
+
+    faults::clear();
+    let mut state = ModelState::init(&mm, SEED);
+    let mut pipe = SynthPipe::new(&mm.config);
+    let robust = RobustOpts { journal: Some(jpath.clone()), resume: true };
+    let report = run_pruning(&mut state, &mut pipe, &sp, &robust).unwrap();
+    assert!(report.resumed_layers > 0, "the kill landed after a block committed");
+    assert_eq!(bits(&state.flat), ref_bits, "weights diverge after a process kill");
+    assert_eq!(
+        std::fs::read(progress_ckpt_path(&jpath)).unwrap(),
+        ref_ckpt,
+        "checkpoint bytes diverge after a process kill"
+    );
+}
+
+// ------------------------------------------------------------------
+// journal edge cases
+
+#[test]
+fn resume_tolerates_a_torn_journal_tail() {
+    let _g = LOCK.lock().unwrap();
+    let mm = micro_manifest();
+    let sp = spec(Pattern::Unstructured { p: 0.5 });
+    let dir = tmpdir("torn");
+    let (ref_bits, ref_ckpt) = reference(&mm, &sp, &dir.join("ref.journal"));
+    let jpath = dir.join("torn.journal");
+    let _ = std::fs::remove_file(&jpath);
+    let _ = std::fs::remove_file(progress_ckpt_path(&jpath));
+
+    // crash at the second block commit, then simulate the torn tail a
+    // mid-append power cut leaves behind
+    faults::install(faults::parse_schedule("atomic.sync:2=panic").unwrap());
+    let robust = RobustOpts { journal: Some(jpath.clone()), resume: false };
+    let crashed = catch_unwind(AssertUnwindSafe(|| {
+        let mut state = ModelState::init(&mm, SEED);
+        let mut pipe = SynthPipe::new(&mm.config);
+        run_pruning(&mut state, &mut pipe, &sp, &robust).map(|_| ())
+    }));
+    assert!(crashed.is_err(), "expected the injected panic");
+    faults::clear();
+    let mut bytes = std::fs::read(&jpath).unwrap();
+    bytes.extend_from_slice(&[0x17u8; 9]);
+    std::fs::write(&jpath, &bytes).unwrap();
+
+    let mut state = ModelState::init(&mm, SEED);
+    let mut pipe = SynthPipe::new(&mm.config);
+    let robust = RobustOpts { journal: Some(jpath.clone()), resume: true };
+    let report = run_pruning(&mut state, &mut pipe, &sp, &robust).unwrap();
+    assert_eq!(report.resumed_layers, 6, "block 0 committed before the crash");
+    assert_eq!(bits(&state.flat), ref_bits);
+    assert_eq!(std::fs::read(progress_ckpt_path(&jpath)).unwrap(), ref_ckpt);
+}
+
+#[test]
+fn resume_refuses_a_journal_from_a_different_run() {
+    let _g = LOCK.lock().unwrap();
+    let mm = micro_manifest();
+    let dir = tmpdir("mismatch");
+    let jpath = dir.join("mismatch.journal");
+    reference(&mm, &spec(Pattern::Unstructured { p: 0.5 }), &jpath);
+
+    // same journal, different pattern → the run descriptor differs
+    let mut state = ModelState::init(&mm, SEED);
+    let mut pipe = SynthPipe::new(&mm.config);
+    let robust = RobustOpts { journal: Some(jpath.clone()), resume: true };
+    let sp2 = spec(Pattern::SemiStructured { n: 2, m: 4, alpha: 0.1 });
+    let err = run_pruning(&mut state, &mut pipe, &sp2, &robust).unwrap_err();
+    assert!(format!("{err:#}").contains("different run"), "{err:#}");
+}
+
+// ------------------------------------------------------------------
+// graceful degradation + retry accounting
+
+#[test]
+fn failed_layers_are_contained_survivors_land_and_resume_completes() {
+    let _g = LOCK.lock().unwrap();
+    let mm = micro_manifest();
+    let sp = spec(Pattern::Unstructured { p: 0.5 });
+    let dir = tmpdir("degrade");
+    let (ref_bits, ref_ckpt) = reference(&mm, &sp, &dir.join("ref.journal"));
+    let jpath = dir.join("degrade.journal");
+
+    let degraded_run = |jp: &Path| -> (ModelState, String) {
+        let _ = std::fs::remove_file(jp);
+        let _ = std::fs::remove_file(progress_ckpt_path(jp));
+        faults::install(
+            faults::parse_schedule("prune.layer.1:1=err;prune.layer.3:1=panic").unwrap(),
+        );
+        let mut state = ModelState::init(&mm, SEED);
+        let mut pipe = SynthPipe::new(&mm.config);
+        let robust = RobustOpts { journal: Some(jp.to_path_buf()), resume: false };
+        let err = run_pruning(&mut state, &mut pipe, &sp, &robust).unwrap_err();
+        faults::clear();
+        (state, format!("{err:#}"))
+    };
+
+    let (state, msg) = degraded_run(&jpath);
+    // one injected error + one contained panic, both named, run failed
+    assert!(msg.contains("2 layer(s) failed"), "{msg}");
+    assert!(msg.contains("blocks.0.wk"), "{msg}");
+    assert!(msg.contains("blocks.0.wo"), "{msg}");
+    assert!(msg.contains("journaled"), "{msg}");
+    // survivors of the block were still pruned and applied…
+    assert!(state.get_mat("blocks.0.wq").unwrap().sparsity() > 0.4);
+    // …while the failed layers kept their original weights
+    let orig = ModelState::init(&mm, SEED);
+    assert_eq!(
+        bits(&state.get_mat("blocks.0.wk").unwrap().data),
+        bits(&orig.get_mat("blocks.0.wk").unwrap().data),
+    );
+
+    // the degraded state is itself deterministic: serial == parallel
+    let (state2, _) = thanos::engine::with_serial(|| degraded_run(&dir.join("degrade2.journal")));
+    assert_eq!(bits(&state2.flat), bits(&state.flat), "degraded state depends on scheduling");
+
+    // resume re-prunes the failed block from scratch and converges
+    let mut state = ModelState::init(&mm, SEED);
+    let mut pipe = SynthPipe::new(&mm.config);
+    let robust = RobustOpts { journal: Some(jpath.clone()), resume: true };
+    run_pruning(&mut state, &mut pipe, &sp, &robust).unwrap();
+    assert_eq!(bits(&state.flat), ref_bits);
+    assert_eq!(std::fs::read(progress_ckpt_path(&jpath)).unwrap(), ref_ckpt);
+}
+
+#[test]
+fn transient_faults_are_retried_counted_and_leave_no_trace_in_the_output() {
+    let _g = LOCK.lock().unwrap();
+    let mm = micro_manifest();
+    let sp = spec(Pattern::Unstructured { p: 0.5 });
+    let dir = tmpdir("retry");
+    let (ref_bits, ref_ckpt) = reference(&mm, &sp, &dir.join("ref.journal"));
+
+    // transient errors on both sync paths + one torn journal append:
+    // all three are absorbed by the bounded deterministic retry
+    let jpath = dir.join("retry.journal");
+    let _ = std::fs::remove_file(&jpath);
+    faults::install(
+        faults::parse_schedule("journal.sync:1=err;atomic.sync:1=err;journal.append:3=trunc(6)")
+            .unwrap(),
+    );
+    let mut state = ModelState::init(&mm, SEED);
+    let mut pipe = SynthPipe::new(&mm.config);
+    let robust = RobustOpts { journal: Some(jpath.clone()), resume: false };
+    let report = run_pruning(&mut state, &mut pipe, &sp, &robust).unwrap();
+    faults::clear();
+    assert_eq!(report.faults_injected, 3, "all three scheduled faults should fire");
+    assert!(report.retries >= 3, "each transient fault costs at least one retry");
+    assert!(
+        report.summary().contains("injected fault(s)"),
+        "robust gauges missing from the summary:\n{}",
+        report.summary()
+    );
+    assert_eq!(bits(&state.flat), ref_bits, "retries must not change the result");
+    assert_eq!(std::fs::read(progress_ckpt_path(&jpath)).unwrap(), ref_ckpt);
+
+    // the backoff ladder is part of the determinism contract: pin it
+    let p = RetryPolicy::default();
+    let ladder: Vec<u64> = (0..5).map(|r| p.backoff_millis(r)).collect();
+    assert_eq!(ladder, [1, 4, 16, 50, 50]);
+}
