@@ -1,0 +1,191 @@
+//! Serving throughput/latency trajectory (DESIGN.md §Serving): a real
+//! `Server` on a loopback socket, hammered by {1, 8, 32} concurrent
+//! clients against a compressed model at 50% unstructured and 2:4
+//! sparsity. Measures end-to-end request throughput plus the server's
+//! own queue+compute latency distribution (p50/p99 from the admission
+//! histogram — the same numbers `ServeSnapshot` exports to metrics).
+//!
+//! Every client bitwise-checks its first answer against the unbatched
+//! `forward_batch` oracle, so a kernel or batching regression fails the
+//! bench before it pollutes the trajectory file.
+//!
+//! Results merge into `BENCH_serving.json` (schema
+//! thanos-serving-bench/v1, keys `serving/<pattern>/c<clients>`;
+//! `THANOS_SERVE_BENCH_OUT` override). CI's `serve-smoke` job runs this
+//! in quick mode with tracing on and uploads both artifacts.
+//!
+//! ```bash
+//! cargo bench --bench serving                      # full shapes
+//! THANOS_BENCH_QUICK=1 cargo bench --bench serving # CI smoke
+//! ```
+
+mod common;
+use common::*;
+
+use std::time::Instant;
+
+use thanos::config::ModelConfig;
+use thanos::linalg::Mat;
+use thanos::model::ModelState;
+use thanos::pruning::{magnitude, Pattern};
+use thanos::runtime::{ModelManifest, ParamEntry};
+use thanos::serve::{ServeClient, ServeOptions, Server};
+use thanos::sparse::SparseModel;
+
+/// A serving-sized transformer manifest: the prunable chain is
+/// d_model → d_model, so every request carries d_model floats.
+fn manifest(d_model: usize, n_layers: usize, d_ff: usize) -> ModelManifest {
+    let cfg = ModelConfig {
+        name: "serve-bench".into(),
+        vocab: 16,
+        d_model,
+        n_layers,
+        n_heads: 4,
+        d_ff,
+        seq_len: 4,
+    };
+    let mut layout = Vec::new();
+    let mut off = 0usize;
+    let push = |layout: &mut Vec<ParamEntry>, name: &str, shape: Vec<usize>, off: &mut usize| {
+        let numel: usize = shape.iter().product();
+        layout.push(ParamEntry { name: name.into(), offset: *off, shape });
+        *off += numel;
+    };
+    push(&mut layout, "emb", vec![16, d_model], &mut off);
+    push(&mut layout, "pos", vec![4, d_model], &mut off);
+    let mut block_flat = 0;
+    for l in 0..cfg.n_layers {
+        let before = off;
+        push(&mut layout, &format!("blocks.{l}.ln1"), vec![d_model], &mut off);
+        for w in ["wq", "wk", "wv", "wo"] {
+            push(&mut layout, &format!("blocks.{l}.{w}"), vec![d_model, d_model], &mut off);
+        }
+        push(&mut layout, &format!("blocks.{l}.ln2"), vec![d_model], &mut off);
+        push(&mut layout, &format!("blocks.{l}.w1"), vec![d_ff, d_model], &mut off);
+        push(&mut layout, &format!("blocks.{l}.w2"), vec![d_model, d_ff], &mut off);
+        block_flat = off - before;
+    }
+    push(&mut layout, "ln_f", vec![d_model], &mut off);
+    ModelManifest { config: cfg, flat_size: off, block_flat_size: block_flat, layout }
+}
+
+/// Magnitude-prune every prunable layer to `pat` and compress.
+fn compressed_model(pat: &Pattern, d_model: usize, n_layers: usize, d_ff: usize) -> SparseModel {
+    let mm = manifest(d_model, n_layers, d_ff);
+    let mut st = ModelState::init(&mm, 7);
+    for l in 0..mm.config.n_layers {
+        for name in st.prunable_layers(l) {
+            let w = st.get_mat(&name).expect("get layer");
+            let pruned = match pat {
+                Pattern::Unstructured { p } => magnitude::unstructured(&w, *p),
+                Pattern::SemiStructured { n, m, .. } => magnitude::semi_structured(&w, *n, *m),
+                Pattern::Structured { p, .. } => magnitude::structured(&w, *p),
+            };
+            st.set_mat(&name, &pruned.w).expect("set layer");
+        }
+    }
+    SparseModel::compress_state(&st, pat).expect("compress")
+}
+
+fn probe(d_model: usize, tag: usize) -> Vec<f32> {
+    (0..d_model).map(|i| ((tag * 1009 + i) as f32 * 0.11).sin()).collect()
+}
+
+fn main() {
+    thanos::trace::init_from_env();
+    let quick = quick_mode();
+    let (d_model, d_ff, n_layers) = if quick { (32, 64, 2) } else { (64, 256, 2) };
+    let reqs_per_client = env_usize("THANOS_SERVE_BENCH_REQS", if quick { 40 } else { 200 });
+
+    let mut out = BenchJson::open_named(
+        "BENCH_serving.json",
+        "thanos-serving-bench/v1",
+        "THANOS_SERVE_BENCH_OUT",
+    );
+    let metrics = thanos::metrics::Metrics::new();
+
+    let patterns = [
+        ("unstructured50", Pattern::Unstructured { p: 0.5 }),
+        ("2to4", Pattern::SemiStructured { n: 2, m: 4, alpha: 0.0 }),
+    ];
+    for (pkey, pat) in &patterns {
+        let sm = compressed_model(pat, d_model, n_layers, d_ff);
+        for &clients in &[1usize, 8, 32] {
+            let opts = ServeOptions {
+                max_batch: 32,
+                batch_window_ms: 2,
+                default_deadline_ms: 60_000,
+                ..Default::default()
+            };
+            let server =
+                Server::start(sm.clone(), format!("bench-{pkey}"), opts).expect("server start");
+            let addr = server.local_addr();
+
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..clients)
+                .map(|t| {
+                    let sm = sm.clone();
+                    std::thread::spawn(move || {
+                        let mut c = ServeClient::connect(addr).expect("connect");
+                        for r in 0..reqs_per_client {
+                            let input = probe(d_model, t * 7919 + r);
+                            let resp = c.infer(&input, 0).expect("infer");
+                            assert!(resp.is_ok(), "bench request failed: {}", resp.reason);
+                            if r == 0 {
+                                // Bitwise oracle: batched serving must
+                                // equal the unbatched forward pass.
+                                let x = Mat::from_vec(input.len(), 1, input.clone());
+                                let want = sm.forward_batch(&x).expect("oracle").data;
+                                for (a, b) in resp.output.iter().zip(&want) {
+                                    assert_eq!(
+                                        a.to_bits(),
+                                        b.to_bits(),
+                                        "served answer diverged from the oracle"
+                                    );
+                                }
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("client thread");
+            }
+            let wall = t0.elapsed().as_secs_f64();
+
+            let snap = server.snapshot();
+            let total = (clients * reqs_per_client) as f64;
+            assert_eq!(snap.completed, total as u64, "every request must complete");
+            metrics.record_serve(&format!("serve.{pkey}.c{clients}"), &snap);
+            let key = format!("serving/{pkey}/c{clients}");
+            out.record(
+                &key,
+                vec![
+                    ("requests", BenchJson::num(total)),
+                    ("throughput_rps", BenchJson::num(total / wall)),
+                    ("p50_ms", BenchJson::num(snap.p50_ms)),
+                    ("p99_ms", BenchJson::num(snap.p99_ms)),
+                    ("batches", BenchJson::num(snap.batches as f64)),
+                    ("shed", BenchJson::num(snap.shed as f64)),
+                    ("wall_s", BenchJson::num(wall)),
+                ],
+            );
+            println!(
+                "{key}: {:.0} rps  p50 {:.3} ms  p99 {:.3} ms  ({} reqs, {} batches)",
+                total / wall,
+                snap.p50_ms,
+                snap.p99_ms,
+                total as u64,
+                snap.batches
+            );
+        }
+    }
+
+    out.save();
+    println!("{}", metrics.report());
+    match thanos::trace::export() {
+        Ok(Some(p)) => println!("trace written to {}", p.display()),
+        Ok(None) => {}
+        Err(e) => panic!("trace export failed: {e:#}"),
+    }
+}

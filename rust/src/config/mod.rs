@@ -148,6 +148,24 @@ pub struct RunConfig {
     /// Deterministic fault-injection schedule (`--faults=site:n=action;…`);
     /// `None` falls back to the `THANOS_FAULTS` environment variable.
     pub faults: Option<String>,
+    // serving (DESIGN.md §Serving)
+    /// `thanos serve` listen address (`--serve_addr=host:port`; port 0
+    /// binds an ephemeral port).
+    pub serve_addr: String,
+    /// Admission-queue capacity before requests are shed.
+    pub serve_queue: usize,
+    /// Maximum requests per batch flush.
+    pub serve_batch: usize,
+    /// Batching window: flush once the oldest queued request has
+    /// waited this long (ms).
+    pub serve_window_ms: u64,
+    /// Default per-request deadline (ms) for requests that send 0.
+    pub serve_deadline_ms: u32,
+    /// Hot-reload watch directory (`--serve_watch=dir`); `None`
+    /// disables hot reload.
+    pub serve_watch: Option<String>,
+    /// Hot-reload poll interval (ms).
+    pub serve_poll_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -170,6 +188,13 @@ impl Default for RunConfig {
             journal: None,
             resume: false,
             faults: None,
+            serve_addr: "127.0.0.1:7077".into(),
+            serve_queue: 256,
+            serve_batch: 16,
+            serve_window_ms: 5,
+            serve_deadline_ms: 1_000,
+            serve_watch: None,
+            serve_poll_ms: 100,
         }
     }
 }
@@ -204,6 +229,17 @@ impl RunConfig {
                 }
             }
             "faults" => self.faults = Some(value.into()),
+            "serve_addr" => self.serve_addr = value.into(),
+            "serve_queue" => self.serve_queue = value.parse().context("serve_queue")?,
+            "serve_batch" => self.serve_batch = value.parse().context("serve_batch")?,
+            "serve_window_ms" => {
+                self.serve_window_ms = value.parse().context("serve_window_ms")?
+            }
+            "serve_deadline_ms" => {
+                self.serve_deadline_ms = value.parse().context("serve_deadline_ms")?
+            }
+            "serve_watch" => self.serve_watch = Some(value.into()),
+            "serve_poll_ms" => self.serve_poll_ms = value.parse().context("serve_poll_ms")?,
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())
@@ -278,6 +314,13 @@ mod tests {
                     "--resume=1",
                     "--journal=j.jnl",
                     "--faults=atomic.sync:1=err",
+                    "--serve_addr=127.0.0.1:0",
+                    "--serve_queue=8",
+                    "--serve_batch=4",
+                    "--serve_window_ms=2",
+                    "--serve_deadline_ms=250",
+                    "--serve_watch=wdir",
+                    "--serve_poll_ms=20",
                 ]
                 .iter()
                 .map(|s| s.to_string()),
@@ -292,7 +335,15 @@ mod tests {
         assert!(rc.resume);
         assert_eq!(rc.journal.as_deref(), Some("j.jnl"));
         assert_eq!(rc.faults.as_deref(), Some("atomic.sync:1=err"));
+        assert_eq!(rc.serve_addr, "127.0.0.1:0");
+        assert_eq!(rc.serve_queue, 8);
+        assert_eq!(rc.serve_batch, 4);
+        assert_eq!(rc.serve_window_ms, 2);
+        assert_eq!(rc.serve_deadline_ms, 250);
+        assert_eq!(rc.serve_watch.as_deref(), Some("wdir"));
+        assert_eq!(rc.serve_poll_ms, 20);
         assert!(rc.parse_args(["--backend=cuda".to_string()].into_iter()).is_err());
+        assert!(rc.parse_args(["--serve_queue=lots".to_string()].into_iter()).is_err());
         assert!(rc.parse_args(["--resume=maybe".to_string()].into_iter()).is_err());
         assert!(rc
             .parse_args(["--bogus=1".to_string()].into_iter())

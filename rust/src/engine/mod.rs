@@ -294,6 +294,21 @@ impl PruneEngine {
         self.chunk(items).div_ceil(align) * align
     }
 
+    /// Instantaneous depth of the shared job queue — the gauge the
+    /// serving daemon exports next to its own admission-queue depth.
+    /// Purely observational: no control flow anywhere keys off it.
+    ///
+    /// Fairness note for mixed workloads (serving batches sharing the
+    /// pool with prune jobs): a submitter always drains its own job
+    /// inline (see [`run`](Self::run)), so a serving batch makes
+    /// progress on the submitting thread even while every pooled
+    /// worker is busy inside a long prune job — neither workload can
+    /// starve the other into deadlock or unbounded wait. The
+    /// `concurrent_submitters_interleave` test pins that liveness.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
     /// Snapshot of the cumulative activity counters.
     pub fn stats(&self) -> EngineStats {
         let s = &self.shared;
@@ -588,6 +603,31 @@ mod tests {
         for (k, &v) in a.iter().enumerate() {
             assert_eq!(v as usize, k / 8);
         }
+    }
+
+    #[test]
+    fn concurrent_submitters_interleave() {
+        // Two submitter threads sharing one pool: both jobs complete
+        // (submitters self-drain, so neither can be starved by the
+        // other holding all the workers) and the queue drains to zero.
+        let eng = std::sync::Arc::new(PruneEngine::with_threads(2));
+        let done = std::sync::Arc::new(AtomicUsize::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..2 {
+            let (e, d) = (std::sync::Arc::clone(&eng), std::sync::Arc::clone(&done));
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..16 {
+                    e.run(32, |_| {
+                        d.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(done.load(Ordering::Relaxed), 2 * 16 * 32);
+        assert_eq!(eng.queue_depth(), 0);
     }
 
     #[test]

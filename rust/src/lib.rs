@@ -38,6 +38,7 @@
 //! | [`metrics`] | sharded counters/timers with interned `&'static str` keys |
 //! | [`trace`] | per-worker span tracer: thread-local event shards, latency histograms, Chrome-trace export, and the crate's single wall-clock read point ([`trace::clock`]) |
 //! | [`robust`] | crash-safety layer: atomic fsync-rename writes, CRC-64/XZ checksums, the prune journal, and deterministic site-keyed fault injection (`THANOS_FAULTS`) |
+//! | [`serve`] | fault-tolerant serving daemon (`thanos serve`): length-prefixed TCP protocol, bounded admission with load-shedding, deadline-aware dynamic batching onto the sparse kernels, panic containment, checkpoint hot reload |
 //! | [`harness`] | experiment harness shared by examples and paper-table benches |
 
 // The workspace lint table ([workspace.lints] in the root Cargo.toml)
@@ -61,6 +62,7 @@ pub mod pruning;
 pub mod rng;
 pub mod robust;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 pub mod trace;
 pub mod train;

@@ -11,6 +11,9 @@
 //! thanos e2e    [--model ...]                      # train → prune-all-methods → eval
 //! thanos compress <pattern> [--model ...]          # pack a pruned checkpoint (v2)
 //! thanos sparse-bench [quick]                      # measured sparse-kernel sweep
+//! thanos serve  [ckpt] [--serve_addr=host:port]    # serving daemon on a compressed ckpt
+//!               [--serve_queue=256 --serve_batch=16 --serve_window_ms=5]
+//!               [--serve_deadline_ms=1000 --serve_watch=dir --serve_poll_ms=100]
 //! ```
 //!
 //! `method` ∈ magnitude|wanda|sparsegpt|thanos; `pattern` ∈
@@ -323,8 +326,47 @@ fn run() -> Result<()> {
             );
             Ok(())
         }
+        // long-running serving daemon over a compressed checkpoint —
+        // artifact-free (sparse kernels only); see DESIGN.md §Serving
+        "serve" => {
+            // Fault schedule: CLI flag wins over THANOS_FAULTS.
+            match &rc.faults {
+                Some(spec) => thanos::robust::faults::install(
+                    thanos::robust::faults::parse_schedule(spec)?,
+                ),
+                None => thanos::robust::faults::init_from_env()?,
+            }
+            let ckpt = args
+                .get(1)
+                .cloned()
+                .unwrap_or_else(|| format!("{}/{}-compressed.thnck", rc.ckpt_dir, rc.model.name));
+            let (_, sparse) = ModelState::load_with_sparse(&ckpt)
+                .context("run `thanos compress` first")?;
+            let sparse = sparse.with_context(|| {
+                format!("checkpoint {ckpt} has no compressed tensors — run `thanos compress`")
+            })?;
+            let (d_in, d_out) = sparse.chain_dims()?;
+            let opts = thanos::serve::ServeOptions {
+                addr: rc.serve_addr.clone(),
+                queue_cap: rc.serve_queue,
+                max_batch: rc.serve_batch,
+                batch_window_ms: rc.serve_window_ms,
+                default_deadline_ms: rc.serve_deadline_ms,
+                watch_dir: rc.serve_watch.clone().map(std::path::PathBuf::from),
+                poll_ms: rc.serve_poll_ms,
+            };
+            let mut server = thanos::serve::Server::start(sparse, ckpt.clone(), opts)?;
+            // Parsed by tests/scripts; stdout is line-buffered, so this
+            // flushes before the daemon blocks.
+            println!(
+                "serving {ckpt} ({d_in}->{d_out}) on {}",
+                server.local_addr()
+            );
+            server.wait();
+            Ok(())
+        }
         other => bail!(
-            "unknown command '{other}' (info|train|prune|eval|e2e|compress|sparse-bench|exec-bench)"
+            "unknown command '{other}' (info|train|prune|eval|e2e|compress|sparse-bench|exec-bench|serve)"
         ),
     };
     if result.is_ok() {

@@ -161,6 +161,34 @@ impl Metrics {
         self.set_gauge(&format!("{prefix}.ratio"), ratio);
     }
 
+    /// Record a [`crate::serve::ServeSnapshot`] as gauges under
+    /// `<prefix>.*` — the serving daemon's counter/latency readout the
+    /// serving bench and the `serve-smoke` CI job surface.
+    pub fn record_serve(&self, prefix: &str, snap: &crate::serve::ServeSnapshot) {
+        self.set_gauge(&format!("{prefix}.accepted"), snap.accepted as f64);
+        self.set_gauge(&format!("{prefix}.completed"), snap.completed as f64);
+        self.set_gauge(&format!("{prefix}.shed"), snap.shed as f64);
+        self.set_gauge(
+            &format!("{prefix}.deadline_dropped"),
+            snap.deadline_dropped as f64,
+        );
+        self.set_gauge(&format!("{prefix}.batch_failed"), snap.batch_failed as f64);
+        self.set_gauge(&format!("{prefix}.batches"), snap.batches as f64);
+        self.set_gauge(&format!("{prefix}.reloads_ok"), snap.reloads_ok as f64);
+        self.set_gauge(
+            &format!("{prefix}.reloads_rejected"),
+            snap.reloads_rejected as f64,
+        );
+        self.set_gauge(&format!("{prefix}.queue_depth"), snap.queue_depth as f64);
+        self.set_gauge(
+            &format!("{prefix}.engine_queue_depth"),
+            snap.engine_queue_depth as f64,
+        );
+        self.set_gauge(&format!("{prefix}.model_version"), snap.model_version as f64);
+        self.set_gauge(&format!("{prefix}.p50_ms"), snap.p50_ms);
+        self.set_gauge(&format!("{prefix}.p99_ms"), snap.p99_ms);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.shards
             .iter()
@@ -290,6 +318,35 @@ mod tests {
         assert_eq!(m.gauge("engine.jobs_submitted"), Some(10.0));
         assert_eq!(m.gauge("engine.queue_peak"), Some(3.0));
         assert_eq!(m.gauge("engine.occupancy"), Some(0.5));
+    }
+
+    #[test]
+    fn serve_snapshot_lands_as_gauges() {
+        let m = Metrics::new();
+        let snap = crate::serve::ServeSnapshot {
+            accepted: 10,
+            completed: 7,
+            shed: 2,
+            deadline_dropped: 1,
+            batch_failed: 0,
+            bad_request: 0,
+            batches: 3,
+            reloads_ok: 1,
+            reloads_rejected: 1,
+            accept_faults: 0,
+            queue_depth: 0,
+            engine_queue_depth: 0,
+            model_version: 2,
+            model_source: "test.thnck".to_string(),
+            p50_ms: 1.5,
+            p99_ms: 4.0,
+        };
+        m.record_serve("serve", &snap);
+        assert_eq!(m.gauge("serve.accepted"), Some(10.0));
+        assert_eq!(m.gauge("serve.shed"), Some(2.0));
+        assert_eq!(m.gauge("serve.reloads_rejected"), Some(1.0));
+        assert_eq!(m.gauge("serve.model_version"), Some(2.0));
+        assert_eq!(m.gauge("serve.p99_ms"), Some(4.0));
     }
 
     #[test]

@@ -18,7 +18,10 @@
 //! Sites that run inside the parallel engine (`prune.layer.<i>`) embed the
 //! slot index in the site name, so which layer faults never depends on
 //! thread scheduling; file-IO sites run serially on the submitter thread
-//! and use plain per-site hit counters.
+//! and use plain per-site hit counters. The serving daemon probes its own
+//! sites ([`SERVE_SITES`]: `serve.accept` / `serve.batch` / `serve.reload`)
+//! from single dedicated threads, so their hit counts are equally
+//! schedule-independent.
 
 use std::collections::BTreeMap;
 use std::io;
@@ -36,6 +39,22 @@ pub const SITES: [&str; 6] = [
     "journal.append",
     "journal.sync",
 ];
+
+/// Fault sites probed by the serving daemon (`thanos serve`,
+/// DESIGN.md §Serving). Kept separate from [`SITES`] because the
+/// crash/resume chaos harness kills the *offline* pipeline at every
+/// entry of that list, while these sites live on the online path and
+/// are driven by the serving chaos tests instead:
+///
+/// * `serve.accept` — probed per accepted connection, before the
+///   connection handler starts; an injected fault drops the connection.
+/// * `serve.batch` — probed per formed batch, before the forward pass;
+///   an injected `panic` exercises per-request panic containment, an
+///   `err` the transient-batch-failure path.
+/// * `serve.reload` — probed per hot-reload candidate read, inside the
+///   shared [`with_retry`] ladder; transient `err` actions are absorbed
+///   by the retry policy exactly like the atomic-writer IO sites.
+pub const SERVE_SITES: [&str; 3] = ["serve.accept", "serve.batch", "serve.reload"];
 
 /// What an armed fault site does when its scheduled hit arrives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -22,5 +22,5 @@ pub mod journal;
 
 pub use atomic::{write_atomic, AtomicFile};
 pub use crc::{crc64, crc64_f32s, Crc64};
-pub use faults::{FaultStats, RetryPolicy};
+pub use faults::{FaultStats, RetryPolicy, SERVE_SITES, SITES};
 pub use journal::Journal;

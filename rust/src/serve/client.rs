@@ -1,0 +1,34 @@
+//! Minimal blocking client for the serving protocol — used by the
+//! robustness tests, the serving bench, and anyone scripting against a
+//! local daemon.
+
+use std::io::{self, BufReader, BufWriter};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use super::protocol::{self, InferRequest, Response};
+
+/// One connection to a serving daemon; requests are sequential per
+/// connection (open several clients for concurrency).
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl ServeClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<ServeClient> {
+        let stream = TcpStream::connect(addr)?;
+        let read_half = stream.try_clone()?;
+        Ok(ServeClient {
+            reader: BufReader::new(read_half),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    /// Send one inference request and block for its response.
+    /// `deadline_ms == 0` selects the server's default deadline.
+    pub fn infer(&mut self, input: &[f32], deadline_ms: u32) -> io::Result<Response> {
+        let req = InferRequest { deadline_ms, input: input.to_vec() };
+        protocol::write_request(&mut self.writer, &req)?;
+        protocol::read_response(&mut self.reader)
+    }
+}

@@ -1,0 +1,76 @@
+//! Fault-tolerant sparse serving: the long-running `thanos serve`
+//! daemon (DESIGN.md §Serving).
+//!
+//! The daemon loads a compressed (v2/v3) checkpoint and answers
+//! concurrent inference requests over the length-prefixed TCP protocol
+//! in [`protocol`]. The robustness contract, exercised end-to-end by
+//! `tests/serve_robustness.rs` and the CI `serve-smoke` chaos job:
+//!
+//! - **Bounded admission.** Requests enter a fixed-capacity queue; when
+//!   it is full the request is *shed* with an explicit
+//!   [`protocol::Status::Shed`] reason instead of queueing unboundedly.
+//! - **Deadlines.** Every request carries a latency budget. Expired
+//!   requests are cancelled cooperatively at batch-flush boundaries and
+//!   answered with [`protocol::Status::DeadlineExceeded`] rather than
+//!   occupying GEMM time.
+//! - **Dynamic batching.** The batcher flushes when the queue reaches
+//!   `max_batch` or the oldest request has waited `batch_window_ms`,
+//!   then runs one engine-parallel [`crate::sparse::kernels::forward_chain`].
+//!   Column independence of the kernels makes responses bitwise
+//!   identical regardless of batch composition.
+//! - **Panic containment.** A panic inside a batch (including the
+//!   injected `serve.batch` fault) fails only that batch's requests
+//!   with [`protocol::Status::BatchFailed`]; the daemon keeps serving.
+//! - **Hot reload.** With `--serve_watch=DIR` the daemon polls for new
+//!   checkpoint candidates, validates them through the full CRC v3
+//!   loader plus [`crate::sparse::SparseModel::chain_dims`], and swaps
+//!   atomically on success. A corrupt candidate is rejected and logged
+//!   while the old model keeps answering.
+//!
+//! Fault sites on the serving path are listed in
+//! [`crate::robust::faults::SERVE_SITES`].
+
+pub mod client;
+pub mod protocol;
+mod reload;
+mod server;
+
+pub use client::ServeClient;
+pub use protocol::{InferRequest, Response, Status};
+pub use server::{ServeSnapshot, Server};
+
+use std::path::PathBuf;
+
+/// Tunables of one serving daemon; defaults mirror the CLI defaults in
+/// [`crate::config::RunConfig`].
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Listen address; port 0 binds an ephemeral port (tests).
+    pub addr: String,
+    /// Admission-queue capacity; beyond it requests are shed.
+    pub queue_cap: usize,
+    /// Flush a batch as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// ... or as soon as the oldest queued request has waited this long.
+    pub batch_window_ms: u64,
+    /// Deadline applied to requests that send `deadline_ms == 0`.
+    pub default_deadline_ms: u32,
+    /// Directory polled for replacement checkpoints (`*.thnck`).
+    pub watch_dir: Option<PathBuf>,
+    /// Poll interval of the hot-reload watcher.
+    pub poll_ms: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:0".to_string(),
+            queue_cap: 256,
+            max_batch: 16,
+            batch_window_ms: 5,
+            default_deadline_ms: 1_000,
+            watch_dir: None,
+            poll_ms: 100,
+        }
+    }
+}

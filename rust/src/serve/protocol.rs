@@ -1,0 +1,287 @@
+//! Wire protocol of the serving daemon: length-prefixed frames over a
+//! byte stream (TCP in practice; anything `Read + Write` in tests).
+//!
+//! Every frame is `u32 len (LE)` followed by `len` payload bytes.
+//! Request payload:
+//!
+//! ```text
+//! u8  opcode        (1 = INFER)
+//! u32 deadline_ms   (0 = use the server's default deadline)
+//! u32 n
+//! n × f32 (LE)      the input vector (must match the model input dim)
+//! ```
+//!
+//! Response payload:
+//!
+//! ```text
+//! u8 status         (see [`Status`])
+//! status == Ok:     u32 n + n × f32 (LE)   — the output vector
+//! otherwise:        u32 len + UTF-8 bytes  — the rejection reason
+//! ```
+//!
+//! Malformed frames decode to `io::ErrorKind::InvalidData` with a
+//! description, never a panic; oversized length prefixes are rejected
+//! before any allocation ([`MAX_FRAME_BYTES`]), so a corrupt or hostile
+//! peer cannot balloon server memory.
+
+use std::io::{self, Read, Write};
+
+/// Upper bound on one frame's payload (16 MiB — far above any real
+/// request against the micro/tiny/small presets, far below harm).
+pub const MAX_FRAME_BYTES: usize = 1 << 24;
+
+/// Request opcode: run one inference.
+pub const OP_INFER: u8 = 1;
+
+/// Outcome class of one request, as carried on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    /// Computed; payload carries the output vector.
+    Ok,
+    /// Load-shed at admission (bounded queue full or server stopping).
+    Shed,
+    /// Deadline expired before the batch executed.
+    DeadlineExceeded,
+    /// The batch this request rode in failed (contained panic or
+    /// injected/transient execution error); the request may be retried.
+    BatchFailed,
+    /// The request itself was unusable (wrong input dimension, bad
+    /// frame semantics).
+    BadRequest,
+}
+
+impl Status {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::Shed => 1,
+            Status::DeadlineExceeded => 2,
+            Status::BatchFailed => 3,
+            Status::BadRequest => 4,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> io::Result<Status> {
+        Ok(match v {
+            0 => Status::Ok,
+            1 => Status::Shed,
+            2 => Status::DeadlineExceeded,
+            3 => Status::BatchFailed,
+            4 => Status::BadRequest,
+            other => return Err(bad(format!("unknown response status {other}"))),
+        })
+    }
+}
+
+/// One inference request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InferRequest {
+    /// Per-request latency budget; 0 selects the server default.
+    pub deadline_ms: u32,
+    pub input: Vec<f32>,
+}
+
+/// One response: `Ok` carries the output, everything else a reason.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub status: Status,
+    pub output: Vec<f32>,
+    pub reason: String,
+}
+
+impl Response {
+    pub fn ok(output: Vec<f32>) -> Response {
+        Response { status: Status::Ok, output, reason: String::new() }
+    }
+
+    pub fn reject(status: Status, reason: impl Into<String>) -> Response {
+        Response { status, output: Vec::new(), reason: reason.into() }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.status == Status::Ok
+    }
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn read_frame(r: &mut impl Read) -> io::Result<Vec<u8>> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(bad(format!("frame length {len} exceeds cap {MAX_FRAME_BYTES}")));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Cursor over a received payload with bounds-checked reads.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> io::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| bad(format!("truncated frame reading {what}")))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> io::Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> io::Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32s(&mut self, n: usize, what: &str) -> io::Result<Vec<f32>> {
+        let b = self.take(n.checked_mul(4).ok_or_else(|| bad(format!("{what} overflow")))?, what)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn finish(&self, what: &str) -> io::Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(bad(format!(
+                "{} trailing bytes after {what}",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+pub fn write_request(w: &mut impl Write, req: &InferRequest) -> io::Result<()> {
+    let mut p = Vec::with_capacity(9 + 4 * req.input.len());
+    p.push(OP_INFER);
+    p.extend_from_slice(&req.deadline_ms.to_le_bytes());
+    p.extend_from_slice(&(req.input.len() as u32).to_le_bytes());
+    for v in &req.input {
+        p.extend_from_slice(&v.to_le_bytes());
+    }
+    write_frame(w, &p)
+}
+
+pub fn read_request(r: &mut impl Read) -> io::Result<InferRequest> {
+    let frame = read_frame(r)?;
+    let mut c = Cursor { buf: &frame, pos: 0 };
+    let op = c.u8("opcode")?;
+    if op != OP_INFER {
+        return Err(bad(format!("unknown request opcode {op}")));
+    }
+    let deadline_ms = c.u32("deadline")?;
+    let n = c.u32("input length")? as usize;
+    let input = c.f32s(n, "input vector")?;
+    c.finish("request")?;
+    Ok(InferRequest { deadline_ms, input })
+}
+
+pub fn write_response(w: &mut impl Write, resp: &Response) -> io::Result<()> {
+    let mut p = Vec::with_capacity(5 + 4 * resp.output.len() + resp.reason.len());
+    p.push(resp.status.as_u8());
+    if resp.status == Status::Ok {
+        p.extend_from_slice(&(resp.output.len() as u32).to_le_bytes());
+        for v in &resp.output {
+            p.extend_from_slice(&v.to_le_bytes());
+        }
+    } else {
+        p.extend_from_slice(&(resp.reason.len() as u32).to_le_bytes());
+        p.extend_from_slice(resp.reason.as_bytes());
+    }
+    write_frame(w, &p)
+}
+
+pub fn read_response(r: &mut impl Read) -> io::Result<Response> {
+    let frame = read_frame(r)?;
+    let mut c = Cursor { buf: &frame, pos: 0 };
+    let status = Status::from_u8(c.u8("status")?)?;
+    let resp = if status == Status::Ok {
+        let n = c.u32("output length")? as usize;
+        Response::ok(c.f32s(n, "output vector")?)
+    } else {
+        let n = c.u32("reason length")? as usize;
+        let bytes = c.take(n, "reason")?;
+        let reason = String::from_utf8(bytes.to_vec())
+            .map_err(|_| bad("rejection reason is not UTF-8".to_string()))?;
+        Response::reject(status, reason)
+    };
+    c.finish("response")?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let req = InferRequest { deadline_ms: 250, input: vec![1.5, -2.0, 0.0, f32::MIN] };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let back = read_request(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn response_roundtrips_all_statuses() {
+        let cases = [
+            Response::ok(vec![0.25, 7.75]),
+            Response::reject(Status::Shed, "queue full (capacity 4)"),
+            Response::reject(Status::DeadlineExceeded, "deadline exceeded"),
+            Response::reject(Status::BatchFailed, "injected fault: panic at `serve.batch`"),
+            Response::reject(Status::BadRequest, "input dim 3 != model dim 8"),
+        ];
+        for resp in cases {
+            let mut buf = Vec::new();
+            write_response(&mut buf, &resp).unwrap();
+            let back = read_response(&mut buf.as_slice()).unwrap();
+            assert_eq!(back, resp);
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_error_instead_of_panicking() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &InferRequest { deadline_ms: 1, input: vec![1.0, 2.0] }).unwrap();
+        // every truncation errors
+        for len in 0..buf.len() {
+            assert!(read_request(&mut &buf[..len]).is_err(), "truncation to {len} parsed");
+        }
+        // oversized length prefix is rejected before allocating
+        let huge = (MAX_FRAME_BYTES as u32 + 1).to_le_bytes();
+        assert!(read_request(&mut huge.as_slice()).is_err());
+        // unknown opcode / status
+        let mut bad_op = buf.clone();
+        bad_op[4] = 99;
+        assert!(read_request(&mut bad_op.as_slice()).is_err());
+        let mut rbuf = Vec::new();
+        write_response(&mut rbuf, &Response::ok(vec![1.0])).unwrap();
+        rbuf[4] = 99;
+        assert!(read_response(&mut rbuf.as_slice()).is_err());
+        // trailing garbage is an error, not silently ignored
+        let mut long = buf.clone();
+        let n = long.len() as u32 - 4 + 3;
+        long[..4].copy_from_slice(&n.to_le_bytes());
+        long.extend_from_slice(&[0, 0, 0]);
+        assert!(read_request(&mut long.as_slice()).is_err());
+    }
+}

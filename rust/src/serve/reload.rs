@@ -1,0 +1,145 @@
+//! Checkpoint hot reload: poll a watch directory for `*.thnck`
+//! candidates, validate each through the full CRC-checked checkpoint
+//! loader, swap atomically on success — and keep serving the old model
+//! (with a logged, counted rejection) on any failure.
+//!
+//! State machine (DESIGN.md §Serving): IDLE → CANDIDATE (newest file
+//! by mtime that is not the one already loaded or already rejected) →
+//! VALIDATE (read with [`faults::with_retry`] over the `serve.reload`
+//! fault site, decode via [`ModelState::from_bytes`], require a sparse
+//! payload, a chainable layer sequence, and an unchanged input
+//! dimension) → SWAP (publish a new [`LoadedModel`] generation) or
+//! REJECT (remember the candidate's identity so a corrupt file is
+//! logged once, not every poll tick).
+//!
+//! In-flight batches hold the [`Arc`] of the generation they started
+//! with, so a swap never tears a response.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use super::server::{LoadedModel, Shared};
+use crate::model::ModelState;
+use crate::robust::faults::{self, RetryPolicy};
+
+/// Identity of a candidate file; reused to skip files already loaded
+/// or already rejected without re-reading them every tick.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct FileId {
+    path: PathBuf,
+    mtime_nanos: u128,
+    len: u64,
+}
+
+fn file_id(path: &Path) -> Option<FileId> {
+    let meta = std::fs::metadata(path).ok()?;
+    let mtime = meta.modified().ok()?;
+    let mtime_nanos = mtime
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    Some(FileId { path: path.to_path_buf(), mtime_nanos, len: meta.len() })
+}
+
+/// Newest `*.thnck` in `dir` by (mtime, name); `None` on an empty or
+/// unreadable directory (both are normal between deployments).
+fn newest_candidate(dir: &Path) -> Option<FileId> {
+    let mut best: Option<FileId> = None;
+    for entry in std::fs::read_dir(dir).ok()? {
+        let path = entry.ok()?.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("thnck") {
+            continue;
+        }
+        let Some(id) = file_id(&path) else { continue };
+        let newer = match &best {
+            None => true,
+            Some(b) => (id.mtime_nanos, &id.path) > (b.mtime_nanos, &b.path),
+        };
+        if newer {
+            best = Some(id);
+        }
+    }
+    best
+}
+
+/// Read + validate one candidate; on success returns the next model
+/// generation. Transient read errors (including injected `serve.reload`
+/// faults) are absorbed by the shared retry/backoff policy before the
+/// candidate is declared unreadable.
+fn try_load(shared: &Shared, id: &FileId) -> crate::Result<LoadedModel> {
+    let bytes = faults::with_retry(&RetryPolicy::default(), || {
+        faults::point("serve.reload")?;
+        std::fs::read(&id.path)
+    })?;
+    let (_, sparse) = ModelState::from_bytes(&bytes)?;
+    let sparse = sparse.ok_or_else(|| {
+        anyhow::anyhow!("candidate {} has no compressed payload", id.path.display())
+    })?;
+    let current = shared.current_model();
+    let next = LoadedModel::new(
+        sparse,
+        current.version + 1,
+        id.path.display().to_string(),
+    )?;
+    anyhow::ensure!(
+        next.input_dim() == current.input_dim(),
+        "candidate input dim {} != serving input dim {}",
+        next.input_dim(),
+        current.input_dim()
+    );
+    Ok(next)
+}
+
+fn watch_loop(shared: &Shared) {
+    let dir = shared.opts.watch_dir.clone().expect("watcher spawned without watch_dir");
+    let mut loaded: Option<FileId> = None;
+    let mut rejected: Option<FileId> = None;
+    while !shared.stopping() {
+        thread::sleep(Duration::from_millis(shared.opts.poll_ms));
+        let Some(id) = newest_candidate(&dir) else { continue };
+        if loaded.as_ref() == Some(&id) || rejected.as_ref() == Some(&id) {
+            continue;
+        }
+        // A panic during validation (e.g. an injected `serve.reload`
+        // panic action) is a rejection, never a dead watcher.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            try_load(shared, &id)
+        }))
+        .unwrap_or_else(|_| Err(anyhow::anyhow!("candidate validation panicked")));
+        match outcome {
+            Ok(next) => {
+                let version = next.version;
+                shared.swap_model(next);
+                shared
+                    .counters
+                    .reloads_ok
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                eprintln!(
+                    "serve: hot-reloaded {} (model version {version})",
+                    id.path.display()
+                );
+                loaded = Some(id);
+                rejected = None;
+            }
+            Err(e) => {
+                shared
+                    .counters
+                    .reloads_rejected
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                eprintln!(
+                    "serve: rejected candidate {} (still serving model version {}): {e:#}",
+                    id.path.display(),
+                    shared.current_model().version
+                );
+                rejected = Some(id);
+            }
+        }
+    }
+}
+
+/// Spawn the `serve-reload` watcher thread.
+pub(crate) fn spawn_watcher(shared: Arc<Shared>) -> std::io::Result<thread::JoinHandle<()>> {
+    thread::Builder::new().name("serve-reload".into()).spawn(move || watch_loop(&shared))
+}

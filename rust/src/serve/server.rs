@@ -1,0 +1,486 @@
+//! The serving daemon core: accept loop, bounded admission queue,
+//! dynamic batcher with deadline enforcement and panic containment.
+//!
+//! Threading model (all lifecycle threads are dedicated OS threads,
+//! never engine workers — the GEMM itself still runs on the shared
+//! [`crate::engine`] pool via the batcher's submitting thread, which
+//! always drains its own job inline, so serving batches make progress
+//! even while every pooled worker is busy inside a prune job):
+//!
+//! - `serve-accept` — blocks in `TcpListener::accept`, probes the
+//!   `serve.accept` fault site per connection, hands each stream to a
+//!   detached `serve-conn` handler.
+//! - `serve-conn` (one per connection) — decodes frames, validates the
+//!   input dimension against the *current* model, admits into the
+//!   bounded queue (or sheds), then blocks until the batcher answers.
+//! - `serve-batcher` — flushes size-or-deadline windows into one
+//!   engine-parallel [`kernels::forward_chain`] per batch, inside
+//!   `catch_unwind` so a poisoned batch fails its own requests only.
+//! - `serve-reload` (optional) — see [`super::reload`].
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, ErrorKind};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Context;
+
+use super::protocol::{self, InferRequest, Response, Status};
+use super::reload;
+use super::ServeOptions;
+use crate::linalg::Mat;
+use crate::robust::faults;
+use crate::sparse::{kernels, SparseModel, SparseTensor};
+use crate::trace::{self, clock, hist::Histogram};
+
+const NANOS_PER_MS: u64 = 1_000_000;
+
+/// Lock that survives a poisoned mutex: every structure guarded here
+/// (queue, model pointer, histogram) is valid at all times — writers
+/// never leave them mid-update across a panic site — so serving must
+/// keep going even if some thread died while holding the lock.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One checkpoint generation. Swapped atomically (behind a mutex, as a
+/// pointer) by hot reload; in-flight batches keep the [`Arc`] they
+/// started with, so a swap never changes an already-admitted answer.
+pub(crate) struct LoadedModel {
+    pub(crate) sparse: SparseModel,
+    pub(crate) version: u64,
+    pub(crate) source: String,
+    d_in: usize,
+}
+
+impl LoadedModel {
+    pub(crate) fn new(
+        sparse: SparseModel,
+        version: u64,
+        source: String,
+    ) -> crate::Result<LoadedModel> {
+        let (d_in, _) = sparse
+            .chain_dims()
+            .with_context(|| format!("validating serve model from {source}"))?;
+        Ok(LoadedModel { sparse, version, source, d_in })
+    }
+
+    pub(crate) fn input_dim(&self) -> usize {
+        self.d_in
+    }
+}
+
+/// One admitted, not-yet-answered request.
+struct Pending {
+    input: Vec<f32>,
+    enqueued_nanos: u64,
+    deadline_nanos: u64,
+    tx: mpsc::Sender<Response>,
+}
+
+#[derive(Default)]
+pub(crate) struct Counters {
+    pub(crate) accepted: AtomicU64,
+    pub(crate) completed: AtomicU64,
+    pub(crate) shed: AtomicU64,
+    pub(crate) deadline_dropped: AtomicU64,
+    pub(crate) batch_failed: AtomicU64,
+    pub(crate) bad_request: AtomicU64,
+    pub(crate) batches: AtomicU64,
+    pub(crate) reloads_ok: AtomicU64,
+    pub(crate) reloads_rejected: AtomicU64,
+    pub(crate) accept_faults: AtomicU64,
+}
+
+pub(crate) struct Shared {
+    pub(crate) opts: ServeOptions,
+    queue: Mutex<VecDeque<Pending>>,
+    queue_cv: Condvar,
+    stop: AtomicBool,
+    model: Mutex<Arc<LoadedModel>>,
+    pub(crate) counters: Counters,
+    lat_us: Mutex<Histogram>,
+}
+
+impl Shared {
+    pub(crate) fn stopping(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn current_model(&self) -> Arc<LoadedModel> {
+        Arc::clone(&lock(&self.model))
+    }
+
+    pub(crate) fn swap_model(&self, next: LoadedModel) {
+        *lock(&self.model) = Arc::new(next);
+    }
+
+    /// Admit one request (or shed it) and block until it is answered.
+    /// Runs on the connection handler's thread.
+    fn submit(&self, req: InferRequest) -> Response {
+        let model = self.current_model();
+        if req.input.len() != model.input_dim() {
+            self.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+            return Response::reject(
+                Status::BadRequest,
+                format!(
+                    "input dim {} != model input dim {}",
+                    req.input.len(),
+                    model.input_dim()
+                ),
+            );
+        }
+        let now = clock::now_nanos();
+        let budget_ms =
+            if req.deadline_ms == 0 { self.opts.default_deadline_ms } else { req.deadline_ms };
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = lock(&self.queue);
+            if self.stopping() {
+                self.counters.shed.fetch_add(1, Ordering::Relaxed);
+                return Response::reject(Status::Shed, "server stopping");
+            }
+            if q.len() >= self.opts.queue_cap {
+                self.counters.shed.fetch_add(1, Ordering::Relaxed);
+                return Response::reject(
+                    Status::Shed,
+                    format!("queue full (capacity {})", self.opts.queue_cap),
+                );
+            }
+            q.push_back(Pending {
+                input: req.input,
+                enqueued_nanos: now,
+                deadline_nanos: now + u64::from(budget_ms) * NANOS_PER_MS,
+                tx,
+            });
+            self.counters.accepted.fetch_add(1, Ordering::Relaxed);
+            self.queue_cv.notify_all();
+        }
+        rx.recv().unwrap_or_else(|_| {
+            Response::reject(Status::BatchFailed, "server stopped before the batch ran")
+        })
+    }
+}
+
+/// Point-in-time view of the daemon's counters and latency profile.
+#[derive(Clone, Debug)]
+pub struct ServeSnapshot {
+    pub accepted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub deadline_dropped: u64,
+    pub batch_failed: u64,
+    pub bad_request: u64,
+    pub batches: u64,
+    pub reloads_ok: u64,
+    pub reloads_rejected: u64,
+    pub accept_faults: u64,
+    pub queue_depth: usize,
+    pub engine_queue_depth: usize,
+    pub model_version: u64,
+    pub model_source: String,
+    /// Admission-to-answer latency quantiles (ms); 0 until the first
+    /// completed request.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// A running serving daemon. Dropping it (or calling
+/// [`Server::shutdown`]) stops the lifecycle threads after draining
+/// already-admitted requests.
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    accept: Option<thread::JoinHandle<()>>,
+    batcher: Option<thread::JoinHandle<()>>,
+    reload: Option<thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Validate `sparse` as a servable chain, bind the listener, and
+    /// start the lifecycle threads. `source` labels the checkpoint in
+    /// logs and snapshots.
+    pub fn start(
+        sparse: SparseModel,
+        source: impl Into<String>,
+        opts: ServeOptions,
+    ) -> crate::Result<Server> {
+        let model = LoadedModel::new(sparse, 1, source.into())?;
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding serve listener on {}", opts.addr))?;
+        let addr = listener.local_addr().context("resolving serve listener address")?;
+        let shared = Arc::new(Shared {
+            opts,
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+            model: Mutex::new(Arc::new(model)),
+            counters: Counters::default(),
+            lat_us: Mutex::new(Histogram::new()),
+        });
+        let b = Arc::clone(&shared);
+        let batcher = thread::Builder::new()
+            .name("serve-batcher".into())
+            .spawn(move || batcher_loop(&b))
+            .context("spawning serve batcher")?;
+        let reload = if shared.opts.watch_dir.is_some() {
+            Some(reload::spawn_watcher(Arc::clone(&shared)).context("spawning serve watcher")?)
+        } else {
+            None
+        };
+        let a = Arc::clone(&shared);
+        let accept = thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || accept_loop(&listener, &a))
+            .context("spawning serve acceptor")?;
+        Ok(Server { shared, addr, accept: Some(accept), batcher: Some(batcher), reload })
+    }
+
+    /// The bound listen address (resolves port 0 to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn snapshot(&self) -> ServeSnapshot {
+        let c = &self.shared.counters;
+        let model = self.shared.current_model();
+        let (p50_ms, p99_ms) = {
+            let h = lock(&self.shared.lat_us);
+            (
+                h.p50().unwrap_or(0) as f64 / 1_000.0,
+                h.p99().unwrap_or(0) as f64 / 1_000.0,
+            )
+        };
+        ServeSnapshot {
+            accepted: c.accepted.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            shed: c.shed.load(Ordering::Relaxed),
+            deadline_dropped: c.deadline_dropped.load(Ordering::Relaxed),
+            batch_failed: c.batch_failed.load(Ordering::Relaxed),
+            bad_request: c.bad_request.load(Ordering::Relaxed),
+            batches: c.batches.load(Ordering::Relaxed),
+            reloads_ok: c.reloads_ok.load(Ordering::Relaxed),
+            reloads_rejected: c.reloads_rejected.load(Ordering::Relaxed),
+            accept_faults: c.accept_faults.load(Ordering::Relaxed),
+            queue_depth: lock(&self.shared.queue).len(),
+            engine_queue_depth: crate::engine::global().queue_depth(),
+            model_version: model.version,
+            model_source: model.source.clone(),
+            p50_ms,
+            p99_ms,
+        }
+    }
+
+    /// A copy of the admission-to-answer latency histogram (µs).
+    pub fn latency_histogram(&self) -> Histogram {
+        lock(&self.shared.lat_us).clone()
+    }
+
+    /// Stop accepting, drain already-admitted requests, join the
+    /// lifecycle threads. Idempotent.
+    pub fn shutdown(&mut self) {
+        if !self.shared.stop.swap(true, Ordering::SeqCst) {
+            self.shared.queue_cv.notify_all();
+            // Wake the acceptor out of its blocking accept.
+            let _ = TcpStream::connect(self.addr);
+        }
+        for h in [self.accept.take(), self.batcher.take(), self.reload.take()].into_iter().flatten()
+        {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the accept loop exits (daemon mode: forever, until
+    /// the process is signalled or the listener breaks).
+    pub fn wait(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    for conn in listener.incoming() {
+        if shared.stopping() {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        // Probe the accept fault site; any injected failure (error or
+        // panic) costs exactly this connection, never the daemon.
+        let probe = catch_unwind(|| faults::point("serve.accept"));
+        let dropped = match probe {
+            Ok(Ok(())) => None,
+            Ok(Err(e)) => Some(e.to_string()),
+            Err(_) => Some("injected panic".to_string()),
+        };
+        if let Some(why) = dropped {
+            shared.counters.accept_faults.fetch_add(1, Ordering::Relaxed);
+            eprintln!("serve: dropping connection: {why}");
+            continue;
+        }
+        let c = Arc::clone(shared);
+        let spawned = thread::Builder::new()
+            .name("serve-conn".into())
+            .spawn(move || conn_loop(stream, &c));
+        if let Err(e) = spawned {
+            // Thread exhaustion: shed this connection, keep accepting.
+            eprintln!("serve: dropping connection (no handler thread): {e}");
+        }
+    }
+}
+
+fn conn_loop(stream: TcpStream, shared: &Arc<Shared>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let req = match protocol::read_request(&mut reader) {
+            Ok(r) => r,
+            Err(e) if e.kind() == ErrorKind::UnexpectedEof => return,
+            Err(e) => {
+                // Framing is lost after a malformed request; answer
+                // once, then close.
+                shared.counters.bad_request.fetch_add(1, Ordering::Relaxed);
+                let resp = Response::reject(Status::BadRequest, e.to_string());
+                let _ = protocol::write_response(&mut writer, &resp);
+                return;
+            }
+        };
+        let resp = shared.submit(req);
+        if protocol::write_response(&mut writer, &resp).is_err() {
+            return;
+        }
+    }
+}
+
+fn batcher_loop(shared: &Arc<Shared>) {
+    let mut scratch = kernels::ForwardScratch::new();
+    while let Some(batch) = next_batch(shared) {
+        run_batch(shared, batch, &mut scratch);
+        trace::flush_local();
+    }
+    trace::flush_local();
+}
+
+/// Block until a batch is due: the queue holds `max_batch` requests,
+/// the oldest has waited `batch_window_ms`, or the server is stopping
+/// (drain). Returns `None` once stopped *and* drained.
+fn next_batch(shared: &Shared) -> Option<Vec<Pending>> {
+    let window_nanos = shared.opts.batch_window_ms * NANOS_PER_MS;
+    let mut q = lock(&shared.queue);
+    loop {
+        let stopping = shared.stopping();
+        let Some(front) = q.front() else {
+            if stopping {
+                return None;
+            }
+            let (guard, _) = shared
+                .queue_cv
+                .wait_timeout(q, Duration::from_millis(50))
+                .unwrap_or_else(PoisonError::into_inner);
+            q = guard;
+            continue;
+        };
+        let age = clock::now_nanos().saturating_sub(front.enqueued_nanos);
+        if stopping || q.len() >= shared.opts.max_batch || age >= window_nanos {
+            let n = q.len().min(shared.opts.max_batch);
+            return Some(q.drain(..n).collect());
+        }
+        let (guard, _) = shared
+            .queue_cv
+            .wait_timeout(q, Duration::from_nanos(window_nanos - age))
+            .unwrap_or_else(PoisonError::into_inner);
+        q = guard;
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Execute one flushed batch: enforce deadlines, run the chained
+/// sparse GEMM under `catch_unwind`, answer every rider.
+fn run_batch(shared: &Shared, batch: Vec<Pending>, scratch: &mut kernels::ForwardScratch) {
+    let now = clock::now_nanos();
+    let mut live = Vec::with_capacity(batch.len());
+    for p in batch {
+        if now >= p.deadline_nanos {
+            shared.counters.deadline_dropped.fetch_add(1, Ordering::Relaxed);
+            let waited_ms =
+                now.saturating_sub(p.enqueued_nanos) as f64 / NANOS_PER_MS as f64;
+            let _ = p.tx.send(Response::reject(
+                Status::DeadlineExceeded,
+                format!("deadline exceeded after {waited_ms:.1} ms in queue"),
+            ));
+        } else {
+            live.push(p);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    let model = shared.current_model();
+    let d_in = model.input_dim();
+    let k = live.len();
+    // One request per column; the kernels accumulate columns
+    // independently, so each answer is bitwise the unbatched one.
+    let mut x = Mat::zeros(d_in, k);
+    for (j, p) in live.iter().enumerate() {
+        for (i, v) in p.input.iter().enumerate() {
+            x.data[i * k + j] = *v;
+        }
+    }
+    shared.counters.batches.fetch_add(1, Ordering::Relaxed);
+    let outcome = catch_unwind(AssertUnwindSafe(|| -> std::io::Result<Vec<Vec<f32>>> {
+        faults::point("serve.batch")?;
+        let _span = trace::span("serve.batch");
+        let layers: Vec<&SparseTensor> = model.sparse.layers.iter().map(|l| &l.tensor).collect();
+        let y = kernels::forward_chain(&layers, &x, scratch);
+        let d_out = y.rows;
+        Ok((0..k).map(|j| (0..d_out).map(|i| y.data[i * k + j]).collect()).collect())
+    }));
+    match outcome {
+        Ok(Ok(cols)) => {
+            let done = clock::now_nanos();
+            let mut h = lock(&shared.lat_us);
+            for (p, col) in live.iter().zip(cols) {
+                h.record(done.saturating_sub(p.enqueued_nanos) / 1_000);
+                shared.counters.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = p.tx.send(Response::ok(col));
+            }
+        }
+        Ok(Err(e)) => fail_batch(shared, &live, &format!("batch execution failed: {e}")),
+        Err(payload) => fail_batch(
+            shared,
+            &live,
+            &format!("batch panicked: {}", panic_message(payload.as_ref())),
+        ),
+    }
+}
+
+fn fail_batch(shared: &Shared, live: &[Pending], reason: &str) {
+    eprintln!("serve: {reason} ({} request(s) failed)", live.len());
+    for p in live {
+        shared.counters.batch_failed.fetch_add(1, Ordering::Relaxed);
+        let _ = p.tx.send(Response::reject(Status::BatchFailed, reason));
+    }
+}

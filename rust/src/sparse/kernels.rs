@@ -88,6 +88,65 @@ pub fn matvec(t: &SparseTensor, x: &[f32]) -> Vec<f32> {
     matmul(t, &xm).data
 }
 
+/// Ping-pong output buffers for [`forward_chain`], reused across
+/// batches so the serving batcher's steady state allocates nothing
+/// (buffers grow to the largest layer×batch shape seen and stay there).
+pub struct ForwardScratch {
+    a: Mat,
+    b: Mat,
+}
+
+impl Default for ForwardScratch {
+    fn default() -> Self {
+        ForwardScratch::new()
+    }
+}
+
+impl ForwardScratch {
+    pub fn new() -> ForwardScratch {
+        ForwardScratch { a: Mat::zeros(0, 0), b: Mat::zeros(0, 0) }
+    }
+}
+
+/// Reshape a scratch buffer in place; contents are overwritten by the
+/// kernel (`rows_body` zeroes every band head), so no fill is needed.
+fn reshape(m: &mut Mat, rows: usize, cols: usize) {
+    m.rows = rows;
+    m.cols = cols;
+    m.data.resize(rows * cols, 0.0);
+}
+
+/// The batched serving entry point: chain a `b×k` batch (one request
+/// per column) through `layers` in order, `out = W_L · … · W_1 · X`,
+/// each step on the engine-banded sparse kernels above. Returns a
+/// reference into `scratch` (valid until the next call).
+///
+/// Because every kernel accumulates each output column independently
+/// (ascending-nonzero order per row, columns never interact), column
+/// `j` of the result is **bitwise identical** to running request `j`
+/// through the chain alone — batch composition can never change a
+/// response (DESIGN.md §Serving; pinned by `forward_chain` tests).
+pub fn forward_chain<'s>(
+    layers: &[&SparseTensor],
+    x: &Mat,
+    scratch: &'s mut ForwardScratch,
+) -> &'s Mat {
+    assert!(!layers.is_empty(), "forward_chain needs at least one layer");
+    assert_eq!(layers[0].cols(), x.rows, "forward_chain input dim mismatch");
+    let k = x.cols;
+    let ForwardScratch { a, b } = scratch;
+    reshape(a, layers[0].rows(), k);
+    matmul_into(layers[0], x, a);
+    let (mut src, mut dst) = (&mut *a, &mut *b);
+    for t in &layers[1..] {
+        assert_eq!(t.cols(), src.rows, "forward_chain layer dim mismatch");
+        reshape(dst, t.rows(), k);
+        matmul_into(t, src, dst);
+        std::mem::swap(&mut src, &mut dst);
+    }
+    src
+}
+
 /// Compute output rows `[r0, r0 + head.len()/k)` into `head`.
 fn rows_body(t: &SparseTensor, x: &Mat, r0: usize, head: &mut [f32], k: usize) {
     head.iter_mut().for_each(|v| *v = 0.0);
@@ -252,6 +311,48 @@ mod tests {
         let ser = crate::engine::with_serial(|| matmul(&t, &x));
         let bits = |m: &Mat| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&par), bits(&ser));
+    }
+
+    #[test]
+    fn forward_chain_matches_layerwise_matmul() {
+        // wq(d×d) → w1(ff×d) → w2(d×ff): the block pipeline's dim chain
+        let (d, ff, k) = (16, 40, 3);
+        let mut r = Rng::new(31);
+        let x = Mat::from_fn(d, k, |_, _| r.normal_f32(0.0, 1.0));
+        let t0 = SparseTensor::Nm(NmPacked::from_dense(&pruned_nm(d, d, 32), 2, 4).unwrap());
+        let t1 = SparseTensor::Nm(NmPacked::from_dense(&pruned_nm(ff, d, 33), 2, 4).unwrap());
+        let t2 = SparseTensor::Nm(NmPacked::from_dense(&pruned_nm(d, ff, 34), 2, 4).unwrap());
+        let mut s = ForwardScratch::new();
+        let got = forward_chain(&[&t0, &t1, &t2], &x, &mut s).clone();
+        let want = matmul(&t2, &matmul(&t1, &matmul(&t0, &x)));
+        assert_eq!((got.rows, got.cols), (d, k));
+        let bits = |m: &Mat| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got), bits(&want));
+    }
+
+    #[test]
+    fn forward_chain_is_batch_composition_independent() {
+        // column j of a batched forward must be bitwise identical to
+        // running request j alone — the serving determinism contract
+        let (d, ff, k) = (24, 48, 5);
+        let mut r = Rng::new(35);
+        let x = Mat::from_fn(d, k, |_, _| r.normal_f32(0.0, 1.0));
+        let t0 = SparseTensor::Nm(NmPacked::from_dense(&pruned_nm(ff, d, 36), 2, 4).unwrap());
+        let t1 = SparseTensor::Nm(NmPacked::from_dense(&pruned_nm(d, ff, 37), 2, 4).unwrap());
+        let layers = [&t0, &t1];
+        let mut s = ForwardScratch::new();
+        let batched = forward_chain(&layers, &x, &mut s).clone();
+        for j in 0..k {
+            let col: Vec<f32> = (0..d).map(|i| x.data[i * k + j]).collect();
+            let solo = forward_chain(&layers, &Mat::from_vec(d, 1, col), &mut s).clone();
+            for i in 0..d {
+                assert_eq!(
+                    batched.data[i * k + j].to_bits(),
+                    solo.data[i].to_bits(),
+                    "row {i} col {j} differs between batched and solo"
+                );
+            }
+        }
     }
 
     #[test]

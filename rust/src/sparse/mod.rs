@@ -228,6 +228,47 @@ impl SparseModel {
         Ok(SparseModel { layers })
     }
 
+    /// The `(input, output)` dimensions of chaining every layer in
+    /// stored order (the serving forward pass). Errors if the model is
+    /// empty or any consecutive pair of layers disagrees on its shared
+    /// dimension — the validation gate both `Server::start` and the
+    /// hot-reload path run before accepting a model.
+    pub fn chain_dims(&self) -> Result<(usize, usize)> {
+        let first = self.layers.first().context("sparse model has no layers")?;
+        let mut rows = first.tensor.rows();
+        for (prev, next) in self.layers.iter().zip(&self.layers[1..]) {
+            ensure!(
+                next.tensor.cols() == rows,
+                "layer {} expects input dim {}, but {} produces {}",
+                next.name,
+                next.tensor.cols(),
+                prev.name,
+                rows
+            );
+            rows = next.tensor.rows();
+        }
+        Ok((first.tensor.cols(), rows))
+    }
+
+    /// Batched forward pass: chain each column of `x` through every
+    /// layer in order via [`kernels::forward_chain`]. Allocating
+    /// convenience for tests and oracles; the serving batcher holds a
+    /// persistent [`kernels::ForwardScratch`] instead.
+    pub fn forward_batch(&self, x: &Mat) -> Result<Mat> {
+        let (d_in, d_out) = self.chain_dims()?;
+        ensure!(
+            x.rows == d_in,
+            "forward_batch input dim {} != model input dim {d_in}",
+            x.rows
+        );
+        if x.cols == 0 {
+            return Ok(Mat::zeros(d_out, 0));
+        }
+        let layers: Vec<&SparseTensor> = self.layers.iter().map(|l| &l.tensor).collect();
+        let mut scratch = kernels::ForwardScratch::new();
+        Ok(kernels::forward_chain(&layers, x, &mut scratch).clone())
+    }
+
     pub fn get(&self, name: &str) -> Option<&SparseTensor> {
         self.layers
             .iter()
@@ -351,6 +392,42 @@ mod tests {
         assert!(matches!(csr, SparseTensor::Csr(_)));
         let dc = compress_mat(&w, &Pattern::Structured { p: 0.5, alpha: 0.0 }).unwrap();
         assert!(matches!(dc, SparseTensor::DenseCompact(_)));
+    }
+
+    #[test]
+    fn chain_dims_validates_and_forward_batch_chains() {
+        let mut r = Rng::new(44);
+        let half_zero = |m: &mut Mat| {
+            for (k, v) in m.data.iter_mut().enumerate() {
+                if k % 2 == 0 {
+                    *v = 0.0;
+                }
+            }
+        };
+        let mut wa = Mat::from_fn(6, 4, |_, _| r.normal_f32(0.0, 1.0));
+        let mut wb = Mat::from_fn(4, 6, |_, _| r.normal_f32(0.0, 1.0));
+        half_zero(&mut wa);
+        half_zero(&mut wb);
+        let sm = SparseModel {
+            layers: vec![
+                SparseLayer { name: "a".into(), tensor: SparseTensor::Csr(Csr::from_dense(&wa)) },
+                SparseLayer { name: "b".into(), tensor: SparseTensor::Csr(Csr::from_dense(&wb)) },
+            ],
+        };
+        assert_eq!(sm.chain_dims().unwrap(), (4, 4));
+        let x = Mat::from_fn(4, 3, |_, _| r.normal_f32(0.0, 1.0));
+        let y = sm.forward_batch(&x).unwrap();
+        let want = sm.layers[1].tensor.matmul(&sm.layers[0].tensor.matmul(&x));
+        assert_eq!(
+            y.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // wrong input dim is an Err, not a panic
+        assert!(sm.forward_batch(&Mat::zeros(5, 2)).is_err());
+        // mis-chained layers are rejected up front (a: 4→6 twice)
+        let bad = SparseModel { layers: vec![sm.layers[0].clone(), sm.layers[0].clone()] };
+        assert!(bad.chain_dims().is_err());
+        assert!(SparseModel::default().chain_dims().is_err());
     }
 
     #[test]

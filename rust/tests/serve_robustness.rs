@@ -1,0 +1,463 @@
+//! End-to-end robustness tests for `thanos serve` (DESIGN.md §Serving):
+//! batched answers are bitwise the unbatched forward pass, overload is
+//! shed explicitly, a poisoned batch fails only its own requests, a
+//! corrupt hot-reload candidate is rejected while the old model keeps
+//! answering, and a valid candidate swaps without dropping in-flight
+//! work.
+//!
+//! The fault-injection schedule is process-global (`robust::faults`),
+//! so every test here serializes on [`TEST_LOCK`] — including the ones
+//! that install no schedule, because a concurrent test's schedule
+//! would otherwise fire at *their* `serve.*` sites.
+
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use thanos::config::ModelConfig;
+use thanos::linalg::Mat;
+use thanos::model::ModelState;
+use thanos::pruning::{magnitude, Pattern};
+use thanos::robust::faults;
+use thanos::runtime::{ModelManifest, ParamEntry};
+use thanos::serve::{Response, ServeClient, ServeOptions, Server, Status};
+use thanos::sparse::SparseModel;
+
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock_tests() -> std::sync::MutexGuard<'static, ()> {
+    TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The micro model from the checkpoint-corruption suite: d_model=8, so
+/// the serving chain is 8 → 8 and every request is 8 floats.
+fn micro_manifest() -> ModelManifest {
+    let cfg = ModelConfig {
+        name: "micro".into(),
+        vocab: 16,
+        d_model: 8,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 16,
+        seq_len: 4,
+    };
+    let mut layout = Vec::new();
+    let mut off = 0usize;
+    let push = |layout: &mut Vec<ParamEntry>, name: &str, shape: Vec<usize>, off: &mut usize| {
+        let numel: usize = shape.iter().product();
+        layout.push(ParamEntry { name: name.into(), offset: *off, shape });
+        *off += numel;
+    };
+    push(&mut layout, "emb", vec![16, 8], &mut off);
+    push(&mut layout, "pos", vec![4, 8], &mut off);
+    let mut block_flat = 0;
+    for l in 0..cfg.n_layers {
+        let before = off;
+        push(&mut layout, &format!("blocks.{l}.ln1"), vec![8], &mut off);
+        for w in ["wq", "wk", "wv", "wo"] {
+            push(&mut layout, &format!("blocks.{l}.{w}"), vec![8, 8], &mut off);
+        }
+        push(&mut layout, &format!("blocks.{l}.ln2"), vec![8], &mut off);
+        push(&mut layout, &format!("blocks.{l}.w1"), vec![16, 8], &mut off);
+        push(&mut layout, &format!("blocks.{l}.w2"), vec![8, 16], &mut off);
+        block_flat = off - before;
+    }
+    push(&mut layout, "ln_f", vec![8], &mut off);
+    ModelManifest { config: cfg, flat_size: off, block_flat_size: block_flat, layout }
+}
+
+/// A 2:4-pruned micro state + its compressed model; different seeds
+/// give different weights (distinct "checkpoint generations").
+fn pruned(seed: u64) -> (ModelState, SparseModel) {
+    let mm = micro_manifest();
+    let mut st = ModelState::init(&mm, seed);
+    for l in 0..mm.config.n_layers {
+        for name in st.prunable_layers(l) {
+            let w = st.get_mat(&name).unwrap();
+            st.set_mat(&name, &magnitude::semi_structured(&w, 2, 4).w).unwrap();
+        }
+    }
+    let pattern = Pattern::SemiStructured { n: 2, m: 4, alpha: 0.0 };
+    let sm = SparseModel::compress_state(&st, &pattern).unwrap();
+    (st, sm)
+}
+
+fn probe_input(tag: usize) -> Vec<f32> {
+    (0..8).map(|i| ((tag * 31 + i) as f32 * 0.37).sin()).collect()
+}
+
+/// The unbatched forward pass — what every served answer must equal
+/// bitwise (column independence of the sparse kernels).
+fn oracle(sm: &SparseModel, input: &[f32]) -> Vec<f32> {
+    sm.forward_batch(&Mat::from_vec(input.len(), 1, input.to_vec())).unwrap().data
+}
+
+fn assert_bitwise(resp: &Response, expect: &[f32], what: &str) {
+    assert_eq!(resp.status, Status::Ok, "{what}: {:?} ({})", resp.status, resp.reason);
+    assert_eq!(resp.output.len(), expect.len(), "{what}: output length");
+    for (i, (a, b)) in resp.output.iter().zip(expect).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: element {i} differs");
+    }
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("thanos-serve-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    cond()
+}
+
+#[test]
+fn concurrent_responses_are_bitwise_the_unbatched_forward() {
+    let _g = lock_tests();
+    faults::clear();
+    let (_st, sm) = pruned(7);
+    let opts = ServeOptions { max_batch: 8, batch_window_ms: 10, ..Default::default() };
+    let server = Server::start(sm.clone(), "oracle-test", opts).unwrap();
+    let addr = server.local_addr();
+
+    let handles: Vec<_> = (0..8)
+        .map(|t| {
+            let sm = sm.clone();
+            std::thread::spawn(move || {
+                let mut c = ServeClient::connect(addr).unwrap();
+                for r in 0..4 {
+                    let input = probe_input(t * 100 + r);
+                    let resp = c.infer(&input, 0).unwrap();
+                    assert_bitwise(&resp, &oracle(&sm, &input), "concurrent request");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let snap = server.snapshot();
+    assert_eq!(snap.completed, 32, "all requests answered");
+    assert_eq!(snap.shed, 0);
+    assert_eq!(snap.batch_failed, 0);
+    assert_eq!(snap.deadline_dropped, 0);
+    assert!(snap.batches >= 4, "32 requests over max_batch=8 need >= 4 batches");
+    assert!(snap.p99_ms > 0.0, "latency histogram must have recorded");
+
+    // Wrong input dimension is a per-request BadRequest, not a hangup.
+    let mut c = ServeClient::connect(addr).unwrap();
+    let bad = c.infer(&[1.0, 2.0, 3.0], 0).unwrap();
+    assert_eq!(bad.status, Status::BadRequest);
+    assert!(bad.reason.contains("input dim 3"), "reason: {}", bad.reason);
+    let good = c.infer(&probe_input(9), 0).unwrap();
+    assert_eq!(good.status, Status::Ok, "connection survives a bad request");
+}
+
+#[test]
+fn queue_overflow_sheds_with_explicit_reason() {
+    let _g = lock_tests();
+    faults::clear();
+    let (_st, sm) = pruned(7);
+    let opts = ServeOptions {
+        queue_cap: 2,
+        max_batch: 64,
+        batch_window_ms: 500,
+        ..Default::default()
+    };
+    let server = Server::start(sm, "shed-test", opts).unwrap();
+    let addr = server.local_addr();
+
+    // 5 clients fire simultaneously into a 2-slot queue whose batcher
+    // holds its flush for 500 ms: exactly 2 ride the batch, 3 shed.
+    let barrier = Arc::new(Barrier::new(5));
+    let handles: Vec<_> = (0..5)
+        .map(|t| {
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut c = ServeClient::connect(addr).unwrap();
+                barrier.wait();
+                c.infer(&probe_input(t), 0).unwrap()
+            })
+        })
+        .collect();
+    let results: Vec<Response> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let ok = results.iter().filter(|r| r.status == Status::Ok).count();
+    let shed: Vec<&Response> =
+        results.iter().filter(|r| r.status == Status::Shed).collect();
+    assert_eq!(ok, 2, "queue capacity admits exactly 2");
+    assert_eq!(shed.len(), 3, "the other 3 must shed");
+    for r in &shed {
+        assert!(
+            r.reason.contains("queue full (capacity 2)"),
+            "shed reason must name the bound, got: {}",
+            r.reason
+        );
+    }
+    assert_eq!(server.snapshot().shed, 3);
+}
+
+#[test]
+fn batch_panic_fails_its_requests_not_the_daemon() {
+    let _g = lock_tests();
+    faults::clear();
+    faults::install(faults::parse_schedule("serve.batch:1=panic").unwrap());
+    let (_st, sm) = pruned(7);
+    let server = Server::start(sm.clone(), "panic-test", Default::default()).unwrap();
+    let mut c = ServeClient::connect(server.local_addr()).unwrap();
+
+    let input = probe_input(1);
+    let r1 = c.infer(&input, 0).unwrap();
+    assert_eq!(r1.status, Status::BatchFailed, "poisoned batch fails its riders");
+    assert!(r1.reason.contains("panic"), "reason: {}", r1.reason);
+
+    // Same connection, next request: the daemon is alive and correct.
+    let r2 = c.infer(&input, 0).unwrap();
+    assert_bitwise(&r2, &oracle(&sm, &input), "request after contained panic");
+
+    let snap = server.snapshot();
+    assert_eq!(snap.batch_failed, 1);
+    assert_eq!(snap.completed, 1);
+    faults::clear();
+}
+
+#[test]
+fn expired_deadline_is_cancelled_at_the_flush_boundary() {
+    let _g = lock_tests();
+    faults::clear();
+    let (_st, sm) = pruned(7);
+    let opts = ServeOptions { batch_window_ms: 200, ..Default::default() };
+    let server = Server::start(sm, "deadline-test", opts).unwrap();
+    let mut c = ServeClient::connect(server.local_addr()).unwrap();
+
+    // 5 ms budget against a 200 ms batching window: expired by flush.
+    let r = c.infer(&probe_input(2), 5).unwrap();
+    assert_eq!(r.status, Status::DeadlineExceeded, "reason: {}", r.reason);
+    assert!(r.reason.contains("deadline exceeded"), "reason: {}", r.reason);
+    assert_eq!(server.snapshot().deadline_dropped, 1);
+}
+
+#[test]
+fn corrupt_reload_candidate_is_rejected_while_serving_continues() {
+    let _g = lock_tests();
+    faults::clear();
+    let watch = temp_dir("corrupt-watch");
+    let staging = temp_dir("corrupt-staging");
+
+    let (_st_a, sm_a) = pruned(7);
+    let opts = ServeOptions {
+        watch_dir: Some(watch.clone()),
+        poll_ms: 20,
+        batch_window_ms: 5,
+        ..Default::default()
+    };
+    let server = Server::start(sm_a.clone(), "A", opts).unwrap();
+    let mut c = ServeClient::connect(server.local_addr()).unwrap();
+
+    // A valid v3 candidate with one flipped bit: the CRC loader must
+    // reject it (ckpt_corruption.rs proves every flip is caught).
+    let (st_b, sm_b) = pruned(13);
+    let valid = staging.join("b.thnck");
+    st_b.save_compressed(&valid, &sm_b).unwrap();
+    let mut bytes = std::fs::read(&valid).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 1;
+    std::fs::write(watch.join("bad.thnck"), &bytes).unwrap();
+
+    // Hammer the server while the watcher trips over the candidate:
+    // every answer keeps coming from model A.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut saw_rejection = false;
+    let mut tag = 0usize;
+    while Instant::now() < deadline {
+        let input = probe_input(tag);
+        tag += 1;
+        let r = c.infer(&input, 0).unwrap();
+        assert_bitwise(&r, &oracle(&sm_a, &input), "request during corrupt reload");
+        if server.snapshot().reloads_rejected >= 1 {
+            saw_rejection = true;
+            break;
+        }
+    }
+    assert!(saw_rejection, "watcher never rejected the corrupt candidate");
+
+    let snap = server.snapshot();
+    assert_eq!(snap.reloads_ok, 0);
+    assert_eq!(snap.model_version, 1, "old model must still be serving");
+    let input = probe_input(999);
+    let r = c.infer(&input, 0).unwrap();
+    assert_bitwise(&r, &oracle(&sm_a, &input), "request after rejected reload");
+
+    let _ = std::fs::remove_dir_all(&watch);
+    let _ = std::fs::remove_dir_all(&staging);
+}
+
+#[test]
+fn valid_reload_swaps_without_dropping_requests() {
+    let _g = lock_tests();
+    faults::clear();
+    let watch = temp_dir("valid-watch");
+
+    let (_st_a, sm_a) = pruned(7);
+    let (st_b, sm_b) = pruned(13);
+    // The generations must be distinguishable for the post-swap check.
+    let probe = probe_input(5);
+    assert_ne!(
+        oracle(&sm_a, &probe)
+            .iter()
+            .map(|v| v.to_bits())
+            .collect::<Vec<_>>(),
+        oracle(&sm_b, &probe)
+            .iter()
+            .map(|v| v.to_bits())
+            .collect::<Vec<_>>(),
+        "seeds 7 and 13 must produce different models"
+    );
+
+    let opts = ServeOptions {
+        watch_dir: Some(watch.clone()),
+        poll_ms: 20,
+        batch_window_ms: 5,
+        ..Default::default()
+    };
+    let server = Server::start(sm_a.clone(), "A", opts).unwrap();
+    let mut c = ServeClient::connect(server.local_addr()).unwrap();
+
+    // save_compressed writes via atomic rename, so the watcher never
+    // sees a half-written candidate.
+    st_b.save_compressed(watch.join("b.thnck"), &sm_b).unwrap();
+
+    // Keep requests in flight across the swap: every answer must be
+    // Ok and bitwise from *some* generation — never torn, never lost.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut swapped = false;
+    let mut tag = 0usize;
+    while Instant::now() < deadline {
+        let input = probe_input(tag);
+        tag += 1;
+        let r = c.infer(&input, 0).unwrap();
+        assert_eq!(r.status, Status::Ok, "no request may drop during reload: {}", r.reason);
+        let bits: Vec<u32> = r.output.iter().map(|v| v.to_bits()).collect();
+        let from_a =
+            bits == oracle(&sm_a, &input).iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        let from_b =
+            bits == oracle(&sm_b, &input).iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert!(from_a || from_b, "answer came from neither generation");
+        if server.snapshot().reloads_ok >= 1 {
+            swapped = true;
+            break;
+        }
+    }
+    assert!(swapped, "watcher never swapped the valid candidate");
+
+    let snap = server.snapshot();
+    assert_eq!(snap.model_version, 2);
+    assert_eq!(snap.reloads_rejected, 0);
+    let r = c.infer(&probe, 0).unwrap();
+    assert_bitwise(&r, &oracle(&sm_b, &probe), "post-swap request must use model B");
+
+    let _ = std::fs::remove_dir_all(&watch);
+}
+
+#[test]
+fn accept_fault_drops_one_connection_not_the_daemon() {
+    let _g = lock_tests();
+    faults::clear();
+    faults::install(faults::parse_schedule("serve.accept:1=err").unwrap());
+    let (_st, sm) = pruned(7);
+    let server = Server::start(sm.clone(), "accept-test", Default::default()).unwrap();
+    let addr = server.local_addr();
+
+    // First accepted connection is dropped by the injected fault — the
+    // client sees an IO error, not a protocol response.
+    let mut c1 = ServeClient::connect(addr).unwrap();
+    assert!(
+        c1.infer(&probe_input(1), 0).is_err(),
+        "dropped connection must surface as a client IO error"
+    );
+
+    // The daemon keeps accepting.
+    let mut c2 = ServeClient::connect(addr).unwrap();
+    let input = probe_input(2);
+    let r = c2.infer(&input, 0).unwrap();
+    assert_bitwise(&r, &oracle(&sm, &input), "connection after accept fault");
+    assert_eq!(server.snapshot().accept_faults, 1);
+    faults::clear();
+}
+
+#[test]
+fn transient_reload_errors_are_absorbed_by_retry() {
+    let _g = lock_tests();
+    faults::clear();
+    // Two transient errors at the reload read: within the default
+    // RetryPolicy budget (3 extra attempts), so the reload succeeds.
+    faults::install(
+        faults::parse_schedule("serve.reload:1=err;serve.reload:2=err").unwrap(),
+    );
+    let watch = temp_dir("retry-watch");
+
+    let (_st_a, sm_a) = pruned(7);
+    let (st_b, sm_b) = pruned(13);
+    let opts = ServeOptions {
+        watch_dir: Some(watch.clone()),
+        poll_ms: 20,
+        batch_window_ms: 5,
+        ..Default::default()
+    };
+    let server = Server::start(sm_a, "A", opts).unwrap();
+    st_b.save_compressed(watch.join("b.thnck"), &sm_b).unwrap();
+
+    assert!(
+        wait_until(Duration::from_secs(10), || server.snapshot().reloads_ok >= 1),
+        "reload must succeed after retries"
+    );
+    assert!(faults::stats().retries >= 2, "with_retry must have absorbed both errors");
+    assert_eq!(server.snapshot().reloads_rejected, 0);
+
+    let mut c = ServeClient::connect(server.local_addr()).unwrap();
+    let input = probe_input(3);
+    let r = c.infer(&input, 0).unwrap();
+    assert_bitwise(&r, &oracle(&sm_b, &input), "request after retried reload");
+
+    faults::clear();
+    let _ = std::fs::remove_dir_all(&watch);
+}
+
+#[test]
+fn serve_daemon_cli_smoke() {
+    let _g = lock_tests();
+    faults::clear();
+    let dir = temp_dir("cli");
+    let (st, sm) = pruned(7);
+    let ckpt = dir.join("micro-compressed.thnck");
+    st.save_compressed(&ckpt, &sm).unwrap();
+
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_thanos"))
+        .args(["serve", ckpt.to_str().unwrap(), "--serve_addr=127.0.0.1:0"])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+
+    // The daemon prints "serving <ckpt> (8->8) on <addr>" once bound.
+    let mut reader = std::io::BufReader::new(child.stdout.take().unwrap());
+    let mut line = String::new();
+    std::io::BufRead::read_line(&mut reader, &mut line).unwrap();
+    assert!(line.starts_with("serving "), "unexpected banner: {line:?}");
+    let addr = line.rsplit(" on ").next().unwrap().trim().to_string();
+
+    let mut c = ServeClient::connect(addr.as_str()).unwrap();
+    let input = probe_input(4);
+    let r = c.infer(&input, 0).unwrap();
+    assert_bitwise(&r, &oracle(&sm, &input), "request against the CLI daemon");
+
+    child.kill().unwrap();
+    child.wait().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
