@@ -1,0 +1,27 @@
+// D7 streaming positive: chunk-container write machinery shaped like
+// robust/stream.rs's ChunkWriter commit path — a raw create/append/
+// marker-write sequence. Under rust/src/robust/ this is the exempt
+// implementation layer; anywhere else it is 3 findings in source
+// order (File::create, fs::write, OpenOptions). The cfg(test) spill
+// cleanup write stays exempt either way.
+use std::io::Write;
+
+fn commit_container(path: &std::path::Path, payload: &[u8], table: &[u8]) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(payload)?;
+    f.write_all(table)?;
+    f.sync_all()?;
+    std::fs::rename(&tmp, path)?;
+    std::fs::write(path.with_extension("crc"), format!("{}", payload.len()))?;
+    let mut tail = std::fs::OpenOptions::new().append(true).open(path)?;
+    tail.write_all(b"THSC")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    fn spill_scratch_is_fine() {
+        std::fs::write("/tmp/spill.thsc", b"THSC").unwrap();
+    }
+}

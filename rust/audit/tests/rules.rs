@@ -175,6 +175,25 @@ fn d7_accepts_atomic_writers_and_reads() {
     assert!(f.is_empty(), "{f:#?}");
 }
 
+#[test]
+fn d7_chunk_container_write_machinery_is_exempt_inside_robust_stream() {
+    // The .thsc ChunkWriter commit path (create, append, marker write)
+    // lives at rust/src/robust/stream.rs — the designated write layer.
+    let f = analyze("d7_stream_pos.rs", "rust/src/robust/stream.rs", &[]);
+    assert!(f.is_empty(), "{f:#?}");
+}
+
+#[test]
+fn d7_chunk_container_writes_are_flagged_outside_robust() {
+    // The same container machinery copied anywhere else must route
+    // through robust::atomic instead: three findings, source order.
+    let f = analyze("d7_stream_pos.rs", "rust/src/model/stream.rs", &[]);
+    assert_eq!(rules(&f), ["D7", "D7", "D7"], "{f:#?}");
+    assert!(f[0].text.contains("File::create"), "{:?}", f[0]);
+    assert!(f[1].text.contains("fs::write"), "{:?}", f[1]);
+    assert!(f[2].text.contains("OpenOptions"), "{:?}", f[2]);
+}
+
 // ------------------------------------------------------- allowlist
 
 #[test]

@@ -1,0 +1,265 @@
+//! Bounded-memory streaming prune trajectory (DESIGN.md §Streaming):
+//! the same synthetic-`ChunkOps` pruning walk end-to-end in streamed
+//! mode (spill container + governor + two-stage pipeline, under a byte
+//! budget of a few chunks) and in the all-in-RAM reference mode, at a
+//! TinyLlama-shaped-but-reduced configuration. Records wall time, the
+//! process peak RSS (`VmHWM`), the governor's in-flight high-water
+//! mark, and a CRC-64 of the final weights — so the trajectory file
+//! itself witnesses that streaming changed memory, not math.
+//!
+//! `THANOS_STREAM_BENCH_MODE=streamed|inram|both` (default `both`)
+//! selects the runs. `VmHWM` is a process-lifetime high-water mark, so
+//! `both` runs streamed **first** and a single process can only bound
+//! the in-RAM peak from below; CI's chaos-smoke job runs each mode in
+//! its own process and gates on the recorded numbers instead.
+//!
+//! Results merge into `BENCH_prune_stream.json` (schema
+//! thanos-prune-stream-bench/v1, keys `prune_stream/<shape>/<mode>`;
+//! `THANOS_STREAM_BENCH_OUT` override).
+//!
+//! ```bash
+//! cargo bench --bench prune_stream                      # full shape
+//! THANOS_BENCH_QUICK=1 cargo bench --bench prune_stream # CI smoke
+//! ```
+
+mod common;
+use common::*;
+
+use anyhow::{ensure, Result};
+use thanos::config::ModelConfig;
+use thanos::coordinator::{
+    run_pruning, Backend, ChunkForward, ChunkOps, PruneSpec, RobustOpts, StreamOpts,
+    StreamingPipeline,
+};
+use thanos::model::ModelState;
+use thanos::pruning::{Method, Pattern, PruneOpts};
+use thanos::robust::crc64_f32s;
+use thanos::runtime::{ModelManifest, ParamEntry};
+
+#[derive(Clone, Copy)]
+struct Shape {
+    label: &'static str,
+    d_model: usize,
+    d_ff: usize,
+    blocks: usize,
+    chunks: usize,
+    /// token rows per calibration chunk
+    a: usize,
+}
+
+/// A transformer manifest at the bench shape (same layout the serving
+/// bench and the chaos harnesses build).
+fn manifest(s: &Shape) -> ModelManifest {
+    let cfg = ModelConfig {
+        name: "stream-bench".into(),
+        vocab: 16,
+        d_model: s.d_model,
+        n_layers: s.blocks,
+        n_heads: 4,
+        d_ff: s.d_ff,
+        seq_len: 4,
+    };
+    let mut layout = Vec::new();
+    let mut off = 0usize;
+    let push = |layout: &mut Vec<ParamEntry>, name: &str, shape: Vec<usize>, off: &mut usize| {
+        let numel: usize = shape.iter().product();
+        layout.push(ParamEntry { name: name.into(), offset: *off, shape });
+        *off += numel;
+    };
+    push(&mut layout, "emb", vec![16, s.d_model], &mut off);
+    push(&mut layout, "pos", vec![4, s.d_model], &mut off);
+    let mut block_flat = 0;
+    for l in 0..cfg.n_layers {
+        let before = off;
+        push(&mut layout, &format!("blocks.{l}.ln1"), vec![s.d_model], &mut off);
+        for w in ["wq", "wk", "wv", "wo"] {
+            push(&mut layout, &format!("blocks.{l}.{w}"), vec![s.d_model, s.d_model], &mut off);
+        }
+        push(&mut layout, &format!("blocks.{l}.ln2"), vec![s.d_model], &mut off);
+        push(&mut layout, &format!("blocks.{l}.w1"), vec![s.d_ff, s.d_model], &mut off);
+        push(&mut layout, &format!("blocks.{l}.w2"), vec![s.d_model, s.d_ff], &mut off);
+        block_flat = off - before;
+    }
+    push(&mut layout, "ln_f", vec![s.d_model], &mut off);
+    ModelManifest { config: cfg, flat_size: off, block_flat_size: block_flat, layout }
+}
+
+/// Synthetic per-chunk compute (no AOT executables in a bench): `embed`
+/// reads the embedding, `forward` folds a digest of the block's current
+/// weights into the activations, and the capture sites are diagonally
+/// seeded so every Hessian is positive definite. Identical math in
+/// streamed and in-RAM mode — any weight-CRC mismatch between the two
+/// recorded entries is a streaming bug.
+struct SynthOps {
+    s: Shape,
+}
+
+fn site_vals(x: &[f32], a: usize, b: usize, salt: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; a * b];
+    for t in 0..a {
+        for f in 0..b {
+            let v = x[(f * 31 + t * 7 + salt) % x.len()];
+            let texture = ((f * 13 + t * 5 + salt) % 17) as f32 * 0.07;
+            let diag = if t % b == f { 1.0 } else { 0.0 };
+            out[t * b + f] = v + texture + diag;
+        }
+    }
+    out
+}
+
+impl ChunkOps for SynthOps {
+    fn n_blocks(&self) -> usize {
+        self.s.blocks
+    }
+    fn n_chunks(&self) -> usize {
+        self.s.chunks
+    }
+    fn tokens_per_chunk(&self) -> usize {
+        self.s.a
+    }
+    fn site_dims(&self) -> [usize; 4] {
+        [self.s.d_model, self.s.d_model, self.s.d_model, self.s.d_ff]
+    }
+    fn embed(&mut self, state: &ModelState, ch: usize) -> Result<Vec<f32>> {
+        let emb = state.get_mat("emb")?;
+        let n = self.s.a * self.s.d_model;
+        Ok((0..n)
+            .map(|i| emb.data[(i * 3 + ch * 11) % emb.data.len()] + ch as f32 * 0.125)
+            .collect())
+    }
+    fn forward(&mut self, state: &ModelState, l: usize, x: &[f32]) -> Result<ChunkForward> {
+        ensure!(x.len() == self.s.a * self.s.d_model, "bad chunk shape: {}", x.len());
+        let digest = crc64_f32s(state.block_slice(l)?);
+        let y: Vec<f32> = x
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                let k = ((digest >> (8 * (i % 8))) & 0xFF) as f32 / 255.0;
+                0.5 * v + 0.25 * k + 0.01
+            })
+            .collect();
+        Ok(ChunkForward {
+            y,
+            sites: [
+                site_vals(x, self.s.a, self.s.d_model, 1),
+                site_vals(x, self.s.a, self.s.d_model, 2),
+                site_vals(x, self.s.a, self.s.d_model, 3),
+                site_vals(x, self.s.a, self.s.d_ff, 4),
+            ],
+        })
+    }
+}
+
+fn peak_rss_bytes() -> u64 {
+    // Linux VmHWM (peak resident set, kB); 0 elsewhere — the field is
+    // recorded as-is so non-Linux trajectory entries are visibly inert.
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else { return 0 };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb = rest.trim().trim_end_matches("kB").trim().parse::<u64>().unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// One full `run_pruning` walk at `shape`; `budget` Some = streamed.
+fn run_mode(shape: &Shape, budget: Option<u64>, out: &mut BenchJson) -> u64 {
+    let mode = if budget.is_some() { "streamed" } else { "inram" };
+    let mm = manifest(shape);
+    let mut state = ModelState::init(&mm, 41);
+    let spill = std::env::temp_dir()
+        .join(format!("thanos-stream-bench-{}-{mode}.thsc", std::process::id()));
+    let mut pipe = StreamingPipeline::new(SynthOps { s: *shape }, StreamOpts::new(budget, spill));
+    let spec = PruneSpec {
+        method: Method::Thanos,
+        pattern: Pattern::Unstructured { p: 0.5 },
+        opts: PruneOpts { block_size: 32, ..Default::default() },
+        backend: Backend::Rust,
+    };
+    let robust = RobustOpts { journal: None, resume: false, mem_budget: budget };
+
+    let (report, wall) = time_s(|| {
+        run_pruning(&mut state, &mut pipe, &spec, &robust).expect("pruning run")
+    });
+    let crc = crc64_f32s(&state.flat);
+    let chunk_bytes = (shape.a * shape.d_model * 4) as u64;
+    let (gov_peak, admitted) = (pipe.governor().peak_bytes(), pipe.governor().admitted());
+    if let Some(b) = budget {
+        assert!(
+            gov_peak <= b,
+            "governor peak {gov_peak} exceeds the {b}-byte budget"
+        );
+    }
+
+    let key = format!("prune_stream/{}/{mode}", shape.label);
+    out.record(
+        &key,
+        vec![
+            ("wall_s", BenchJson::num(wall)),
+            ("peak_rss_bytes", BenchJson::num(peak_rss_bytes() as f64)),
+            ("governor_peak_bytes", BenchJson::num(gov_peak as f64)),
+            ("admitted_chunks", BenchJson::num(admitted as f64)),
+            ("mem_budget_bytes", BenchJson::num(budget.unwrap_or(0) as f64)),
+            ("chunk_bytes", BenchJson::num(chunk_bytes as f64)),
+            ("chunks", BenchJson::num(shape.chunks as f64)),
+            ("blocks", BenchJson::num(shape.blocks as f64)),
+            ("d_model", BenchJson::num(shape.d_model as f64)),
+            ("d_ff", BenchJson::num(shape.d_ff as f64)),
+            ("tokens_per_chunk", BenchJson::num(shape.a as f64)),
+            ("weights_crc64", BenchJson::text(&format!("{crc:016x}"))),
+            ("prune_secs", BenchJson::num(report.prune_secs)),
+            ("capture_secs", BenchJson::num(report.capture_secs)),
+            ("hessian_secs", BenchJson::num(report.hessian_secs)),
+        ],
+    );
+    println!(
+        "{key}: wall {wall:.2}s  rss {:.1} MiB  governor peak {gov_peak} B  crc {crc:016x}",
+        peak_rss_bytes() as f64 / (1024.0 * 1024.0)
+    );
+    crc
+}
+
+fn main() {
+    thanos::trace::init_from_env();
+    let quick = quick_mode();
+    // TinyLlama proportions (d_ff ≈ 2.75·d_model, 22 blocks) reduced to
+    // CPU scale; quick is CI-sized.
+    let shape = if quick {
+        Shape { label: "quick", d_model: 32, d_ff: 88, blocks: 2, chunks: 8, a: 64 }
+    } else {
+        Shape { label: "tinyllama-r16", d_model: 128, d_ff: 352, blocks: 6, chunks: 24, a: 256 }
+    };
+    let chunk_bytes = (shape.a * shape.d_model * 4) as u64;
+    // four chunks of headroom: capacity 2 queued + 1 in hand + 1 consumed
+    let budget = 4 * chunk_bytes;
+
+    let mode = env_str("THANOS_STREAM_BENCH_MODE", "both");
+    let mut out = BenchJson::open_named(
+        "BENCH_prune_stream.json",
+        "thanos-prune-stream-bench/v1",
+        "THANOS_STREAM_BENCH_OUT",
+    );
+
+    let mut crcs = Vec::new();
+    if mode == "streamed" || mode == "both" {
+        crcs.push(run_mode(&shape, Some(budget), &mut out));
+    }
+    if mode == "inram" || mode == "both" {
+        crcs.push(run_mode(&shape, None, &mut out));
+    }
+    if crcs.len() == 2 {
+        assert_eq!(
+            crcs[0], crcs[1],
+            "streamed and in-RAM pruning diverged — streaming changed the math"
+        );
+        println!("streamed == in-RAM (crc {:016x})", crcs[0]);
+    }
+
+    out.save();
+    match thanos::trace::export() {
+        Ok(Some(p)) => println!("trace written to {}", p.display()),
+        Ok(None) => {}
+        Err(e) => panic!("trace export failed: {e:#}"),
+    }
+}

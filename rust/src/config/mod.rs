@@ -148,6 +148,10 @@ pub struct RunConfig {
     /// Deterministic fault-injection schedule (`--faults=site:n=action;…`);
     /// `None` falls back to the `THANOS_FAULTS` environment variable.
     pub faults: Option<String>,
+    /// Byte budget for in-flight calibration activations during pruning
+    /// (`--mem_budget=256M`; accepts bare bytes or a K/M/G suffix).
+    /// `None` keeps the all-in-RAM behavior (DESIGN.md §Streaming).
+    pub mem_budget: Option<u64>,
     // serving (DESIGN.md §Serving)
     /// `thanos serve` listen address (`--serve_addr=host:port`; port 0
     /// binds an ephemeral port).
@@ -188,6 +192,7 @@ impl Default for RunConfig {
             journal: None,
             resume: false,
             faults: None,
+            mem_budget: None,
             serve_addr: "127.0.0.1:7077".into(),
             serve_queue: 256,
             serve_batch: 16,
@@ -197,6 +202,25 @@ impl Default for RunConfig {
             serve_poll_ms: 100,
         }
     }
+}
+
+/// Parse a byte count with an optional K/M/G (binary, case-insensitive)
+/// suffix: `"1536"`, `"64K"`, `"256M"`, `"2G"`.
+pub fn parse_bytes(s: &str) -> Result<u64> {
+    let t = s.trim();
+    let (digits, shift) = match t.as_bytes().last() {
+        Some(b'k' | b'K') => (&t[..t.len() - 1], 10),
+        Some(b'm' | b'M') => (&t[..t.len() - 1], 20),
+        Some(b'g' | b'G') => (&t[..t.len() - 1], 30),
+        _ => (t, 0),
+    };
+    let n: u64 = digits
+        .trim()
+        .parse()
+        .with_context(|| format!("byte count '{s}' (expected e.g. 1536, 64K, 256M, 2G)"))?;
+    n.checked_shl(shift)
+        .filter(|v| v >> shift == n)
+        .with_context(|| format!("byte count '{s}' overflows u64"))
 }
 
 impl RunConfig {
@@ -229,6 +253,7 @@ impl RunConfig {
                 }
             }
             "faults" => self.faults = Some(value.into()),
+            "mem_budget" => self.mem_budget = Some(parse_bytes(value).context("mem_budget")?),
             "serve_addr" => self.serve_addr = value.into(),
             "serve_queue" => self.serve_queue = value.parse().context("serve_queue")?,
             "serve_batch" => self.serve_batch = value.parse().context("serve_batch")?,
@@ -314,6 +339,7 @@ mod tests {
                     "--resume=1",
                     "--journal=j.jnl",
                     "--faults=atomic.sync:1=err",
+                    "--mem_budget=256M",
                     "--serve_addr=127.0.0.1:0",
                     "--serve_queue=8",
                     "--serve_batch=4",
@@ -335,6 +361,7 @@ mod tests {
         assert!(rc.resume);
         assert_eq!(rc.journal.as_deref(), Some("j.jnl"));
         assert_eq!(rc.faults.as_deref(), Some("atomic.sync:1=err"));
+        assert_eq!(rc.mem_budget, Some(256 << 20));
         assert_eq!(rc.serve_addr, "127.0.0.1:0");
         assert_eq!(rc.serve_queue, 8);
         assert_eq!(rc.serve_batch, 4);
@@ -345,9 +372,26 @@ mod tests {
         assert!(rc.parse_args(["--backend=cuda".to_string()].into_iter()).is_err());
         assert!(rc.parse_args(["--serve_queue=lots".to_string()].into_iter()).is_err());
         assert!(rc.parse_args(["--resume=maybe".to_string()].into_iter()).is_err());
+        assert!(rc.parse_args(["--mem_budget=big".to_string()].into_iter()).is_err());
         assert!(rc
             .parse_args(["--bogus=1".to_string()].into_iter())
             .is_err());
+    }
+
+    #[test]
+    fn byte_suffixes_parse() {
+        assert_eq!(parse_bytes("1536").unwrap(), 1536);
+        assert_eq!(parse_bytes("64K").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("64k").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("256M").unwrap(), 256 << 20);
+        assert_eq!(parse_bytes("2G").unwrap(), 2 << 30);
+        assert_eq!(parse_bytes(" 8 M ").unwrap(), 8 << 20);
+        assert!(parse_bytes("").is_err());
+        assert!(parse_bytes("G").is_err());
+        assert!(parse_bytes("-1").is_err());
+        assert!(parse_bytes("99999999999999999999G").is_err());
+        // bits shifted off the top are an error, not a silent wrap
+        assert!(parse_bytes(&format!("{}G", u64::MAX >> 10)).is_err());
     }
 
     #[test]

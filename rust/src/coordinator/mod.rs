@@ -25,11 +25,12 @@
 //! identical** to an uninterrupted run (DESIGN.md §Robustness).
 
 use crate::data::Sequences;
+use crate::engine::pipeline::{run_pipeline, PipelineOpts};
 use crate::jsonutil::{obj, Json};
 use crate::linalg::Mat;
 use crate::model::ModelState;
 use crate::pruning::{self, CalibStats, Method, Pattern, PruneOpts, Pruned};
-use crate::robust::{crc64, crc64_f32s, Journal};
+use crate::robust::{crc64, crc64_f32s, ChunkReader, ChunkWriter, Journal, MemoryGovernor};
 use crate::runtime::{
     lit_f32, lit_i32, lit_scalar_f32, lit_scalar_i32, mat_lit, to_mat, to_vec_f32, Runtime,
 };
@@ -184,14 +185,7 @@ impl Accum {
     /// sites can accumulate concurrently on the engine pool.
     fn add_chunk_rust(&mut self, xt: &[f32], a: usize) -> Result<()> {
         match self {
-            Accum::Rust(stats) => {
-                let b = stats.b();
-                ensure!(xt.len() == a * b);
-                // CalibStats expects X as [b, a] (features × tokens)
-                let xmat = Mat::from_vec(a, b, xt.to_vec()).transpose();
-                stats.accumulate(&xmat);
-                Ok(())
-            }
+            Accum::Rust(stats) => stats.accumulate_chunk_xt(xt, a),
             Accum::Aot { .. } => unreachable!("add_chunk_rust on an AOT accumulator"),
         }
     }
@@ -262,6 +256,11 @@ pub struct RobustOpts {
     pub journal: Option<PathBuf>,
     /// Replay the journal, skip completed blocks, continue from there.
     pub resume: bool,
+    /// Byte budget for in-flight calibration activations
+    /// (`--mem-budget`). `None` keeps the all-in-RAM behavior; `Some`
+    /// routes the Rust backend through the bounded-memory
+    /// [`StreamingPipeline`] (bitwise-identical output by construction).
+    pub mem_budget: Option<u64>,
 }
 
 /// The progress checkpoint that rides beside a journal file.
@@ -680,19 +679,13 @@ impl BlockPipeline for RuntimePipeline<'_> {
                     .collect();
                 crate::engine::global().for_each_band(&mut slots, 1, |site, slot| {
                     let (stats, err) = &mut slot[0];
-                    let b = stats.b();
                     for xt in &site_chunks[site] {
-                        if xt.len() != a * b {
-                            *err = Some(anyhow::anyhow!(
-                                "capture chunk for site {site}: {} values, expected {}",
-                                xt.len(),
-                                a * b
-                            ));
+                        // accumulate_chunk_xt transposes the captured
+                        // [a, b] layout to the [b, a] CalibStats expects
+                        if let Err(e) = stats.accumulate_chunk_xt(xt, a) {
+                            *err = Some(e);
                             break;
                         }
-                        // CalibStats expects X as [b, a] (features × tokens)
-                        let xmat = Mat::from_vec(a, b, xt.to_vec()).transpose();
-                        stats.accumulate(&xmat);
                     }
                 });
                 let mut out = Vec::with_capacity(4);
@@ -735,6 +728,393 @@ impl BlockPipeline for RuntimePipeline<'_> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Streaming pipeline — the bounded-memory Alg. 3 walk (DESIGN.md
+// §Streaming)
+// ---------------------------------------------------------------------------
+
+/// One calibration chunk forwarded through one block: the block output
+/// (the next block's input, flat `[a × d_model]`) plus the four
+/// capture-site activations, each row-major `[a, b_site]` (site order:
+/// attn-in, wo-in, w1-in, w2-in).
+pub struct ChunkForward {
+    pub y: Vec<f32>,
+    pub sites: [Vec<f32>; 4],
+}
+
+/// The per-chunk compute the streaming pipeline drives: embedding one
+/// calibration chunk and forwarding one chunk through one block's
+/// current weights. [`RuntimeChunkOps`] wraps the AOT executables;
+/// tests and the `prune_stream` bench drive synthetic implementations
+/// so the streaming machinery (spill, governor, pipeline, faults) is
+/// exercised without a compiled HLO.
+pub trait ChunkOps {
+    fn n_blocks(&self) -> usize;
+    fn n_chunks(&self) -> usize;
+    /// Token rows per chunk (`a` — the row count of every activation).
+    fn tokens_per_chunk(&self) -> usize;
+    /// Feature dims of the 4 capture sites (attn-in, wo-in, w1-in, w2-in).
+    fn site_dims(&self) -> [usize; 4];
+    /// Embed calibration chunk `ch` → x₀, flat `[a × d_model]` f32.
+    fn embed(&mut self, state: &ModelState, ch: usize) -> Result<Vec<f32>>;
+    /// Forward one chunk through block `l`'s current weights.
+    fn forward(&mut self, state: &ModelState, l: usize, x: &[f32]) -> Result<ChunkForward>;
+}
+
+/// Options for [`StreamingPipeline`].
+#[derive(Clone, Debug)]
+pub struct StreamOpts {
+    /// Byte budget for in-flight activation chunks (`--mem-budget`).
+    /// `None` = every chunk stays resident (the bitwise reference mode).
+    pub mem_budget: Option<u64>,
+    /// Spill-container path (`.thsc`) used when a budget is set.
+    pub spill: PathBuf,
+    /// Two-stage pipeline tuning (queue watchdog, heartbeat pacing).
+    pub pipeline: PipelineOpts,
+}
+
+impl StreamOpts {
+    pub fn new(mem_budget: Option<u64>, spill: PathBuf) -> StreamOpts {
+        StreamOpts {
+            mem_budget,
+            spill,
+            pipeline: PipelineOpts {
+                prefetch_stage: "stream.prefetch",
+                compute_stage: "pipeline.stage",
+                ..PipelineOpts::default()
+            },
+        }
+    }
+}
+
+/// Where the streamed pipeline spills activation chunks: beside the
+/// journal when one is set (so an interrupted run and its resume use
+/// the same container path), else a per-process temp file.
+pub fn spill_path(robust: &RobustOpts) -> PathBuf {
+    match robust.journal.as_deref() {
+        Some(j) => PathBuf::from(format!("{}.spill.thsc", j.display())),
+        None => {
+            std::env::temp_dir().join(format!("thanos-spill-{}.thsc", std::process::id()))
+        }
+    }
+}
+
+/// [`BlockPipeline`] with bounded activation memory.
+///
+/// Two modes, selected by `StreamOpts::mem_budget`:
+///
+/// * **in-RAM** (`None`) — chunks stay resident in `xs`, the walk is a
+///   plain serial loop: the bitwise reference behavior.
+/// * **streamed** (`Some(budget)`) — `begin` spills the embedded chunks
+///   into a CRC-framed container ([`ChunkWriter`]); `capture` and
+///   `reforward` stream them back through the two-stage
+///   [`run_pipeline`]: a prefetch stage (verified chunk reads, gated by
+///   the [`MemoryGovernor`] byte budget via the queue capacity) feeding
+///   the compute stage (block forward + Hessian accumulation).
+///   `reforward` rewrites the spill atomically while reading the old
+///   generation through a held descriptor — a kill mid-swap leaves the
+///   old container intact for `--resume`.
+///
+/// Both modes accumulate the four sites strictly chunk-ascending
+/// through [`CalibStats::accumulate_chunk_xt`], and the pipeline's
+/// consumer applies items strictly in index order, so in-RAM, streamed,
+/// serial and overlapped runs all produce bit-identical f64 sums — and
+/// therefore bit-identical pruned weights.
+pub struct StreamingPipeline<O: ChunkOps> {
+    ops: O,
+    opts: StreamOpts,
+    governor: MemoryGovernor,
+    /// resident chunks (in-RAM mode only)
+    xs: Vec<Vec<f32>>,
+    /// true once a spill container has been committed (streamed mode)
+    spilled: bool,
+    capture_secs: f64,
+    hessian_secs: f64,
+    reforward_secs: f64,
+}
+
+impl<O: ChunkOps> StreamingPipeline<O> {
+    pub fn new(ops: O, opts: StreamOpts) -> StreamingPipeline<O> {
+        let governor = MemoryGovernor::new(opts.mem_budget);
+        StreamingPipeline {
+            ops,
+            opts,
+            governor,
+            xs: Vec::new(),
+            spilled: false,
+            capture_secs: 0.0,
+            hessian_secs: 0.0,
+            reforward_secs: 0.0,
+        }
+    }
+
+    /// The governor (budget accounting: peak bytes, admissions).
+    pub fn governor(&self) -> &MemoryGovernor {
+        &self.governor
+    }
+
+    fn streamed(&self) -> bool {
+        self.opts.mem_budget.is_some()
+    }
+
+    /// Bytes of one activation chunk at the block boundary (`[a, d_model]`
+    /// f32) — the unit the governor budgets in.
+    fn chunk_bytes(&self) -> u64 {
+        (self.ops.tokens_per_chunk() as u64) * (self.ops.site_dims()[0] as u64) * 4
+    }
+
+    fn pipe_opts(&self) -> PipelineOpts {
+        PipelineOpts {
+            capacity: self.governor.capacity(self.chunk_bytes()),
+            ..self.opts.pipeline
+        }
+    }
+}
+
+/// Fold one forwarded chunk into the four per-site accumulators —
+/// strictly chunk-ascending at every call site, which is what makes
+/// serial, overlapped, in-RAM and streamed runs bit-identical.
+fn accumulate_sites(
+    stats: &mut [CalibStats],
+    fwd: &ChunkForward,
+    a: usize,
+    hessian_secs: &mut f64,
+) -> Result<()> {
+    let t = clock::now_nanos();
+    let _span = trace::span("hessian.accum");
+    for (site, xt) in fwd.sites.iter().enumerate() {
+        stats[site]
+            .accumulate_chunk_xt(xt, a)
+            .with_context(|| format!("accumulating calibration statistics for site {site}"))?;
+    }
+    *hessian_secs += clock::secs_since(t);
+    Ok(())
+}
+
+/// Probe a pipeline fault site, absorbing transient (`err`) actions
+/// through the shared retry ladder.
+fn probe(site: &'static str) -> std::io::Result<()> {
+    crate::robust::faults::with_retry(&crate::robust::RetryPolicy::default(), || {
+        crate::robust::faults::point(site)
+    })
+}
+
+impl<O: ChunkOps> BlockPipeline for StreamingPipeline<O> {
+    fn n_blocks(&self) -> usize {
+        self.ops.n_blocks()
+    }
+
+    fn begin(&mut self, state: &ModelState) -> Result<()> {
+        let (res, secs) = trace::timed("coordinator.capture", || -> Result<()> {
+            let n = self.ops.n_chunks();
+            if !self.streamed() {
+                self.xs.clear();
+                for ch in 0..n {
+                    let x = self.ops.embed(state, ch)?;
+                    self.xs.push(x);
+                }
+                return Ok(());
+            }
+            // Streamed: one embedded chunk resident at a time, spilled
+            // straight into the (atomically committed) container.
+            let mut w = ChunkWriter::create(&self.opts.spill)?;
+            for ch in 0..n {
+                let x = self.ops.embed(state, ch)?;
+                w.write_chunk_f32s(&x)?;
+            }
+            w.finish()?;
+            self.spilled = true;
+            Ok(())
+        });
+        self.capture_secs += secs;
+        res
+    }
+
+    fn capture(&mut self, state: &ModelState, l: usize) -> Result<Vec<CalibStats>> {
+        let t0 = clock::now_nanos();
+        let n = self.ops.n_chunks();
+        let a = self.ops.tokens_per_chunk();
+        let mut stats: Vec<CalibStats> =
+            self.ops.site_dims().iter().map(|&b| CalibStats::new(b)).collect();
+        let mut hes = 0.0f64;
+        if !self.streamed() {
+            for ch in 0..n {
+                let fwd = self.ops.forward(state, l, &self.xs[ch])?;
+                accumulate_sites(&mut stats, &fwd, a, &mut hes)?;
+            }
+        } else {
+            let popts = self.pipe_opts();
+            let per_chunk = self.chunk_bytes();
+            let mut reader = ChunkReader::open(&self.opts.spill)?;
+            let ops = &mut self.ops;
+            let governor = &self.governor;
+            run_pipeline(
+                n,
+                &popts,
+                |ch| {
+                    probe("stream.prefetch")?;
+                    let x = reader.read_chunk_f32s(ch)?;
+                    governor.admit(per_chunk)?;
+                    Ok(x)
+                },
+                |_, x| {
+                    probe("pipeline.stage")?;
+                    let fwd = ops.forward(state, l, &x)?;
+                    drop(x);
+                    governor.release(per_chunk);
+                    accumulate_sites(&mut stats, &fwd, a, &mut hes)
+                },
+            )?;
+        }
+        self.hessian_secs += hes;
+        self.capture_secs += clock::secs_since(t0) - hes;
+        Ok(stats)
+    }
+
+    fn reforward(&mut self, state: &ModelState, l: usize) -> Result<()> {
+        let (res, secs) = trace::timed("coordinator.reforward", || -> Result<()> {
+            let n = self.ops.n_chunks();
+            if !self.streamed() {
+                for ch in 0..n {
+                    let fwd = self.ops.forward(state, l, &self.xs[ch])?;
+                    self.xs[ch] = fwd.y;
+                }
+                return Ok(());
+            }
+            // Read the old generation through a held descriptor while
+            // the new generation streams into an atomic rewrite of the
+            // same path: a kill anywhere here leaves the old spill (and
+            // its journaled block state) intact for --resume.
+            let popts = self.pipe_opts();
+            let per_chunk = self.chunk_bytes();
+            let mut reader = ChunkReader::open(&self.opts.spill)?;
+            let mut writer = ChunkWriter::create(&self.opts.spill)?;
+            let ops = &mut self.ops;
+            let governor = &self.governor;
+            run_pipeline(
+                n,
+                &popts,
+                |ch| {
+                    probe("stream.prefetch")?;
+                    let x = reader.read_chunk_f32s(ch)?;
+                    governor.admit(per_chunk)?;
+                    Ok(x)
+                },
+                |_, x| {
+                    probe("pipeline.stage")?;
+                    let fwd = ops.forward(state, l, &x)?;
+                    drop(x);
+                    governor.release(per_chunk);
+                    writer.write_chunk_f32s(&fwd.y)
+                },
+            )?;
+            writer.finish()
+        });
+        self.reforward_secs += secs;
+        res
+    }
+
+    fn take_stage_secs(&mut self) -> (f64, f64, f64) {
+        let out = (self.capture_secs, self.hessian_secs, self.reforward_secs);
+        self.capture_secs = 0.0;
+        self.hessian_secs = 0.0;
+        self.reforward_secs = 0.0;
+        out
+    }
+}
+
+impl<O: ChunkOps> Drop for StreamingPipeline<O> {
+    fn drop(&mut self) {
+        if self.spilled {
+            // Best-effort cleanup of the committed spill; a resumed run
+            // re-creates it in `begin`, so losing it costs nothing.
+            let _ = std::fs::remove_file(&self.opts.spill);
+        }
+    }
+}
+
+/// [`ChunkOps`] over the AOT runtime executables — the same embed /
+/// block-capture passes as [`RuntimePipeline`], decoded to plain `f32`
+/// buffers so chunks can spill through the [`ChunkWriter`] instead of
+/// staying resident as literals.
+pub struct RuntimeChunkOps<'a> {
+    rt: &'a Runtime,
+    cfg: crate::config::ModelConfig,
+    nbc: usize,
+    tok_chunks: Vec<Vec<i32>>,
+}
+
+impl<'a> RuntimeChunkOps<'a> {
+    pub fn new(rt: &'a Runtime, state: &ModelState, calib: &Sequences) -> Result<Self> {
+        let cfg = state.config.clone();
+        let nbc = rt.manifest.nb_calib;
+        let seq = cfg.seq_len;
+        ensure!(calib.seq_len == seq, "calibration seq_len mismatch");
+        ensure!(calib.n_seqs() >= nbc, "need at least {nbc} calibration sequences");
+        let n_chunks = (calib.n_seqs() / nbc).max(1);
+        let a = nbc * seq;
+        let mut tok_chunks = Vec::with_capacity(n_chunks);
+        for ch in 0..n_chunks {
+            let mut toks: Vec<i32> = Vec::with_capacity(a);
+            for s in 0..nbc {
+                toks.extend(calib.seq(ch * nbc + s).iter().map(|&t| t as i32));
+            }
+            tok_chunks.push(toks);
+        }
+        Ok(Self { rt, cfg, nbc, tok_chunks })
+    }
+}
+
+impl ChunkOps for RuntimeChunkOps<'_> {
+    fn n_blocks(&self) -> usize {
+        self.cfg.n_layers
+    }
+
+    fn n_chunks(&self) -> usize {
+        self.tok_chunks.len()
+    }
+
+    fn tokens_per_chunk(&self) -> usize {
+        self.nbc * self.cfg.seq_len
+    }
+
+    fn site_dims(&self) -> [usize; 4] {
+        let d = self.cfg.d_model;
+        [d, d, d, self.cfg.d_ff]
+    }
+
+    fn embed(&mut self, state: &ModelState, ch: usize) -> Result<Vec<f32>> {
+        let flat_lit = lit_f32(&state.flat, &[state.flat.len()])?;
+        let out = self.rt.exec(
+            &format!("embed_{}", self.cfg.name),
+            &[flat_lit, lit_i32(&self.tok_chunks[ch], &[self.nbc, self.cfg.seq_len])?],
+        )?;
+        to_vec_f32(&out[0])
+    }
+
+    fn forward(&mut self, state: &ModelState, l: usize, x: &[f32]) -> Result<ChunkForward> {
+        let block_lit = lit_f32(state.block_slice(l)?, &[state.block_flat_size])?;
+        let x_lit = lit_f32(x, &[self.nbc, self.cfg.seq_len, self.cfg.d_model])?;
+        let out = self.rt.exec(
+            &format!("block_capture_{}", self.cfg.name),
+            &[block_lit, x_lit],
+        )?;
+        ensure!(
+            out.len() == 5,
+            "block_capture returned {} outputs (expected y + 4 capture sites)",
+            out.len()
+        );
+        let y = to_vec_f32(&out[0])?;
+        let sites = [
+            to_vec_f32(&out[1])?,
+            to_vec_f32(&out[2])?,
+            to_vec_f32(&out[3])?,
+            to_vec_f32(&out[4])?,
+        ];
+        Ok(ChunkForward { y, sites })
+    }
+}
+
 /// The coordinator itself.
 pub struct Coordinator<'a> {
     pub rt: &'a Runtime,
@@ -756,11 +1136,14 @@ impl<'a> Coordinator<'a> {
         self.prune_model_robust(state, calib, spec, &RobustOpts::default())
     }
 
-    /// [`Self::prune_model`] with journaling/resume. The Rust backend
-    /// routes through [`run_pruning`] over a [`RuntimePipeline`]; the
-    /// AOT backend keeps the legacy sequential loop (device-side layer
-    /// pruning has no per-block progress checkpoint, so journaling
-    /// requires `--backend=rust`).
+    /// [`Self::prune_model`] with journaling/resume and optional
+    /// bounded-memory streaming. The Rust backend routes through
+    /// [`run_pruning`] over a [`RuntimePipeline`] (all-in-RAM), or over
+    /// a [`StreamingPipeline`] when `robust.mem_budget` is set — same
+    /// bits, bounded activation memory. The AOT backend keeps the
+    /// legacy sequential loop (device-side layer pruning has no
+    /// per-block progress checkpoint, so journaling and streaming
+    /// require `--backend=rust`).
     pub fn prune_model_robust(
         &self,
         state: &mut ModelState,
@@ -769,8 +1152,21 @@ impl<'a> Coordinator<'a> {
         robust: &RobustOpts,
     ) -> Result<PruneReport> {
         if spec.backend == Backend::Rust {
-            let mut pipe = RuntimePipeline::new(self.rt, state, calib)?;
-            let report = run_pruning(state, &mut pipe, spec, robust)?;
+            let report = if robust.mem_budget.is_some() {
+                let ops = RuntimeChunkOps::new(self.rt, state, calib)?;
+                let mut pipe = StreamingPipeline::new(
+                    ops,
+                    StreamOpts::new(robust.mem_budget, spill_path(robust)),
+                );
+                let report = run_pruning(state, &mut pipe, spec, robust)?;
+                self.rt
+                    .metrics
+                    .set_gauge("stream.peak_bytes", pipe.governor().peak_bytes() as f64);
+                report
+            } else {
+                let mut pipe = RuntimePipeline::new(self.rt, state, calib)?;
+                run_pruning(state, &mut pipe, spec, robust)?
+            };
             self.rt
                 .metrics
                 .record_engine("engine.prune_model", &report.engine, report.total_secs);
@@ -784,9 +1180,9 @@ impl<'a> Coordinator<'a> {
             return Ok(report);
         }
         ensure!(
-            robust.journal.is_none() && !robust.resume,
-            "journaled pruning requires the Rust backend (--backend=rust): the AOT path \
-             prunes through device executables and keeps no per-block progress checkpoint"
+            robust.journal.is_none() && !robust.resume && robust.mem_budget.is_none(),
+            "journaled/streamed pruning requires the Rust backend (--backend=rust): the AOT \
+             path prunes through device executables and keeps no per-block progress checkpoint"
         );
         self.prune_model_aot(state, calib, spec)
     }
@@ -1147,6 +1543,121 @@ mod tests {
         // no completed block → fresh start
         assert!(parse_resume(&records[..2], &desc).unwrap().is_none());
         assert!(parse_resume(&[], &desc).unwrap().is_none());
+    }
+
+    /// Deterministic synthetic [`ChunkOps`]: embed derives chunks from a
+    /// seeded RNG, forward is a fixed affine map per block — enough
+    /// state-dependence that any ordering or framing bug changes bits.
+    struct SynthOps {
+        blocks: usize,
+        chunks: usize,
+        a: usize,
+        d: usize,
+        d_ff: usize,
+    }
+
+    impl ChunkOps for SynthOps {
+        fn n_blocks(&self) -> usize {
+            self.blocks
+        }
+        fn n_chunks(&self) -> usize {
+            self.chunks
+        }
+        fn tokens_per_chunk(&self) -> usize {
+            self.a
+        }
+        fn site_dims(&self) -> [usize; 4] {
+            [self.d, self.d, self.d, self.d_ff]
+        }
+        fn embed(&mut self, _state: &ModelState, ch: usize) -> Result<Vec<f32>> {
+            let mut rng = crate::rng::Rng::new(0x51EE_D000 + ch as u64);
+            Ok((0..self.a * self.d).map(|_| rng.uniform_f32() - 0.5).collect())
+        }
+        fn forward(&mut self, _state: &ModelState, l: usize, x: &[f32]) -> Result<ChunkForward> {
+            ensure!(x.len() == self.a * self.d, "bad chunk shape");
+            let bump = (l as f32 + 1.0) * 0.25;
+            let y: Vec<f32> = x.iter().map(|v| v * 0.75 + bump).collect();
+            let site = |b: usize, scale: f32| -> Vec<f32> {
+                (0..self.a * b).map(|i| x[i % x.len()] * scale).collect()
+            };
+            Ok(ChunkForward {
+                y,
+                sites: [
+                    site(self.d, 1.0),
+                    site(self.d, 0.5),
+                    site(self.d, -1.25),
+                    site(self.d_ff, 2.0),
+                ],
+            })
+        }
+    }
+
+    fn trivial_state() -> ModelState {
+        let cfg = crate::config::ModelConfig {
+            name: "t".into(),
+            vocab: 4,
+            d_model: 2,
+            n_layers: 0,
+            n_heads: 1,
+            d_ff: 4,
+            seq_len: 2,
+        };
+        ModelState { config: cfg, layout: vec![], block_flat_size: 0, flat: vec![] }
+    }
+
+    /// Drive the full walk and digest every Hessian bit plus the
+    /// post-reforward activations (via the final block's stats).
+    fn walk(budget: Option<u64>, tag: &str) -> (Vec<u64>, u64, u64) {
+        let state = trivial_state();
+        let ops = SynthOps { blocks: 3, chunks: 4, a: 6, d: 3, d_ff: 5 };
+        let blocks = ops.blocks;
+        let spill = std::env::temp_dir()
+            .join(format!("thanos-coord-{tag}-{}.thsc", std::process::id()));
+        let mut pipe = StreamingPipeline::new(ops, StreamOpts::new(budget, spill.clone()));
+        pipe.begin(&state).unwrap();
+        let mut bits = Vec::new();
+        for l in 0..blocks {
+            let stats = pipe.capture(&state, l).unwrap();
+            assert_eq!(stats.len(), 4);
+            for s in &stats {
+                bits.extend(s.h_sum.data.iter().map(|v| v.to_bits()));
+                bits.extend(s.xnorm_sq.iter().map(|v| v.to_bits()));
+            }
+            pipe.reforward(&state, l).unwrap();
+        }
+        let (peak, admitted) = (pipe.governor().peak_bytes(), pipe.governor().admitted());
+        drop(pipe);
+        assert!(!spill.exists(), "spill container must be cleaned up on drop");
+        (bits, peak, admitted)
+    }
+
+    #[test]
+    fn streamed_walk_is_bitwise_identical_to_in_ram() {
+        let (reference, peak0, _) = walk(None, "inram");
+        assert_eq!(peak0, 0, "in-RAM mode never admits into the governor");
+        // chunk_bytes = a·d·4 = 72; budget 216 = 3 chunks → capacity
+        // max(1, 3−2) = 1, so queued + in-hand + in-consumption ≤ budget
+        let (streamed, peak, admitted) = walk(Some(216), "streamed");
+        assert_eq!(streamed, reference);
+        // every capture + reforward admits each chunk once: 3 blocks × 2
+        // passes × 4 chunks
+        assert_eq!(admitted, 24);
+        assert!(peak > 0 && peak <= 216, "peak {peak} exceeds the byte budget");
+        // serial engine mode takes the inline path and still matches
+        let (serial, _, _) = crate::engine::with_serial(|| walk(Some(216), "serial"));
+        assert_eq!(serial, reference);
+    }
+
+    #[test]
+    fn spill_path_follows_the_journal() {
+        let r = RobustOpts {
+            journal: Some(PathBuf::from("/tmp/run.journal")),
+            resume: false,
+            mem_budget: Some(1),
+        };
+        assert_eq!(spill_path(&r), PathBuf::from("/tmp/run.journal.spill.thsc"));
+        let tmp = spill_path(&RobustOpts::default());
+        assert!(tmp.to_string_lossy().ends_with(".thsc"));
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //!   the `fig9_pruning_time` bench.
 
 pub mod model;
+pub mod pipeline;
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};

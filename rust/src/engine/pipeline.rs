@@ -1,0 +1,530 @@
+//! Two-stage bounded pipeline: a prefetch stage feeding a compute stage
+//! through a capacity-limited queue (DESIGN.md §Streaming).
+//!
+//! [`run_pipeline`] runs `producer(i)` for `i in 0..n` on one helper
+//! thread and `consumer(i, item)` on the calling thread, overlapped.
+//! The determinism argument is structural, not a tuning property:
+//!
+//! * items are produced index-ascending by a single producer,
+//! * the queue is FIFO, and
+//! * the consumer applies items **strictly in index order** on one
+//!   thread,
+//!
+//! so overlap changes *when* work happens but never *what order* state
+//! is mutated in — the pipelined run is bitwise identical to the inline
+//! serial loop (`for i { consumer(i, producer(i)?)? }`), which is
+//! exactly what executes under `THANOS_THREADS=1` /
+//! [`super::with_serial`].
+//!
+//! **Backpressure**: at most `capacity` items sit produced-but-unconsumed;
+//! the producer blocks (applying backpressure to prefetch IO) rather
+//! than buffering unboundedly. The coordinator derives `capacity` from
+//! the [`crate::robust::stream::MemoryGovernor`] byte budget.
+//!
+//! **Watchdog**: each stage watches the *other* stage's progress
+//! counter while blocked on the queue. The blocked side wakes on a
+//! heartbeat (`Condvar::wait_timeout` — the one sanctioned way to pace
+//! wakeups without reading a clock; no wall-clock value ever enters the
+//! decision) and counts consecutive heartbeats in which the peer's
+//! counter did not move. After `watchdog_beats` such beats the run
+//! fails, naming the stuck stage, instead of hanging a multi-hour prune.
+//! The decision is purely counter-based (D6-clean): beats elapsed ×
+//! counter unchanged, never a timestamp comparison.
+//!
+//! A producer error or panic is forwarded through the queue in index
+//! position and re-raised on the calling thread at the point the
+//! consumer reaches that index — again identical to where the inline
+//! loop would have failed.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::trace;
+
+/// Tuning for [`run_pipeline`]. `capacity` bounds the queue (≥ 1);
+/// `watchdog_beats == 0` disables stall detection; `beat_millis` paces
+/// the heartbeat wakeups of a blocked stage. The stage names appear in
+/// stall errors ("naming the stuck stage") and nowhere else.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineOpts {
+    pub capacity: usize,
+    pub watchdog_beats: u64,
+    pub beat_millis: u64,
+    pub prefetch_stage: &'static str,
+    pub compute_stage: &'static str,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        // ~2 minutes of silence before a stage is declared stuck.
+        PipelineOpts {
+            capacity: 2,
+            watchdog_beats: 2400,
+            beat_millis: 50,
+            prefetch_stage: "prefetch",
+            compute_stage: "compute",
+        }
+    }
+}
+
+/// Counters observed by one [`run_pipeline`] call.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PipelineStats {
+    pub produced: u64,
+    pub consumed: u64,
+    /// High-water mark of produced-but-unconsumed items (≤ capacity).
+    pub max_queued: usize,
+    /// False when the run executed inline (serial engine mode).
+    pub overlapped: bool,
+}
+
+enum Item<T> {
+    Val(T),
+    Err(anyhow::Error),
+    Panic(Box<dyn std::any::Any + Send>),
+}
+
+struct Queue<T> {
+    items: VecDeque<(usize, Item<T>)>,
+    produced: u64,
+    consumed: u64,
+    max_queued: usize,
+    done_producing: bool,
+    closed: bool,
+    /// Stall verdict from the producer-side watchdog (the consumer
+    /// reports its own verdict directly from its pop loop).
+    stall: Option<String>,
+}
+
+struct Shared<T> {
+    q: Mutex<Queue<T>>,
+    /// Signaled when queue space appears (or the pipeline closes).
+    cv_push: Condvar,
+    /// Signaled when an item appears (or the pipeline closes).
+    cv_pop: Condvar,
+}
+
+fn stall_error(stage: &str, beats: u64) -> String {
+    format!("pipeline stalled: stage `{stage}` made no progress across {beats} heartbeats")
+}
+
+/// Run the two-stage pipeline. See the module docs for the determinism
+/// and watchdog contracts. Falls back to the inline serial loop when the
+/// engine is in serial mode ([`super::with_serial`] / one thread).
+pub fn run_pipeline<T, P, C>(
+    n: usize,
+    opts: &PipelineOpts,
+    mut producer: P,
+    mut consumer: C,
+) -> Result<PipelineStats>
+where
+    T: Send,
+    P: FnMut(usize) -> Result<T> + Send,
+    C: FnMut(usize, T) -> Result<()>,
+{
+    let serial = super::SERIAL.with(|s| s.get()) || super::global().threads() == 1;
+    if serial || n == 0 {
+        for i in 0..n {
+            let item = producer(i)?;
+            consumer(i, item)?;
+        }
+        return Ok(PipelineStats {
+            produced: n as u64,
+            consumed: n as u64,
+            max_queued: 0,
+            overlapped: false,
+        });
+    }
+
+    let capacity = opts.capacity.max(1);
+    let sh = Shared {
+        q: Mutex::new(Queue {
+            items: VecDeque::with_capacity(capacity.min(n)),
+            produced: 0,
+            consumed: 0,
+            max_queued: 0,
+            done_producing: false,
+            closed: false,
+            stall: None,
+        }),
+        cv_push: Condvar::new(),
+        cv_pop: Condvar::new(),
+    };
+    let beat = Duration::from_millis(opts.beat_millis.max(1));
+
+    let mut panic_payload: Option<Box<dyn std::any::Any + Send>> = None;
+    let result = std::thread::scope(|s| -> Result<PipelineStats> {
+        let shr = &sh;
+        s.spawn(move || {
+            for i in 0..n {
+                let item = match catch_unwind(AssertUnwindSafe(|| producer(i))) {
+                    Ok(Ok(v)) => Item::Val(v),
+                    Ok(Err(e)) => Item::Err(e),
+                    Err(p) => Item::Panic(p),
+                };
+                let terminal = !matches!(item, Item::Val(_));
+                let mut q = shr.q.lock().expect("pipeline queue poisoned");
+                let mut last_consumed = q.consumed;
+                let mut beats = 0u64;
+                loop {
+                    if q.closed {
+                        return;
+                    }
+                    if q.items.len() < capacity {
+                        q.items.push_back((i, item));
+                        q.produced += 1;
+                        q.max_queued = q.max_queued.max(q.items.len());
+                        if terminal {
+                            q.done_producing = true;
+                        }
+                        shr.cv_pop.notify_one();
+                        break;
+                    }
+                    // Queue full: the compute stage owns every queued item,
+                    // so no movement in `consumed` means it is stuck.
+                    let (guard, timeout) = shr
+                        .cv_push
+                        .wait_timeout(q, beat)
+                        .expect("pipeline queue poisoned");
+                    q = guard;
+                    if !timeout.timed_out() || q.consumed != last_consumed {
+                        last_consumed = q.consumed;
+                        beats = 0;
+                        continue;
+                    }
+                    beats += 1;
+                    if opts.watchdog_beats > 0 && beats >= opts.watchdog_beats {
+                        q.stall = Some(stall_error(opts.compute_stage, beats));
+                        q.closed = true;
+                        shr.cv_pop.notify_all();
+                        return;
+                    }
+                }
+                if terminal {
+                    return;
+                }
+            }
+            let mut q = shr.q.lock().expect("pipeline queue poisoned");
+            q.done_producing = true;
+            shr.cv_pop.notify_all();
+        });
+
+        for i in 0..n {
+            let (idx, item) = {
+                let mut q = sh.q.lock().expect("pipeline queue poisoned");
+                let mut last_produced = q.produced;
+                let mut beats = 0u64;
+                loop {
+                    if let Some(msg) = q.stall.take() {
+                        q.closed = true;
+                        sh.cv_push.notify_all();
+                        bail!("{msg}");
+                    }
+                    if let Some(front) = q.items.pop_front() {
+                        q.consumed += 1;
+                        sh.cv_push.notify_one();
+                        break front;
+                    }
+                    if q.done_producing {
+                        // Terminal error items are delivered in index
+                        // position, so an exhausted producer with an empty
+                        // queue before index n-1 cannot happen; fail loudly
+                        // rather than wait forever if it ever does.
+                        q.closed = true;
+                        sh.cv_push.notify_all();
+                        bail!("pipeline produced {} of {n} items", q.produced);
+                    }
+                    let guard = {
+                        let _wait = trace::span("pipeline.wait");
+                        let (guard, timeout) = sh
+                            .cv_pop
+                            .wait_timeout(q, beat)
+                            .expect("pipeline queue poisoned");
+                        if !timeout.timed_out() || guard.produced != last_produced {
+                            last_produced = guard.produced;
+                            beats = 0;
+                        } else if !guard.done_producing {
+                            beats += 1;
+                        }
+                        guard
+                    };
+                    q = guard;
+                    if opts.watchdog_beats > 0 && beats >= opts.watchdog_beats {
+                        q.closed = true;
+                        sh.cv_push.notify_all();
+                        bail!("{}", stall_error(opts.prefetch_stage, beats));
+                    }
+                }
+            };
+            debug_assert_eq!(idx, i, "pipeline items must arrive index-ascending");
+            let close = |err: Option<anyhow::Error>| -> Result<()> {
+                let mut q = sh.q.lock().expect("pipeline queue poisoned");
+                q.closed = true;
+                sh.cv_push.notify_all();
+                match err {
+                    Some(e) => Err(e),
+                    None => Ok(()),
+                }
+            };
+            match item {
+                Item::Val(v) => {
+                    if let Err(e) = consumer(i, v) {
+                        close(Some(e))?;
+                    }
+                }
+                Item::Err(e) => close(Some(e))?,
+                Item::Panic(p) => {
+                    panic_payload = Some(p);
+                    close(None)?;
+                    break;
+                }
+            }
+        }
+        let q = sh.q.lock().expect("pipeline queue poisoned");
+        Ok(PipelineStats {
+            produced: q.produced,
+            consumed: q.consumed,
+            max_queued: q.max_queued,
+            overlapped: true,
+        })
+    });
+    if let Some(p) = panic_payload {
+        // Re-raise the producer's panic on the calling thread only after
+        // the scope joined cleanly — exactly where the inline loop would
+        // have panicked, with the helper thread already gone.
+        resume_unwind(p);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn opts(capacity: usize, watchdog_beats: u64, beat_millis: u64) -> PipelineOpts {
+        PipelineOpts {
+            capacity,
+            watchdog_beats,
+            beat_millis,
+            prefetch_stage: "test.prefetch",
+            compute_stage: "test.compute",
+        }
+    }
+
+    fn collect(n: usize, o: &PipelineOpts) -> (Vec<usize>, PipelineStats) {
+        let mut seen = Vec::new();
+        let stats = run_pipeline(
+            n,
+            o,
+            |i| Ok(i * 3),
+            |i, v| {
+                assert_eq!(v, i * 3);
+                seen.push(v);
+                Ok(())
+            },
+        )
+        .unwrap();
+        (seen, stats)
+    }
+
+    #[test]
+    fn pipelined_matches_serial_in_order() {
+        let o = opts(3, 0, 5);
+        let (par, par_stats) = collect(37, &o);
+        let (ser, ser_stats) = crate::engine::with_serial(|| collect(37, &o));
+        assert_eq!(par, ser);
+        assert_eq!(par, (0..37).map(|i| i * 3).collect::<Vec<_>>());
+        assert!(!ser_stats.overlapped);
+        if crate::engine::global().threads() > 1 {
+            assert!(par_stats.overlapped);
+            assert_eq!(par_stats.produced, 37);
+            assert_eq!(par_stats.consumed, 37);
+        }
+    }
+
+    #[test]
+    fn empty_pipeline_is_fine() {
+        let stats = run_pipeline(0, &opts(2, 0, 5), |_| Ok(()), |_, _| Ok(())).unwrap();
+        assert_eq!(stats.produced, 0);
+    }
+
+    #[test]
+    fn capacity_bounds_queue_depth() {
+        if crate::engine::global().threads() == 1 {
+            return; // inline path has no queue
+        }
+        let o = opts(2, 0, 5);
+        let stats = run_pipeline(
+            64,
+            &o,
+            |i| Ok(vec![i as u8; 16]),
+            |_, _| {
+                std::thread::sleep(Duration::from_micros(200));
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert!(stats.max_queued <= 2, "queue grew past capacity: {}", stats.max_queued);
+        assert_eq!(stats.consumed, 64);
+    }
+
+    #[test]
+    fn producer_error_arrives_in_index_order() {
+        let consumed = AtomicUsize::new(0);
+        let err = run_pipeline(
+            10,
+            &opts(4, 0, 5),
+            |i| {
+                if i == 3 {
+                    anyhow::bail!("prefetch failed at {i}")
+                } else {
+                    Ok(i)
+                }
+            },
+            |_, _| {
+                consumed.fetch_add(1, Ordering::SeqCst);
+                Ok(())
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("prefetch failed at 3"), "got: {err:#}");
+        assert_eq!(consumed.load(Ordering::SeqCst), 3, "items before the error must land");
+    }
+
+    #[test]
+    fn consumer_error_stops_the_producer() {
+        let produced_past = AtomicUsize::new(0);
+        let err = run_pipeline(
+            1000,
+            &opts(2, 0, 5),
+            |i| {
+                if i > 10 {
+                    produced_past.fetch_add(1, Ordering::SeqCst);
+                }
+                Ok(i)
+            },
+            |i, _| {
+                if i == 2 {
+                    anyhow::bail!("compute rejected item {i}")
+                } else {
+                    Ok(())
+                }
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("compute rejected item 2"), "got: {err:#}");
+        // backpressure + close: the producer cannot have run far ahead
+        assert!(
+            produced_past.load(Ordering::SeqCst) < 16,
+            "producer kept running after the consumer failed"
+        );
+    }
+
+    #[test]
+    fn producer_panic_reraises_on_caller_thread() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let _ = run_pipeline(
+                8,
+                &opts(2, 0, 5),
+                |i| {
+                    if i == 1 {
+                        panic!("injected fault: panic at `stream.prefetch`");
+                    }
+                    Ok(i)
+                },
+                |_, _: usize| Ok(()),
+            );
+        }));
+        let p = caught.expect_err("panic must propagate");
+        let msg = p
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| p.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("stream.prefetch"), "got: {msg}");
+    }
+
+    #[test]
+    fn watchdog_names_a_stuck_prefetch_stage() {
+        if crate::engine::global().threads() == 1 {
+            return; // watchdog only exists on the overlapped path
+        }
+        // Cooperative stall: the producer blocks on a gate a rescuer
+        // thread opens only well after the watchdog window has elapsed
+        // (the scope still joins the producer before run_pipeline returns).
+        let gate = std::sync::Arc::new((Mutex::new(false), Condvar::new()));
+        let rescuer = {
+            let gate = std::sync::Arc::clone(&gate);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(400));
+                let (m, cv) = &*gate;
+                *m.lock().unwrap() = true;
+                cv.notify_all();
+            })
+        };
+        let err = run_pipeline(
+            4,
+            &opts(2, 3, 10),
+            |i| {
+                if i == 1 {
+                    let (m, cv) = &*gate;
+                    let mut open = m.lock().unwrap();
+                    while !*open {
+                        open = cv.wait(open).unwrap();
+                    }
+                }
+                Ok(i)
+            },
+            |_, _| Ok(()),
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("stalled") && err.to_string().contains("test.prefetch"),
+            "got: {err:#}"
+        );
+        rescuer.join().unwrap();
+    }
+
+    #[test]
+    fn watchdog_names_a_stuck_compute_stage() {
+        if crate::engine::global().threads() == 1 {
+            return;
+        }
+        let gate = std::sync::Arc::new((Mutex::new(false), Condvar::new()));
+        let rescuer = {
+            let gate = std::sync::Arc::clone(&gate);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(400));
+                let (m, cv) = &*gate;
+                *m.lock().unwrap() = true;
+                cv.notify_all();
+            })
+        };
+        let err = run_pipeline(
+            8,
+            &opts(1, 3, 10),
+            |i| Ok(i),
+            |i, _| {
+                if i == 0 {
+                    let (m, cv) = &*gate;
+                    let mut open = m.lock().unwrap();
+                    while !*open {
+                        open = cv.wait(open).unwrap();
+                    }
+                }
+                Ok(())
+            },
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("stalled") && err.to_string().contains("test.compute"),
+            "got: {err:#}"
+        );
+        rescuer.join().unwrap();
+    }
+}

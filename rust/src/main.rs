@@ -7,6 +7,7 @@
 //! thanos train  [--model small --train_steps 400]  # train + save checkpoint
 //! thanos prune  <method> <pattern> [--model ...]   # prune a checkpoint
 //!               [--backend=rust --journal=p --resume=1 --faults=spec]
+//!               [--mem_budget=256M]                # bounded-memory streaming
 //! thanos eval   [--model ...]                      # ppl + zero-shot of a checkpoint
 //! thanos e2e    [--model ...]                      # train → prune-all-methods → eval
 //! thanos compress <pattern> [--model ...]          # pack a pruned checkpoint (v2)
@@ -32,7 +33,9 @@
 //! when `--resume=1` is set) records per-layer progress, and `--resume=1`
 //! replays it after a crash, skipping completed blocks. `--faults=spec`
 //! (or `THANOS_FAULTS`) installs a deterministic fault-injection schedule
-//! — see DESIGN.md §Robustness.
+//! — see DESIGN.md §Robustness. `--mem_budget=256M` bounds calibration-
+//! activation memory by streaming chunks through a CRC-verified spill
+//! container (bitwise-identical output) — see DESIGN.md §Streaming.
 
 use anyhow::{bail, Context, Result};
 use thanos::config::RunConfig;
@@ -161,7 +164,7 @@ fn run() -> Result<()> {
                     ))
                 })
             });
-            let robust = RobustOpts { journal, resume: rc.resume };
+            let robust = RobustOpts { journal, resume: rc.resume, mem_budget: rc.mem_budget };
             let coord = Coordinator::new(&rt);
             let report = coord.prune_model_robust(&mut state, &corpus.calib, &spec, &robust)?;
             println!("{}", report.summary());

@@ -319,6 +319,124 @@ impl ModelState {
             .with_context(|| format!("loading checkpoint {}", path.as_ref().display()))
     }
 
+    /// Load a v3 checkpoint incrementally through
+    /// [`crate::robust::stream::SectionedReader`]: the dense section
+    /// and sparse blobs stream chunk-at-a-time with rolling CRC-64
+    /// verification, so peak memory is the decoded model plus one
+    /// stream chunk instead of model + whole serialized file. The
+    /// result is bitwise-identical to [`Self::load_with_sparse`] on
+    /// every valid v3 file; corrupt input errs before a caller can
+    /// observe a complete-but-wrong model. Legacy v1/v2 files (no
+    /// section CRCs to stream against) are refused — use
+    /// [`Self::load_with_sparse`] for those.
+    pub fn load_streamed(path: impl AsRef<Path>) -> Result<(ModelState, Option<SparseModel>)> {
+        const STREAM_CHUNK: usize = 1 << 20;
+        let path = path.as_ref();
+        let mut r = crate::robust::stream::SectionedReader::open(path)?;
+        let n = r.n_sections();
+        let header_bytes = r
+            .read_section(0)
+            .with_context(|| format!("loading checkpoint {}", path.display()))?;
+        let mut hdr = Header::parse(&header_bytes, false)?;
+        let sparse_list = hdr.sparse.take();
+        let compressed: HashSet<&str> = sparse_list
+            .iter()
+            .flatten()
+            .map(|(nm, _)| nm.as_str())
+            .collect();
+
+        // Dense section: stream into `flat` in layout order, carrying
+        // f32s split across chunk boundaries (≤ 3 leftover bytes).
+        let entries: Vec<(usize, usize)> = hdr
+            .layout
+            .iter()
+            .filter(|e| !compressed.contains(e.name.as_str()))
+            .map(|e| (e.offset, e.numel()))
+            .collect();
+        let expected: u64 = entries.iter().map(|&(_, numel)| numel as u64 * 4).sum();
+        ensure!(
+            expected == r.section_len(1),
+            "dense section of {} holds {} bytes but the layout needs {expected}",
+            path.display(),
+            r.section_len(1)
+        );
+        let mut flat = vec![0.0f32; hdr.flat_size];
+        let mut entry = 0usize;
+        let mut within = 0usize;
+        let mut carry = [0u8; 4];
+        let mut carry_len = 0usize;
+        r.for_each_chunk(1, STREAM_CHUNK, |mut piece| {
+            while !piece.is_empty() {
+                let take = (4 - carry_len).min(piece.len());
+                carry[carry_len..carry_len + take].copy_from_slice(&piece[..take]);
+                carry_len += take;
+                piece = &piece[take..];
+                if carry_len < 4 {
+                    break;
+                }
+                while entry < entries.len() && within == entries[entry].1 {
+                    entry += 1;
+                    within = 0;
+                }
+                // unreachable given the exact length check above
+                ensure!(entry < entries.len(), "dense payload overruns the layout");
+                flat[entries[entry].0 + within] = f32::from_le_bytes(carry);
+                within += 1;
+                carry_len = 0;
+            }
+            Ok(())
+        })
+        .with_context(|| format!("loading checkpoint {}", path.display()))?;
+
+        let sparse = match &sparse_list {
+            None => {
+                ensure!(
+                    n == 2,
+                    "v3 checkpoint has {n} sections but no sparse list in its header"
+                );
+                None
+            }
+            Some(list) => {
+                ensure!(
+                    list.len() == n - 2,
+                    "v3 header lists {} sparse layers but the file has {} blob sections",
+                    list.len(),
+                    n - 2
+                );
+                ensure!(compressed.len() == list.len(), "duplicate layer in sparse list");
+                let mut layers = Vec::with_capacity(list.len());
+                for (i, (name, len)) in list.iter().enumerate() {
+                    let sec = 2 + i;
+                    ensure!(
+                        *len as u64 == r.section_len(sec),
+                        "sparse layer '{name}': header says {len} bytes, \
+                         section {sec} carries {}",
+                        r.section_len(sec)
+                    );
+                    let mut pieces: Vec<Vec<u8>> = Vec::new();
+                    r.for_each_chunk(sec, STREAM_CHUNK, |piece| {
+                        pieces.push(piece.to_vec());
+                        Ok(())
+                    })?;
+                    let tensor =
+                        SparseTensor::from_chunks(pieces.iter().map(|p| p.as_slice()), *len)
+                            .with_context(|| format!("decoding compressed layer '{name}'"))?;
+                    layers.push(place_sparse_layer(&hdr.layout, &mut flat, name, tensor)?);
+                }
+                Some(SparseModel { layers })
+            }
+        };
+        Ok((
+            ModelState {
+                config: hdr.config,
+                layout: hdr.layout,
+                block_flat_size: hdr.block_flat_size,
+                flat,
+            },
+            sparse,
+        ))
+    }
+
     /// Decode a checkpoint image of any supported version. Every length,
     /// offset and (for v3) checksum is validated with overflow-safe
     /// arithmetic: corrupt input yields a descriptive `Err`, never a
@@ -634,6 +752,18 @@ fn decode_sparse_layer(
 ) -> Result<SparseLayer> {
     let tensor = SparseTensor::from_bytes(blob)
         .with_context(|| format!("decoding compressed layer '{name}'"))?;
+    place_sparse_layer(layout, flat, name, tensor)
+}
+
+/// Validate a decoded tensor against the layout, write it densely into
+/// `flat`, and return the kept tensor (shared by the whole-image and
+/// streamed v3 loaders).
+fn place_sparse_layer(
+    layout: &[ParamEntry],
+    flat: &mut [f32],
+    name: &str,
+    tensor: SparseTensor,
+) -> Result<SparseLayer> {
     let e = layout
         .iter()
         .find(|e| e.name == name)
@@ -782,6 +912,49 @@ mod tests {
         let s1 = std::fs::metadata(&p1).unwrap().len();
         let s3 = std::fs::metadata(&p3).unwrap().len();
         assert!(s3 < s1, "v3 {s3} bytes !< v1 {s1} bytes");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn streamed_load_is_bitwise_identical() {
+        let mm = fake_manifest();
+        let mut st = ModelState::init(&mm, 21);
+        for l in 0..2 {
+            for name in st.prunable_layers(l) {
+                let w = st.get_mat(&name).unwrap();
+                let pruned = crate::pruning::magnitude::semi_structured(&w, 2, 4).w;
+                st.set_mat(&name, &pruned).unwrap();
+            }
+        }
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let dir = std::env::temp_dir().join("thanos_test_ckpt_streamed");
+        // dense v3
+        let pd = dir.join("dense.thnck");
+        st.save(&pd).unwrap();
+        let (sd, none) = ModelState::load_streamed(&pd).unwrap();
+        assert!(none.is_none());
+        assert_eq!(bits(&sd.flat), bits(&ModelState::load(&pd).unwrap().flat));
+        // compressed v3: streamed == whole-image load, sparse tensors kept
+        let pattern = crate::pruning::Pattern::SemiStructured { n: 2, m: 4, alpha: 0.0 };
+        let sm = SparseModel::compress_state(&st, &pattern).unwrap();
+        let pc = dir.join("compressed.thnck");
+        st.save_compressed(&pc, &sm).unwrap();
+        let (whole, wsp) = ModelState::load_with_sparse(&pc).unwrap();
+        let (streamed, ssp) = ModelState::load_streamed(&pc).unwrap();
+        assert_eq!(bits(&streamed.flat), bits(&whole.flat));
+        assert_eq!(ssp.unwrap().layers.len(), wsp.unwrap().layers.len());
+        // a payload bit flip is rejected by the rolling section CRC
+        let img = std::fs::read(&pc).unwrap();
+        let mut bad = img.clone();
+        let mid = img.len() / 2;
+        bad[mid] ^= 0x40;
+        std::fs::write(&pc, &bad).unwrap();
+        assert!(ModelState::load_streamed(&pc).is_err());
+        // legacy versions are refused descriptively, not misread
+        let p1 = dir.join("legacy.thnck");
+        st.save_v1(&p1).unwrap();
+        let err = ModelState::load_streamed(&p1).unwrap_err();
+        assert!(format!("{err:#}").contains("v3"), "unexpected error: {err:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -67,6 +67,24 @@ impl CalibStats {
         self.n_cols += x.cols;
     }
 
+    /// Accumulate one captured activation chunk in the coordinator's
+    /// wire layout: `xt` is row-major `[a, b]` (tokens × features), the
+    /// transpose of the `X ∈ ℝ^{b×a}` calibration matrix. Exactly the
+    /// transpose-then-[`Self::accumulate`] sequence — the single shared
+    /// idiom of the in-RAM and streamed capture paths, so both
+    /// accumulate bitwise-identically chunk-by-chunk.
+    pub fn accumulate_chunk_xt(&mut self, xt: &[f32], a: usize) -> anyhow::Result<()> {
+        let b = self.b();
+        anyhow::ensure!(
+            xt.len() == a * b,
+            "activation chunk holds {} values, expected {a}×{b}",
+            xt.len()
+        );
+        let xmat = Mat::from_vec(a, b, xt.to_vec()).transpose();
+        self.accumulate(&xmat);
+        Ok(())
+    }
+
     /// Convenience constructor from a single calibration matrix.
     pub fn from_x(x: &Mat) -> Self {
         let mut s = CalibStats::new(x.rows);
@@ -233,6 +251,9 @@ pub fn prune_many(
 ) -> Vec<anyhow::Result<(Pruned, f64)>> {
     let mut slots: Vec<Option<anyhow::Result<(Pruned, f64)>>> = Vec::with_capacity(layers.len());
     slots.resize_with(layers.len(), || None);
+    for i in 0..layers.len() {
+        crate::robust::faults::register_site(&format!("prune.layer.{i}"));
+    }
     crate::engine::global().for_each_band(&mut slots, 1, |i, slot| {
         let _layer_span = crate::trace::span("prune.layer");
         let (w, stats) = layers[i];
@@ -370,6 +391,30 @@ mod tests {
             assert!((s_inc.xnorm_sq[j] - s_all.xnorm_sq[j]).abs() < 1e-9);
         }
         assert_eq!(s_inc.n_cols, 14);
+    }
+
+    #[test]
+    fn chunk_xt_accumulation_is_bitwise_the_transpose_path() {
+        use crate::linalg::Mat;
+        use crate::rng::Rng;
+        let (b, a) = (6, 9);
+        let mut r = Rng::new(11);
+        // wire layout: row-major [a, b]
+        let xt: Vec<f32> = (0..a * b).map(|_| r.normal_f32(0.0, 1.0)).collect();
+        let mut s_chunk = CalibStats::new(b);
+        s_chunk.accumulate_chunk_xt(&xt, a).unwrap();
+        let mut s_ref = CalibStats::new(b);
+        s_ref.accumulate(&Mat::from_vec(a, b, xt.clone()).transpose());
+        assert_eq!(
+            s_chunk.h_sum.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            s_ref.h_sum.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            s_chunk.xnorm_sq.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            s_ref.xnorm_sq.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(s_chunk.n_cols, a);
+        assert!(s_chunk.accumulate_chunk_xt(&xt[..a * b - 1], a).is_err());
     }
 
     #[test]

@@ -84,6 +84,42 @@ struct State {
 static ACTIVE: AtomicBool = AtomicBool::new(false);
 static STATE: Mutex<Option<State>> = Mutex::new(None);
 
+/// Process-wide registry of fault-site names, deduplicated by name. It
+/// survives [`install`]/[`clear`] cycles: registration says "this site
+/// exists in the binary", not "this site is armed", so re-running
+/// `prune_model` twice in one process (the resume-after-degradation
+/// path) re-registers the same `prune.layer.<i>` names idempotently
+/// instead of accumulating duplicates. The chaos harnesses enumerate
+/// this to kill at every site that actually ran.
+static REGISTRY: Mutex<std::collections::BTreeSet<String>> =
+    Mutex::new(std::collections::BTreeSet::new());
+
+/// Idempotently register a fault-site name. Returns `true` the first
+/// time a name is seen in this process, `false` on re-registration.
+pub fn register_site(site: &str) -> bool {
+    let mut reg = REGISTRY.lock().expect("faults registry poisoned");
+    if reg.contains(site) {
+        false
+    } else {
+        reg.insert(site.to_string())
+    }
+}
+
+/// Register a batch of static site names (e.g. a module's site list).
+pub fn register_site_list(sites: &[&str]) {
+    let mut reg = REGISTRY.lock().expect("faults registry poisoned");
+    for s in sites {
+        if !reg.contains(*s) {
+            reg.insert((*s).to_string());
+        }
+    }
+}
+
+/// Sorted snapshot of every site name registered so far this process.
+pub fn registered_sites() -> Vec<String> {
+    REGISTRY.lock().expect("faults registry poisoned").iter().cloned().collect()
+}
+
 /// Counters accumulated since the schedule was installed (or since
 /// process start when no schedule is active — then always zero injected).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -324,6 +360,42 @@ mod tests {
         install(parse_schedule("t.write:1=trunc(3)").unwrap());
         assert_eq!(write_action("t.write").unwrap(), Some(3));
         assert_eq!(write_action("t.write").unwrap(), None);
+        clear();
+    }
+
+    #[test]
+    fn registry_dedupes_and_survives_install_cycles() {
+        let _g = TEST_LOCK.lock().unwrap();
+        assert!(register_site("t.registry.once"));
+        assert!(!register_site("t.registry.once"), "re-registration must dedupe");
+        register_site_list(&["t.registry.a", "t.registry.once", "t.registry.a"]);
+        let count = |names: &[String]| {
+            names.iter().filter(|n| n.as_str() == "t.registry.once").count()
+        };
+        assert_eq!(count(&registered_sites()), 1);
+        // install/clear zero the injection counters but never the registry
+        install(parse_schedule("t.registry.once:1=err").unwrap());
+        clear();
+        assert_eq!(count(&registered_sites()), 1);
+        assert!(registered_sites().iter().any(|n| n == "t.registry.a"));
+        assert!(!register_site("t.registry.once"));
+    }
+
+    #[test]
+    fn per_run_injection_deltas_do_not_double_count() {
+        // Two journaled runs in one process under one installed schedule:
+        // each run's `faults_injected` is `stats().injected - before`, and
+        // a fired entry is removed from the schedule, so the second run
+        // observes a delta of zero rather than re-counting run one's hit.
+        let _g = TEST_LOCK.lock().unwrap();
+        install(parse_schedule("t.rerun:1=err").unwrap());
+        let before = stats().injected;
+        assert!(point("t.rerun").is_err());
+        assert_eq!(stats().injected - before, 1);
+        // second "run" over the same sites, same process, same schedule
+        let before = stats().injected;
+        assert!(point("t.rerun").is_ok());
+        assert_eq!(stats().injected - before, 0, "run 1's injection must not recount");
         clear();
     }
 

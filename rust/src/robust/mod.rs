@@ -10,6 +10,10 @@
 //!   layer and per saved block so `--resume` can skip finished work.
 //! - [`faults`] — site-keyed, schedule-driven fault injection
 //!   (`THANOS_FAULTS`) plus the deterministic retry/backoff wrapper.
+//! - [`stream`] — chunked CRC-64-framed container IO and the
+//!   [`stream::MemoryGovernor`] byte-budget gate behind the coordinator's
+//!   bounded-memory streaming pipeline (DESIGN.md §Streaming).
+//!
 //!   No wall clock and no RNG anywhere in this tree: the module lives
 //!   under the determinism contract's compute prefixes (D1–D6) and is
 //!   the one tree exempt from D7 (raw file-write ban) because it *is*
@@ -19,8 +23,10 @@ pub mod atomic;
 pub mod crc;
 pub mod faults;
 pub mod journal;
+pub mod stream;
 
 pub use atomic::{write_atomic, AtomicFile};
 pub use crc::{crc64, crc64_f32s, Crc64};
 pub use faults::{FaultStats, RetryPolicy, SERVE_SITES, SITES};
 pub use journal::Journal;
+pub use stream::{ChunkReader, ChunkWriter, MemoryGovernor, SectionedReader, STREAM_SITES};

@@ -1,0 +1,728 @@
+//! Chunked, CRC-64-framed streaming IO for bounded-memory pruning
+//! (DESIGN.md §Streaming).
+//!
+//! Three pieces:
+//!
+//! * [`ChunkWriter`] / [`ChunkReader`] — an append-only chunk container
+//!   (`.thsc`) the coordinator spills calibration activations into. The
+//!   writer streams chunks without knowing the final count (the table
+//!   rides at the *end* of the file) and commits through
+//!   [`super::AtomicFile`], so a kill at any point leaves either the
+//!   previous container or the new one — never a torn file. The reader
+//!   verifies the table against its own CRC-64 and every chunk against
+//!   its table entry: a torn or bit-flipped container is rejected with a
+//!   descriptive error, never a panic, never a wrong load.
+//! * [`SectionedReader`] — incremental access to the v3 checkpoint
+//!   container (`model::ModelState` format): the section table is read
+//!   up front and each section streams through a rolling CRC-64, so a
+//!   checkpoint can be loaded with one section chunk resident instead of
+//!   the whole file ([`crate::model::ModelState::load_streamed`]).
+//! * [`MemoryGovernor`] — the byte-budget admission gate of the
+//!   streaming pipeline: capacity is pure integer math over the budget
+//!   (no timing anywhere in the decision), `admit`/`release` track
+//!   in-flight bytes and the observed peak, and every admission probes
+//!   the `governor.admit` fault site.
+//!
+//! Fault sites ([`STREAM_SITES`]): `stream.read` / `stream.verify` are
+//! probed by the readers, `stream.prefetch` / `governor.admit` /
+//! `pipeline.stage` by the coordinator's streaming pipeline. All five
+//! absorb transient (`err`) actions through [`super::faults::with_retry`];
+//! `panic`/`exit` actions kill the run for the chaos harness.
+
+use std::fs::File;
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{ensure, Context, Result};
+
+use super::crc::{crc64, Crc64};
+use super::faults::{self, RetryPolicy};
+
+/// Chunk-container magic, leading and trailing (`.thsc` files).
+const CHUNK_MAGIC: &[u8; 4] = b"THSC";
+/// Chunk-container format version.
+const CHUNK_VERSION: u32 = 1;
+/// Sanity cap on the declared chunk count.
+const MAX_CHUNKS: u64 = 1 << 24;
+/// Leading header: magic + u32 version.
+const HEADER_LEN: u64 = 8;
+/// Trailing footer: u64 n_chunks + u64 table CRC + trailing magic.
+const FOOTER_LEN: u64 = 20;
+
+/// Fault sites probed by the streaming layer (this module plus the
+/// coordinator's streaming pipeline). The streaming chaos harness
+/// (`tests/stream_chaos.rs`) kills at every entry of this list:
+///
+/// * `stream.read` — before every container/section read syscall.
+/// * `stream.verify` — before every CRC-64 verification.
+/// * `stream.prefetch` — per chunk, at the top of the pipeline's
+///   prefetch stage (the producer thread).
+/// * `governor.admit` — per admission into the memory budget.
+/// * `pipeline.stage` — per chunk, at the top of the compute stage
+///   (the consumer side of the layer pipeline).
+pub const STREAM_SITES: [&str; 5] = [
+    "stream.read",
+    "stream.verify",
+    "stream.prefetch",
+    "governor.admit",
+    "pipeline.stage",
+];
+
+// ---------------------------------------------------------------------------
+// ChunkWriter
+// ---------------------------------------------------------------------------
+
+/// Streaming chunk-container writer. Layout:
+///
+/// ```text
+/// magic "THSC" | u32 version
+/// chunk payloads, concatenated
+/// table: n × (u64 LE len | u64 LE crc64(payload))
+/// footer: u64 LE n | u64 LE crc64(table bytes) | magic "THSC"
+/// ```
+///
+/// The table trails the payloads so chunks stream out without knowing
+/// the final count. Everything goes through [`super::AtomicFile`]:
+/// nothing is visible at the destination until [`ChunkWriter::finish`]
+/// commits, and an uncommitted writer cleans its temp file up on drop.
+pub struct ChunkWriter {
+    file: super::AtomicFile,
+    table: Vec<(u64, u64)>,
+}
+
+impl ChunkWriter {
+    /// Start a container targeting `path` (committed only by `finish`).
+    pub fn create(path: impl AsRef<Path>) -> Result<ChunkWriter> {
+        faults::register_site_list(&STREAM_SITES);
+        let mut file = super::AtomicFile::create(path.as_ref())
+            .with_context(|| format!("creating chunk container {}", path.as_ref().display()))?;
+        file.write_all(CHUNK_MAGIC)?;
+        file.write_all(&CHUNK_VERSION.to_le_bytes())?;
+        Ok(ChunkWriter { file, table: Vec::new() })
+    }
+
+    /// Append one chunk payload.
+    pub fn write_chunk(&mut self, payload: &[u8]) -> Result<()> {
+        self.file.write_all(payload)?;
+        self.table.push((payload.len() as u64, crc64(payload)));
+        Ok(())
+    }
+
+    /// Append one chunk of f32s as little-endian bytes (bit-exact round
+    /// trip through [`ChunkReader::read_chunk_f32s`], NaNs included).
+    pub fn write_chunk_f32s(&mut self, values: &[f32]) -> Result<()> {
+        let mut bytes = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write_chunk(&bytes)
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Write the table + footer and atomically commit the container.
+    pub fn finish(mut self) -> Result<()> {
+        let mut table_bytes = Vec::with_capacity(self.table.len() * 16);
+        for (len, crc) in &self.table {
+            table_bytes.extend_from_slice(&len.to_le_bytes());
+            table_bytes.extend_from_slice(&crc.to_le_bytes());
+        }
+        self.file.write_all(&table_bytes)?;
+        self.file.write_all(&(self.table.len() as u64).to_le_bytes())?;
+        self.file.write_all(&crc64(&table_bytes).to_le_bytes())?;
+        self.file.write_all(CHUNK_MAGIC)?;
+        self.file.commit()?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ChunkReader
+// ---------------------------------------------------------------------------
+
+/// Verified random access over a committed chunk container. `open`
+/// validates the framing (magics, version, table CRC, and that the
+/// chunk lengths account for every payload byte, all with checked
+/// arithmetic); `read_chunk` verifies each payload against its table
+/// entry. The file descriptor stays open, so a concurrent atomic
+/// rewrite of the same path (the re-forward spill swap) never disturbs
+/// in-flight reads of the old generation.
+pub struct ChunkReader {
+    path: PathBuf,
+    file: File,
+    /// per-chunk `(offset, len, crc64)`
+    index: Vec<(u64, u64, u64)>,
+}
+
+impl ChunkReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<ChunkReader> {
+        faults::register_site_list(&STREAM_SITES);
+        let path = path.as_ref().to_path_buf();
+        let policy = RetryPolicy::default();
+        let (mut file, file_len) = faults::with_retry(&policy, || {
+            faults::point("stream.read")?;
+            let f = File::open(&path)?;
+            let len = f.metadata()?.len();
+            Ok((f, len))
+        })
+        .with_context(|| format!("opening chunk container {}", path.display()))?;
+
+        ensure!(
+            file_len >= HEADER_LEN + FOOTER_LEN,
+            "chunk container {}: {file_len} bytes is shorter than the fixed framing",
+            path.display()
+        );
+        let mut head = [0u8; 8];
+        read_exact_at(&mut file, 0, &mut head, &policy)
+            .with_context(|| format!("reading chunk-container header of {}", path.display()))?;
+        ensure!(
+            &head[..4] == CHUNK_MAGIC,
+            "chunk container {}: bad leading magic",
+            path.display()
+        );
+        let version = u32::from_le_bytes(head[4..8].try_into().expect("4-byte slice"));
+        ensure!(
+            version == CHUNK_VERSION,
+            "chunk container {}: unsupported version {version}",
+            path.display()
+        );
+
+        let mut foot = [0u8; FOOTER_LEN as usize];
+        read_exact_at(&mut file, file_len - FOOTER_LEN, &mut foot, &policy)
+            .with_context(|| format!("reading chunk-container footer of {}", path.display()))?;
+        ensure!(
+            &foot[16..20] == CHUNK_MAGIC,
+            "chunk container {}: bad trailing magic (torn or truncated file)",
+            path.display()
+        );
+        let n = u64::from_le_bytes(foot[..8].try_into().expect("8-byte slice"));
+        let table_crc = u64::from_le_bytes(foot[8..16].try_into().expect("8-byte slice"));
+        ensure!(
+            n <= MAX_CHUNKS,
+            "chunk container {}: implausible chunk count {n}",
+            path.display()
+        );
+        let table_len = n
+            .checked_mul(16)
+            .context("chunk-table length overflows")?;
+        let table_off = file_len
+            .checked_sub(FOOTER_LEN)
+            .and_then(|v| v.checked_sub(table_len))
+            .filter(|&off| off >= HEADER_LEN)
+            .with_context(|| {
+                format!(
+                    "chunk container {}: table of {n} chunks does not fit the file",
+                    path.display()
+                )
+            })?;
+        let mut table_bytes = vec![0u8; table_len as usize];
+        read_exact_at(&mut file, table_off, &mut table_bytes, &policy)
+            .with_context(|| format!("reading chunk table of {}", path.display()))?;
+        faults::with_retry(&policy, || faults::point("stream.verify"))?;
+        let got = crc64(&table_bytes);
+        ensure!(
+            got == table_crc,
+            "chunk container {}: chunk table fails its CRC-64 \
+             (stored {table_crc:016x}, computed {got:016x}): the file is corrupt",
+            path.display()
+        );
+
+        let mut index = Vec::with_capacity(n as usize);
+        let mut off = HEADER_LEN;
+        for entry in table_bytes.chunks_exact(16) {
+            let len = u64::from_le_bytes(entry[..8].try_into().expect("8-byte slice"));
+            let crc = u64::from_le_bytes(entry[8..16].try_into().expect("8-byte slice"));
+            index.push((off, len, crc));
+            off = off
+                .checked_add(len)
+                .context("chunk offsets overflow")?;
+        }
+        ensure!(
+            off == table_off,
+            "chunk container {}: chunk lengths cover {} payload bytes but the table \
+             starts at {} (truncated or corrupt)",
+            path.display(),
+            off - HEADER_LEN,
+            table_off - HEADER_LEN
+        );
+        Ok(ChunkReader { path, file, index })
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Byte length of chunk `i`.
+    pub fn chunk_len(&self, i: usize) -> usize {
+        self.index[i].1 as usize
+    }
+
+    /// Read chunk `i` and verify it against its table entry.
+    pub fn read_chunk(&mut self, i: usize) -> Result<Vec<u8>> {
+        let (off, len, want) = *self
+            .index
+            .get(i)
+            .with_context(|| format!("chunk {i} out of range ({} chunks)", self.index.len()))?;
+        let policy = RetryPolicy::default();
+        let mut buf = vec![0u8; len as usize];
+        read_exact_at(&mut self.file, off, &mut buf, &policy)
+            .with_context(|| format!("reading chunk {i} of {}", self.path.display()))?;
+        faults::with_retry(&policy, || faults::point("stream.verify"))?;
+        let got = crc64(&buf);
+        ensure!(
+            got == want,
+            "chunk {i} of {} fails its CRC-64 (stored {want:016x}, computed {got:016x}): \
+             the container is corrupt",
+            self.path.display()
+        );
+        Ok(buf)
+    }
+
+    /// [`Self::read_chunk`] decoded as little-endian f32s.
+    pub fn read_chunk_f32s(&mut self, i: usize) -> Result<Vec<f32>> {
+        let bytes = self.read_chunk(i)?;
+        ensure!(
+            bytes.len() % 4 == 0,
+            "chunk {i} of {} holds {} bytes — not a whole number of f32s",
+            self.path.display(),
+            bytes.len()
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// `pread`-style helper: seek + read_exact under the shared retry
+/// policy, probing `stream.read` so the chaos harness can kill or
+/// transiently fail any container read.
+fn read_exact_at(
+    file: &mut File,
+    off: u64,
+    buf: &mut [u8],
+    policy: &RetryPolicy,
+) -> io::Result<()> {
+    faults::with_retry(policy, || {
+        faults::point("stream.read")?;
+        file.seek(SeekFrom::Start(off))?;
+        file.read_exact(buf)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// SectionedReader — incremental v3 checkpoint access
+// ---------------------------------------------------------------------------
+
+/// v3 checkpoint magic/version (mirrors `model::ModelState`; the byte
+/// layout is owned there — this reader only *consumes* it).
+const CKPT_MAGIC: &[u8; 4] = b"THNS";
+const CKPT_VERSION_SECTIONED: u32 = 3;
+const CKPT_MAX_SECTIONS: usize = 4096;
+
+/// Incremental reader over the v3 checkpoint container: front matter
+/// and the `(len, crc64)` section table are read eagerly, sections
+/// stream on demand — whole ([`Self::read_section`]) or chunk-at-a-time
+/// with a rolling CRC ([`Self::for_each_chunk`]), so the caller's peak
+/// memory is one section (or one chunk) instead of the whole file.
+pub struct SectionedReader {
+    path: PathBuf,
+    file: File,
+    /// per-section `(offset, len, crc64)`
+    index: Vec<(u64, u64, u64)>,
+}
+
+impl SectionedReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<SectionedReader> {
+        faults::register_site_list(&STREAM_SITES);
+        let path = path.as_ref().to_path_buf();
+        let policy = RetryPolicy::default();
+        let (mut file, file_len) = faults::with_retry(&policy, || {
+            faults::point("stream.read")?;
+            let f = File::open(&path)?;
+            let len = f.metadata()?.len();
+            Ok((f, len))
+        })
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+
+        let mut head = [0u8; 12];
+        ensure!(
+            file_len >= head.len() as u64,
+            "checkpoint {} too short: {file_len} bytes",
+            path.display()
+        );
+        read_exact_at(&mut file, 0, &mut head, &policy)?;
+        ensure!(
+            &head[..4] == CKPT_MAGIC,
+            "{} is not a thanos checkpoint (bad magic)",
+            path.display()
+        );
+        let version = u32::from_le_bytes(head[4..8].try_into().expect("4-byte slice"));
+        ensure!(
+            version == CKPT_VERSION_SECTIONED,
+            "streamed loading requires a v3 (sectioned) checkpoint; {} is version {version}",
+            path.display()
+        );
+        let n = u32::from_le_bytes(head[8..12].try_into().expect("4-byte slice")) as usize;
+        ensure!(
+            (2..=CKPT_MAX_SECTIONS).contains(&n),
+            "v3 checkpoint declares {n} sections (expected 2..={CKPT_MAX_SECTIONS})"
+        );
+        let table_len = (n as u64) * 16;
+        ensure!(
+            table_len <= file_len - 12,
+            "truncated v3 section table in {}",
+            path.display()
+        );
+        let mut table_bytes = vec![0u8; table_len as usize];
+        read_exact_at(&mut file, 12, &mut table_bytes, &policy)?;
+        let mut index = Vec::with_capacity(n);
+        let mut off = 12 + table_len;
+        for entry in table_bytes.chunks_exact(16) {
+            let len = u64::from_le_bytes(entry[..8].try_into().expect("8-byte slice"));
+            let crc = u64::from_le_bytes(entry[8..16].try_into().expect("8-byte slice"));
+            index.push((off, len, crc));
+            off = off
+                .checked_add(len)
+                .context("v3 section lengths overflow")?;
+        }
+        ensure!(
+            off == file_len,
+            "v3 sections of {} total {} bytes but the file holds {} payload bytes \
+             (truncated or corrupt section table)",
+            path.display(),
+            off - 12 - table_len,
+            file_len - 12 - table_len
+        );
+        Ok(SectionedReader { path, file, index })
+    }
+
+    pub fn n_sections(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn section_len(&self, i: usize) -> u64 {
+        self.index[i].1
+    }
+
+    /// Stream section `i` in pieces of at most `chunk_bytes`, feeding
+    /// each to `f`. The rolling CRC-64 over everything fed is verified
+    /// against the section's table entry before this returns `Ok` —
+    /// a caller never observes a complete-but-corrupt section.
+    pub fn for_each_chunk(
+        &mut self,
+        i: usize,
+        chunk_bytes: usize,
+        mut f: impl FnMut(&[u8]) -> Result<()>,
+    ) -> Result<()> {
+        let (off, len, want) = *self
+            .index
+            .get(i)
+            .with_context(|| format!("section {i} out of range ({} sections)", self.index.len()))?;
+        let policy = RetryPolicy::default();
+        let chunk_bytes = chunk_bytes.max(1) as u64;
+        let mut crc = Crc64::new();
+        let mut done = 0u64;
+        let mut buf = vec![0u8; chunk_bytes.min(len) as usize];
+        while done < len {
+            let take = chunk_bytes.min(len - done) as usize;
+            read_exact_at(&mut self.file, off + done, &mut buf[..take], &policy)
+                .with_context(|| format!("reading section {i} of {}", self.path.display()))?;
+            crc.update(&buf[..take]);
+            f(&buf[..take])?;
+            done += take as u64;
+        }
+        faults::with_retry(&policy, || faults::point("stream.verify"))?;
+        let got = crc.finish();
+        ensure!(
+            got == want,
+            "checkpoint section {i} of {} fails its CRC-64 \
+             (stored {want:016x}, computed {got:016x}): the file is corrupt",
+            self.path.display()
+        );
+        Ok(())
+    }
+
+    /// Read and verify a whole section (for small sections: the JSON
+    /// header and sparse blobs).
+    pub fn read_section(&mut self, i: usize) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(self.section_len(i) as usize);
+        self.for_each_chunk(i, 1 << 20, |piece| {
+            out.extend_from_slice(piece);
+            Ok(())
+        })?;
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// MemoryGovernor
+// ---------------------------------------------------------------------------
+
+/// Byte-budget admission gate for the streaming pipeline.
+///
+/// The admission rule is pure integer math — no wall clock, no load
+/// feedback: with a budget of `B` bytes and chunks of `c` bytes, at
+/// most `max(1, B/c − 2)` chunks may sit prefetched in the pipeline
+/// queue. The `− 2` reserves room for the chunk the compute stage is
+/// consuming *and* the chunk the prefetch stage holds while waiting
+/// for queue space (the producer reads before it enqueues), so total
+/// in-flight bytes stay within `B`. A budget below three chunks
+/// degrades to that structural floor — one queued, one in hand, one
+/// in consumption — the minimum the overlapped pipeline cannot go
+/// under. `None` means unbounded: the all-in-RAM default behavior.
+///
+/// `admit`/`release` track in-flight bytes and the high-water mark the
+/// bench/CI RSS gate reads, and every admission probes the
+/// `governor.admit` fault site (transients absorbed by the shared
+/// retry ladder).
+pub struct MemoryGovernor {
+    budget: Option<u64>,
+    state: Mutex<GovernorState>,
+}
+
+#[derive(Default)]
+struct GovernorState {
+    in_use: u64,
+    peak: u64,
+    admitted: u64,
+}
+
+impl MemoryGovernor {
+    pub fn new(budget: Option<u64>) -> MemoryGovernor {
+        faults::register_site_list(&STREAM_SITES);
+        MemoryGovernor { budget, state: Mutex::new(GovernorState::default()) }
+    }
+
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// Queue capacity (prefetched chunks in flight) for `chunk_bytes`-
+    /// sized chunks under this budget. Deterministic: depends only on
+    /// the two byte counts.
+    pub fn capacity(&self, chunk_bytes: u64) -> usize {
+        match self.budget {
+            None => usize::MAX,
+            Some(b) => {
+                let per = chunk_bytes.max(1);
+                (b / per).saturating_sub(2).max(1) as usize
+            }
+        }
+    }
+
+    /// Account `bytes` entering the pipeline (probing `governor.admit`).
+    pub fn admit(&self, bytes: u64) -> io::Result<()> {
+        faults::with_retry(&RetryPolicy::default(), || faults::point("governor.admit"))?;
+        let mut s = self.state.lock().expect("governor state poisoned");
+        s.in_use = s.in_use.saturating_add(bytes);
+        s.peak = s.peak.max(s.in_use);
+        s.admitted += 1;
+        Ok(())
+    }
+
+    /// Account `bytes` leaving the pipeline.
+    pub fn release(&self, bytes: u64) {
+        let mut s = self.state.lock().expect("governor state poisoned");
+        s.in_use = s.in_use.saturating_sub(bytes);
+    }
+
+    /// High-water mark of in-flight admitted bytes.
+    pub fn peak_bytes(&self) -> u64 {
+        self.state.lock().expect("governor state poisoned").peak
+    }
+
+    /// Total admissions (one per chunk entering the pipeline).
+    pub fn admitted(&self) -> u64 {
+        self.state.lock().expect("governor state poisoned").admitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmppath(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("thanos-stream-{tag}-{}.thsc", std::process::id()))
+    }
+
+    #[test]
+    fn chunk_container_roundtrip() {
+        let p = tmppath("roundtrip");
+        let mut w = ChunkWriter::create(&p).unwrap();
+        let chunks: Vec<Vec<u8>> = vec![b"alpha".to_vec(), Vec::new(), vec![7u8; 300]];
+        for c in &chunks {
+            w.write_chunk(c).unwrap();
+        }
+        assert_eq!(w.n_chunks(), 3);
+        w.finish().unwrap();
+
+        let mut r = ChunkReader::open(&p).unwrap();
+        assert_eq!(r.n_chunks(), 3);
+        for (i, c) in chunks.iter().enumerate() {
+            assert_eq!(r.chunk_len(i), c.len());
+            assert_eq!(&r.read_chunk(i).unwrap(), c);
+        }
+        // random access in any order
+        assert_eq!(r.read_chunk(0).unwrap(), chunks[0]);
+        assert!(r.read_chunk(3).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn f32_chunks_roundtrip_bitwise() {
+        let p = tmppath("f32");
+        let vals = vec![0.0f32, -0.0, 1.5, f32::NAN, f32::INFINITY, -3.25e-40];
+        let mut w = ChunkWriter::create(&p).unwrap();
+        w.write_chunk_f32s(&vals).unwrap();
+        w.finish().unwrap();
+        let back = ChunkReader::open(&p).unwrap().read_chunk_f32s(0).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back), bits(&vals));
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn uncommitted_writer_leaves_no_container() {
+        let p = tmppath("abort");
+        {
+            let mut w = ChunkWriter::create(&p).unwrap();
+            w.write_chunk(b"doomed").unwrap();
+            // dropped without finish()
+        }
+        assert!(!p.exists(), "uncommitted container must not appear");
+    }
+
+    #[test]
+    fn rewrite_does_not_disturb_open_reader() {
+        let p = tmppath("rewrite");
+        let mut w = ChunkWriter::create(&p).unwrap();
+        w.write_chunk(b"generation-0").unwrap();
+        w.finish().unwrap();
+        let mut old = ChunkReader::open(&p).unwrap();
+        // atomically replace the container while the old fd is open
+        let mut w = ChunkWriter::create(&p).unwrap();
+        w.write_chunk(b"generation-1").unwrap();
+        w.finish().unwrap();
+        assert_eq!(old.read_chunk(0).unwrap(), b"generation-0");
+        assert_eq!(ChunkReader::open(&p).unwrap().read_chunk(0).unwrap(), b"generation-1");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn every_bit_flip_is_rejected() {
+        let p = tmppath("flip");
+        let mut w = ChunkWriter::create(&p).unwrap();
+        w.write_chunk(b"abcdefgh").unwrap();
+        w.write_chunk(&[0x55u8; 17]).unwrap();
+        w.finish().unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let try_load = |img: &[u8]| -> bool {
+            std::fs::write(&p, img).unwrap();
+            let mut r = match ChunkReader::open(&p) {
+                Ok(r) => r,
+                Err(_) => return false,
+            };
+            (0..r.n_chunks()).all(|i| r.read_chunk(i).is_ok())
+        };
+        assert!(try_load(&bytes), "pristine container must load");
+        let mut work = bytes.clone();
+        for i in 0..work.len() {
+            for bit in 0..8 {
+                work[i] ^= 1 << bit;
+                assert!(
+                    !try_load(&work),
+                    "bit {bit} of byte {i} flipped but the container still loaded"
+                );
+                work[i] ^= 1 << bit;
+            }
+        }
+        assert_eq!(work, bytes);
+        for len in 0..bytes.len() {
+            assert!(!try_load(&bytes[..len]), "truncation to {len} bytes still loaded");
+        }
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn governor_capacity_rule() {
+        let g = MemoryGovernor::new(None);
+        assert_eq!(g.capacity(1 << 20), usize::MAX);
+        let g = MemoryGovernor::new(Some(10 << 20));
+        // 10 MiB budget, 2 MiB chunks: 5 in flight minus one being
+        // consumed and one held by the producer awaiting queue space
+        assert_eq!(g.capacity(2 << 20), 3);
+        // exactly three chunks: the structural floor still streams
+        assert_eq!(g.capacity(3 << 20), 1);
+        // budget below the floor degrades to single-chunk prefetch
+        assert_eq!(g.capacity(64 << 20), 1);
+        assert_eq!(MemoryGovernor::new(Some(0)).capacity(1), 1);
+    }
+
+    #[test]
+    fn governor_tracks_peak() {
+        let g = MemoryGovernor::new(Some(100));
+        g.admit(40).unwrap();
+        g.admit(40).unwrap();
+        g.release(40);
+        g.admit(10).unwrap();
+        assert_eq!(g.peak_bytes(), 80);
+        assert_eq!(g.admitted(), 3);
+    }
+
+    #[test]
+    fn sectioned_reader_streams_v3_checkpoints() {
+        // hand-build a minimal v3-framed file: 2 sections
+        let s0 = b"header-bytes".to_vec();
+        let s1: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let mut img = Vec::new();
+        img.extend_from_slice(CKPT_MAGIC);
+        img.extend_from_slice(&CKPT_VERSION_SECTIONED.to_le_bytes());
+        img.extend_from_slice(&2u32.to_le_bytes());
+        for s in [&s0, &s1] {
+            img.extend_from_slice(&(s.len() as u64).to_le_bytes());
+            img.extend_from_slice(&crc64(s).to_le_bytes());
+        }
+        img.extend_from_slice(&s0);
+        img.extend_from_slice(&s1);
+        let p = tmppath("sectioned");
+        std::fs::write(&p, &img).unwrap();
+
+        let mut r = SectionedReader::open(&p).unwrap();
+        assert_eq!(r.n_sections(), 2);
+        assert_eq!(r.read_section(0).unwrap(), s0);
+        // chunked streaming with an awkward chunk size reassembles exactly
+        let mut got = Vec::new();
+        r.for_each_chunk(1, 7, |piece| {
+            assert!(piece.len() <= 7);
+            got.extend_from_slice(piece);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, s1);
+
+        // corrupt payload byte: streamed read fails its rolling CRC
+        let mut bad = img.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        std::fs::write(&p, &bad).unwrap();
+        let err = SectionedReader::open(&p)
+            .unwrap()
+            .read_section(1)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("CRC-64"), "unexpected error: {err:#}");
+        // truncation is caught at open
+        std::fs::write(&p, &img[..img.len() - 3]).unwrap();
+        assert!(SectionedReader::open(&p).is_err());
+        // non-v3 versions are refused descriptively
+        let mut v1 = img.clone();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&p, &v1).unwrap();
+        let err = SectionedReader::open(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("v3"), "unexpected error: {err:#}");
+        std::fs::remove_file(&p).unwrap();
+    }
+}

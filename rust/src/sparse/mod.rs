@@ -181,6 +181,31 @@ impl SparseTensor {
         r.finish()?;
         Ok(t)
     }
+
+    /// Decode a serialized tensor delivered as consecutive pieces (the
+    /// streamed v3 checkpoint loader feeds CRC-verified section chunks).
+    /// `total_len` is the declared blob length from the section table;
+    /// a piece stream that doesn't reassemble to exactly that length is
+    /// rejected before any decoding happens.
+    pub fn from_chunks<'a>(
+        chunks: impl IntoIterator<Item = &'a [u8]>,
+        total_len: usize,
+    ) -> Result<SparseTensor> {
+        let mut blob = Vec::with_capacity(total_len);
+        for piece in chunks {
+            blob.extend_from_slice(piece);
+            ensure!(
+                blob.len() <= total_len,
+                "sparse blob chunks overrun the declared {total_len} bytes"
+            );
+        }
+        ensure!(
+            blob.len() == total_len,
+            "sparse blob chunks reassemble to {} of {total_len} declared bytes",
+            blob.len()
+        );
+        SparseTensor::from_bytes(&blob)
+    }
 }
 
 /// Compress one pruned weight matrix in the format its pruning pattern

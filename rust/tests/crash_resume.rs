@@ -178,7 +178,8 @@ fn reference(mm: &ModelManifest, sp: &PruneSpec, jpath: &Path) -> (Vec<u32>, Vec
     faults::clear();
     let mut state = ModelState::init(mm, SEED);
     let mut pipe = SynthPipe::new(&mm.config);
-    let robust = RobustOpts { journal: Some(jpath.to_path_buf()), resume: false };
+    let robust =
+        RobustOpts { journal: Some(jpath.to_path_buf()), resume: false, ..Default::default() };
     run_pruning(&mut state, &mut pipe, sp, &robust).expect("uninterrupted reference run");
     let ckpt = std::fs::read(progress_ckpt_path(jpath)).unwrap();
     (bits(&state.flat), ckpt)
@@ -196,7 +197,8 @@ fn kill_then_resume(
     let _ = std::fs::remove_file(jpath);
     let _ = std::fs::remove_file(progress_ckpt_path(jpath));
     faults::install(faults::parse_schedule(schedule).unwrap());
-    let robust = RobustOpts { journal: Some(jpath.to_path_buf()), resume: false };
+    let robust =
+        RobustOpts { journal: Some(jpath.to_path_buf()), resume: false, ..Default::default() };
     let crashed = catch_unwind(AssertUnwindSafe(|| {
         let mut state = ModelState::init(mm, SEED);
         let mut pipe = SynthPipe::new(&mm.config);
@@ -209,7 +211,8 @@ fn kill_then_resume(
     faults::clear();
     let mut state = ModelState::init(mm, SEED);
     let mut pipe = SynthPipe::new(&mm.config);
-    let robust = RobustOpts { journal: Some(jpath.to_path_buf()), resume: true };
+    let robust =
+        RobustOpts { journal: Some(jpath.to_path_buf()), resume: true, ..Default::default() };
     let report = run_pruning(&mut state, &mut pipe, sp, &robust)
         .unwrap_or_else(|e| panic!("resume after '{schedule}' failed: {e:#}"));
     let ckpt = std::fs::read(progress_ckpt_path(jpath)).unwrap();
@@ -314,7 +317,8 @@ fn chaos_child_worker() {
     let mm = micro_manifest();
     let mut state = ModelState::init(&mm, SEED);
     let mut pipe = SynthPipe::new(&mm.config);
-    let robust = RobustOpts { journal: Some(PathBuf::from(jpath)), resume: false };
+    let robust =
+        RobustOpts { journal: Some(PathBuf::from(jpath)), resume: false, ..Default::default() };
     let _ = run_pruning(&mut state, &mut pipe, &spec(Pattern::Unstructured { p: 0.5 }), &robust);
     // the armed exit should have killed the process before this line
     std::process::exit(0);
@@ -343,7 +347,7 @@ fn a_real_process_kill_resumes_bitwise_identical() {
     faults::clear();
     let mut state = ModelState::init(&mm, SEED);
     let mut pipe = SynthPipe::new(&mm.config);
-    let robust = RobustOpts { journal: Some(jpath.clone()), resume: true };
+    let robust = RobustOpts { journal: Some(jpath.clone()), resume: true, ..Default::default() };
     let report = run_pruning(&mut state, &mut pipe, &sp, &robust).unwrap();
     assert!(report.resumed_layers > 0, "the kill landed after a block committed");
     assert_eq!(bits(&state.flat), ref_bits, "weights diverge after a process kill");
@@ -371,7 +375,7 @@ fn resume_tolerates_a_torn_journal_tail() {
     // crash at the second block commit, then simulate the torn tail a
     // mid-append power cut leaves behind
     faults::install(faults::parse_schedule("atomic.sync:2=panic").unwrap());
-    let robust = RobustOpts { journal: Some(jpath.clone()), resume: false };
+    let robust = RobustOpts { journal: Some(jpath.clone()), resume: false, ..Default::default() };
     let crashed = catch_unwind(AssertUnwindSafe(|| {
         let mut state = ModelState::init(&mm, SEED);
         let mut pipe = SynthPipe::new(&mm.config);
@@ -385,7 +389,7 @@ fn resume_tolerates_a_torn_journal_tail() {
 
     let mut state = ModelState::init(&mm, SEED);
     let mut pipe = SynthPipe::new(&mm.config);
-    let robust = RobustOpts { journal: Some(jpath.clone()), resume: true };
+    let robust = RobustOpts { journal: Some(jpath.clone()), resume: true, ..Default::default() };
     let report = run_pruning(&mut state, &mut pipe, &sp, &robust).unwrap();
     assert_eq!(report.resumed_layers, 6, "block 0 committed before the crash");
     assert_eq!(bits(&state.flat), ref_bits);
@@ -403,7 +407,7 @@ fn resume_refuses_a_journal_from_a_different_run() {
     // same journal, different pattern → the run descriptor differs
     let mut state = ModelState::init(&mm, SEED);
     let mut pipe = SynthPipe::new(&mm.config);
-    let robust = RobustOpts { journal: Some(jpath.clone()), resume: true };
+    let robust = RobustOpts { journal: Some(jpath.clone()), resume: true, ..Default::default() };
     let sp2 = spec(Pattern::SemiStructured { n: 2, m: 4, alpha: 0.1 });
     let err = run_pruning(&mut state, &mut pipe, &sp2, &robust).unwrap_err();
     assert!(format!("{err:#}").contains("different run"), "{err:#}");
@@ -429,7 +433,8 @@ fn failed_layers_are_contained_survivors_land_and_resume_completes() {
         );
         let mut state = ModelState::init(&mm, SEED);
         let mut pipe = SynthPipe::new(&mm.config);
-        let robust = RobustOpts { journal: Some(jp.to_path_buf()), resume: false };
+        let robust =
+            RobustOpts { journal: Some(jp.to_path_buf()), resume: false, ..Default::default() };
         let err = run_pruning(&mut state, &mut pipe, &sp, &robust).unwrap_err();
         faults::clear();
         (state, format!("{err:#}"))
@@ -457,7 +462,7 @@ fn failed_layers_are_contained_survivors_land_and_resume_completes() {
     // resume re-prunes the failed block from scratch and converges
     let mut state = ModelState::init(&mm, SEED);
     let mut pipe = SynthPipe::new(&mm.config);
-    let robust = RobustOpts { journal: Some(jpath.clone()), resume: true };
+    let robust = RobustOpts { journal: Some(jpath.clone()), resume: true, ..Default::default() };
     run_pruning(&mut state, &mut pipe, &sp, &robust).unwrap();
     assert_eq!(bits(&state.flat), ref_bits);
     assert_eq!(std::fs::read(progress_ckpt_path(&jpath)).unwrap(), ref_ckpt);
@@ -481,7 +486,7 @@ fn transient_faults_are_retried_counted_and_leave_no_trace_in_the_output() {
     );
     let mut state = ModelState::init(&mm, SEED);
     let mut pipe = SynthPipe::new(&mm.config);
-    let robust = RobustOpts { journal: Some(jpath.clone()), resume: false };
+    let robust = RobustOpts { journal: Some(jpath.clone()), resume: false, ..Default::default() };
     let report = run_pruning(&mut state, &mut pipe, &sp, &robust).unwrap();
     faults::clear();
     assert_eq!(report.faults_injected, 3, "all three scheduled faults should fire");

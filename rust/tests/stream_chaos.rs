@@ -1,0 +1,537 @@
+//! Chaos harness for the bounded-memory streaming prune pipeline
+//! (DESIGN.md §Streaming): kill the run at every streaming fault site
+//! (`stream.read`, `stream.verify`, `stream.prefetch`, `governor.admit`,
+//! `pipeline.stage`) — panics, transient IO errors, and a real
+//! `process::exit` in a subprocess — then `--resume` and assert the
+//! final weights and progress-checkpoint **bytes** are identical to an
+//! uninterrupted all-in-RAM run, across patterns and serial/parallel
+//! execution. Plus container fuzzing (chunk-table bit flips and
+//! truncations, mirroring `ckpt_corruption.rs`) and governor
+//! backpressure/accounting checks.
+//!
+//! The walk is driven through a synthetic [`ChunkOps`] so no AOT
+//! artifacts are needed: `embed` reads only unpruned params and
+//! `forward` folds a digest of the block's **current** weights into the
+//! activations — later blocks genuinely depend on earlier pruning
+//! decisions, so a resume or a streamed replay that restored the wrong
+//! bytes would diverge.
+//!
+//! Fault schedules are process-global, so every test serializes on one
+//! lock.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{ensure, Result};
+use thanos::config::ModelConfig;
+use thanos::coordinator::{
+    progress_ckpt_path, run_pruning, Backend, ChunkForward, ChunkOps, PruneReport, PruneSpec,
+    RobustOpts, StreamOpts, StreamingPipeline,
+};
+use thanos::model::ModelState;
+use thanos::pruning::{Method, Pattern, PruneOpts};
+use thanos::robust::faults;
+use thanos::robust::{crc64_f32s, ChunkReader, ChunkWriter, STREAM_SITES};
+use thanos::runtime::{ModelManifest, ParamEntry};
+
+/// Fault schedules are process-global state: every test takes this.
+static LOCK: Mutex<()> = Mutex::new(());
+
+const SEED: u64 = 0x57E4;
+const CHILD_ENV: &str = "THANOS_STREAM_CHILD";
+/// Activation-chunk bytes of [`SynthOps`]: a·d·4.
+const CHUNK_BYTES: u64 = (A * D * 4) as u64;
+/// The structural floor — one chunk queued, one held by the prefetch
+/// stage, one in consumption — so the budget is a true in-flight bound.
+const BUDGET: u64 = 3 * CHUNK_BYTES;
+
+const A: usize = 16;
+const D: usize = 8;
+const D_FF: usize = 16;
+const CHUNKS: usize = 4;
+
+// ------------------------------------------------------------------
+// synthetic model + chunk ops
+
+/// Micro 3-block manifest mirroring the python param_specs layout.
+fn micro_manifest() -> ModelManifest {
+    let cfg = ModelConfig {
+        name: "micro3".into(),
+        vocab: 16,
+        d_model: D,
+        n_layers: 3,
+        n_heads: 2,
+        d_ff: D_FF,
+        seq_len: 4,
+    };
+    let mut layout = Vec::new();
+    let mut off = 0usize;
+    let push = |layout: &mut Vec<ParamEntry>, name: &str, shape: Vec<usize>, off: &mut usize| {
+        let numel: usize = shape.iter().product();
+        layout.push(ParamEntry { name: name.into(), offset: *off, shape });
+        *off += numel;
+    };
+    push(&mut layout, "emb", vec![16, D], &mut off);
+    push(&mut layout, "pos", vec![4, D], &mut off);
+    let mut block_flat = 0;
+    for l in 0..cfg.n_layers {
+        let before = off;
+        push(&mut layout, &format!("blocks.{l}.ln1"), vec![D], &mut off);
+        for w in ["wq", "wk", "wv", "wo"] {
+            push(&mut layout, &format!("blocks.{l}.{w}"), vec![D, D], &mut off);
+        }
+        push(&mut layout, &format!("blocks.{l}.ln2"), vec![D], &mut off);
+        push(&mut layout, &format!("blocks.{l}.w1"), vec![D_FF, D], &mut off);
+        push(&mut layout, &format!("blocks.{l}.w2"), vec![D, D_FF], &mut off);
+        block_flat = off - before;
+    }
+    push(&mut layout, "ln_f", vec![D], &mut off);
+    ModelManifest { config: cfg, flat_size: off, block_flat_size: block_flat, layout }
+}
+
+/// Deterministic `[a, b]` capture-site activations derived from the
+/// chunk: distinct per site (`salt`), diagonally seeded so the Hessian
+/// `2·X·Xᵀ` is comfortably positive definite for the solver methods.
+fn site_vals(x: &[f32], a: usize, b: usize, salt: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; a * b];
+    for t in 0..a {
+        for f in 0..b {
+            let v = x[(f * 31 + t * 7 + salt) % x.len()];
+            let texture = ((f * 13 + t * 5 + salt) % 17) as f32 * 0.07;
+            let diag = if t % b == f { 1.0 } else { 0.0 };
+            out[t * b + f] = v + texture + diag;
+        }
+    }
+    out
+}
+
+/// Artifact-free [`ChunkOps`]: `embed` reads only unpruned params (the
+/// embedding, like the real embed pass), `forward` folds a digest of
+/// the block's **current** weights into the chunk — so `begin` +
+/// `reforward(0..k)` replayed over a restored state reproduces the
+/// spill of an uninterrupted run bit-for-bit.
+struct SynthOps {
+    blocks: usize,
+}
+
+impl ChunkOps for SynthOps {
+    fn n_blocks(&self) -> usize {
+        self.blocks
+    }
+    fn n_chunks(&self) -> usize {
+        CHUNKS
+    }
+    fn tokens_per_chunk(&self) -> usize {
+        A
+    }
+    fn site_dims(&self) -> [usize; 4] {
+        [D, D, D, D_FF]
+    }
+    fn embed(&mut self, state: &ModelState, ch: usize) -> Result<Vec<f32>> {
+        let emb = state.get_mat("emb")?;
+        Ok((0..A * D)
+            .map(|i| emb.data[(i * 3 + ch * 11) % emb.data.len()] + ch as f32 * 0.125)
+            .collect())
+    }
+    fn forward(&mut self, state: &ModelState, l: usize, x: &[f32]) -> Result<ChunkForward> {
+        ensure!(x.len() == A * D, "bad chunk shape: {}", x.len());
+        let digest = crc64_f32s(state.block_slice(l)?);
+        let y: Vec<f32> = x
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                let k = ((digest >> (8 * (i % 8))) & 0xFF) as f32 / 255.0;
+                0.5 * v + 0.25 * k + 0.01
+            })
+            .collect();
+        Ok(ChunkForward {
+            y,
+            sites: [
+                site_vals(x, A, D, 1),
+                site_vals(x, A, D, 2),
+                site_vals(x, A, D, 3),
+                site_vals(x, A, D_FF, 4),
+            ],
+        })
+    }
+}
+
+// ------------------------------------------------------------------
+// harness helpers
+
+fn spec(pattern: Pattern) -> PruneSpec {
+    PruneSpec {
+        method: Method::Thanos,
+        pattern,
+        opts: PruneOpts { block_size: 4, ..Default::default() },
+        backend: Backend::Rust,
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("thanos-schaos-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+fn robust_opts(jpath: &Path, resume: bool, mem_budget: Option<u64>) -> RobustOpts {
+    RobustOpts { journal: Some(jpath.to_path_buf()), resume, mem_budget }
+}
+
+/// One journaled run over a fresh state; `mem_budget: None` is the
+/// all-in-RAM mode every streamed run must match bitwise.
+fn streamed_run(
+    mm: &ModelManifest,
+    sp: &PruneSpec,
+    jpath: &Path,
+    resume: bool,
+    mem_budget: Option<u64>,
+) -> Result<(Vec<u32>, PruneReport)> {
+    let mut state = ModelState::init(mm, SEED);
+    let mut pipe = StreamingPipeline::new(
+        SynthOps { blocks: mm.config.n_layers },
+        StreamOpts::new(mem_budget, jpath.with_extension("spill.thsc")),
+    );
+    let report = run_pruning(&mut state, &mut pipe, sp, &robust_opts(jpath, resume, mem_budget))?;
+    Ok((bits(&state.flat), report))
+}
+
+/// Uninterrupted all-in-RAM reference: final weight bits + the bytes of
+/// the progress checkpoint it leaves behind.
+fn reference(mm: &ModelManifest, sp: &PruneSpec, jpath: &Path) -> (Vec<u32>, Vec<u8>) {
+    faults::clear();
+    let (b, _) = streamed_run(mm, sp, jpath, false, None).expect("reference run");
+    let ckpt = std::fs::read(progress_ckpt_path(jpath)).unwrap();
+    (b, ckpt)
+}
+
+/// Install `schedule`, run streamed until it kills the walk (panic or
+/// error), clear faults, resume from the journal, and return the
+/// resumed final bits + checkpoint bytes + resume report.
+fn kill_then_resume(
+    mm: &ModelManifest,
+    sp: &PruneSpec,
+    jpath: &Path,
+    schedule: &str,
+) -> (Vec<u32>, Vec<u8>, PruneReport) {
+    let _ = std::fs::remove_file(jpath);
+    let _ = std::fs::remove_file(progress_ckpt_path(jpath));
+    faults::install(faults::parse_schedule(schedule).unwrap());
+    let crashed = catch_unwind(AssertUnwindSafe(|| {
+        streamed_run(mm, sp, jpath, false, Some(BUDGET)).map(|_| ())
+    }));
+    assert!(
+        !matches!(crashed, Ok(Ok(()))),
+        "schedule '{schedule}' did not interrupt the run"
+    );
+    faults::clear();
+    let (got_bits, report) = streamed_run(mm, sp, jpath, true, Some(BUDGET))
+        .unwrap_or_else(|e| panic!("resume after '{schedule}' failed: {e:#}"));
+    let ckpt = std::fs::read(progress_ckpt_path(jpath)).unwrap();
+    (got_bits, ckpt, report)
+}
+
+// ------------------------------------------------------------------
+// streamed == in-RAM, across patterns and threading
+
+#[test]
+fn streamed_matches_in_ram_across_patterns_and_threading() {
+    let _g = LOCK.lock().unwrap();
+    faults::clear();
+    let mm = micro_manifest();
+    let dir = tmpdir("modes");
+    let patterns =
+        [Pattern::Unstructured { p: 0.5 }, Pattern::SemiStructured { n: 2, m: 4, alpha: 0.1 }];
+    for (pi, pattern) in patterns.into_iter().enumerate() {
+        let sp = spec(pattern);
+        let (ref_bits, ref_ckpt) = reference(&mm, &sp, &dir.join(format!("ref{pi}.journal")));
+        for serial in [false, true] {
+            let jpath = dir.join(format!("p{pi}-s{serial}.journal"));
+            let run = || streamed_run(&mm, &sp, &jpath, false, Some(BUDGET)).unwrap();
+            let (got_bits, _) = if serial { thanos::engine::with_serial(run) } else { run() };
+            assert_eq!(got_bits, ref_bits, "{pattern:?} serial={serial}: weights diverge");
+            assert_eq!(
+                std::fs::read(progress_ckpt_path(&jpath)).unwrap(),
+                ref_ckpt,
+                "{pattern:?} serial={serial}: checkpoint bytes diverge"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------------
+// kill at every streaming fault site, serial and parallel
+
+#[test]
+fn kill_at_every_stream_site_then_resume_is_bitwise_identical() {
+    let _g = LOCK.lock().unwrap();
+    // under THANOS_CHAOS_ARTIFACTS (CI), also record a Chrome trace of
+    // the matrix so the hessian.accum / pipeline.wait spans land there
+    let artifacts = std::env::var("THANOS_CHAOS_ARTIFACTS").ok();
+    if artifacts.is_some() {
+        thanos::trace::set_enabled(true);
+    }
+    let mm = micro_manifest();
+    let sp = spec(Pattern::Unstructured { p: 0.5 });
+    let dir = tmpdir("matrix");
+    let (ref_bits, ref_ckpt) = reference(&mm, &sp, &dir.join("ref.journal"));
+    let jpath = dir.join("kill.journal");
+
+    // nth=1 kills before any block commits (fresh restart); the later
+    // hit lands inside block 1, after block 0's record — a true resume.
+    // Per block the streamed walk probes: stream.read 2×(4 at open + 1
+    // per chunk), stream.verify 2×(1 + 1 per chunk), and prefetch /
+    // admit / stage once per chunk per stage.
+    let later: &[(&str, usize)] = &[
+        ("stream.read", 20),
+        ("stream.verify", 12),
+        ("stream.prefetch", 10),
+        ("governor.admit", 10),
+        ("pipeline.stage", 10),
+    ];
+    let mut schedules: Vec<String> = Vec::new();
+    for (site, nth) in later {
+        schedules.push(format!("{site}:1=panic"));
+        schedules.push(format!("{site}:{nth}=panic"));
+    }
+
+    let mut total_resumed = 0u64;
+    for serial in [false, true] {
+        for schedule in &schedules {
+            let run = || kill_then_resume(&mm, &sp, &jpath, schedule);
+            let (got_bits, got_ckpt, report) =
+                if serial { thanos::engine::with_serial(run) } else { run() };
+            assert_eq!(
+                got_bits, ref_bits,
+                "serial={serial} '{schedule}': final weights diverge"
+            );
+            assert_eq!(
+                got_ckpt, ref_ckpt,
+                "serial={serial} '{schedule}': checkpoint bytes diverge"
+            );
+            total_resumed += report.resumed_layers;
+        }
+    }
+    assert!(
+        total_resumed > 0,
+        "no schedule exercised a true resume (all restarted from scratch)"
+    );
+
+    if let Some(out) = artifacts {
+        let out = PathBuf::from(out);
+        std::fs::create_dir_all(&out).unwrap();
+        std::fs::copy(&jpath, out.join("stream-chaos.journal")).unwrap();
+        std::fs::copy(progress_ckpt_path(&jpath), out.join("stream-chaos.journal.ckpt")).unwrap();
+        thanos::trace::export_to(&out.join("stream-chaos-trace.json")).unwrap();
+        thanos::trace::set_enabled(false);
+    }
+}
+
+// ------------------------------------------------------------------
+// transient errors are absorbed by the retry ladder
+
+#[test]
+fn transient_stream_faults_are_retried_and_leave_no_trace_in_the_output() {
+    let _g = LOCK.lock().unwrap();
+    let mm = micro_manifest();
+    let sp = spec(Pattern::Unstructured { p: 0.5 });
+    let dir = tmpdir("transient");
+    let (ref_bits, ref_ckpt) = reference(&mm, &sp, &dir.join("ref.journal"));
+
+    let jpath = dir.join("transient.journal");
+    let _ = std::fs::remove_file(&jpath);
+    faults::install(
+        faults::parse_schedule(
+            "stream.read:2=err;stream.verify:2=err;stream.prefetch:1=err;\
+             governor.admit:2=err;pipeline.stage:3=err",
+        )
+        .unwrap(),
+    );
+    let (got_bits, report) = streamed_run(&mm, &sp, &jpath, false, Some(BUDGET)).unwrap();
+    faults::clear();
+    assert_eq!(report.faults_injected, 5, "all five scheduled faults should fire");
+    assert!(report.retries >= 5, "each transient fault costs at least one retry");
+    assert_eq!(got_bits, ref_bits, "retries must not change the result");
+    assert_eq!(std::fs::read(progress_ckpt_path(&jpath)).unwrap(), ref_ckpt);
+}
+
+// ------------------------------------------------------------------
+// a true process kill (skips every Drop), via subprocess re-exec
+
+/// Runs only in the spawned child: streamed prune with an `exit` fault
+/// armed, so the process dies mid-pipeline with no unwinding and no
+/// `Drop` cleanup (the spill container survives as-is on disk).
+#[test]
+fn stream_chaos_child_worker() {
+    let Ok(jpath) = std::env::var(CHILD_ENV) else { return };
+    let schedule = std::env::var("THANOS_STREAM_CHILD_FAULTS").unwrap();
+    faults::install(faults::parse_schedule(&schedule).unwrap());
+    let mm = micro_manifest();
+    let sp = spec(Pattern::Unstructured { p: 0.5 });
+    let _ = streamed_run(&mm, &sp, Path::new(&jpath), false, Some(BUDGET));
+    // the armed exit should have killed the process before this line
+    std::process::exit(0);
+}
+
+#[test]
+fn a_real_process_kill_mid_stream_resumes_bitwise_identical() {
+    let _g = LOCK.lock().unwrap();
+    let mm = micro_manifest();
+    let sp = spec(Pattern::Unstructured { p: 0.5 });
+    let dir = tmpdir("kill");
+    let (ref_bits, ref_ckpt) = reference(&mm, &sp, &dir.join("ref.journal"));
+    let jpath = dir.join("child.journal");
+    let _ = std::fs::remove_file(&jpath);
+    let _ = std::fs::remove_file(progress_ckpt_path(&jpath));
+
+    let exe = std::env::current_exe().unwrap();
+    let status = std::process::Command::new(&exe)
+        .args(["stream_chaos_child_worker", "--exact", "--nocapture", "--test-threads=1"])
+        .env(CHILD_ENV, &jpath)
+        // the 10th prefetch lands inside block 1, after block 0 committed
+        .env("THANOS_STREAM_CHILD_FAULTS", "stream.prefetch:10=exit(43)")
+        .status()
+        .unwrap();
+    assert_eq!(status.code(), Some(43), "child should die at the injected exit");
+
+    faults::clear();
+    let (got_bits, report) = streamed_run(&mm, &sp, &jpath, true, Some(BUDGET)).unwrap();
+    assert!(report.resumed_layers > 0, "the kill landed after a block committed");
+    assert_eq!(got_bits, ref_bits, "weights diverge after a process kill");
+    assert_eq!(
+        std::fs::read(progress_ckpt_path(&jpath)).unwrap(),
+        ref_ckpt,
+        "checkpoint bytes diverge after a process kill"
+    );
+}
+
+// ------------------------------------------------------------------
+// container fuzzing (mirrors ckpt_corruption.rs for the spill format)
+
+#[test]
+fn chunk_table_bit_flips_and_truncations_are_rejected() {
+    let _g = LOCK.lock().unwrap();
+    faults::clear();
+    let dir = tmpdir("fuzz");
+    let p = dir.join("fuzz.thsc");
+    let mut w = ChunkWriter::create(&p).unwrap();
+    w.write_chunk_f32s(&[1.0, -2.5, 3.75]).unwrap();
+    w.write_chunk_f32s(&[0.0, f32::NAN]).unwrap();
+    w.finish().unwrap();
+    let img = std::fs::read(&p).unwrap();
+
+    let loads = |bytes: &[u8]| -> bool {
+        std::fs::write(&p, bytes).unwrap();
+        let mut r = match ChunkReader::open(&p) {
+            Ok(r) => r,
+            Err(_) => return false,
+        };
+        (0..r.n_chunks()).all(|i| r.read_chunk(i).is_ok())
+    };
+    assert!(loads(&img), "pristine container must load");
+
+    // every bit of the chunk table + footer flipped → rejected
+    let table_start = img.len() - 20 - 2 * 16;
+    let mut work = img.clone();
+    for i in table_start..img.len() {
+        for bit in 0..8 {
+            work[i] ^= 1 << bit;
+            assert!(!loads(&work), "table/footer bit {bit} of byte {i} accepted");
+            work[i] ^= 1 << bit;
+        }
+    }
+    // payload corruption too (per-chunk CRC)
+    work[9] ^= 0x10;
+    assert!(!loads(&work), "payload corruption accepted");
+    work[9] ^= 0x10;
+    assert_eq!(work, img);
+    // every truncation → rejected
+    for len in 0..img.len() {
+        assert!(!loads(&img[..len]), "truncation to {len} bytes accepted");
+    }
+}
+
+// ------------------------------------------------------------------
+// governor backpressure + fire-once registry accounting
+
+#[test]
+fn governor_keeps_in_flight_bytes_under_the_budget() {
+    let _g = LOCK.lock().unwrap();
+    faults::clear();
+    let mm = micro_manifest();
+    let sp = spec(Pattern::Unstructured { p: 0.5 });
+    let dir = tmpdir("governor");
+    let jpath = dir.join("governor.journal");
+    let mut state = ModelState::init(&mm, SEED);
+    let mut pipe = StreamingPipeline::new(
+        SynthOps { blocks: mm.config.n_layers },
+        StreamOpts::new(Some(BUDGET), jpath.with_extension("spill.thsc")),
+    );
+    run_pruning(&mut state, &mut pipe, &sp, &robust_opts(&jpath, false, Some(BUDGET))).unwrap();
+    let g = pipe.governor();
+    assert!(g.peak_bytes() > 0, "streamed mode must admit chunks");
+    assert!(
+        g.peak_bytes() <= BUDGET,
+        "peak in-flight bytes {} exceed the {BUDGET}-byte budget",
+        g.peak_bytes()
+    );
+    // every chunk admitted once per pipeline stage: blocks × 2 stages
+    assert_eq!(g.admitted(), (mm.config.n_layers * 2 * CHUNKS) as u64);
+}
+
+/// Every streaming site round-trips through the `THANOS_FAULTS`
+/// grammar with every action kind — so the chaos schedules above (and
+/// CI's env-driven ones) can name any of them.
+#[test]
+fn the_fault_grammar_covers_every_stream_site_and_action() {
+    let actions = ["err", "panic", "exit", "exit(43)", "trunc(8)"];
+    let spec: Vec<String> = STREAM_SITES
+        .iter()
+        .zip(actions)
+        .enumerate()
+        .map(|(i, (site, action))| format!("{site}:{}={action}", i + 1))
+        .collect();
+    let sched = faults::parse_schedule(&spec.join(";")).unwrap();
+    assert_eq!(sched.len(), STREAM_SITES.len());
+    for (i, site) in STREAM_SITES.iter().enumerate() {
+        assert!(
+            sched.contains_key(&(site.to_string(), (i + 1) as u64)),
+            "'{site}' missing from the parsed schedule"
+        );
+    }
+    let at = |site: &str, nth: u64| sched.get(&(site.to_string(), nth)).copied();
+    assert_eq!(at("stream.read", 1), Some(faults::Action::Err));
+    assert_eq!(at("stream.verify", 2), Some(faults::Action::Panic));
+    assert_eq!(at("stream.prefetch", 3), Some(faults::Action::Exit(101)));
+    assert_eq!(at("governor.admit", 4), Some(faults::Action::Exit(43)));
+    assert_eq!(at("pipeline.stage", 5), Some(faults::Action::Trunc(8)));
+}
+
+#[test]
+fn two_runs_in_one_process_do_not_double_count_faults() {
+    let _g = LOCK.lock().unwrap();
+    let mm = micro_manifest();
+    let sp = spec(Pattern::Unstructured { p: 0.5 });
+    let dir = tmpdir("twice");
+
+    // one transient fault armed: it fires in run 1 and is consumed
+    // (fire-once), so run 2's per-run delta must be zero even though
+    // both runs re-register every site
+    faults::install(faults::parse_schedule("stream.prefetch:1=err").unwrap());
+    let (bits1, r1) = streamed_run(&mm, &sp, &dir.join("a.journal"), false, Some(BUDGET)).unwrap();
+    let (bits2, r2) = streamed_run(&mm, &sp, &dir.join("b.journal"), false, Some(BUDGET)).unwrap();
+    faults::clear();
+    assert_eq!(r1.faults_injected, 1, "the armed fault fires once, in run 1");
+    assert_eq!(r2.faults_injected, 0, "run 2 must not re-count run 1's fault");
+    assert_eq!(bits1, bits2, "a retried transient must not change the output");
+
+    // site registration is idempotent across runs
+    for site in STREAM_SITES {
+        assert!(!faults::register_site(site), "'{site}' was dropped from the registry");
+    }
+}
